@@ -1,0 +1,107 @@
+//! Heterogeneous cluster walkthrough: Algorithm-1 bandwidth-aware edge
+//! allocation plus topology optimization under all three heterogeneity
+//! models the paper studies (node-level / intra-server tree / BCube fabric).
+//!
+//! ```text
+//! cargo run --release --example heterogeneous_cluster [-- --quick]
+//! ```
+
+use batopo::bandwidth::allocation::allocate_edge_capacity;
+use batopo::bandwidth::scenarios::BandwidthScenario;
+use batopo::bandwidth::timing::TimeModel;
+use batopo::bench::experiments;
+use batopo::optimizer::BaTopoOptimizer;
+use batopo::topo::baselines::Baseline;
+use batopo::util::cli::Args;
+
+fn race(name: &str, scenario: &BandwidthScenario, entries: &[batopo::graph::Topology]) {
+    let tm = TimeModel::default();
+    println!("\n[{name}] time for the consensus error to fall below 1e-4:");
+    println!(
+        "  {:<26} {:>6} {:>8} {:>10} {:>14}",
+        "topology", "edges", "r_asym", "b_min GB/s", "time (ms)"
+    );
+    for t in entries {
+        let run = batopo::consensus::run_consensus(
+            None,
+            t,
+            scenario,
+            &tm,
+            &batopo::consensus::ConsensusConfig::default(),
+        )
+        .expect("consensus");
+        println!(
+            "  {:<26} {:>6} {:>8.4} {:>10.3} {:>14}",
+            t.name,
+            t.num_edges(),
+            t.asymptotic_convergence_factor(),
+            scenario.min_edge_bandwidth(t),
+            run.convergence_time
+                .map(|x| format!("{:.1}", x * 1e3))
+                .unwrap_or("-".into()),
+        );
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let optimize = |scenario: BandwidthScenario, r: usize| {
+        let spec = experiments::ba_spec(scenario, r, quick);
+        BaTopoOptimizer::new(spec).run().expect("optimize")
+    };
+
+    // ---- 1. Node-level heterogeneity: Algorithm 1 in action. ----
+    println!("=== node-level heterogeneity (8 nodes at 9.76, 8 at 3.25 GB/s) ===");
+    let mut bw = vec![9.76; 8];
+    bw.extend(vec![3.25; 8]);
+    for r in [16usize, 32, 48] {
+        let alloc = allocate_edge_capacity(&bw, r, &vec![15; 16]).expect("alloc");
+        println!(
+            "  r={r:<3} -> b_unit {:.3} GB/s, edges/node fast={:?} slow={:?}",
+            alloc.b_unit,
+            &alloc.edges_per_node[..8],
+            &alloc.edges_per_node[8..]
+        );
+    }
+    let sc = BandwidthScenario::paper_node_level();
+    let ba = optimize(sc.clone(), 32);
+    let entries = vec![
+        Baseline::Ring.build(16, 1),
+        Baseline::Exponential.build(16, 1),
+        Baseline::UEquiStatic { m: 2 }.build(16, 1),
+        ba,
+    ];
+    race("node-level", &sc, &entries);
+
+    // ---- 2. Intra-server tree (Fig. 3 standard server). ----
+    println!("\n=== intra-server link heterogeneity (8-GPU server, PIX/NODE/SYS) ===");
+    let sc = BandwidthScenario::paper_intra_server();
+    let ba = optimize(sc.clone(), 8);
+    let entries = vec![
+        Baseline::Ring.build(8, 1),
+        Baseline::Torus2d.build(8, 1),
+        Baseline::Exponential.build(8, 1),
+        ba,
+    ];
+    race("intra-server", &sc, &entries);
+
+    // ---- 3. Inter-server BCube(4,2) switch fabric. ----
+    println!("\n=== inter-server switch-port heterogeneity (BCube(4,2), ports 1:2) ===");
+    let sc = BandwidthScenario::paper_inter_server();
+    let cs = sc.constraints(24).expect("constraints");
+    println!(
+        "  {} eligible single-hop pairs, {} port-capacity rows (cap {} each)",
+        cs.num_eligible(),
+        cs.rows.len(),
+        cs.rows[0].cap
+    );
+    let ba = optimize(sc.clone(), 24);
+    let entries = vec![
+        Baseline::Ring.build(16, 1),
+        Baseline::Torus2d.build(16, 1),
+        Baseline::Exponential.build(16, 1),
+        ba,
+    ];
+    race("inter-server", &sc, &entries);
+}

@@ -1,0 +1,130 @@
+"""AOT pipeline: lower the L2/L1 compute graphs to HLO **text** artifacts the
+Rust runtime loads via PJRT (xla crate).
+
+HLO text -- NOT ``lowered.compile()`` or proto ``.serialize()`` -- is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids that the crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+
+* ``mix_{pallas,native}_n{N}_d{D}.hlo.txt``  -- the L1 gossip-mixing kernel
+  at the padded topology sizes the coordinator uses (N in {16,32,64,128}),
+* ``train_<cfg>_{native,pallas}.hlo.txt``    -- the DSGD local step
+  (fwd + bwd + fused momentum-SGD), loss returned,
+* ``eval_<cfg>.hlo.txt``                     -- loss + accuracy on a batch,
+* ``manifest.json``                          -- machine-readable index: every
+  artifact's input/output shapes & dtypes, the canonical parameter specs and
+  the baked optimizer constants. The Rust runtime trusts only this file.
+
+Python runs once at build time; the binary is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import mix as mix_kernels
+
+# Paper hyperparameters (SectionVI-B): lr 0.05, momentum 0.9.
+LR = 0.05
+BETA = 0.9
+
+# (n_pad, d_chunk) mixing shapes the runtime may request.
+MIX_SHAPES = [(16, 512), (16, 8192), (32, 8192), (64, 8192), (128, 8192)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_fn(fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    outs = jax.eval_shape(fn, *args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return to_hlo_text(lowered), [spec_of(a) for a in args], [spec_of(o) for o in outs]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,tiny100,base",
+                    help="comma-separated model configs to lower")
+    ap.add_argument("--skip-pallas-train", action="store_true",
+                    help="lower only the native train steps (faster)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "constants": {"lr": LR, "beta": BETA},
+        "configs": {},
+        "artifacts": {},
+    }
+
+    def emit(name, hlo, inputs, outputs, kind, extra=None):
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(hlo)
+        entry = {"file": fname, "kind": kind, "inputs": inputs, "outputs": outputs}
+        if extra:
+            entry.update(extra)
+        manifest["artifacts"][name] = entry
+        print(f"  wrote {fname} ({len(hlo)} chars, {len(inputs)} in / {len(outputs)} out)")
+
+    # ---- Mixing kernels ----
+    for n, d in MIX_SHAPES:
+        w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        hlo, ins, outs = lower_fn(lambda w, x: (mix_kernels.mix(w, x),), (w, x))
+        emit(f"mix_pallas_n{n}_d{d}", hlo, ins, outs, "mix",
+             {"variant": "pallas", "n": n, "d": d})
+        hlo, ins, outs = lower_fn(lambda w, x: (mix_kernels.mix_native(w, x),), (w, x))
+        emit(f"mix_native_n{n}_d{d}", hlo, ins, outs, "mix",
+             {"variant": "native", "n": n, "d": d})
+
+    # ---- Model configs ----
+    for cfg_name in [c for c in args.configs.split(",") if c]:
+        cfg = model.CONFIGS[cfg_name]
+        specs = model.param_specs(cfg)
+        manifest["configs"][cfg_name] = {
+            "model": cfg,
+            "num_params": int(model.num_params(cfg)),
+            "params": [{"name": n, "shape": list(s)} for n, s in specs],
+        }
+        ex = model.example_args(cfg)
+        shapes = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in ex]
+
+        variants = ["native"] if args.skip_pallas_train else ["native", "pallas"]
+        for variant in variants:
+            step = model.make_train_step(cfg, LR, BETA, variant)
+            hlo, ins, outs = lower_fn(step, shapes)
+            emit(f"train_{cfg_name}_{variant}", hlo, ins, outs, "train",
+                 {"config": cfg_name, "variant": variant})
+
+        ev = model.make_eval_step(cfg)
+        n_p = len(specs)
+        eval_shapes = shapes[:n_p] + shapes[2 * n_p:]
+        hlo, ins, outs = lower_fn(ev, eval_shapes)
+        emit(f"eval_{cfg_name}", hlo, ins, outs, "eval", {"config": cfg_name})
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: blocked gossip mixing  X' = W @ X  (paper Eq. 1).
+
+The decentralized-learning hot loop applies the (tiny, n <= 128) gossip
+matrix ``W`` to the stacked per-node parameter matrix ``X in R^{n x D}``
+every synchronization round, with D in the millions.  The TPU-shaped
+formulation (DESIGN.md, Hardware Adaptation):
+
+* ``W`` lives in VMEM for the whole kernel (n*n*4 bytes <= 64 KiB),
+* ``X`` is streamed tile by tile along D with a ``BlockSpec`` grid -- each
+  grid step moves one ``n x BLOCK_D`` tile HBM->VMEM, runs one MXU matmul
+  with ``preferred_element_type=float32`` and writes the mixed tile back,
+* sparsity of W is *not* exploited at MXU granularity (a dense n x n tile
+  is a single pass; gathers would serialize) -- sparsity pays off in the
+  bandwidth model instead, exactly as the paper argues.
+
+On this image the kernel runs under ``interpret=True`` (CPU); correctness is
+asserted against the pure-jnp oracle in ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile width along the feature axis. VMEM budget at n=128:
+# n*BLOCK_D*4 bytes per in/out tile = 4 MiB each at BLOCK_D=8192 -- in+out
+# double-buffered fits comfortably in 16 MiB VMEM.
+DEFAULT_BLOCK_D = 512
+
+
+def _mix_kernel(w_ref, x_ref, o_ref):
+    """One grid step: mix a single (n, BLOCK_D) tile.
+
+    ``w_ref`` is mapped in full on every step (index_map -> block (0, 0));
+    ``x_ref``/``o_ref`` see the current D-tile only.
+    """
+    o_ref[...] = jnp.dot(
+        w_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def mix(w, x, *, block_d=DEFAULT_BLOCK_D, interpret=True):
+    """Blocked Pallas mixing: ``w @ x`` for ``w: (n, n)``, ``x: (n, D)``.
+
+    D must be a multiple of ``block_d`` (callers zero-pad; zero columns mix
+    to zero, so padding is harmless).
+    """
+    n, d = x.shape
+    assert w.shape == (n, n), f"w {w.shape} incompatible with x {x.shape}"
+    assert d % block_d == 0, f"D={d} not a multiple of block_d={block_d}"
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        _mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # W resident in VMEM
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),  # stream X tiles
+        ],
+        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def mix_native(w, x):
+    """The XLA-native variant (one fused dot) lowered alongside the Pallas
+    version; the Rust runtime can select either artifact (see aot.py and
+    EXPERIMENTS.md section Perf for the comparison)."""
+    return jnp.dot(
+        w.astype(jnp.float32), x.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,18 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (the CORE correctness
+signal: pytest asserts kernel == oracle across shape/dtype sweeps)."""
+
+import jax.numpy as jnp
+
+
+def mix_ref(w, x):
+    """Gossip mixing oracle: plain dense matmul."""
+    return jnp.dot(w.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def sgd_ref(p, m, g, *, lr, beta):
+    """Momentum-SGD oracle."""
+    p = p.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    m_new = beta * m + g
+    return p - lr * m_new, m_new

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: fused SGD-with-momentum parameter update.
+
+Per training step, every node updates every parameter tensor:
+
+    m' = beta * m + g          (momentum accumulation)
+    p' = p - lr * m'           (parameter step)
+
+Unfused, this is 3 HBM reads + 2 writes plus an intermediate round-trip for
+``beta*m + g``; the fused kernel streams one tile of (p, m, g) through VMEM
+and writes (p', m') directly -- the standard fused-optimizer pattern.  The
+learning rate and momentum factor are baked in at AOT-lowering time (they
+are experiment constants; the manifest records them).
+
+Runs under ``interpret=True`` on this image; checked against ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _sgd_kernel(p_ref, m_ref, g_ref, po_ref, mo_ref, *, lr, beta):
+    m_new = beta * m_ref[...] + g_ref[...]
+    mo_ref[...] = m_new
+    po_ref[...] = p_ref[...] - lr * m_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lr", "beta", "block", "interpret")
+)
+def sgd_momentum(p, m, g, *, lr, beta, block=DEFAULT_BLOCK, interpret=True):
+    """Fused momentum-SGD over flat f32 vectors (length multiple of block)."""
+    (d,) = p.shape
+    assert m.shape == (d,) and g.shape == (d,)
+    assert d % block == 0, f"d={d} not a multiple of block={block}"
+    grid = (d // block,)
+    kernel = functools.partial(_sgd_kernel, lr=lr, beta=beta)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(p.astype(jnp.float32), m.astype(jnp.float32), g.astype(jnp.float32))
+
+
+def sgd_momentum_native(p, m, g, *, lr, beta):
+    """XLA-native variant (fuses fine on its own; used by the default
+    train-step artifact -- see aot.py)."""
+    m_new = beta * m + g
+    return p - lr * m_new, m_new

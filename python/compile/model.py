@@ -1,0 +1,216 @@
+"""L2: the training compute graph -- a small transformer sequence classifier
+trained with momentum SGD (the DSGD local step), written in JAX and lowered
+once to HLO text by ``aot.py``.
+
+This is the CIFAR/ResNet-18 stand-in of the reproduction (see DESIGN.md
+"Substitutions"): a token-sequence classifier over synthetic class-conditional
+corpora, so the decentralized-learning experiments (paper SectionVI-B) exercise the
+identical system path: local fwd/bwd -> fused optimizer step -> gossip mixing
+of the flat parameter vector (the L1 ``mix`` kernel).
+
+Parameter handling is *flat and positional*: ``param_specs`` fixes a canonical
+(name, shape) order which the manifest exports; the Rust runtime allocates,
+initializes and feeds buffers strictly in that order. Python never runs at
+request time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import sgd as sgd_kernels
+
+
+# ----------------------------------------------------------------------------
+# Configs
+# ----------------------------------------------------------------------------
+
+CONFIGS = {
+    # test/bench scale (fast on CPU-PJRT, still a real transformer)
+    "tiny": dict(vocab=64, d_model=64, n_heads=4, n_layers=2, d_ff=128,
+                 seq=32, classes=10, batch=16),
+    # synthetic CIFAR-100 counterpart
+    "tiny100": dict(vocab=64, d_model=64, n_heads=4, n_layers=2, d_ff=128,
+                    seq=32, classes=100, batch=16),
+    # the end-to-end example's model (~3.2M params)
+    "base": dict(vocab=256, d_model=256, n_heads=8, n_layers=4, d_ff=1024,
+                 seq=64, classes=10, batch=16),
+}
+
+
+def param_specs(cfg):
+    """Canonical flat parameter order: list of (name, shape) tuples."""
+    d, dff, v, s, c = (cfg["d_model"], cfg["d_ff"], cfg["vocab"],
+                       cfg["seq"], cfg["classes"])
+    specs = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (s, d)),
+    ]
+    for i in range(cfg["n_layers"]):
+        specs += [
+            (f"l{i}.ln1_scale", (d,)),
+            (f"l{i}.ln1_bias", (d,)),
+            (f"l{i}.wqkv", (d, 3 * d)),
+            (f"l{i}.bqkv", (3 * d,)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.bo", (d,)),
+            (f"l{i}.ln2_scale", (d,)),
+            (f"l{i}.ln2_bias", (d,)),
+            (f"l{i}.w1", (d, dff)),
+            (f"l{i}.b1", (dff,)),
+            (f"l{i}.w2", (dff, d)),
+            (f"l{i}.b2", (d,)),
+        ]
+    specs += [
+        ("lnf_scale", (d,)),
+        ("lnf_bias", (d,)),
+        ("head_w", (d, c)),
+        ("head_b", (c,)),
+    ]
+    return specs
+
+
+def num_params(cfg):
+    """Total scalar parameter count."""
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_params(rng, cfg):
+    """Reference initializer (tests; the Rust runtime replicates the scheme:
+    scaled-normal matrices, zero biases, unit LayerNorm scales)."""
+    params = []
+    for name, shape in param_specs(cfg):
+        rng, sub = jax.random.split(rng)
+        if name.endswith(("_scale",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_bias", ".bqkv", ".bo", ".b1", ".b2", "head_b")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            std = 0.02 if "emb" in name else 1.0 / jnp.sqrt(fan_in)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+# ----------------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mean = x.mean(-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def forward(params, tokens, cfg):
+    """Transformer classifier: tokens (B, S) int32 -> logits (B, classes)."""
+    p = dict(zip([n for n, _ in param_specs(cfg)], params))
+    d, h = cfg["d_model"], cfg["n_heads"]
+    dh = d // h
+    b, s = tokens.shape
+
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    for i in range(cfg["n_layers"]):
+        # --- attention block (pre-LN) ---
+        y = _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        qkv = y @ p[f"l{i}.wqkv"] + p[f"l{i}.bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(dh).astype(jnp.float32)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + o @ p[f"l{i}.wo"] + p[f"l{i}.bo"]
+        # --- MLP block ---
+        y = _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        y = jax.nn.gelu(y @ p[f"l{i}.w1"] + p[f"l{i}.b1"])
+        x = x + y @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    pooled = x.mean(axis=1)
+    return pooled @ p["head_w"] + p["head_b"]
+
+
+def loss_fn(params, tokens, targets, cfg):
+    """Mean softmax cross-entropy."""
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1).squeeze(-1)
+    return nll.mean()
+
+
+# ----------------------------------------------------------------------------
+# Train / eval steps (the artifacts)
+# ----------------------------------------------------------------------------
+
+def _apply_sgd(params, momenta, grads, lr, beta, variant):
+    """Optimizer application: 'native' = per-leaf fused-by-XLA update;
+    'pallas' = the L1 fused kernel over the concatenated flat vector."""
+    if variant == "native":
+        new = [sgd_kernels.sgd_momentum_native(p, m, g, lr=lr, beta=beta)
+               for p, m, g in zip(params, momenta, grads)]
+        return [p for p, _ in new], [m for _, m in new]
+
+    assert variant == "pallas"
+    block = sgd_kernels.DEFAULT_BLOCK
+    sizes = [int(p.size) for p in params]
+    total = sum(sizes)
+    pad = (-total) % block
+    flat = lambda xs: jnp.concatenate(
+        [x.reshape(-1) for x in xs] + [jnp.zeros((pad,), jnp.float32)])
+    p_new, m_new = sgd_kernels.sgd_momentum(
+        flat(params), flat(momenta), flat(grads), lr=lr, beta=beta)
+    out_p, out_m, off = [], [], 0
+    for x, sz in zip(params, sizes):
+        out_p.append(p_new[off:off + sz].reshape(x.shape))
+        out_m.append(m_new[off:off + sz].reshape(x.shape))
+        off += sz
+    return out_p, out_m
+
+
+def make_train_step(cfg, lr, beta, variant="native"):
+    """Build the jittable DSGD local step:
+    (params..., momenta..., tokens, targets) -> (params'..., momenta'..., loss)."""
+    n_p = len(param_specs(cfg))
+
+    def step(*args):
+        params = list(args[:n_p])
+        momenta = list(args[n_p:2 * n_p])
+        tokens, targets = args[2 * n_p], args[2 * n_p + 1]
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets, cfg)
+        new_p, new_m = _apply_sgd(params, momenta, grads, lr, beta, variant)
+        return tuple(new_p) + tuple(new_m) + (loss,)
+
+    return step
+
+
+def make_eval_step(cfg):
+    """(params..., tokens, targets) -> (mean loss, accuracy)."""
+    n_p = len(param_specs(cfg))
+
+    def step(*args):
+        params = list(args[:n_p])
+        tokens, targets = args[n_p], args[n_p + 1]
+        logits = forward(params, tokens, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1).squeeze(-1)
+        acc = (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32)
+        return nll.mean(), acc.mean()
+
+    return step
+
+
+def example_args(cfg, with_momenta=True, rng_seed=0):
+    """Concrete example arrays for tracing/tests."""
+    rng = jax.random.PRNGKey(rng_seed)
+    params = init_params(rng, cfg)
+    out = list(params)
+    if with_momenta:
+        out += [jnp.zeros_like(x) for x in params]
+    tokens = jax.random.randint(
+        rng, (cfg["batch"], cfg["seq"]), 0, cfg["vocab"], dtype=jnp.int32)
+    targets = jax.random.randint(
+        rng, (cfg["batch"],), 0, cfg["classes"], dtype=jnp.int32)
+    return out + [tokens, targets]

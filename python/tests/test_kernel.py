@@ -1,0 +1,147 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle, with
+hypothesis sweeping shapes and value regimes."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import mix as mix_k
+from compile.kernels import ref
+from compile.kernels import sgd as sgd_k
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# mix
+# ----------------------------------------------------------------------------
+
+@hypothesis.given(
+    n=st.sampled_from([1, 2, 3, 8, 16, 24]),
+    blocks=st.integers(1, 4),
+    block_d=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mix_matches_ref(n, blocks, block_d, seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, n, n)
+    x = rand(rng, n, blocks * block_d)
+    got = mix_k.mix(w, x, block_d=block_d)
+    want = ref.mix_ref(w, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_mix_native_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, 16, 16)
+    x = rand(rng, 16, 512)
+    np.testing.assert_allclose(np.asarray(mix_k.mix_native(w, x)),
+                               np.asarray(ref.mix_ref(w, x)), rtol=1e-6)
+
+
+def test_mix_identity_and_averaging():
+    n, d = 8, 64
+    rng = np.random.default_rng(0)
+    x = rand(rng, n, d)
+    # identity W: fixed point
+    got = mix_k.mix(jnp.eye(n), x, block_d=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-6)
+    # uniform W: exact average in one step
+    w = jnp.full((n, n), 1.0 / n)
+    got = mix_k.mix(w, x, block_d=32)
+    mean = np.asarray(x).mean(axis=0, keepdims=True)
+    np.testing.assert_allclose(np.asarray(got), np.repeat(mean, n, 0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mix_doubly_stochastic_preserves_mean():
+    """The invariant the whole paper rests on: gossip preserves the average."""
+    n, d = 16, 128
+    rng = np.random.default_rng(7)
+    x = rand(rng, n, d)
+    # Build a random symmetric doubly-stochastic W (I - weighted Laplacian).
+    w = np.eye(n, dtype=np.float32)
+    for (i, j) in [(0, 1), (1, 2), (2, 3), (3, 4), (5, 9), (10, 15), (7, 8)]:
+        a = 0.1
+        w[i, i] -= a; w[j, j] -= a; w[i, j] += a; w[j, i] += a
+    got = np.asarray(mix_k.mix(jnp.asarray(w), x, block_d=32))
+    np.testing.assert_allclose(got.mean(axis=0), np.asarray(x).mean(axis=0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mix_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        mix_k.mix(jnp.eye(4), jnp.zeros((4, 100)), block_d=64)  # 100 % 64 != 0
+    with pytest.raises(AssertionError):
+        mix_k.mix(jnp.eye(3), jnp.zeros((4, 64)), block_d=64)  # n mismatch
+
+
+def test_mix_zero_padding_is_harmless():
+    """Zero-padded rows/cols (the runtime's n-padding scheme) stay zero and
+    do not perturb live rows."""
+    n_live, n_pad, d = 5, 8, 64
+    rng = np.random.default_rng(3)
+    w_live = np.asarray(rand(rng, n_live, n_live))
+    x_live = np.asarray(rand(rng, n_live, d))
+    w = np.zeros((n_pad, n_pad), np.float32)
+    w[:n_live, :n_live] = w_live
+    # pad rows of W get 1 on the diagonal (isolated self-loop nodes)
+    for k in range(n_live, n_pad):
+        w[k, k] = 1.0
+    x = np.zeros((n_pad, d), np.float32)
+    x[:n_live] = x_live
+    got = np.asarray(mix_k.mix(jnp.asarray(w), jnp.asarray(x), block_d=32))
+    np.testing.assert_allclose(got[:n_live], w_live @ x_live, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[n_live:], 0.0, atol=1e-7)
+
+
+# ----------------------------------------------------------------------------
+# fused SGD
+# ----------------------------------------------------------------------------
+
+@hypothesis.given(
+    blocks=st.integers(1, 3),
+    block=st.sampled_from([16, 64, 256]),
+    lr=st.sampled_from([0.05, 0.1, 1e-3]),
+    beta=st.sampled_from([0.0, 0.9, 0.99]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_matches_ref(blocks, block, lr, beta, seed):
+    rng = np.random.default_rng(seed)
+    d = blocks * block
+    p, m, g = rand(rng, d), rand(rng, d), rand(rng, d)
+    got_p, got_m = sgd_k.sgd_momentum(p, m, g, lr=lr, beta=beta, block=block)
+    want_p, want_m = ref.sgd_ref(p, m, g, lr=lr, beta=beta)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m), rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_zero_momentum_is_plain_sgd():
+    rng = np.random.default_rng(1)
+    p, g = rand(rng, 128), rand(rng, 128)
+    m = jnp.zeros(128)
+    got_p, got_m = sgd_k.sgd_momentum(p, m, g, lr=0.1, beta=0.9, block=64)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(p - 0.1 * g), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(g), rtol=1e-6)
+
+
+def test_sgd_native_matches_kernel():
+    rng = np.random.default_rng(2)
+    p, m, g = rand(rng, 512), rand(rng, 512), rand(rng, 512)
+    kp, km = sgd_k.sgd_momentum(p, m, g, lr=0.05, beta=0.9, block=256)
+    np_, nm = sgd_k.sgd_momentum_native(p, m, g, lr=0.05, beta=0.9)
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(np_), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(km), np.asarray(nm), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,60 @@
+//! `cargo bench` entrypoint (custom harness; criterion is unavailable in the
+//! offline crate set). Regenerates every paper table/figure plus the perf
+//! micro-benches:
+//!
+//! ```text
+//! cargo bench                 # everything at CI budgets (~15 min)
+//! cargo bench -- fig1 table1  # selected experiments (full budgets)
+//! cargo bench -- perf         # perf benches only
+//! cargo bench -- all --full   # everything at paper budgets (hours)
+//! ```
+//!
+//! Optimized BA-Topo instances are cached under `results/topos/`; a plain
+//! `cargo bench` after a full per-figure run reuses the full-quality
+//! topologies.
+//!
+//! Outputs land in `results/` (CSV per figure/table).
+
+use batopo::bench::{experiments, perf};
+use batopo::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    // `cargo bench` passes `--bench`; ignore it.
+    let mut names: Vec<String> = args
+        .positional()
+        .iter()
+        .filter(|s| !s.starts_with("--") && *s != "bench")
+        .cloned()
+        .collect();
+    // A bare `cargo bench` (no experiment names) runs everything at CI
+    // budgets so the default invocation stays tractable; named experiments
+    // default to full budgets. `--quick` / `--full` override either way.
+    let bare = names.is_empty();
+    if bare {
+        names.push("all".to_string());
+    }
+    let quick = if args.flag("full") {
+        false
+    } else {
+        args.flag("quick") || bare
+    };
+    let opts = experiments::ExpOptions {
+        quick,
+        out_dir: args.str_or("out", "results").into(),
+        seed: args.parse_or("seed", 42u64).unwrap(),
+    };
+    println!(
+        "batopo bench: experiments {:?} (quick={}, out={})",
+        names,
+        opts.quick,
+        opts.out_dir.display()
+    );
+    let t0 = std::time::Instant::now();
+    experiments::run(&names, &opts);
+    perf::run(&names, &opts);
+    if names.iter().any(|n| n == "ablations") {
+        batopo::bench::ablations::run_ablations(&opts);
+    }
+    println!("bench total: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,432 @@
+//! Algorithm 1 of the paper: **Bandwidth-Aware Edge-Capacity Allocation**.
+//!
+//! Given per-node bandwidths `b`, a total edge budget `r` and per-node edge
+//! caps `ē`, determine (i) the *unit bandwidth* `b_unit` — the minimum
+//! bandwidth any edge will see — and (ii) the number of edges `e_i` to allot
+//! to each node, maximizing `b_unit` subject to hitting the edge budget.
+//! Faster nodes receive proportionally more edges, so no single slow link
+//! throttles the synchronization round.
+
+/// Result of the allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocationResult {
+    /// Minimum per-edge bandwidth achieved.
+    pub b_unit: f64,
+    /// Edges allotted per node (`Σ e_i = 2r`).
+    pub edges_per_node: Vec<usize>,
+}
+
+/// Allocation failure modes.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AllocationError {
+    #[error("edge budget r={r} cannot be reached: caps admit at most {max} edges")]
+    BudgetUnreachable { r: usize, max: usize },
+    #[error("invalid input: {0}")]
+    Invalid(String),
+}
+
+/// Algorithm 1. `bw[i] > 0` is node i's bandwidth, `r` the edge budget,
+/// `caps[i]` the max edges on node i (use `n-1` for "no cap").
+pub fn allocate_edge_capacity(
+    bw: &[f64],
+    r: usize,
+    caps: &[usize],
+) -> Result<AllocationResult, AllocationError> {
+    let n = bw.len();
+    if n < 2 {
+        return Err(AllocationError::Invalid("need at least 2 nodes".into()));
+    }
+    if caps.len() != n {
+        return Err(AllocationError::Invalid("caps length mismatch".into()));
+    }
+    if bw.iter().any(|&b| !(b > 0.0)) {
+        return Err(AllocationError::Invalid("bandwidths must be positive".into()));
+    }
+    // The caps bound the total number of edge endpoints.
+    let max_edges = caps.iter().sum::<usize>() / 2;
+    if r > max_edges {
+        return Err(AllocationError::BudgetUnreachable { r, max: max_edges });
+    }
+
+    // Line 1: initialize with the most conservative unit bandwidth.
+    let mut b_unit = bw.iter().cloned().fold(f64::INFINITY, f64::min);
+    let assign = |b_unit: f64| -> Vec<usize> {
+        bw.iter()
+            .zip(caps)
+            // The relative epsilon guards the exact-division case
+            // floor(b_i / (b_i/(e_i+1))) — mathematically e_i+1 but prone to
+            // rounding down to e_i in floating point, which would stall the
+            // refinement loop.
+            .map(|(&bi, &cap)| ((bi / b_unit * (1.0 + 1e-12)).floor() as usize).min(cap))
+            .collect()
+    };
+    let mut e = assign(b_unit);
+    let count = |e: &[usize]| e.iter().sum::<usize>(); // in endpoint units (2·edges)
+
+    // Lines 2–5: lower b_unit until the budget is reachable. Each pass picks
+    // the largest b_unit that grants at least one more edge somewhere.
+    let mut guard = 0usize;
+    while count(&e) < 2 * r {
+        guard += 1;
+        if guard > 10 * n * n + 1000 {
+            return Err(AllocationError::Invalid(
+                "allocation failed to converge".into(),
+            ));
+        }
+        // b_unit = max_i b_i / (e_i + 1) over nodes that can still grow.
+        let next = bw
+            .iter()
+            .zip(&e)
+            .zip(caps)
+            .filter(|((_, &ei), &cap)| ei < cap)
+            .map(|((&bi, &ei), _)| bi / (ei + 1) as f64)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !next.is_finite() {
+            // Nobody can grow — but we checked max_edges ≥ r, so caps bind at
+            // a finite count ≥ 2r only if floor() lost endpoints; force caps.
+            // (The returned b_unit is recomputed from the final assignment.)
+            e = caps.to_vec();
+            break;
+        }
+        b_unit = next;
+        e = assign(b_unit);
+    }
+
+    // Lines 6–8: trim overshoot by removing edges from the largest-e node.
+    while count(&e) > 2 * r {
+        let (imax, _) = e
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &ei)| ei)
+            .expect("nonempty");
+        e[imax] -= 1;
+    }
+    if count(&e) < 2 * r {
+        // Odd-total parity or cap-forcing left us short of the exact target;
+        // top up on nodes with headroom, preferring the largest bandwidth per
+        // edge so b_unit degrades least.
+        let mut guard = 0usize;
+        while count(&e) < 2 * r {
+            guard += 1;
+            if guard > 4 * r + 8 {
+                return Err(AllocationError::BudgetUnreachable {
+                    r,
+                    max: count(&e) / 2,
+                });
+            }
+            let cand = (0..n)
+                .filter(|&i| e[i] < caps[i])
+                .max_by(|&a, &b| {
+                    (bw[a] / (e[a] + 1) as f64)
+                        .partial_cmp(&(bw[b] / (e[b] + 1) as f64))
+                        .unwrap()
+                });
+            match cand {
+                Some(i) => e[i] += 1,
+                None => {
+                    return Err(AllocationError::BudgetUnreachable {
+                        r,
+                        max: count(&e) / 2,
+                    })
+                }
+            }
+        }
+    }
+
+    // Graphicality repair: the trim step can emit degree sequences no simple
+    // graph realizes (e.g. (5,5,5,5,1,1,1,1)); shift endpoints from the
+    // most-loaded node to the least-loaded node with headroom until the
+    // Erdős–Gallai conditions hold. This trades a little unit bandwidth for
+    // realizability — without it the downstream topology is infeasible.
+    let mut guard = 0usize;
+    while !is_graphical(&e) {
+        guard += 1;
+        if guard > 4 * n * n + 16 {
+            return Err(AllocationError::Invalid(
+                "could not repair allocation to a graphical sequence".into(),
+            ));
+        }
+        let imax = (0..n).max_by_key(|&i| e[i]).unwrap();
+        let imin = (0..n)
+            .filter(|&i| i != imax && e[i] < caps[i].min(n - 1))
+            .min_by_key(|&i| e[i]);
+        let Some(imin) = imin else {
+            return Err(AllocationError::Invalid(
+                "could not repair allocation to a graphical sequence".into(),
+            ));
+        };
+        e[imax] -= 1;
+        e[imin] += 1;
+    }
+
+    // Final unit bandwidth given the realized assignment.
+    let b_unit = bw
+        .iter()
+        .zip(&e)
+        .filter(|(_, &ei)| ei > 0)
+        .map(|(&bi, &ei)| bi / ei as f64)
+        .fold(f64::INFINITY, f64::min);
+
+    Ok(AllocationResult {
+        b_unit,
+        edges_per_node: e,
+    })
+}
+
+/// Erdős–Gallai test: is `deg` realizable as a simple graph?
+pub fn is_graphical(deg: &[usize]) -> bool {
+    let mut d: Vec<usize> = deg.to_vec();
+    d.sort_unstable_by(|a, b| b.cmp(a));
+    let total: usize = d.iter().sum();
+    if total % 2 != 0 {
+        return false;
+    }
+    let n = d.len();
+    let mut lhs = 0usize;
+    for k in 1..=n {
+        lhs += d[k - 1];
+        let mut rhs = k * (k - 1);
+        for &di in &d[k..] {
+            rhs += di.min(k);
+        }
+        if lhs > rhs {
+            return false;
+        }
+    }
+    true
+}
+
+/// Generalized Algorithm 1 over arbitrary physical **resources** (the paper:
+/// "node *or link or port*; we use nodes for example"): each logical edge
+/// consumes `multiplicity` resource slots (2 for node endpoints, 2 for BCube
+/// ports — one per endpoint — and 1 for intra-server links, where an edge
+/// maps to exactly its LCA link). Returns the per-resource edge capacities
+/// that maximize the unit bandwidth while admitting `r` edges.
+pub fn allocate_resource_capacity(
+    bw: &[f64],
+    r: usize,
+    caps: &[usize],
+    multiplicity: usize,
+) -> Result<AllocationResult, AllocationError> {
+    assert!(multiplicity >= 1);
+    let n = bw.len();
+    if n == 0 {
+        return Err(AllocationError::Invalid("no resources".into()));
+    }
+    if caps.len() != n {
+        return Err(AllocationError::Invalid("caps length mismatch".into()));
+    }
+    if bw.iter().any(|&b| !(b > 0.0)) {
+        return Err(AllocationError::Invalid("bandwidths must be positive".into()));
+    }
+    let max_edges = caps.iter().sum::<usize>() / multiplicity;
+    if r > max_edges {
+        return Err(AllocationError::BudgetUnreachable { r, max: max_edges });
+    }
+
+    let assign = |b_unit: f64| -> Vec<usize> {
+        bw.iter()
+            .zip(caps)
+            .map(|(&bi, &cap)| ((bi / b_unit * (1.0 + 1e-12)).floor() as usize).min(cap))
+            .collect()
+    };
+    let count = |e: &[usize]| e.iter().sum::<usize>();
+    let mut b_unit = bw.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut e = assign(b_unit);
+    let mut guard = 0usize;
+    while count(&e) < multiplicity * r {
+        guard += 1;
+        if guard > 10 * n * n + 1000 {
+            return Err(AllocationError::Invalid("allocation failed to converge".into()));
+        }
+        let next = bw
+            .iter()
+            .zip(&e)
+            .zip(caps)
+            .filter(|((_, &ei), &cap)| ei < cap)
+            .map(|((&bi, &ei), _)| bi / (ei + 1) as f64)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !next.is_finite() {
+            e = caps.to_vec();
+            break;
+        }
+        b_unit = next;
+        e = assign(b_unit);
+    }
+    while count(&e) > multiplicity * r {
+        let (imax, _) = e.iter().enumerate().max_by_key(|&(_, &ei)| ei).expect("nonempty");
+        if e[imax] == 0 {
+            break;
+        }
+        e[imax] -= 1;
+    }
+    let b_unit = bw
+        .iter()
+        .zip(&e)
+        .filter(|(_, &ei)| ei > 0)
+        .map(|(&bi, &ei)| bi / ei as f64)
+        .fold(f64::INFINITY, f64::min);
+    Ok(AllocationResult {
+        b_unit,
+        edges_per_node: e,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_allocation_is_uniform() {
+        // 8 equal nodes, budget 8 edges → 2 edges each, b_unit = b/2.
+        let bw = vec![9.76; 8];
+        let caps = vec![7usize; 8];
+        let a = allocate_edge_capacity(&bw, 8, &caps).unwrap();
+        assert_eq!(a.edges_per_node.iter().sum::<usize>(), 16);
+        assert_eq!(a.edges_per_node, vec![2; 8]);
+        assert!((a.b_unit - 9.76 / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_heterogeneous_setting() {
+        // §VI-A2: n=16, ratios 3:…:3:1:…:1 (8 nodes at 9.76, 8 at 3.25).
+        let mut bw = vec![9.76; 8];
+        bw.extend(vec![3.25; 8]);
+        let caps = vec![15usize; 16];
+        for r in [16usize, 32, 48] {
+            let a = allocate_edge_capacity(&bw, r, &caps).unwrap();
+            assert_eq!(
+                a.edges_per_node.iter().sum::<usize>(),
+                2 * r,
+                "r={r}: {:?}",
+                a.edges_per_node
+            );
+            // Fast nodes get at least as many edges as slow ones.
+            let min_fast = a.edges_per_node[..8].iter().min().unwrap();
+            let max_slow = a.edges_per_node[8..].iter().max().unwrap();
+            assert!(min_fast >= max_slow, "r={r}: {:?}", a.edges_per_node);
+            // Every edge sees at least b_unit.
+            for i in 0..16 {
+                if a.edges_per_node[i] > 0 {
+                    assert!(bw[i] / a.edges_per_node[i] as f64 >= a.b_unit - 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ratio_3_to_1_r16_gives_3x_edges() {
+        // With bandwidth ratio 3:1 and loose budget, fast nodes should carry
+        // ~3x the edges of slow nodes, keeping b_unit at the slow bandwidth.
+        let mut bw = vec![9.76; 8];
+        bw.extend(vec![3.25; 8]);
+        let caps = vec![15usize; 16];
+        let a = allocate_edge_capacity(&bw, 16, &caps).unwrap();
+        // Initial assignment: floor(9.76/3.25)=3 edges for fast, 1 for slow
+        // → 16 edges exactly = r. b_unit stays 3.25… with later exact split.
+        assert!(a.b_unit >= 3.25 - 1e-9, "b_unit {}", a.b_unit);
+        assert_eq!(a.edges_per_node[..8], [3, 3, 3, 3, 3, 3, 3, 3]);
+        assert_eq!(a.edges_per_node[8..], [1, 1, 1, 1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn caps_bind() {
+        let bw = vec![10.0, 10.0, 1.0, 1.0];
+        let caps = vec![2usize, 2, 2, 2];
+        let a = allocate_edge_capacity(&bw, 4, &caps).unwrap();
+        assert!(a.edges_per_node.iter().zip(&caps).all(|(e, c)| e <= c));
+        assert_eq!(a.edges_per_node.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn unreachable_budget_errors() {
+        let bw = vec![1.0; 4];
+        let caps = vec![1usize; 4];
+        let err = allocate_edge_capacity(&bw, 5, &caps).unwrap_err();
+        assert!(matches!(err, AllocationError::BudgetUnreachable { .. }));
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        assert!(allocate_edge_capacity(&[1.0], 1, &[1]).is_err());
+        assert!(allocate_edge_capacity(&[1.0, -1.0], 1, &[1, 1]).is_err());
+        assert!(allocate_edge_capacity(&[1.0, 1.0], 1, &[1]).is_err());
+    }
+
+    #[test]
+    fn graphicality_check_and_repair() {
+        assert!(is_graphical(&[2, 2, 2]));
+        assert!(is_graphical(&[3, 3, 3, 3]));
+        assert!(!is_graphical(&[5, 5, 5, 5, 1, 1, 1, 1]));
+        assert!(!is_graphical(&[1, 1, 1])); // odd sum
+        // The degradation case that used to emit a non-graphical sequence:
+        // 4 fast nodes at 9.76, 4 slow at 1.6, r = 12.
+        let bw = [9.76, 9.76, 9.76, 9.76, 1.6, 1.6, 1.6, 1.6];
+        let caps = [7usize; 8];
+        let a = allocate_edge_capacity(&bw, 12, &caps).unwrap();
+        assert!(is_graphical(&a.edges_per_node), "{:?}", a.edges_per_node);
+        assert_eq!(a.edges_per_node.iter().sum::<usize>(), 24);
+    }
+
+    #[test]
+    fn intra_server_link_allocation_paper_case() {
+        // Fig. 3 server: links (PIX×4 at 4.88, NODE×2 at 4.88, SYS at 9.76),
+        // hardware caps (1,1,1,1,4,4,16), multiplicity 1 (edge → LCA link).
+        let bw = [4.88, 4.88, 4.88, 4.88, 4.88, 4.88, 9.76];
+        let caps = [1usize, 1, 1, 1, 4, 4, 16];
+        // r=8 → paper's b=1 case: every edge at the full 4.88 unit.
+        let a = allocate_resource_capacity(&bw, 8, &caps, 1).unwrap();
+        assert_eq!(a.edges_per_node.iter().sum::<usize>(), 8);
+        assert!((a.b_unit - 4.88).abs() < 1e-9, "b_unit {}", a.b_unit);
+        assert_eq!(a.edges_per_node, vec![1, 1, 1, 1, 1, 1, 2]);
+        // r=12 → b=0.5 case.
+        let a = allocate_resource_capacity(&bw, 12, &caps, 1).unwrap();
+        assert_eq!(a.edges_per_node.iter().sum::<usize>(), 12);
+        assert!((a.b_unit - 2.44).abs() < 1e-9, "b_unit {}", a.b_unit);
+    }
+
+    #[test]
+    fn bcube_port_allocation_paper_case() {
+        // BCube(4,2): 16 L0 ports at 4.88, 16 L1 ports at 9.76, cap p−1 = 3,
+        // multiplicity 2 (an edge occupies a port at each endpoint).
+        let mut bw = vec![4.88; 16];
+        bw.extend(vec![9.76; 16]);
+        let caps = vec![3usize; 32];
+        let a = allocate_resource_capacity(&bw, 24, &caps, 2).unwrap();
+        assert_eq!(a.edges_per_node.iter().sum::<usize>(), 48);
+        assert!((a.b_unit - 4.88).abs() < 1e-9, "b_unit {}", a.b_unit);
+        assert_eq!(&a.edges_per_node[..16], &vec![1; 16][..]);
+        assert_eq!(&a.edges_per_node[16..], &vec![2; 16][..]);
+    }
+
+    #[test]
+    fn b_unit_maximality_small_cases() {
+        // Brute-force check on a small instance: no other integer assignment
+        // with the same budget beats the returned b_unit.
+        let bw = [4.0, 2.0, 1.0];
+        let caps = [2usize, 2, 2];
+        let r = 3usize;
+        let got = allocate_edge_capacity(&bw, r, &caps).unwrap();
+        let mut best = 0.0f64;
+        for e0 in 0..=2usize {
+            for e1 in 0..=2usize {
+                for e2 in 0..=2usize {
+                    if e0 + e1 + e2 != 2 * r {
+                        continue;
+                    }
+                    let bu = [(0, e0), (1, e1), (2, e2)]
+                        .iter()
+                        .filter(|(_, e)| *e > 0)
+                        .map(|&(i, e)| bw[i] / e as f64)
+                        .fold(f64::INFINITY, f64::min);
+                    best = best.max(bu);
+                }
+            }
+        }
+        assert!(
+            got.b_unit >= best - 1e-9,
+            "allocator b_unit {} < brute-force best {best}",
+            got.b_unit
+        );
+    }
+}

@@ -1,0 +1,126 @@
+//! The bandwidth layer of the paper (§IV, §VI): the edge-capacity allocation
+//! algorithm (Algorithm 1), the four bandwidth scenario models (homogeneous,
+//! node-level heterogeneity, intra-server tree of Fig. 3, inter-server
+//! BCube of Fig. 5) with their `M`/`e` constraint builders (Eqs. 11–19), and
+//! the per-iteration / per-epoch time model (Eqs. 34–35).
+
+pub mod allocation;
+pub mod dynamic;
+pub mod scenarios;
+pub mod timing;
+
+/// One linear edge-capacity constraint row of `M z {=, ≤} e` over the logical
+/// edge space: the listed edge indices consume this physical resource.
+#[derive(Debug, Clone)]
+pub struct ConstraintRow {
+    /// Human-readable resource name ("node 3", "PIX1", "L0 port of server 7").
+    pub name: String,
+    /// Canonical edge-space indices with coefficient 1 in this row of `M`.
+    pub edges: Vec<usize>,
+    /// Capacity `e_i` (max / exact number of logical edges).
+    pub cap: usize,
+    /// True for equality rows (`M z = e`, the paper's node-level allocation),
+    /// false for capacity upper bounds (tree links / switch ports).
+    pub equality: bool,
+}
+
+/// The full constraint system handed to the heterogeneous optimizer: rows of
+/// `M`, plus an eligibility mask over the edge space (edges that no physical
+/// path supports — e.g. BCube pairs differing in more than one digit — are
+/// forced to zero).
+#[derive(Debug, Clone)]
+pub struct ConstraintSet {
+    /// Number of nodes.
+    pub n: usize,
+    /// Total edge budget `r` (cardinality constraint).
+    pub r: usize,
+    /// Constraint rows (`q` of them).
+    pub rows: Vec<ConstraintRow>,
+    /// `eligible[l]` — may logical edge `l` be selected at all?
+    pub eligible: Vec<bool>,
+}
+
+impl ConstraintSet {
+    /// Unconstrained (homogeneous) system: cardinality only.
+    pub fn cardinality_only(n: usize, r: usize) -> ConstraintSet {
+        ConstraintSet {
+            n,
+            r,
+            rows: Vec::new(),
+            eligible: vec![true; crate::graph::incidence::num_possible_edges(n)],
+        }
+    }
+
+    /// Check a concrete edge selection against every row and the mask.
+    /// Returns the first violation description, if any.
+    pub fn check(&self, selected: &[usize]) -> Result<(), String> {
+        use std::collections::HashSet;
+        let sel: HashSet<usize> = selected.iter().copied().collect();
+        if sel.len() > self.r {
+            return Err(format!("{} edges exceed budget r={}", sel.len(), self.r));
+        }
+        for &l in &sel {
+            if !self.eligible[l] {
+                return Err(format!("edge {l} is not eligible"));
+            }
+        }
+        for row in &self.rows {
+            let used = row.edges.iter().filter(|l| sel.contains(l)).count();
+            if row.equality && used != row.cap {
+                return Err(format!(
+                    "resource {}: {} edges != required {}",
+                    row.name, used, row.cap
+                ));
+            }
+            if !row.equality && used > row.cap {
+                return Err(format!(
+                    "resource {}: {} edges > capacity {}",
+                    row.name, used, row.cap
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of eligible logical edges.
+    pub fn num_eligible(&self) -> usize {
+        self.eligible.iter().filter(|&&e| e).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cardinality_only_accepts_within_budget() {
+        let cs = ConstraintSet::cardinality_only(4, 3);
+        assert!(cs.check(&[0, 1, 2]).is_ok());
+        assert!(cs.check(&[0, 1, 2, 3]).is_err());
+        assert_eq!(cs.num_eligible(), 6);
+    }
+
+    #[test]
+    fn rows_enforced() {
+        let mut cs = ConstraintSet::cardinality_only(4, 6);
+        cs.rows.push(ConstraintRow {
+            name: "res".into(),
+            edges: vec![0, 1, 2],
+            cap: 1,
+            equality: false,
+        });
+        assert!(cs.check(&[0, 3]).is_ok());
+        assert!(cs.check(&[0, 1]).is_err());
+        cs.rows[0].equality = true;
+        assert!(cs.check(&[3, 4]).is_err()); // equality needs exactly 1 of {0,1,2}
+        assert!(cs.check(&[2, 3]).is_ok());
+    }
+
+    #[test]
+    fn eligibility_enforced() {
+        let mut cs = ConstraintSet::cardinality_only(4, 6);
+        cs.eligible[5] = false;
+        assert!(cs.check(&[5]).is_err());
+        assert_eq!(cs.num_eligible(), 5);
+    }
+}

@@ -1,0 +1,519 @@
+//! The four bandwidth scenarios of the paper's evaluation (§IV-B, §VI-A):
+//!
+//! 1. **Homogeneous** — every node has the same bandwidth; an edge `{i,j}`
+//!    sees `min(b/dᵢ, b/dⱼ)` (§VI-A1).
+//! 2. **Node-level heterogeneity** — per-node bandwidths; Algorithm 1
+//!    allocates per-node edge counts and `M = abs(A)` (Eq. 16).
+//! 3. **Intra-server link heterogeneity** — the standard dual-socket server
+//!    of Fig. 3 modeled as a hierarchy (PIX / NODE / SYS); each logical edge
+//!    maps to the lowest common component of its endpoints and shares that
+//!    link's bandwidth (Eq. 17).
+//! 4. **Inter-server switch-port heterogeneity** — a BCube(p,k) fabric
+//!    (Fig. 5); single-digit pairs use one switch, multi-digit pairs route
+//!    through intermediate servers (classic BCube digit-correcting paths),
+//!    loading one port per hop endpoint (Eqs. 18–19).
+
+use super::allocation::{allocate_edge_capacity, AllocationError};
+use super::{ConstraintRow, ConstraintSet};
+use crate::graph::incidence::{edge_index, num_possible_edges, EdgeSpace};
+use crate::graph::Topology;
+
+/// A physical component (link) in the intra-server hierarchy.
+#[derive(Debug, Clone)]
+pub struct TreeComponent {
+    /// Name for diagnostics ("PIX1", "NODE2", "SYS").
+    pub name: String,
+    /// Leaf devices (GPUs) under this component.
+    pub leaves: Vec<usize>,
+    /// Link bandwidth in GB/s.
+    pub bandwidth: f64,
+    /// Max concurrent logical edges mapped to this link.
+    pub capacity: usize,
+}
+
+/// Intra-server hierarchy specification (Fig. 3).
+#[derive(Debug, Clone)]
+pub struct ServerTreeSpec {
+    /// Number of leaf devices.
+    pub n: usize,
+    /// Components sorted by ascending leaf-set size (PIX before NODE before
+    /// SYS) so the first containing component is the LCA.
+    pub components: Vec<TreeComponent>,
+}
+
+impl ServerTreeSpec {
+    /// The paper's standard 8-GPU server (Fig. 3):
+    /// `e = (1, 1, 1, 1, 4, 4, 16)`, `b_PIX : b_NODE : b_SYS = 1 : 1 : 2`
+    /// with the unit bandwidth `unit_bw` (4.88 GB/s in §VI-A3).
+    pub fn standard_server(unit_bw: f64) -> ServerTreeSpec {
+        let comp = |name: &str, leaves: Vec<usize>, bw: f64, cap: usize| TreeComponent {
+            name: name.into(),
+            leaves,
+            bandwidth: bw,
+            capacity: cap,
+        };
+        ServerTreeSpec {
+            n: 8,
+            components: vec![
+                comp("PIX1", vec![0, 1], unit_bw, 1),
+                comp("PIX2", vec![2, 3], unit_bw, 1),
+                comp("PIX3", vec![4, 5], unit_bw, 1),
+                comp("PIX4", vec![6, 7], unit_bw, 1),
+                comp("NODE1", vec![0, 1, 2, 3], unit_bw, 4),
+                comp("NODE2", vec![4, 5, 6, 7], unit_bw, 4),
+                comp("SYS", (0..8).collect(), 2.0 * unit_bw, 16),
+            ],
+        }
+    }
+
+    /// Index of the lowest common component of devices `i` and `j`.
+    pub fn lca(&self, i: usize, j: usize) -> usize {
+        self.components
+            .iter()
+            .position(|c| c.leaves.contains(&i) && c.leaves.contains(&j))
+            .expect("tree must have a root containing all leaves")
+    }
+}
+
+/// BCube(p, k) switch fabric specification (Fig. 5): `n = p^k` servers,
+/// `k` switch layers, per-layer port bandwidths, port capacity `p − 1`.
+#[derive(Debug, Clone)]
+pub struct BcubeSpec {
+    /// Ports per switch.
+    pub p: usize,
+    /// Number of layers.
+    pub k: usize,
+    /// Port bandwidth per layer (length `k`).
+    pub layer_bw: Vec<f64>,
+}
+
+impl BcubeSpec {
+    /// BCube(4, 2) with the paper's 1:2 port-bandwidth ratio
+    /// (layer0 = unit, layer1 = 2·unit; unit = 4.88 GB/s in §VI-A4).
+    pub fn paper_4_2(unit_bw: f64, ratio: (f64, f64)) -> BcubeSpec {
+        BcubeSpec {
+            p: 4,
+            k: 2,
+            layer_bw: vec![unit_bw * ratio.0, unit_bw * ratio.1],
+        }
+    }
+
+    /// Number of servers `p^k`.
+    pub fn n(&self) -> usize {
+        self.p.pow(self.k as u32)
+    }
+
+    /// Digit `l` of server id `i` in base p.
+    pub fn digit(&self, i: usize, l: usize) -> usize {
+        (i / self.p.pow(l as u32)) % self.p
+    }
+
+    /// Layers at which `u` and `v` differ.
+    pub fn diff_digits(&self, u: usize, v: usize) -> Vec<usize> {
+        (0..self.k).filter(|&l| self.digit(u, l) != self.digit(v, l)).collect()
+    }
+
+    /// Routing path for a logical edge `{u, v}` as a list of hops
+    /// `(layer, a, b)`: classic BCube digit-correcting routing, one digit per
+    /// hop (lowest differing digit first). Single-digit pairs take one hop.
+    pub fn route(&self, u: usize, v: usize) -> Vec<(usize, usize, usize)> {
+        let mut hops = Vec::new();
+        let mut cur = u;
+        for l in self.diff_digits(u, v) {
+            let base = self.p.pow(l as u32);
+            let next = cur - self.digit(cur, l) * base + self.digit(v, l) * base;
+            hops.push((l, cur, next));
+            cur = next;
+        }
+        debug_assert_eq!(cur, v);
+        hops
+    }
+
+    /// Per-layer port capacity `p − 1`.
+    pub fn port_capacity(&self) -> usize {
+        self.p - 1
+    }
+}
+
+/// A bandwidth scenario: the object every experiment driver, the time model
+/// and the optimizer constraint builder consume.
+#[derive(Debug, Clone)]
+pub enum BandwidthScenario {
+    /// §VI-A1: every node at `node_bw` GB/s.
+    Homogeneous { n: usize, node_bw: f64 },
+    /// §VI-A2: node `i` at `bw[i]` GB/s.
+    NodeLevel { bw: Vec<f64> },
+    /// §VI-A3: hierarchical intra-server links.
+    IntraServer(ServerTreeSpec),
+    /// §VI-A4: BCube switch fabric.
+    InterServer(BcubeSpec),
+}
+
+impl BandwidthScenario {
+    /// The paper's homogeneous setting: n nodes at 9.76 GB/s.
+    pub fn paper_homogeneous(n: usize) -> BandwidthScenario {
+        BandwidthScenario::Homogeneous { n, node_bw: 9.76 }
+    }
+
+    /// The paper's node-level setting: 8 nodes at 9.76, 8 at 3.25 GB/s.
+    pub fn paper_node_level() -> BandwidthScenario {
+        let mut bw = vec![9.76; 8];
+        bw.extend(vec![3.25; 8]);
+        BandwidthScenario::NodeLevel { bw }
+    }
+
+    /// The paper's intra-server setting (Fig. 3, unit 4.88 GB/s).
+    pub fn paper_intra_server() -> BandwidthScenario {
+        BandwidthScenario::IntraServer(ServerTreeSpec::standard_server(4.88))
+    }
+
+    /// The paper's inter-server setting (BCube(4,2), ports 4.88/9.76 GB/s).
+    pub fn paper_inter_server() -> BandwidthScenario {
+        BandwidthScenario::InterServer(BcubeSpec::paper_4_2(4.88, (1.0, 2.0)))
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        match self {
+            BandwidthScenario::Homogeneous { n, .. } => *n,
+            BandwidthScenario::NodeLevel { bw } => bw.len(),
+            BandwidthScenario::IntraServer(t) => t.n,
+            BandwidthScenario::InterServer(b) => b.n(),
+        }
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BandwidthScenario::Homogeneous { .. } => "homogeneous",
+            BandwidthScenario::NodeLevel { .. } => "node-level",
+            BandwidthScenario::IntraServer(_) => "intra-server",
+            BandwidthScenario::InterServer(_) => "inter-server",
+        }
+    }
+
+    /// Available bandwidth of every edge of `topo` (aligned with
+    /// `topo.graph.edges()`), under this scenario's sharing rules.
+    pub fn edge_bandwidths(&self, topo: &Topology) -> Vec<f64> {
+        let edges = topo.graph.edges();
+        match self {
+            BandwidthScenario::Homogeneous { n, node_bw } => {
+                assert_eq!(*n, topo.num_nodes());
+                let deg = topo.comm_degrees();
+                edges
+                    .iter()
+                    .map(|&(i, j)| (node_bw / deg[i] as f64).min(node_bw / deg[j] as f64))
+                    .collect()
+            }
+            BandwidthScenario::NodeLevel { bw } => {
+                assert_eq!(bw.len(), topo.num_nodes());
+                let deg = topo.comm_degrees();
+                edges
+                    .iter()
+                    .map(|&(i, j)| (bw[i] / deg[i] as f64).min(bw[j] / deg[j] as f64))
+                    .collect()
+            }
+            BandwidthScenario::IntraServer(tree) => {
+                assert_eq!(tree.n, topo.num_nodes());
+                // Load per component = edges mapped (LCA) onto it.
+                let mut load = vec![0usize; tree.components.len()];
+                let lcas: Vec<usize> = edges.iter().map(|&(i, j)| tree.lca(i, j)).collect();
+                for &c in &lcas {
+                    load[c] += 1;
+                }
+                lcas.iter()
+                    .map(|&c| tree.components[c].bandwidth / load[c] as f64)
+                    .collect()
+            }
+            BandwidthScenario::InterServer(bc) => {
+                assert_eq!(bc.n(), topo.num_nodes());
+                // Load per port (layer, server) over all hops of all edges.
+                let n = bc.n();
+                let mut load = vec![vec![0usize; n]; bc.k];
+                let routes: Vec<Vec<(usize, usize, usize)>> =
+                    edges.iter().map(|&(u, v)| bc.route(u, v)).collect();
+                for hops in &routes {
+                    for &(l, a, b) in hops {
+                        load[l][a] += 1;
+                        load[l][b] += 1;
+                    }
+                }
+                routes
+                    .iter()
+                    .map(|hops| {
+                        hops.iter()
+                            .map(|&(l, a, b)| {
+                                let worst = load[l][a].max(load[l][b]) as f64;
+                                bc.layer_bw[l] / worst
+                            })
+                            .fold(f64::INFINITY, f64::min)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Minimum available edge bandwidth — `b_min` of Eq. 34/35.
+    pub fn min_edge_bandwidth(&self, topo: &Topology) -> f64 {
+        self.edge_bandwidths(topo)
+            .into_iter()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Build the optimizer constraint system `M z {=,≤} e` plus eligibility
+    /// mask for edge budget `r` (Eqs. 11–19).
+    pub fn constraints(&self, r: usize) -> Result<ConstraintSet, AllocationError> {
+        let n = self.num_nodes();
+        match self {
+            BandwidthScenario::Homogeneous { node_bw, .. } => {
+                // The paper's constraints are bandwidth-aware in the
+                // homogeneous case too (§I): Algorithm 1 with uniform node
+                // bandwidths balances degrees at ⌊2r/n⌋/⌈2r/n⌉ (Fig. 1's
+                // "BA-Topo (r=16, d=2)"), keeping every edge at b/⌈2r/n⌉.
+                let bw = vec![*node_bw; n];
+                let caps = vec![n - 1; n];
+                let alloc = allocate_edge_capacity(&bw, r, &caps)?;
+                let rows = (0..n)
+                    .map(|i| ConstraintRow {
+                        name: format!("node {i}"),
+                        edges: (0..n)
+                            .filter(|&j| j != i)
+                            .map(|j| edge_index(n, i, j))
+                            .collect(),
+                        cap: alloc.edges_per_node[i],
+                        equality: true,
+                    })
+                    .collect();
+                Ok(ConstraintSet {
+                    n,
+                    r,
+                    rows,
+                    eligible: vec![true; num_possible_edges(n)],
+                })
+            }
+            BandwidthScenario::NodeLevel { bw } => {
+                let caps = vec![n - 1; n];
+                let alloc = allocate_edge_capacity(bw, r, &caps)?;
+                let rows = (0..n)
+                    .map(|i| ConstraintRow {
+                        name: format!("node {i}"),
+                        edges: (0..n)
+                            .filter(|&j| j != i)
+                            .map(|j| edge_index(n, i, j))
+                            .collect(),
+                        cap: alloc.edges_per_node[i],
+                        equality: true,
+                    })
+                    .collect();
+                Ok(ConstraintSet {
+                    n,
+                    r,
+                    rows,
+                    eligible: vec![true; num_possible_edges(n)],
+                })
+            }
+            BandwidthScenario::IntraServer(tree) => {
+                // Algorithm 1 over the physical links (multiplicity 1: each
+                // edge maps to exactly its LCA link): the allocated per-link
+                // edge counts bound contention so every edge keeps ≥ b_unit.
+                let bw: Vec<f64> = tree.components.iter().map(|c| c.bandwidth).collect();
+                let hw_caps: Vec<usize> = tree.components.iter().map(|c| c.capacity).collect();
+                let alloc = super::allocation::allocate_resource_capacity(&bw, r, &hw_caps, 1)?;
+                let mut rows: Vec<ConstraintRow> = tree
+                    .components
+                    .iter()
+                    .zip(&alloc.edges_per_node)
+                    .map(|(c, &cap)| ConstraintRow {
+                        name: c.name.clone(),
+                        edges: Vec::new(),
+                        cap,
+                        equality: false,
+                    })
+                    .collect();
+                for (l, (i, j)) in EdgeSpace::new(n) {
+                    rows[tree.lca(i, j)].edges.push(l);
+                }
+                Ok(ConstraintSet {
+                    n,
+                    r,
+                    rows,
+                    eligible: vec![true; num_possible_edges(n)],
+                })
+            }
+            BandwidthScenario::InterServer(bc) => {
+                // Eligible: pairs differing in exactly one digit (single-hop).
+                let mut eligible = vec![false; num_possible_edges(n)];
+                let mut port_edges: Vec<Vec<Vec<usize>>> = vec![vec![Vec::new(); n]; bc.k];
+                for (l, (u, v)) in EdgeSpace::new(n) {
+                    let d = bc.diff_digits(u, v);
+                    if d.len() == 1 {
+                        eligible[l] = true;
+                        let layer = d[0];
+                        port_edges[layer][u].push(l);
+                        port_edges[layer][v].push(l);
+                    }
+                }
+                // Algorithm 1 over the switch ports (multiplicity 2: an edge
+                // occupies one port at each endpoint, same layer).
+                let mut bw = Vec::with_capacity(bc.k * n);
+                for layer in 0..bc.k {
+                    bw.extend(std::iter::repeat(bc.layer_bw[layer]).take(n));
+                }
+                let hw_caps = vec![bc.port_capacity(); bc.k * n];
+                let alloc = super::allocation::allocate_resource_capacity(&bw, r, &hw_caps, 2)?;
+                let mut rows = Vec::with_capacity(bc.k * n);
+                for layer in 0..bc.k {
+                    for srv in 0..n {
+                        rows.push(ConstraintRow {
+                            name: format!("L{layer} port of server {srv}"),
+                            edges: port_edges[layer][srv].clone(),
+                            cap: alloc.edges_per_node[layer * n + srv],
+                            equality: false,
+                        });
+                    }
+                }
+                Ok(ConstraintSet {
+                    n,
+                    r,
+                    rows,
+                    eligible,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::baselines;
+
+    #[test]
+    fn homogeneous_edge_bandwidths_ring() {
+        let topo = baselines::ring(8);
+        let sc = BandwidthScenario::paper_homogeneous(8);
+        let bws = sc.edge_bandwidths(&topo);
+        assert!(bws.iter().all(|&b| (b - 9.76 / 2.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn exponential_uses_out_degree() {
+        // §VI-A1: for the exponential topology, degrees mean out-degree (4 at
+        // n=16), so every link sees 9.76/4.
+        let topo = baselines::exponential(16);
+        let sc = BandwidthScenario::paper_homogeneous(16);
+        let b = sc.min_edge_bandwidth(&topo);
+        assert!((b - 9.76 / 4.0).abs() < 1e-12, "b={b}");
+    }
+
+    #[test]
+    fn node_level_min_edge_bandwidth() {
+        let topo = baselines::ring(16);
+        let sc = BandwidthScenario::paper_node_level();
+        // Slow nodes (3.25) with degree 2 bound the ring: 3.25/2.
+        let b = sc.min_edge_bandwidth(&topo);
+        assert!((b - 3.25 / 2.0).abs() < 1e-12, "b={b}");
+    }
+
+    #[test]
+    fn intra_server_lca_mapping() {
+        let tree = ServerTreeSpec::standard_server(4.88);
+        assert_eq!(tree.components[tree.lca(0, 1)].name, "PIX1");
+        assert_eq!(tree.components[tree.lca(0, 2)].name, "NODE1");
+        assert_eq!(tree.components[tree.lca(0, 4)].name, "SYS");
+        assert_eq!(tree.components[tree.lca(6, 7)].name, "PIX4");
+    }
+
+    #[test]
+    fn exponential_overloads_sys_link_as_paper_reports() {
+        // §VI-A3: "the exponential topology maps 10 edges onto the SYS
+        // physical link, resulting in a minimum available edge bandwidth of
+        // only 0.976 GB/s".
+        let topo = baselines::exponential(8);
+        let sc = BandwidthScenario::paper_intra_server();
+        let tree = match &sc {
+            BandwidthScenario::IntraServer(t) => t,
+            _ => unreachable!(),
+        };
+        let sys = tree.components.len() - 1;
+        let sys_edges = topo
+            .graph
+            .edges()
+            .iter()
+            .filter(|&&(i, j)| tree.lca(i, j) == sys)
+            .count();
+        assert_eq!(sys_edges, 10);
+        let b = sc.min_edge_bandwidth(&topo);
+        assert!((b - 0.976).abs() < 1e-9, "b={b}");
+    }
+
+    #[test]
+    fn intra_server_capacity_rows_partition_edge_space() {
+        let sc = BandwidthScenario::paper_intra_server();
+        let cs = sc.constraints(12).unwrap();
+        let total: usize = cs.rows.iter().map(|r| r.edges.len()).sum();
+        assert_eq!(total, num_possible_edges(8)); // 28: every pair has one LCA
+        // Row caps are the Algorithm-1 allocation over links (bounded by the
+        // paper's hardware caps e = (1,1,1,1,4,4,16)).
+        let caps: Vec<usize> = cs.rows.iter().map(|r| r.cap).collect();
+        assert_eq!(caps, vec![1, 1, 1, 1, 2, 2, 4]); // r=12 → b_unit 2.44
+        assert_eq!(caps.iter().sum::<usize>(), 12);
+        // r=8 is the paper's full-unit-bandwidth case.
+        let cs8 = sc.constraints(8).unwrap();
+        let caps8: Vec<usize> = cs8.rows.iter().map(|r| r.cap).collect();
+        assert_eq!(caps8, vec![1, 1, 1, 1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn bcube_digits_and_routes() {
+        let bc = BcubeSpec::paper_4_2(4.88, (1.0, 2.0));
+        assert_eq!(bc.n(), 16);
+        assert_eq!(bc.digit(7, 0), 3);
+        assert_eq!(bc.digit(7, 1), 1);
+        // Single-digit pair: one hop.
+        assert_eq!(bc.route(0, 3), vec![(0, 0, 3)]);
+        assert_eq!(bc.route(0, 8), vec![(1, 0, 8)]);
+        // Two-digit pair routes through an intermediate server.
+        let hops = bc.route(1, 14); // 1=(0,1) → 14=(3,2)
+        assert_eq!(hops.len(), 2);
+        assert_eq!(hops[0].1, 1);
+        assert_eq!(hops[1].2, 14);
+    }
+
+    #[test]
+    fn bcube_eligibility_and_ports() {
+        let sc = BandwidthScenario::paper_inter_server();
+        let cs = sc.constraints(24).unwrap();
+        // 16 servers × (3 peers per layer × 2 layers) / 2 = 48 eligible.
+        assert_eq!(cs.num_eligible(), 48);
+        assert_eq!(cs.rows.len(), 32); // 2 layers × 16 ports
+        // Allocation at r=24 keeps b_unit = 4.88: 1 edge per slow L0 port,
+        // 2 per fast L1 port (hardware cap would be p−1 = 3).
+        assert!(cs.rows[..16].iter().all(|r| r.cap == 1));
+        assert!(cs.rows[16..].iter().all(|r| r.cap == 2));
+        // Every port carries exactly p-1 = 3 eligible edges.
+        assert!(cs.rows.iter().all(|r| r.edges.len() == 3));
+    }
+
+    #[test]
+    fn node_level_constraints_use_algorithm1() {
+        let sc = BandwidthScenario::paper_node_level();
+        let cs = sc.constraints(16).unwrap();
+        assert_eq!(cs.rows.len(), 16);
+        let caps: Vec<usize> = cs.rows.iter().map(|r| r.cap).collect();
+        assert_eq!(caps[..8], [3, 3, 3, 3, 3, 3, 3, 3]);
+        assert_eq!(caps[8..], [1, 1, 1, 1, 1, 1, 1, 1]);
+        assert!(cs.rows.iter().all(|r| r.equality));
+    }
+
+    #[test]
+    fn bcube_ring_bandwidth_penalized_by_multihop() {
+        // A ring laid naively over BCube labels crosses digit boundaries and
+        // must multi-hop — its min edge bandwidth is worse than any
+        // single-hop topology at equal degree.
+        let ring = baselines::ring(16);
+        let sc = BandwidthScenario::paper_inter_server();
+        let b_ring = sc.min_edge_bandwidth(&ring);
+        assert!(b_ring < 4.88 / 2.0, "b_ring={b_ring}");
+    }
+}

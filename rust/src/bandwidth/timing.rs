@@ -1,0 +1,114 @@
+//! The paper's time model (§VI, Eqs. 34–35).
+//!
+//! The paper evaluates wall time analytically from two measured constants:
+//! the time to ship one model's parameters over a 9.76 GB/s link
+//! (`t_comm = 5.01 ms` for ResNet-18) and the single-GPU compute time per
+//! iteration (`t_comp = 15.21 ms` on a 2080 Ti). Slower links scale the
+//! communication term by `b_avail / b_min`:
+//!
+//! - Eq. 34: `t_iter  = (b_avail / b_min) · t_comm`
+//! - Eq. 35: `t_epoch = ((b_avail / b_min) · t_comm + t_comp) · c_iter`
+//!
+//! We keep the identical model (with the identical constants by default) so
+//! every reported time axis follows the paper's methodology.
+
+use super::scenarios::BandwidthScenario;
+use crate::graph::Topology;
+
+/// Measured-constant time model.
+#[derive(Debug, Clone)]
+pub struct TimeModel {
+    /// Reference bandwidth the constants were measured at (GB/s).
+    pub b_avail: f64,
+    /// Time to communicate one parameter set at `b_avail` (seconds).
+    pub t_comm: f64,
+    /// Compute time per training iteration (seconds).
+    pub t_comp: f64,
+}
+
+impl Default for TimeModel {
+    /// The paper's measured constants: 9.76 GB/s, 5.01 ms, 15.21 ms.
+    fn default() -> Self {
+        TimeModel {
+            b_avail: 9.76,
+            t_comm: 5.01e-3,
+            t_comp: 15.21e-3,
+        }
+    }
+}
+
+impl TimeModel {
+    /// Communication time of one synchronization round over the slowest edge
+    /// (Eq. 34), in seconds.
+    pub fn iter_comm_time(&self, scenario: &BandwidthScenario, topo: &Topology) -> f64 {
+        let b_min = scenario.min_edge_bandwidth(topo);
+        assert!(b_min > 0.0, "topology has a zero-bandwidth edge");
+        (self.b_avail / b_min) * self.t_comm
+    }
+
+    /// Consensus-experiment iteration time — pure gossip, no compute.
+    pub fn consensus_iter_time(&self, scenario: &BandwidthScenario, topo: &Topology) -> f64 {
+        self.iter_comm_time(scenario, topo)
+    }
+
+    /// Training iteration time: communication + compute.
+    pub fn train_iter_time(&self, scenario: &BandwidthScenario, topo: &Topology) -> f64 {
+        self.iter_comm_time(scenario, topo) + self.t_comp
+    }
+
+    /// Epoch time (Eq. 35) for `c_iter` iterations per epoch.
+    pub fn epoch_time(
+        &self,
+        scenario: &BandwidthScenario,
+        topo: &Topology,
+        c_iter: usize,
+    ) -> f64 {
+        self.train_iter_time(scenario, topo) * c_iter as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::baselines;
+
+    #[test]
+    fn ring_homogeneous_iter_time() {
+        // Ring degree 2 → b_min = 9.76/2 → t_iter = 2 · 5.01ms.
+        let tm = TimeModel::default();
+        let sc = BandwidthScenario::paper_homogeneous(16);
+        let topo = baselines::ring(16);
+        let t = tm.consensus_iter_time(&sc, &topo);
+        assert!((t - 2.0 * 5.01e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exponential_intra_server_penalty() {
+        // §VI-A3: exponential's b_min = 0.976 GB/s → factor 10 vs b_avail.
+        let tm = TimeModel::default();
+        let sc = BandwidthScenario::paper_intra_server();
+        let topo = baselines::exponential(8);
+        let t = tm.consensus_iter_time(&sc, &topo);
+        assert!((t - 10.0 * 5.01e-3).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn epoch_time_composition() {
+        let tm = TimeModel::default();
+        let sc = BandwidthScenario::paper_homogeneous(16);
+        let topo = baselines::ring(16);
+        let t_iter = tm.train_iter_time(&sc, &topo);
+        let t_epoch = tm.epoch_time(&sc, &topo, 97);
+        assert!((t_epoch - 97.0 * t_iter).abs() < 1e-12);
+        assert!(t_iter > tm.t_comp);
+    }
+
+    #[test]
+    fn denser_topologies_pay_more_per_iteration() {
+        let tm = TimeModel::default();
+        let sc = BandwidthScenario::paper_homogeneous(16);
+        let ring = baselines::ring(16);
+        let torus = baselines::torus2d(16);
+        assert!(tm.consensus_iter_time(&sc, &ring) < tm.consensus_iter_time(&sc, &torus));
+    }
+}

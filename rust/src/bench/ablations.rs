@@ -1,0 +1,130 @@
+//! Design-choice ablations (DESIGN.md §Perf): each knob of the BA-Topo
+//! pipeline is switched off in isolation and the resulting topology quality
+//! (r_asym at n=16, r=32, homogeneous) is compared against the full
+//! pipeline. Run with `cargo bench -- ablations`.
+
+use crate::bench::experiments::ExpOptions;
+use crate::optimizer::{BaTopoOptimizer, OptimizeSpec};
+use crate::util::csv::CsvWriter;
+
+/// One ablation row.
+struct Ablation {
+    name: &'static str,
+    tweak: fn(&mut OptimizeSpec),
+}
+
+fn base_spec(quick: bool) -> OptimizeSpec {
+    let mut s = OptimizeSpec::homogeneous(16, 32);
+    if quick {
+        s.max_iters = 60;
+        s.anneal_steps = 400;
+        s.polish_swaps = 12;
+        s.refine_iters = 120;
+        s.restarts = 2;
+    } else {
+        s.max_iters = 200;
+        s.anneal_steps = 2000;
+        s.polish_swaps = 40;
+        s.refine_iters = 300;
+        s.restarts = 4;
+    }
+    s
+}
+
+/// Run the ablation table.
+pub fn run_ablations(opts: &ExpOptions) {
+    let ablations: Vec<Ablation> = vec![
+        Ablation {
+            name: "full pipeline",
+            tweak: |_| {},
+        },
+        Ablation {
+            name: "no SA warm start (random init)",
+            tweak: |s| s.anneal_steps = 0,
+        },
+        Ablation {
+            name: "no polish (ADMM extraction only)",
+            tweak: |s| s.polish_swaps = 0,
+        },
+        Ablation {
+            name: "no restarts",
+            tweak: |s| s.restarts = 1,
+        },
+        Ablation {
+            name: "no weight refinement",
+            tweak: |s| s.refine_iters = 0,
+        },
+        Ablation {
+            name: "rho = 0.5 (plateau-free basin missed)",
+            tweak: |s| s.rho = 0.5,
+        },
+        Ablation {
+            name: "rho = 20 (over-penalized, freezes)",
+            tweak: |s| s.rho = 20.0,
+        },
+        Ablation {
+            name: "few ADMM iters (10)",
+            tweak: |s| s.max_iters = 10,
+        },
+    ];
+
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("ablations.csv"),
+        &["ablation", "r_asym", "admm_iters", "krylov_iters", "wall_s"],
+    )
+    .expect("csv");
+    println!("── ablations: BA-Topo pipeline knobs (n=16, r=32, homogeneous) ──");
+    println!(
+        "{:<42} {:>8} {:>10} {:>10} {:>8}",
+        "variant", "r_asym", "admm iters", "krylov", "wall(s)"
+    );
+    for ab in &ablations {
+        let mut spec = base_spec(opts.quick);
+        spec.seed = opts.seed;
+        (ab.tweak)(&mut spec);
+        let t0 = std::time::Instant::now();
+        match BaTopoOptimizer::new(spec).run_detailed() {
+            Ok(rep) => {
+                let wall = t0.elapsed().as_secs_f64();
+                println!(
+                    "{:<42} {:>8.4} {:>10} {:>10} {:>8.1}",
+                    ab.name, rep.r_asym, rep.admm_iterations, rep.krylov_iterations, wall
+                );
+                csv.row(&[
+                    ab.name.to_string(),
+                    format!("{:.4}", rep.r_asym),
+                    rep.admm_iterations.to_string(),
+                    rep.krylov_iterations.to_string(),
+                    format!("{wall:.1}"),
+                ])
+                .unwrap();
+            }
+            Err(e) => {
+                println!("{:<42} failed: {e}", ab.name);
+                csv.row(&[
+                    ab.name.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ])
+                .unwrap();
+            }
+        }
+    }
+    csv.flush().unwrap();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_spec_budgets() {
+        let q = base_spec(true);
+        let f = base_spec(false);
+        assert!(q.max_iters < f.max_iters);
+        assert_eq!(q.r, 32);
+        assert_eq!(q.scenario.num_nodes(), 16);
+    }
+}

@@ -1,0 +1,119 @@
+//! Bench harness (criterion is unavailable offline, so we ship our own):
+//! warmup + timed iterations with mean/median/stddev reporting, plus the
+//! experiment drivers that regenerate every table and figure of the paper
+//! ([`experiments`]) and the performance micro-benches ([`perf`]).
+
+pub mod ablations;
+pub mod experiments;
+pub mod perf;
+
+use std::time::Instant;
+
+/// Summary statistics over timed iterations (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} ± {:>9}  (median {:>10}, min {:>10}, n={})",
+            self.name,
+            fmt_time(self.mean),
+            fmt_time(self.stddev),
+            fmt_time(self.median),
+            fmt_time(self.min),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn time_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    stats_from(name, samples)
+}
+
+/// Build stats from raw samples.
+pub fn stats_from(name: &str, mut samples: Vec<f64>) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median: samples[n / 2],
+        stddev: var.sqrt(),
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_computed_correctly() {
+        let s = stats_from("t", vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_fn_measures_something() {
+        let mut acc = 0u64;
+        let s = time_fn("spin", 1, 5, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.median && s.median <= s.max);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

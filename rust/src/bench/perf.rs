@@ -1,0 +1,199 @@
+//! Performance micro-benches (§Perf of EXPERIMENTS.md):
+//!
+//! - `perf_mixing` — L1 path: host matmul vs XLA-native vs Pallas-interpret
+//!   mixing at n∈{16,128}, D=80k (model-sized state),
+//! - `perf_solver` — §V-C ablation: Bi-CGSTAB on the ADMM KKT system with
+//!   and without the ILU(0) preconditioner, with and without warm starts,
+//! - `perf_admm`  — per-iteration ADMM cost vs n,
+//! - `perf_train` — end-to-end DSGD steps/second through the PJRT runtime.
+
+use super::{stats_from, time_fn, BenchStats};
+use crate::bandwidth::scenarios::BandwidthScenario;
+use crate::bench::experiments::ExpOptions;
+use crate::linalg::bicgstab::{bicgstab_ws, BicgstabOptions, BicgstabWorkspace};
+use crate::linalg::Ilu0;
+use crate::optimizer::operators;
+use crate::runtime::mixer::{MixVariant, Mixer};
+use crate::runtime::trainer::ModelRunner;
+use crate::runtime::PjRtEngine;
+use crate::topo::baselines;
+use crate::util::rng::Xoshiro256pp;
+
+fn print_stats(s: &BenchStats) {
+    println!("  {}", s.report());
+}
+
+/// L1 mixing path comparison.
+pub fn perf_mixing(opts: &ExpOptions) {
+    println!("── perf_mixing: gossip X'=WX, D = 81,920 (model-sized) ──");
+    let d = 81_920;
+    let engine = PjRtEngine::from_artifacts().ok();
+    let (warm, iters) = if opts.quick { (1, 3) } else { (2, 8) };
+    for n in [16usize, 128] {
+        let topo = if n == 16 {
+            baselines::torus2d(16)
+        } else {
+            baselines::exponential(128)
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let x: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.next_f32()).collect())
+            .collect();
+        let host = Mixer::new(None, &topo, MixVariant::HostFallback).unwrap();
+        print_stats(&time_fn(&format!("host matmul        n={n}"), warm, iters, || {
+            std::hint::black_box(host.mix(&x).unwrap());
+        }));
+        if let Some(eng) = engine.as_ref() {
+            for (variant, label) in [
+                (MixVariant::Native, "xla-native artifact"),
+                (MixVariant::Pallas, "pallas-interpret   "),
+            ] {
+                let mixer = Mixer::new(Some(eng), &topo, variant).unwrap();
+                print_stats(&time_fn(
+                    &format!("{label} n={n}"),
+                    warm,
+                    iters,
+                    || {
+                        std::hint::black_box(mixer.mix(&x).unwrap());
+                    },
+                ));
+            }
+        } else {
+            println!("  (artifacts missing — PJRT variants skipped)");
+        }
+    }
+}
+
+/// §V-C solver ablation on the real ADMM KKT operator.
+pub fn perf_solver(opts: &ExpOptions) {
+    println!("── perf_solver: Bi-CGSTAB on the ADMM KKT system ──");
+    let sizes: &[usize] = if opts.quick { &[16, 32] } else { &[16, 32, 64] };
+    for &n in sizes {
+        let ops = operators::build_homogeneous(n, 2.0, 1e-8);
+        let dim = ops.kkt.rows();
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let b: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
+        let opts_k = BicgstabOptions {
+            rtol: 1e-8,
+            ..Default::default()
+        };
+
+        // ILU factorization cost (once per run).
+        let t_ilu = time_fn(&format!("ILU(0) factor          n={n} dim={dim}"), 0, 1, || {
+            std::hint::black_box(Ilu0::factor(&ops.kkt, 1e-6));
+        });
+        print_stats(&t_ilu);
+
+        let ilu = Ilu0::factor(&ops.kkt, 1e-6);
+        let report = |name: &str, pre: Option<&Ilu0>, warm: bool| {
+            let mut samples = Vec::new();
+            let mut iters_used = 0usize;
+            let reps = if opts.quick { 2 } else { 4 };
+            let mut x_prev = vec![0.0; dim];
+            for _ in 0..reps {
+                let mut x = if warm { x_prev.clone() } else { vec![0.0; dim] };
+                let mut ws = BicgstabWorkspace::new(dim);
+                let t0 = std::time::Instant::now();
+                let out = bicgstab_ws(&ops.kkt, &b, &mut x, pre, &opts_k, &mut ws);
+                samples.push(t0.elapsed().as_secs_f64());
+                iters_used = out.iterations;
+                x_prev = x;
+            }
+            let s = stats_from(&format!("{name} n={n} (krylov {iters_used})"), samples);
+            print_stats(&s);
+        };
+        report("bicgstab unpreconditioned", None, false);
+        report("bicgstab + ILU(0)        ", Some(&ilu), false);
+        report("bicgstab + ILU + warm    ", Some(&ilu), true);
+    }
+}
+
+/// ADMM per-iteration cost vs n.
+pub fn perf_admm(opts: &ExpOptions) {
+    println!("── perf_admm: full optimizer wall time ──");
+    let sizes: &[usize] = if opts.quick { &[8, 16] } else { &[8, 16, 32] };
+    for &n in sizes {
+        let d = (n as f64).log2().ceil() as usize;
+        let r = (n * d / 2).max(n - 1);
+        let mut spec = crate::bench::experiments::ba_spec(
+            BandwidthScenario::paper_homogeneous(n),
+            r,
+            true, // quick budgets: this measures per-iteration cost, not quality
+        );
+        spec.max_iters = 30;
+        spec.polish_swaps = 0;
+        spec.anneal_steps = 200;
+        let t0 = std::time::Instant::now();
+        let rep = crate::optimizer::BaTopoOptimizer::new(spec)
+            .run_detailed()
+            .expect("optimizer");
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  n={n:<4} r={r:<4} 30 admm iters in {:>8}  ({:>8}/iter, krylov total {})",
+            super::fmt_time(dt),
+            super::fmt_time(dt / rep.admm_iterations.max(1) as f64),
+            rep.krylov_iterations
+        );
+    }
+}
+
+/// End-to-end DSGD hot-path throughput.
+pub fn perf_train(opts: &ExpOptions) {
+    println!("── perf_train: DSGD steps/sec (tiny model, n=16, PJRT) ──");
+    let Ok(engine) = PjRtEngine::from_artifacts() else {
+        println!("  (artifacts missing — skipped)");
+        return;
+    };
+    let runner = ModelRunner::new(&engine, "tiny", "native").expect("runner");
+    let topo = baselines::torus2d(16);
+    let mixer = Mixer::new(Some(&engine), &topo, MixVariant::Native).unwrap();
+    let n = 16;
+    let mut params: Vec<Vec<Vec<f32>>> = (0..n).map(|_| runner.init_params(3)).collect();
+    let mut momenta: Vec<Vec<Vec<f32>>> = (0..n).map(|_| runner.zero_momenta()).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let b = runner.batch();
+    let s = runner.seq();
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.index(runner.vocab()) as i32).collect();
+    let targets: Vec<i32> = (0..b).map(|_| rng.index(runner.classes()) as i32).collect();
+
+    let rounds = if opts.quick { 3 } else { 10 };
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        for node in 0..n {
+            runner
+                .train_step(&mut params[node], &mut momenta[node], &tokens, &targets)
+                .unwrap();
+        }
+        let flats: Vec<Vec<f32>> = params.iter().map(|p| runner.flatten(p)).collect();
+        let mixed = mixer.mix(&flats).unwrap();
+        for (node, flat) in mixed.iter().enumerate() {
+            runner.unflatten_into(flat, &mut params[node]);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let steps = (rounds * n) as f64;
+    println!(
+        "  {rounds} rounds x {n} nodes: {:>8} total, {:.1} node-steps/s, {:>8}/round",
+        super::fmt_time(dt),
+        steps / dt,
+        super::fmt_time(dt / rounds as f64)
+    );
+}
+
+/// Dispatch by name.
+pub fn run(names: &[String], opts: &ExpOptions) {
+    let all = names.iter().any(|n| n == "all" || n == "perf");
+    let want = |n: &str| all || names.iter().any(|x| x == n);
+    if want("perf_mixing") {
+        perf_mixing(opts);
+    }
+    if want("perf_solver") {
+        perf_solver(opts);
+    }
+    if want("perf_admm") {
+        perf_admm(opts);
+    }
+    if want("perf_train") {
+        perf_train(opts);
+    }
+}

@@ -1,0 +1,193 @@
+//! Experiment configuration & topology persistence.
+//!
+//! Optimized BA-Topo instances are expensive (ADMM + polish), so experiment
+//! drivers cache them as JSON under `results/topos/`; this module owns the
+//! (de)serialization and the paper-constant presets shared by the CLI, the
+//! examples and the bench harness.
+
+use crate::bandwidth::scenarios::BandwidthScenario;
+use crate::graph::{Graph, Topology};
+use crate::linalg::DenseMatrix;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Serialize a topology (graph + weights + flags) to JSON.
+pub fn topology_to_json(t: &Topology) -> Json {
+    let n = t.num_nodes();
+    let edges: Vec<Json> = t
+        .graph
+        .edges()
+        .iter()
+        .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+        .collect();
+    let weights: Vec<f64> = t.weights.data().to_vec();
+    Json::obj(vec![
+        ("name", Json::Str(t.name.clone())),
+        ("n", Json::Num(n as f64)),
+        ("directed", Json::Bool(t.directed)),
+        (
+            "r_asym_override",
+            t.r_asym_override.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        ("edges", Json::Arr(edges)),
+        ("weights", Json::nums(&weights)),
+    ])
+}
+
+/// Deserialize a topology.
+pub fn topology_from_json(j: &Json) -> Result<Topology, String> {
+    let n = j.get("n").and_then(Json::as_usize).ok_or("missing n")?;
+    let name = j.get("name").and_then(Json::as_str).unwrap_or("topology");
+    let directed = j.get("directed").and_then(Json::as_bool).unwrap_or(false);
+    let r_override = j.get("r_asym_override").and_then(Json::as_f64);
+    let edges: Vec<(usize, usize)> = j
+        .get("edges")
+        .and_then(Json::as_arr)
+        .ok_or("missing edges")?
+        .iter()
+        .map(|e| {
+            let pair = e.as_arr().ok_or("bad edge")?;
+            Ok((
+                pair[0].as_usize().ok_or("bad edge a")?,
+                pair[1].as_usize().ok_or("bad edge b")?,
+            ))
+        })
+        .collect::<Result<_, String>>()?;
+    let weights: Vec<f64> = j
+        .get("weights")
+        .and_then(Json::as_arr)
+        .ok_or("missing weights")?
+        .iter()
+        .map(|x| x.as_f64().ok_or("bad weight".to_string()))
+        .collect::<Result<_, _>>()?;
+    if weights.len() != n * n {
+        return Err(format!("weights len {} != n² {}", weights.len(), n * n));
+    }
+    let graph = Graph::new(n, edges);
+    let w = DenseMatrix::from_vec(n, n, weights);
+    Ok(Topology {
+        graph,
+        weights: w,
+        name: name.to_string(),
+        directed,
+        r_asym_override: r_override,
+    })
+}
+
+/// Save a topology to a file.
+pub fn save_topology(t: &Topology, path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, topology_to_json(t).to_string())
+}
+
+/// Load a topology from a file.
+pub fn load_topology(path: &Path) -> Result<Topology, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let j = Json::parse(&text).map_err(|e| e.to_string())?;
+    topology_from_json(&j)
+}
+
+/// Build the paper's bandwidth scenario by name for `n` nodes.
+pub fn scenario_by_name(name: &str, n: usize) -> Result<BandwidthScenario, String> {
+    match name {
+        "homogeneous" => Ok(BandwidthScenario::paper_homogeneous(n)),
+        "node-level" => {
+            if n % 2 != 0 {
+                return Err("node-level preset needs even n".into());
+            }
+            // Paper ratio 3:1 — first half 9.76, second half 3.25 GB/s.
+            let mut bw = vec![9.76; n / 2];
+            bw.extend(vec![3.25; n / 2]);
+            Ok(BandwidthScenario::NodeLevel { bw })
+        }
+        "intra-server" => {
+            if n != 8 {
+                return Err("intra-server preset models the 8-GPU server (n=8)".into());
+            }
+            Ok(BandwidthScenario::paper_intra_server())
+        }
+        "inter-server" => {
+            if n != 16 {
+                return Err("inter-server preset models BCube(4,2) (n=16)".into());
+            }
+            Ok(BandwidthScenario::paper_inter_server())
+        }
+        other => Err(format!(
+            "unknown scenario {other} (homogeneous|node-level|intra-server|inter-server)"
+        )),
+    }
+}
+
+/// Build a baseline topology by name.
+pub fn baseline_by_name(name: &str, n: usize, seed: u64) -> Result<Topology, String> {
+    use crate::topo::baselines::Baseline;
+    let b = match name {
+        "ring" => Baseline::Ring,
+        "2d-grid" | "grid" => Baseline::Grid2d,
+        "2d-torus" | "torus" => Baseline::Torus2d,
+        "hypercube" => Baseline::Hypercube,
+        "exponential" | "exp" => Baseline::Exponential,
+        "u-equistatic" | "equitopo" => Baseline::UEquiStatic { m: 2 },
+        "random" => Baseline::Random { p: 0.3 },
+        other => return Err(format!("unknown baseline {other}")),
+    };
+    Ok(b.build(n, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::baselines;
+
+    #[test]
+    fn topology_json_roundtrip() {
+        for t in [
+            baselines::ring(8),
+            baselines::exponential(8),
+            baselines::u_equistatic(12, 2, 3),
+        ] {
+            let j = topology_to_json(&t);
+            let back = topology_from_json(&j).unwrap();
+            assert_eq!(back.name, t.name);
+            assert_eq!(back.graph.edges(), t.graph.edges());
+            assert_eq!(back.directed, t.directed);
+            assert!(back.weights.max_abs_diff(&t.weights) < 1e-12);
+            assert!(
+                (back.asymptotic_convergence_factor() - t.asymptotic_convergence_factor()).abs()
+                    < 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("batopo_cfg_test");
+        let path = dir.join("ring.topo.json");
+        let t = baselines::ring(6);
+        save_topology(&t, &path).unwrap();
+        let back = load_topology(&path).unwrap();
+        assert_eq!(back.graph.edges(), t.graph.edges());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scenario_presets() {
+        assert_eq!(scenario_by_name("homogeneous", 16).unwrap().num_nodes(), 16);
+        assert_eq!(scenario_by_name("node-level", 16).unwrap().num_nodes(), 16);
+        assert_eq!(scenario_by_name("intra-server", 8).unwrap().num_nodes(), 8);
+        assert_eq!(scenario_by_name("inter-server", 16).unwrap().num_nodes(), 16);
+        assert!(scenario_by_name("intra-server", 16).is_err());
+        assert!(scenario_by_name("bogus", 8).is_err());
+    }
+
+    #[test]
+    fn baseline_presets() {
+        for name in ["ring", "grid", "torus", "hypercube", "exp", "equitopo", "random"] {
+            let t = baseline_by_name(name, 16, 1).unwrap();
+            assert_eq!(t.num_nodes(), 16);
+        }
+        assert!(baseline_by_name("bogus", 16, 1).is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! Consensus-speed experiments (paper §VI-A): iterate `x_{k+1} = W x_k` from
+//! Gaussian initial states and track the consensus error `‖x_k − x̄‖₂`
+//! against *simulated* time (Eq. 34) under a bandwidth scenario — the
+//! machinery behind Figs. 1, 2, 4, 6 and the convergence-time column of
+//! Table I.
+
+use crate::bandwidth::scenarios::BandwidthScenario;
+use crate::bandwidth::timing::TimeModel;
+use crate::coordinator::clock::SimClock;
+use crate::graph::Topology;
+use crate::runtime::mixer::{MixVariant, Mixer};
+use crate::runtime::{PjRtEngine, RuntimeError};
+use crate::util::rng::Xoshiro256pp;
+
+/// Consensus experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ConsensusConfig {
+    /// State dimension per node (the paper gossips model-sized vectors; the
+    /// error trajectory is dimension-independent in distribution).
+    pub dim: usize,
+    /// Max gossip rounds.
+    pub max_rounds: usize,
+    /// Stop when the error drops below this (Table I uses 1e-4).
+    pub eps: f64,
+    /// RNG seed for the initial states.
+    pub seed: u64,
+    /// Mixing executor.
+    pub mix_variant: MixVariant,
+}
+
+impl Default for ConsensusConfig {
+    fn default() -> Self {
+        ConsensusConfig {
+            dim: 64,
+            max_rounds: 5000,
+            eps: 1e-4,
+            seed: 7,
+            mix_variant: MixVariant::HostFallback,
+        }
+    }
+}
+
+/// One trajectory point.
+#[derive(Debug, Clone, Copy)]
+pub struct ConsensusPoint {
+    pub round: usize,
+    pub sim_time: f64,
+    /// ‖x_k − x̄‖₂ over the stacked state, normalized by the initial error.
+    pub error: f64,
+}
+
+/// Full experiment output.
+#[derive(Debug, Clone)]
+pub struct ConsensusRun {
+    pub topology: String,
+    pub trajectory: Vec<ConsensusPoint>,
+    /// Simulated seconds per round (Eq. 34).
+    pub iter_time: f64,
+    /// First simulated time the normalized error fell below `eps`.
+    pub convergence_time: Option<f64>,
+    /// Rounds to `eps`.
+    pub convergence_rounds: Option<usize>,
+    /// Empirical per-round contraction factor (geometric mean over the run) —
+    /// cross-checks the spectral `r_asym`.
+    pub empirical_rate: f64,
+}
+
+/// Run the consensus experiment for one topology under a scenario.
+pub fn run_consensus(
+    engine: Option<&PjRtEngine>,
+    topo: &Topology,
+    scenario: &BandwidthScenario,
+    tm: &TimeModel,
+    cfg: &ConsensusConfig,
+) -> Result<ConsensusRun, RuntimeError> {
+    let n = topo.num_nodes();
+    assert_eq!(n, scenario.num_nodes(), "topology/scenario mismatch");
+    let mixer = Mixer::new(engine, topo, cfg.mix_variant)?;
+    let iter_time = tm.consensus_iter_time(scenario, topo);
+
+    // Gaussian init (standard normal, the paper's setup).
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let mut x: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..cfg.dim).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+
+    let error_of = |x: &[Vec<f32>]| -> f64 {
+        // x̄ = column mean; error = Frobenius distance to consensus.
+        let mut err = 0.0f64;
+        for j in 0..cfg.dim {
+            let mean: f64 = x.iter().map(|r| r[j] as f64).sum::<f64>() / n as f64;
+            for r in x {
+                let d = r[j] as f64 - mean;
+                err += d * d;
+            }
+        }
+        err.sqrt()
+    };
+
+    let e0 = error_of(&x).max(f64::MIN_POSITIVE);
+    let mut clock = SimClock::new();
+    let mut trajectory = vec![ConsensusPoint {
+        round: 0,
+        sim_time: 0.0,
+        error: 1.0,
+    }];
+    let mut convergence_time = None;
+    let mut convergence_rounds = None;
+
+    let mut last_err = 1.0f64;
+    for round in 1..=cfg.max_rounds {
+        x = mixer.mix(&x)?;
+        clock.advance(iter_time);
+        let err = error_of(&x) / e0;
+        trajectory.push(ConsensusPoint {
+            round,
+            sim_time: clock.now(),
+            error: err,
+        });
+        last_err = err;
+        if err < cfg.eps {
+            convergence_time = Some(clock.now());
+            convergence_rounds = Some(round);
+            break;
+        }
+    }
+
+    let rounds_done = trajectory.last().unwrap().round.max(1);
+    let empirical_rate = last_err.powf(1.0 / rounds_done as f64);
+
+    Ok(ConsensusRun {
+        topology: topo.name.clone(),
+        trajectory,
+        iter_time,
+        convergence_time,
+        convergence_rounds,
+        empirical_rate,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::baselines;
+
+    fn homog(n: usize) -> BandwidthScenario {
+        BandwidthScenario::paper_homogeneous(n)
+    }
+
+    #[test]
+    fn empirical_rate_matches_spectral() {
+        let topo = baselines::torus2d(16);
+        // eps within f32 reach: the normalized error floors around 1e-7.
+        let run = run_consensus(
+            None,
+            &topo,
+            &homog(16),
+            &TimeModel::default(),
+            &ConsensusConfig {
+                eps: 1e-5,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let spectral = topo.asymptotic_convergence_factor();
+        assert!(
+            (run.empirical_rate - spectral).abs() < 0.05,
+            "empirical {} vs spectral {}",
+            run.empirical_rate,
+            spectral
+        );
+    }
+
+    #[test]
+    fn exponential_beats_ring_in_rounds() {
+        let ring = baselines::ring(16);
+        let expo = baselines::exponential(16);
+        let cfg = ConsensusConfig::default();
+        let tm = TimeModel::default();
+        let r1 = run_consensus(None, &ring, &homog(16), &tm, &cfg).unwrap();
+        let r2 = run_consensus(None, &expo, &homog(16), &tm, &cfg).unwrap();
+        let rounds1 = r1.convergence_rounds.unwrap_or(usize::MAX);
+        let rounds2 = r2.convergence_rounds.unwrap_or(usize::MAX);
+        assert!(rounds2 < rounds1, "exp {rounds2} vs ring {rounds1}");
+    }
+
+    #[test]
+    fn error_is_monotone_decreasing_for_symmetric_topologies() {
+        let topo = baselines::hypercube(8);
+        let run = run_consensus(
+            None,
+            &topo,
+            &homog(8),
+            &TimeModel::default(),
+            &ConsensusConfig::default(),
+        )
+        .unwrap();
+        for w in run.trajectory.windows(2) {
+            assert!(w[1].error <= w[0].error + 1e-9);
+        }
+        assert!(run.convergence_time.is_some());
+    }
+
+    #[test]
+    fn sim_time_scales_with_bandwidth_penalty() {
+        // Intra-server scenario penalizes the exponential graph 10x (paper
+        // §VI-A3) — its per-round time must be 10 * t_comm.
+        let topo = baselines::exponential(8);
+        let run = run_consensus(
+            None,
+            &topo,
+            &BandwidthScenario::paper_intra_server(),
+            &TimeModel::default(),
+            &ConsensusConfig::default(),
+        )
+        .unwrap();
+        assert!((run.iter_time - 10.0 * 5.01e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pjrt_mixing_agrees_with_host() {
+        let Some(_) = crate::runtime::find_artifacts_dir() else { return };
+        let eng = PjRtEngine::from_artifacts().unwrap();
+        let topo = baselines::u_equistatic(16, 2, 5);
+        let tm = TimeModel::default();
+        let mut cfg = ConsensusConfig {
+            max_rounds: 40,
+            eps: 0.0,
+            ..Default::default()
+        };
+        let host = run_consensus(None, &topo, &homog(16), &tm, &cfg).unwrap();
+        cfg.mix_variant = MixVariant::Native;
+        let pjrt = run_consensus(Some(&eng), &topo, &homog(16), &tm, &cfg).unwrap();
+        for (a, b) in host.trajectory.iter().zip(&pjrt.trajectory) {
+            assert!((a.error - b.error).abs() < 1e-4, "{} vs {}", a.error, b.error);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Simulated cluster clock.
+//!
+//! The paper evaluates wall time analytically from measured constants
+//! (Eq. 34/35); the simulator advances this clock by the *parallel* cost of
+//! each round — all nodes compute concurrently and the slowest edge bounds
+//! the synchronization — regardless of how long the (serialized) simulation
+//! host actually took.
+
+/// Simulated time accumulator with an event trace.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now: f64,
+    events: Vec<(f64, String)>,
+}
+
+impl SimClock {
+    /// New clock at t = 0.
+    pub fn new() -> SimClock {
+        SimClock::default()
+    }
+
+    /// Current simulated time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `dt` seconds (must be non-negative).
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad clock advance {dt}");
+        self.now += dt;
+    }
+
+    /// Advance and record a named event at the *new* time.
+    pub fn advance_event(&mut self, dt: f64, label: impl Into<String>) {
+        self.advance(dt);
+        self.events.push((self.now, label.into()));
+    }
+
+    /// Event trace (time, label).
+    pub fn events(&self) -> &[(f64, String)] {
+        &self.events
+    }
+
+    /// Drop the trace (long runs).
+    pub fn clear_events(&mut self) {
+        self.events.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(0.5);
+        c.advance_event(0.25, "round 1");
+        assert!((c.now() - 0.75).abs() < 1e-12);
+        assert_eq!(c.events().len(), 1);
+        assert_eq!(c.events()[0].1, "round 1");
+    }
+
+    #[test]
+    #[should_panic(expected = "bad clock advance")]
+    fn rejects_negative_dt() {
+        SimClock::new().advance(-1.0);
+    }
+}

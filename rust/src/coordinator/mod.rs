@@ -1,0 +1,23 @@
+//! L3 coordinator: the leader/worker runtime that drives decentralized
+//! learning over a topology under a bandwidth scenario.
+//!
+//! Process topology: one **leader** (owns the PJRT engine, the gossip
+//! [`crate::runtime::Mixer`], the [`clock::SimClock`] and the round state
+//! machine) plus one **worker thread per node** (owns the node's dataset
+//! shard and produces training/eval batches concurrently, communicating over
+//! `std::sync::mpsc` channels).
+//!
+//! PJRT-CPU note: the `xla` crate's client is not `Send`, so executable
+//! launches are serialized through the leader; workers parallelize the
+//! host-side work (data generation, bookkeeping). *Simulated* time follows
+//! the paper's analytic model (Eq. 34/35) — one round costs one parallel
+//! `t_comp + t_iter`, independent of how the simulation host schedules the
+//! serialized launches.
+
+pub mod clock;
+pub mod protocol;
+pub mod worker;
+
+pub use clock::SimClock;
+pub use protocol::{Command, Reply};
+pub use worker::WorkerPool;

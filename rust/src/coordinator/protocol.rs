@@ -1,0 +1,36 @@
+//! Leader ⇄ worker message protocol.
+
+/// Commands the leader sends to a node worker.
+#[derive(Debug, Clone)]
+pub enum Command {
+    /// Produce the next local training batch (tokens, targets).
+    NextBatch,
+    /// Produce an evaluation batch of the node's held-out data.
+    EvalBatch,
+    /// Record the node's local loss for step bookkeeping.
+    RecordLoss { step: usize, loss: f64 },
+    /// Shut the worker down.
+    Shutdown,
+}
+
+/// Worker replies.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    Batch {
+        node: usize,
+        tokens: Vec<i32>,
+        targets: Vec<i32>,
+    },
+    Ack {
+        node: usize,
+    },
+}
+
+impl Reply {
+    /// Node id carried by any reply.
+    pub fn node(&self) -> usize {
+        match self {
+            Reply::Batch { node, .. } | Reply::Ack { node } => *node,
+        }
+    }
+}

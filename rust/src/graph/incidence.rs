@@ -1,0 +1,155 @@
+//! Canonical logical-edge enumeration over `K_n` and the incidence matrix `A`
+//! (paper Eq. 6).
+//!
+//! Every vectorized object in the optimizer (`g`, `z`, the rows of `M`) lives
+//! in the *edge space*: all `|E| = n(n−1)/2` unordered pairs `{i,j}` with
+//! `i < j`, ordered lexicographically. These helpers define that bijection
+//! once so the incidence matrices, the ADMM operators and the bandwidth
+//! constraint builders never disagree about edge indexing.
+
+use crate::linalg::{CscMatrix, DenseMatrix};
+
+/// Number of logical edges `|E| = n(n−1)/2`.
+pub fn num_possible_edges(n: usize) -> usize {
+    n * (n - 1) / 2
+}
+
+/// Canonical index of edge `{i,j}` (any order, `i ≠ j`) in the lexicographic
+/// enumeration of pairs `i < j`.
+pub fn edge_index(n: usize, a: usize, b: usize) -> usize {
+    assert!(a != b && a < n && b < n, "bad edge ({a},{b}) for n={n}");
+    let (i, j) = (a.min(b), a.max(b));
+    // Edges starting at 0..i occupy sum_{k<i} (n-1-k) slots.
+    i * n - i * (i + 1) / 2 + (j - i - 1)
+}
+
+/// Inverse of [`edge_index`]: the pair `(i, j)` with `i < j` for index `l`.
+pub fn edge_pair(n: usize, l: usize) -> (usize, usize) {
+    assert!(l < num_possible_edges(n), "edge index {l} out of range");
+    let mut i = 0usize;
+    let mut base = 0usize;
+    loop {
+        let row = n - 1 - i; // edges starting at i
+        if l < base + row {
+            return (i, i + 1 + (l - base));
+        }
+        base += row;
+        i += 1;
+    }
+}
+
+/// Iterator over the full edge space in canonical order.
+pub struct EdgeSpace {
+    n: usize,
+    l: usize,
+}
+
+impl EdgeSpace {
+    pub fn new(n: usize) -> EdgeSpace {
+        EdgeSpace { n, l: 0 }
+    }
+}
+
+impl Iterator for EdgeSpace {
+    type Item = (usize, (usize, usize));
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.l >= num_possible_edges(self.n) {
+            return None;
+        }
+        let item = (self.l, edge_pair(self.n, self.l));
+        self.l += 1;
+        Some(item)
+    }
+}
+
+/// Incidence matrix `A ∈ R^{n × |E|}` over the **full** edge space (Eq. 6):
+/// column `l` for edge `{i,j}` has `+1` at row `i` and `−1` at row `j`
+/// (orientation is arbitrary for undirected graphs — the Laplacian
+/// `A·Diag(g)·Aᵀ` is orientation-invariant).
+pub fn incidence_matrix(n: usize) -> CscMatrix {
+    let m = num_possible_edges(n);
+    let mut trips = Vec::with_capacity(2 * m);
+    for (l, (i, j)) in EdgeSpace::new(n) {
+        trips.push((i, l, 1.0));
+        trips.push((j, l, -1.0));
+    }
+    CscMatrix::from_triplets(n, m, trips)
+}
+
+/// Dense `abs(A)` — the node-level mask matrix `M = abs(A)` of Eq. 16. Row `i`
+/// marks every logical edge incident to node `i`.
+pub fn abs_incidence_dense(n: usize) -> DenseMatrix {
+    let m = num_possible_edges(n);
+    let mut d = DenseMatrix::zeros(n, m);
+    for (l, (i, j)) in EdgeSpace::new(n) {
+        d[(i, l)] = 1.0;
+        d[(j, l)] = 1.0;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_index_roundtrip() {
+        for n in [2usize, 3, 5, 16, 33] {
+            for l in 0..num_possible_edges(n) {
+                let (i, j) = edge_pair(n, l);
+                assert!(i < j && j < n);
+                assert_eq!(edge_index(n, i, j), l);
+                assert_eq!(edge_index(n, j, i), l);
+            }
+        }
+    }
+
+    #[test]
+    fn edge_order_is_lexicographic() {
+        let pairs: Vec<(usize, usize)> = EdgeSpace::new(4).map(|(_, p)| p).collect();
+        assert_eq!(pairs, vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    fn incidence_columns_sum_to_zero() {
+        let n = 6;
+        let a = incidence_matrix(n);
+        assert_eq!(a.rows(), n);
+        assert_eq!(a.cols(), num_possible_edges(n));
+        let d = a.to_dense();
+        for l in 0..a.cols() {
+            let col_sum: f64 = (0..n).map(|i| d[(i, l)]).sum();
+            assert_eq!(col_sum, 0.0, "column {l} sums to {col_sum}");
+            let abs_sum: f64 = (0..n).map(|i| d[(i, l)].abs()).sum();
+            assert_eq!(abs_sum, 2.0);
+        }
+    }
+
+    #[test]
+    fn abs_incidence_marks_endpoints() {
+        let n = 5;
+        let m = abs_incidence_dense(n);
+        for (l, (i, j)) in EdgeSpace::new(n) {
+            for r in 0..n {
+                let want = if r == i || r == j { 1.0 } else { 0.0 };
+                assert_eq!(m[(r, l)], want);
+            }
+        }
+    }
+
+    #[test]
+    fn laplacian_of_uniform_complete_graph() {
+        // A·Diag(1)·Aᵀ over the full edge space = n·I − 11ᵀ (complete-graph Laplacian).
+        let n = 5;
+        let a = incidence_matrix(n);
+        let g = vec![1.0; num_possible_edges(n)];
+        let l = super::super::laplacian::laplacian_from_edge_space(n, &g);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { (n - 1) as f64 } else { -1.0 };
+                assert!((l[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+        let _ = a;
+    }
+}

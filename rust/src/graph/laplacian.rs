@@ -1,0 +1,126 @@
+//! Weighted Laplacians and weight matrices (paper Eq. 5):
+//! `W = I − L = I − A·Diag(g)·Aᵀ`.
+
+use super::incidence::{edge_pair, num_possible_edges};
+use super::Graph;
+use crate::linalg::DenseMatrix;
+
+/// Weighted Laplacian over the **full** edge space: `g` has one entry per
+/// logical edge (length `n(n−1)/2`, canonical order). Zero entries simply
+/// contribute nothing, which is how cardinality-constrained iterates inside
+/// ADMM are evaluated without re-deriving a graph.
+pub fn laplacian_from_edge_space(n: usize, g: &[f64]) -> DenseMatrix {
+    assert_eq!(g.len(), num_possible_edges(n), "edge-space length mismatch");
+    let mut l = DenseMatrix::zeros(n, n);
+    for (idx, &w) in g.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        let (i, j) = edge_pair(n, idx);
+        l[(i, i)] += w;
+        l[(j, j)] += w;
+        l[(i, j)] -= w;
+        l[(j, i)] -= w;
+    }
+    l
+}
+
+/// Weighted Laplacian of a graph with per-edge weights aligned to
+/// `graph.edges()` order.
+pub fn laplacian_from_weights(graph: &Graph, weights: &[f64]) -> DenseMatrix {
+    assert_eq!(weights.len(), graph.num_edges(), "per-edge weight mismatch");
+    let n = graph.num_nodes();
+    let mut l = DenseMatrix::zeros(n, n);
+    for (&(i, j), &w) in graph.edges().iter().zip(weights) {
+        l[(i, i)] += w;
+        l[(j, j)] += w;
+        l[(i, j)] -= w;
+        l[(j, i)] -= w;
+    }
+    l
+}
+
+/// Gossip weight matrix `W = I − L` for a graph with per-edge weights `g`
+/// aligned to `graph.edges()`. By construction `W` is symmetric and doubly
+/// stochastic (Eq. 5 discussion in the paper).
+pub fn weight_matrix_from_edge_weights(graph: &Graph, weights: &[f64]) -> DenseMatrix {
+    let n = graph.num_nodes();
+    let l = laplacian_from_weights(graph, weights);
+    let mut w = DenseMatrix::eye(n);
+    for i in 0..n {
+        for j in 0..n {
+            w[(i, j)] -= l[(i, j)];
+        }
+    }
+    w
+}
+
+/// Edge-space weight matrix `W = I − A·Diag(g)·Aᵀ` (used by the optimizer on
+/// raw iterates).
+pub fn weight_matrix_from_edge_space(n: usize, g: &[f64]) -> DenseMatrix {
+    let l = laplacian_from_edge_space(n, g);
+    let mut w = DenseMatrix::eye(n);
+    for i in 0..n {
+        for j in 0..n {
+            w[(i, j)] -= l[(i, j)];
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::incidence::edge_index;
+
+    #[test]
+    fn laplacian_path_graph() {
+        let g = Graph::new(3, vec![(0, 1), (1, 2)]);
+        let l = laplacian_from_weights(&g, &[0.5, 0.25]);
+        assert_eq!(l[(0, 0)], 0.5);
+        assert_eq!(l[(1, 1)], 0.75);
+        assert_eq!(l[(2, 2)], 0.25);
+        assert_eq!(l[(0, 1)], -0.5);
+        assert_eq!(l[(1, 2)], -0.25);
+        assert_eq!(l[(0, 2)], 0.0);
+    }
+
+    #[test]
+    fn edge_space_and_graph_paths_agree() {
+        let n = 6;
+        let graph = Graph::new(n, vec![(0, 1), (1, 3), (2, 5), (4, 5)]);
+        let weights = [0.3, 0.2, 0.4, 0.1];
+        let from_graph = laplacian_from_weights(&graph, &weights);
+        let mut g_full = vec![0.0; num_possible_edges(n)];
+        for (&(i, j), &w) in graph.edges().iter().zip(&weights) {
+            g_full[edge_index(n, i, j)] = w;
+        }
+        let from_space = laplacian_from_edge_space(n, &g_full);
+        assert!(from_graph.max_abs_diff(&from_space) < 1e-15);
+    }
+
+    #[test]
+    fn weight_matrix_is_doubly_stochastic() {
+        let g = Graph::new(4, vec![(0, 1), (1, 2), (2, 3), (0, 3)]);
+        let w = weight_matrix_from_edge_weights(&g, &[0.2, 0.3, 0.2, 0.3]);
+        assert!(w.is_symmetric(1e-15));
+        for i in 0..4 {
+            let row_sum: f64 = w.row(i).iter().sum();
+            assert!((row_sum - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rows_sum_to_one_even_with_negative_weights() {
+        // Double stochasticity is structural — holds for any g.
+        let n = 4;
+        let mut g_full = vec![0.0; num_possible_edges(n)];
+        g_full[0] = -0.2;
+        g_full[3] = 0.7;
+        let w = weight_matrix_from_edge_space(n, &g_full);
+        for i in 0..n {
+            let s: f64 = w.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Structural graph metrics: degrees, connectivity, average shortest path
+//! length (ASPL — the warm-start criterion of paper §VI), diameter.
+
+use super::Graph;
+use std::collections::VecDeque;
+
+/// Node degrees.
+pub fn degrees(g: &Graph) -> Vec<usize> {
+    let mut d = vec![0usize; g.num_nodes()];
+    for &(a, b) in g.edges() {
+        d[a] += 1;
+        d[b] += 1;
+    }
+    d
+}
+
+/// BFS hop distances from `src` (`usize::MAX` for unreachable).
+pub fn bfs_distances(g: &Graph, src: usize) -> Vec<usize> {
+    let n = g.num_nodes();
+    let adj = g.adjacency();
+    let mut dist = vec![usize::MAX; n];
+    dist[src] = 0;
+    let mut q = VecDeque::from([src]);
+    while let Some(u) = q.pop_front() {
+        for &v in &adj[u] {
+            if dist[v] == usize::MAX {
+                dist[v] = dist[u] + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// Is the graph connected? (Trivially true for n ≤ 1.)
+pub fn is_connected(g: &Graph) -> bool {
+    if g.num_nodes() <= 1 {
+        return true;
+    }
+    bfs_distances(g, 0).iter().all(|&d| d != usize::MAX)
+}
+
+/// Average shortest path length over all ordered pairs; `None` if the graph
+/// is disconnected. This is the simulated-annealing objective for the
+/// paper's warm-start initialization (§VI: low ASPL correlates with low
+/// communication delay [41]).
+pub fn avg_shortest_path_len(g: &Graph) -> Option<f64> {
+    let n = g.num_nodes();
+    if n <= 1 {
+        return Some(0.0);
+    }
+    let mut total = 0usize;
+    for s in 0..n {
+        let d = bfs_distances(g, s);
+        for (t, &dt) in d.iter().enumerate() {
+            if t == s {
+                continue;
+            }
+            if dt == usize::MAX {
+                return None;
+            }
+            total += dt;
+        }
+    }
+    Some(total as f64 / (n * (n - 1)) as f64)
+}
+
+/// Graph diameter (max hop distance); `None` if disconnected.
+pub fn diameter(g: &Graph) -> Option<usize> {
+    let n = g.num_nodes();
+    if n <= 1 {
+        return Some(0);
+    }
+    let mut dia = 0usize;
+    for s in 0..n {
+        let d = bfs_distances(g, s);
+        for &dt in &d {
+            if dt == usize::MAX {
+                return None;
+            }
+            dia = dia.max(dt);
+        }
+    }
+    Some(dia)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: usize) -> Graph {
+        Graph::new(n, (0..n).map(|i| (i, (i + 1) % n)))
+    }
+
+    #[test]
+    fn degree_counts() {
+        let g = Graph::new(4, vec![(0, 1), (0, 2), (0, 3)]);
+        assert_eq!(degrees(&g), vec![3, 1, 1, 1]);
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(is_connected(&ring(6)));
+        assert!(!is_connected(&Graph::new(4, vec![(0, 1), (2, 3)])));
+        assert!(is_connected(&Graph::empty(1)));
+        assert!(!is_connected(&Graph::empty(2)));
+    }
+
+    #[test]
+    fn aspl_ring_even() {
+        // Ring of 6: distances from any node are 1,2,3,2,1 → mean = 9/5.
+        let g = ring(6);
+        let aspl = avg_shortest_path_len(&g).unwrap();
+        assert!((aspl - 9.0 / 5.0).abs() < 1e-12, "aspl={aspl}");
+    }
+
+    #[test]
+    fn aspl_complete_is_one() {
+        assert_eq!(avg_shortest_path_len(&Graph::complete(7)), Some(1.0));
+    }
+
+    #[test]
+    fn aspl_none_for_disconnected() {
+        assert_eq!(avg_shortest_path_len(&Graph::new(3, vec![(0, 1)])), None);
+    }
+
+    #[test]
+    fn diameter_values() {
+        assert_eq!(diameter(&ring(8)), Some(4));
+        assert_eq!(diameter(&Graph::complete(5)), Some(1));
+        assert_eq!(diameter(&Graph::new(3, vec![(0, 1)])), None);
+    }
+}

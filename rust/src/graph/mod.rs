@@ -1,0 +1,301 @@
+//! Graph core: undirected graphs over `n` nodes, the canonical logical-edge
+//! enumeration, incidence matrices (paper Eq. 6), Laplacians (Eq. 5), weight
+//! matrices, and the spectral quantities the whole paper optimizes (Eq. 2–3).
+
+pub mod incidence;
+pub mod laplacian;
+pub mod metrics;
+pub mod spectral;
+
+pub use incidence::{edge_index, edge_pair, incidence_matrix, num_possible_edges, EdgeSpace};
+pub use laplacian::{laplacian_from_weights, weight_matrix_from_edge_weights};
+pub use metrics::{avg_shortest_path_len, degrees, is_connected};
+pub use spectral::{asymptotic_convergence_factor, laplacian_eigenvalues};
+
+use crate::linalg::DenseMatrix;
+
+/// An undirected simple graph: node count plus a sorted, deduplicated edge
+/// list with `i < j` per edge.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<(usize, usize)>,
+}
+
+impl Graph {
+    /// Build from an edge list; normalizes order, sorts, dedups and validates.
+    pub fn new(n: usize, edges: impl IntoIterator<Item = (usize, usize)>) -> Graph {
+        let mut es: Vec<(usize, usize)> = edges
+            .into_iter()
+            .map(|(a, b)| {
+                assert!(a != b, "self-loop ({a},{b})");
+                assert!(a < n && b < n, "edge ({a},{b}) out of bounds for n={n}");
+                (a.min(b), a.max(b))
+            })
+            .collect();
+        es.sort_unstable();
+        es.dedup();
+        Graph { n, edges: es }
+    }
+
+    /// Empty graph.
+    pub fn empty(n: usize) -> Graph {
+        Graph { n, edges: Vec::new() }
+    }
+
+    /// Complete graph K_n.
+    pub fn complete(n: usize) -> Graph {
+        let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                edges.push((i, j));
+            }
+        }
+        Graph { n, edges }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Sorted edge list (`i < j`).
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    /// Does the graph contain edge {a, b}?
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        let e = (a.min(b), a.max(b));
+        self.edges.binary_search(&e).is_ok()
+    }
+
+    /// Neighbor lists.
+    pub fn adjacency(&self) -> Vec<Vec<usize>> {
+        let mut adj = vec![Vec::new(); self.n];
+        for &(a, b) in &self.edges {
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        adj
+    }
+
+    /// Node degrees.
+    pub fn degrees(&self) -> Vec<usize> {
+        metrics::degrees(self)
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        self.degrees().into_iter().max().unwrap_or(0)
+    }
+
+    /// Global edge indices (canonical `i<j` lexicographic order over K_n).
+    pub fn edge_indices(&self) -> Vec<usize> {
+        self.edges
+            .iter()
+            .map(|&(a, b)| incidence::edge_index(self.n, a, b))
+            .collect()
+    }
+}
+
+/// A parameter-synchronization topology: the graph together with its
+/// doubly-stochastic symmetric weight matrix `W` (paper §III).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// The underlying (undirected) channel graph `G(N, E)` — used by the
+    /// bandwidth model and edge counting.
+    pub graph: Graph,
+    /// Doubly-stochastic gossip matrix, `W[i][j] = 0` off edges. Symmetric
+    /// for undirected topologies; the exponential graph [16] is directed and
+    /// yields an asymmetric circulant `W`.
+    pub weights: DenseMatrix,
+    /// Human-readable name for reports (e.g. "ring", "ba-topo(r=32)").
+    pub name: String,
+    /// True for directed gossip matrices (exponential graph).
+    pub directed: bool,
+    /// Closed-form `r_asym` when the builder knows it (circulant topologies);
+    /// the symmetric eigensolver can't handle asymmetric `W`.
+    pub r_asym_override: Option<f64>,
+}
+
+impl Topology {
+    /// Construct an undirected topology, validating that `W` matches the
+    /// sparsity pattern of `graph` and is symmetric doubly stochastic.
+    pub fn new(graph: Graph, weights: DenseMatrix, name: impl Into<String>) -> Topology {
+        let n = graph.num_nodes();
+        assert_eq!(weights.rows(), n);
+        assert_eq!(weights.cols(), n);
+        let t = Topology {
+            graph,
+            weights,
+            name: name.into(),
+            directed: false,
+            r_asym_override: None,
+        };
+        debug_assert!(t.validate(1e-6).is_ok(), "{:?}", t.validate(1e-6));
+        t
+    }
+
+    /// Construct a directed topology (asymmetric doubly-stochastic `W`); the
+    /// channel graph holds the undirected projection of the links and
+    /// `r_asym` must be supplied by the builder (e.g. via the circulant DFT
+    /// closed form).
+    pub fn new_directed(
+        graph: Graph,
+        weights: DenseMatrix,
+        name: impl Into<String>,
+        r_asym: f64,
+    ) -> Topology {
+        let n = graph.num_nodes();
+        assert_eq!(weights.rows(), n);
+        assert_eq!(weights.cols(), n);
+        Topology {
+            graph,
+            weights,
+            name: name.into(),
+            directed: true,
+            r_asym_override: Some(r_asym),
+        }
+    }
+
+    /// Check the §III weight-matrix conditions; returns a description of the
+    /// first violation if any.
+    pub fn validate(&self, tol: f64) -> Result<(), String> {
+        let n = self.graph.num_nodes();
+        let w = &self.weights;
+        if !self.directed && !w.is_symmetric(tol) {
+            return Err("W not symmetric".into());
+        }
+        for i in 0..n {
+            let s: f64 = w.row(i).iter().sum();
+            if (s - 1.0).abs() > tol {
+                return Err(format!("row {i} sums to {s}"));
+            }
+            let col_sum: f64 = (0..n).map(|r| w[(r, i)]).sum();
+            if (col_sum - 1.0).abs() > tol {
+                return Err(format!("col {i} sums to {col_sum}"));
+            }
+            for j in 0..n {
+                if i != j && w[(i, j)].abs() > tol && !self.graph.has_edge(i, j) {
+                    return Err(format!("W[{i}][{j}]={} off-edge", w[(i, j)]));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The paper's optimization objective `r_asym(W) = max{|λ₂|, |λₙ|}` (Eq. 3).
+    /// Directed circulant builders supply the DFT closed form via
+    /// `r_asym_override`; the symmetric eigensolver handles everything else.
+    pub fn asymptotic_convergence_factor(&self) -> f64 {
+        if let Some(r) = self.r_asym_override {
+            return r;
+        }
+        spectral::asymptotic_convergence_factor(&self.weights)
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    /// Number of edges `r`.
+    pub fn num_edges(&self) -> usize {
+        self.graph.num_edges()
+    }
+
+    /// Degrees used by the bandwidth model to split a node's bandwidth across
+    /// its links: undirected degree for symmetric topologies, out-degree
+    /// (nonzero off-diagonal row entries of `W`) for directed ones — the
+    /// paper's convention for the exponential graph (§VI-A1).
+    pub fn comm_degrees(&self) -> Vec<usize> {
+        let n = self.graph.num_nodes();
+        if !self.directed {
+            return self.graph.degrees();
+        }
+        (0..n)
+            .map(|i| {
+                (0..n)
+                    .filter(|&j| j != i && self.weights[(i, j)].abs() > 1e-12)
+                    .count()
+            })
+            .collect()
+    }
+
+    /// Per-edge weights `g` in canonical edge order, from `W = I − A·Diag(g)·Aᵀ`:
+    /// `g_l = −W[i][j]` for edge `l = {i,j}`.
+    pub fn edge_weights(&self) -> Vec<f64> {
+        self.graph
+            .edges()
+            .iter()
+            .map(|&(a, b)| self.weights[(a, b)])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_normalizes_edges() {
+        let g = Graph::new(4, vec![(2, 1), (0, 3), (1, 2)]);
+        assert_eq!(g.edges(), &[(0, 3), (1, 2)]);
+        assert!(g.has_edge(3, 0));
+        assert!(!g.has_edge(0, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn graph_rejects_self_loops() {
+        Graph::new(3, vec![(1, 1)]);
+    }
+
+    #[test]
+    fn complete_graph_counts() {
+        let g = Graph::complete(5);
+        assert_eq!(g.num_edges(), 10);
+        assert_eq!(g.max_degree(), 4);
+    }
+
+    #[test]
+    fn adjacency_is_symmetric() {
+        let g = Graph::new(4, vec![(0, 1), (1, 2), (2, 3)]);
+        let adj = g.adjacency();
+        assert_eq!(adj[1], vec![0, 2]);
+        assert_eq!(adj[0], vec![1]);
+    }
+
+    #[test]
+    fn topology_validation_catches_bad_rows() {
+        let g = Graph::new(2, vec![(0, 1)]);
+        let w = DenseMatrix::from_vec(2, 2, vec![0.6, 0.4, 0.4, 0.6]);
+        let t = Topology::new(g.clone(), w, "ok");
+        assert!(t.validate(1e-9).is_ok());
+        let bad = DenseMatrix::from_vec(2, 2, vec![0.5, 0.4, 0.4, 0.6]);
+        let t_bad = Topology {
+            graph: g,
+            weights: bad,
+            name: "bad".into(),
+            directed: false,
+            r_asym_override: None,
+        };
+        assert!(t_bad.validate(1e-9).is_err());
+    }
+
+    #[test]
+    fn edge_weights_match_w() {
+        let g = Graph::new(3, vec![(0, 1), (1, 2)]);
+        let w = DenseMatrix::from_vec(
+            3,
+            3,
+            vec![0.7, 0.3, 0.0, 0.3, 0.4, 0.3, 0.0, 0.3, 0.7],
+        );
+        let t = Topology::new(g, w, "path");
+        assert_eq!(t.edge_weights(), vec![0.3, 0.3]);
+    }
+}

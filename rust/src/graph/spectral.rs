@@ -1,0 +1,165 @@
+//! Spectral quantities of gossip matrices: the asymptotic convergence factor
+//! (paper Eq. 2–3), Laplacian spectra and spectral gaps.
+
+use crate::linalg::{DenseMatrix, SymEigen};
+
+/// The paper's objective (Eq. 3): `r_asym(W) = max{|λ₂(W)|, |λₙ(W)|}` for a
+/// symmetric doubly-stochastic `W`. Smaller is faster consensus.
+pub fn asymptotic_convergence_factor(w: &DenseMatrix) -> f64 {
+    let n = w.rows();
+    assert_eq!(n, w.cols());
+    if n == 1 {
+        return 0.0;
+    }
+    let eig = SymEigen::new(w);
+    // Eigenvalues are sorted descending; λ₁ = 1 is the consensus mode.
+    // Guard: find the eigenvalue closest to 1 and exclude exactly one copy.
+    let mut vals = eig.values.clone();
+    let (one_idx, _) = vals
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| (*a - 1.0).abs().partial_cmp(&(*b - 1.0).abs()).unwrap())
+        .unwrap();
+    vals.remove(one_idx);
+    vals.iter().map(|v| v.abs()).fold(0.0, f64::max)
+}
+
+/// Eigenvalues of a Laplacian, sorted descending (λ₁ ≥ … ≥ λₙ = 0 for
+/// connected graphs, the paper's Eq. 7 convention).
+pub fn laplacian_eigenvalues(l: &DenseMatrix) -> Vec<f64> {
+    SymEigen::new(l).values
+}
+
+/// Second-smallest Laplacian eigenvalue (algebraic connectivity, λ_{n−1} in
+/// the paper's descending indexing).
+pub fn algebraic_connectivity(l: &DenseMatrix) -> f64 {
+    let vals = laplacian_eigenvalues(l);
+    vals[vals.len() - 2]
+}
+
+/// `r_asym` of a **circulant** gossip matrix with first row `c` (row `i` is
+/// `c` rotated right by `i`): eigenvalues are the DFT of `c`,
+/// `λ_k = Σ_j c_j ω^{jk}` with `ω = e^{−2πi/n}`, and the convergence factor
+/// is the largest modulus over `k ≠ 0`. This covers the (directed)
+/// exponential graph [16] and the U-EquiStatic circulants [19] in closed
+/// form without a general complex eigensolver.
+pub fn circulant_convergence_factor(c: &[f64]) -> f64 {
+    let n = c.len();
+    assert!(n >= 1);
+    let mut worst = 0.0f64;
+    for k in 1..n {
+        let mut re = 0.0;
+        let mut im = 0.0;
+        for (j, &cj) in c.iter().enumerate() {
+            let ang = -2.0 * std::f64::consts::PI * (j * k % n) as f64 / n as f64;
+            re += cj * ang.cos();
+            im += cj * ang.sin();
+        }
+        worst = worst.max((re * re + im * im).sqrt());
+    }
+    worst
+}
+
+/// Number of synchronization rounds for the consensus error to decay below
+/// `eps` given factor `r`: smallest `k` with `r^k ≤ eps`. Returns `None` for
+/// non-contracting factors (`r ≥ 1`).
+pub fn rounds_to_eps(r_asym: f64, eps: f64) -> Option<usize> {
+    if r_asym >= 1.0 {
+        return None;
+    }
+    if r_asym <= 0.0 {
+        return Some(1);
+    }
+    Some((eps.ln() / r_asym.ln()).ceil().max(1.0) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::laplacian::weight_matrix_from_edge_weights;
+    use crate::graph::Graph;
+
+    #[test]
+    fn complete_graph_uniform_weights_is_instant() {
+        // W = (1/n) 11^T has r_asym = 0 (single-step consensus).
+        let n = 6;
+        let g = Graph::complete(n);
+        let w = weight_matrix_from_edge_weights(&g, &vec![1.0 / n as f64; g.num_edges()]);
+        let r = asymptotic_convergence_factor(&w);
+        assert!(r.abs() < 1e-10, "r={r}");
+    }
+
+    #[test]
+    fn ring_convergence_factor_known() {
+        // Ring with uniform weight 1/3 on each edge (max-degree rule): the
+        // spectrum of W is 1/3 + 2/3·cos(2πk/n); r_asym = 1/3 + 2/3·cos(2π/n).
+        let n = 8;
+        let edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        let g = Graph::new(n, edges);
+        let w = weight_matrix_from_edge_weights(&g, &vec![1.0 / 3.0; n]);
+        let r = asymptotic_convergence_factor(&w);
+        let expect = 1.0 / 3.0 + 2.0 / 3.0 * (2.0 * std::f64::consts::PI / n as f64).cos();
+        assert!((r - expect).abs() < 1e-9, "r={r} expect={expect}");
+    }
+
+    #[test]
+    fn disconnected_graph_does_not_contract() {
+        let g = Graph::new(4, vec![(0, 1), (2, 3)]);
+        let w = weight_matrix_from_edge_weights(&g, &[0.5, 0.5]);
+        let r = asymptotic_convergence_factor(&w);
+        // Two consensus modes: λ = 1 with multiplicity 2 ⇒ r = 1 (no global consensus).
+        assert!((r - 1.0).abs() < 1e-9, "r={r}");
+    }
+
+    #[test]
+    fn rounds_to_eps_behaviour() {
+        assert_eq!(rounds_to_eps(1.0, 1e-4), None);
+        assert_eq!(rounds_to_eps(0.0, 1e-4), Some(1));
+        let k = rounds_to_eps(0.5, 1e-4).unwrap();
+        assert!(0.5f64.powi(k as i32) <= 1e-4);
+        assert!(0.5f64.powi(k as i32 - 1) > 1e-4);
+    }
+
+    #[test]
+    fn circulant_matches_symmetric_eigensolver() {
+        // Symmetric circulant (ring with 1/3 weights) must agree with the
+        // dense symmetric path.
+        let n = 8;
+        let mut c = vec![0.0; n];
+        c[0] = 1.0 / 3.0;
+        c[1] = 1.0 / 3.0;
+        c[n - 1] = 1.0 / 3.0;
+        let r_dft = circulant_convergence_factor(&c);
+        let edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        let g = Graph::new(n, edges);
+        let w = weight_matrix_from_edge_weights(&g, &vec![1.0 / 3.0; n]);
+        let r_sym = asymptotic_convergence_factor(&w);
+        assert!((r_dft - r_sym).abs() < 1e-10, "{r_dft} vs {r_sym}");
+    }
+
+    #[test]
+    fn circulant_exponential_paper_values() {
+        // Paper Table I: directed exponential graph r_asym = 0.33 (n=4),
+        // 0.5 (n=8), 0.6 (n=16), 0.67 (n=32), 0.71 (n=64), 0.75 (n=128).
+        let cases = [(4usize, 1.0 / 3.0), (8, 0.5), (16, 0.6), (32, 2.0 / 3.0)];
+        for (n, want) in cases {
+            let d = (n as f64).log2().ceil() as usize; // out-neighbors +2^k
+            let mut c = vec![0.0; n];
+            let w = 1.0 / (d + 1) as f64;
+            c[0] = w;
+            for k in 0..d {
+                c[(1usize << k) % n] += w;
+            }
+            let r = circulant_convergence_factor(&c);
+            assert!((r - want).abs() < 5e-3, "n={n}: got {r}, paper {want}");
+        }
+    }
+
+    #[test]
+    fn algebraic_connectivity_path() {
+        // P3 Laplacian eigenvalues: 0, 1, 3.
+        let g = Graph::new(3, vec![(0, 1), (1, 2)]);
+        let l = crate::graph::laplacian::laplacian_from_weights(&g, &[1.0, 1.0]);
+        assert!((algebraic_connectivity(&l) - 1.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,36 @@
+//! # BA-Topo: Bandwidth-Aware Network Topology Optimization for Decentralized Learning
+//!
+//! Full-system reproduction of *"Bandwidth-Aware Network Topology Optimization
+//! for Decentralized Learning"* (Shen et al., CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the ADMM-based Mixed-Integer-SDP topology optimizer
+//!   ([`optimizer`]), the bandwidth-aware edge-capacity allocator and the four
+//!   bandwidth scenario models ([`bandwidth`]), all baseline topologies
+//!   ([`topo`]), and a decentralized-learning coordinator with a simulated
+//!   cluster clock ([`coordinator`], [`consensus`], [`training`]).
+//! - **L2/L1 (build-time Python, `python/compile/`)** — the transformer train
+//!   step and the Pallas mixing / fused-SGD kernels, AOT-lowered to HLO text
+//!   and executed from Rust through [`runtime`] (PJRT CPU via the `xla` crate).
+//!
+//! Python never runs at request time: after `make artifacts` the binary is
+//! self-contained.
+
+pub mod bandwidth;
+pub mod bench;
+pub mod config;
+pub mod consensus;
+pub mod coordinator;
+pub mod graph;
+pub mod linalg;
+pub mod optimizer;
+pub mod runtime;
+pub mod topo;
+pub mod training;
+pub mod util;
+
+/// Convenience re-exports of the most common public types.
+pub mod prelude {
+    pub use crate::graph::{Graph, Topology};
+    pub use crate::topo::baselines::Baseline;
+}

@@ -1,0 +1,365 @@
+//! Bi-CGSTAB — the stabilized bi-conjugate gradient method of van der Vorst
+//! ([37] in the paper), with optional ILU(0) right-preconditioning.
+//!
+//! This is the solver the paper's Algorithm 2 uses for the large indefinite
+//! KKT systems in the `X`-update (Eq. 27 / Eq. 31). The coefficient matrix is
+//! constant across ADMM iterations, so the caller factors the preconditioner
+//! once and passes it to every solve; warm-starting from the previous
+//! iteration's solution cuts the Krylov work substantially (see
+//! EXPERIMENTS.md §Perf).
+
+use super::{dot, norm2, CscMatrix, Ilu0};
+
+/// Solver options.
+#[derive(Debug, Clone)]
+pub struct BicgstabOptions {
+    /// Relative residual target: stop when ‖r‖ ≤ rtol · ‖b‖ (+ atol).
+    pub rtol: f64,
+    /// Absolute residual floor.
+    pub atol: f64,
+    /// Iteration cap.
+    pub max_iter: usize,
+}
+
+impl Default for BicgstabOptions {
+    fn default() -> Self {
+        BicgstabOptions {
+            rtol: 1e-9,
+            atol: 1e-12,
+            max_iter: 10_000,
+        }
+    }
+}
+
+/// Solve outcome.
+#[derive(Debug, Clone)]
+pub struct BicgstabOutcome {
+    /// Whether the residual target was met.
+    pub converged: bool,
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Final residual norm ‖b − Ax‖.
+    pub residual: f64,
+}
+
+/// Workspace for repeated solves against one matrix (hot path: the ADMM loop
+/// calls this once per iteration — no per-solve allocation).
+pub struct BicgstabWorkspace {
+    r: Vec<f64>,
+    r0: Vec<f64>,
+    p: Vec<f64>,
+    v: Vec<f64>,
+    s: Vec<f64>,
+    t: Vec<f64>,
+    phat: Vec<f64>,
+    shat: Vec<f64>,
+}
+
+impl BicgstabWorkspace {
+    /// Workspace for dimension `n`.
+    pub fn new(n: usize) -> Self {
+        BicgstabWorkspace {
+            r: vec![0.0; n],
+            r0: vec![0.0; n],
+            p: vec![0.0; n],
+            v: vec![0.0; n],
+            s: vec![0.0; n],
+            t: vec![0.0; n],
+            phat: vec![0.0; n],
+            shat: vec![0.0; n],
+        }
+    }
+}
+
+/// Preconditioned Bi-CGSTAB: solve `A x = b`, mutating `x` (its incoming value
+/// is the warm start). `precond` applies `M⁻¹` (pass `None` for
+/// unpreconditioned).
+pub fn bicgstab_ws(
+    a: &CscMatrix,
+    b: &[f64],
+    x: &mut [f64],
+    precond: Option<&Ilu0>,
+    opts: &BicgstabOptions,
+    ws: &mut BicgstabWorkspace,
+) -> BicgstabOutcome {
+    let n = b.len();
+    assert_eq!(a.rows(), n);
+    assert_eq!(a.cols(), n);
+    assert_eq!(x.len(), n);
+
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let target = opts.rtol * bnorm + opts.atol;
+
+    // r = b - A x
+    a.matvec_into(x, &mut ws.r);
+    for i in 0..n {
+        ws.r[i] = b[i] - ws.r[i];
+    }
+    let mut rnorm = norm2(&ws.r);
+    if rnorm <= target {
+        return BicgstabOutcome {
+            converged: true,
+            iterations: 0,
+            residual: rnorm,
+        };
+    }
+
+    ws.r0.copy_from_slice(&ws.r);
+    ws.p.fill(0.0);
+    ws.v.fill(0.0);
+    let mut rho = 1.0f64;
+    let mut alpha = 1.0f64;
+    let mut omega = 1.0f64;
+
+    let apply_m = |src: &[f64], dst: &mut [f64]| match precond {
+        Some(m) => m.solve_into(src, dst),
+        None => dst.copy_from_slice(src),
+    };
+
+    for it in 1..=opts.max_iter {
+        let rho_new = dot(&ws.r0, &ws.r);
+        if rho_new.abs() < 1e-300 {
+            // Breakdown: restart with current residual as shadow vector.
+            ws.r0.copy_from_slice(&ws.r);
+            rho = dot(&ws.r0, &ws.r);
+            ws.p.copy_from_slice(&ws.r);
+        } else {
+            let beta = (rho_new / rho) * (alpha / omega);
+            rho = rho_new;
+            // p = r + beta (p - omega v)
+            for i in 0..n {
+                ws.p[i] = ws.r[i] + beta * (ws.p[i] - omega * ws.v[i]);
+            }
+        }
+
+        apply_m(&ws.p, &mut ws.phat);
+        a.matvec_into(&ws.phat, &mut ws.v);
+        let r0v = dot(&ws.r0, &ws.v);
+        if r0v.abs() < 1e-300 {
+            return BicgstabOutcome {
+                converged: rnorm <= target,
+                iterations: it,
+                residual: rnorm,
+            };
+        }
+        alpha = rho / r0v;
+
+        // s = r - alpha v
+        for i in 0..n {
+            ws.s[i] = ws.r[i] - alpha * ws.v[i];
+        }
+        let snorm = norm2(&ws.s);
+        if snorm <= target {
+            for i in 0..n {
+                x[i] += alpha * ws.phat[i];
+            }
+            return BicgstabOutcome {
+                converged: true,
+                iterations: it,
+                residual: snorm,
+            };
+        }
+
+        apply_m(&ws.s, &mut ws.shat);
+        a.matvec_into(&ws.shat, &mut ws.t);
+        let tt = dot(&ws.t, &ws.t);
+        omega = if tt > 0.0 { dot(&ws.t, &ws.s) / tt } else { 0.0 };
+
+        for i in 0..n {
+            x[i] += alpha * ws.phat[i] + omega * ws.shat[i];
+        }
+        // r = s - omega t
+        for i in 0..n {
+            ws.r[i] = ws.s[i] - omega * ws.t[i];
+        }
+        rnorm = norm2(&ws.r);
+        if rnorm <= target {
+            return BicgstabOutcome {
+                converged: true,
+                iterations: it,
+                residual: rnorm,
+            };
+        }
+        if omega.abs() < 1e-300 {
+            // Stagnation — cannot continue.
+            return BicgstabOutcome {
+                converged: false,
+                iterations: it,
+                residual: rnorm,
+            };
+        }
+    }
+
+    BicgstabOutcome {
+        converged: false,
+        iterations: opts.max_iter,
+        residual: rnorm,
+    }
+}
+
+/// Allocating convenience wrapper: zero initial guess, fresh workspace.
+pub fn bicgstab(
+    a: &CscMatrix,
+    b: &[f64],
+    precond: Option<&Ilu0>,
+    opts: &BicgstabOptions,
+) -> (Vec<f64>, BicgstabOutcome) {
+    let mut x = vec![0.0; b.len()];
+    let mut ws = BicgstabWorkspace::new(b.len());
+    let out = bicgstab_ws(a, b, &mut x, precond, opts, &mut ws);
+    (x, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn residual(a: &CscMatrix, x: &[f64], b: &[f64]) -> f64 {
+        let ax = a.matvec(x);
+        norm2(&ax.iter().zip(b).map(|(p, q)| p - q).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn solves_identity() {
+        let a = CscMatrix::eye(4);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let (x, out) = bicgstab(&a, &b, None, &BicgstabOptions::default());
+        assert!(out.converged);
+        assert!(residual(&a, &x, &b) < 1e-8);
+    }
+
+    #[test]
+    fn solves_spd_laplacian() {
+        let n = 100;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            trips.push((i, i, 2.0 + 0.01 * i as f64));
+            if i > 0 {
+                trips.push((i, i - 1, -1.0));
+            }
+            if i + 1 < n {
+                trips.push((i, i + 1, -1.0));
+            }
+        }
+        let a = CscMatrix::from_triplets(n, n, trips);
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let (x, out) = bicgstab(&a, &b, None, &BicgstabOptions::default());
+        assert!(out.converged, "{out:?}");
+        assert!(residual(&a, &x, &b) < 1e-6);
+    }
+
+    #[test]
+    fn solves_nonsymmetric() {
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        let n = 60;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            trips.push((i, i, 5.0 + rng.next_f64()));
+            for _ in 0..3 {
+                let j = rng.index(n);
+                if j != i {
+                    trips.push((i, j, rng.next_gaussian() * 0.3));
+                }
+            }
+        }
+        let a = CscMatrix::from_triplets(n, n, trips);
+        let b: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let (x, out) = bicgstab(&a, &b, None, &BicgstabOptions::default());
+        assert!(out.converged, "{out:?}");
+        assert!(residual(&a, &x, &b) < 1e-6);
+    }
+
+    #[test]
+    fn solves_saddle_point_with_ilu() {
+        // KKT-style: [[I, A^T], [A, -δI]] with random fat A.
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let (m, k) = (40usize, 12usize); // primal dim, constraint dim
+        let mut trips = Vec::new();
+        for i in 0..m {
+            trips.push((i, i, 1.0));
+        }
+        for r in 0..k {
+            for _ in 0..4 {
+                let c = rng.index(m);
+                let v = rng.next_gaussian();
+                trips.push((m + r, c, v)); // A block
+                trips.push((c, m + r, v)); // A^T block
+            }
+            trips.push((m + r, m + r, -1e-8));
+        }
+        let n = m + k;
+        let a = CscMatrix::from_triplets(n, n, trips);
+        let b: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let ilu = Ilu0::factor(&a, 1e-6);
+        let (x, out) = bicgstab(
+            &a,
+            &b,
+            Some(&ilu),
+            &BicgstabOptions {
+                rtol: 1e-10,
+                ..Default::default()
+            },
+        );
+        assert!(out.converged, "{out:?}");
+        assert!(residual(&a, &x, &b) < 1e-6, "residual {}", residual(&a, &x, &b));
+    }
+
+    #[test]
+    fn ilu_preconditioning_reduces_iterations() {
+        // Moderately ill-conditioned tridiagonal system.
+        let n = 400;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            trips.push((i, i, 2.0));
+            if i > 0 {
+                trips.push((i, i - 1, -1.0));
+            }
+            if i + 1 < n {
+                trips.push((i, i + 1, -1.0));
+            }
+        }
+        let a = CscMatrix::from_triplets(n, n, trips);
+        let b = vec![1.0; n];
+        let opts = BicgstabOptions {
+            rtol: 1e-8,
+            ..Default::default()
+        };
+        let (_, plain) = bicgstab(&a, &b, None, &opts);
+        let ilu = Ilu0::factor(&a, 1e-12);
+        let (_, pre) = bicgstab(&a, &b, Some(&ilu), &opts);
+        assert!(pre.converged);
+        // ILU(0) is exact for tridiagonal — should converge almost immediately.
+        assert!(
+            pre.iterations * 5 <= plain.iterations.max(5),
+            "ilu {} vs plain {}",
+            pre.iterations,
+            plain.iterations
+        );
+    }
+
+    #[test]
+    fn warm_start_helps() {
+        let n = 200;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            trips.push((i, i, 3.0));
+            if i > 0 {
+                trips.push((i, i - 1, -1.0));
+            }
+            if i + 1 < n {
+                trips.push((i, i + 1, -1.0));
+            }
+        }
+        let a = CscMatrix::from_triplets(n, n, trips);
+        let b = vec![1.0; n];
+        let opts = BicgstabOptions::default();
+        let (x_cold, cold) = bicgstab(&a, &b, None, &opts);
+        // Warm start from the exact solution: should converge instantly.
+        let mut x = x_cold.clone();
+        let mut ws = BicgstabWorkspace::new(n);
+        let warm = bicgstab_ws(&a, &b, &mut x, None, &opts, &mut ws);
+        assert!(warm.converged);
+        assert!(warm.iterations <= 1, "warm {} vs cold {}", warm.iterations, cold.iterations);
+    }
+}

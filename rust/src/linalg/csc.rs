@@ -1,0 +1,311 @@
+//! Compressed Sparse Column (CSC) matrices ([39] in the paper).
+//!
+//! The ADMM KKT systems (Eq. 27 / Eq. 31) reach dimension `≈ 4n² + n + 2|E|`
+//! (≈ 82k rows at n = 128) with ~10⁶ nonzeros; the paper's §V-C prescribes
+//! CSC storage, incomplete-LU preconditioning and Bi-CGSTAB, all of which
+//! operate on this type.
+
+/// Sparse matrix in compressed-sparse-column format.
+#[derive(Debug, Clone)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    /// Column pointers, length `cols + 1`.
+    col_ptr: Vec<usize>,
+    /// Row indices per nonzero, sorted ascending within each column.
+    row_idx: Vec<usize>,
+    /// Values per nonzero.
+    vals: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from (row, col, value) triplets. Duplicate coordinates are
+    /// summed; explicit zeros are dropped.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> CscMatrix {
+        let mut trip: Vec<(usize, usize, f64)> = triplets.into_iter().collect();
+        for &(r, c, _) in &trip {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+        }
+        // Sort by (col, row) then merge duplicates.
+        trip.sort_unstable_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+        let mut col_ptr = vec![0usize; cols + 1];
+        let mut row_idx = Vec::with_capacity(trip.len());
+        let mut vals: Vec<f64> = Vec::with_capacity(trip.len());
+        let mut last: Option<(usize, usize)> = None;
+        for (r, c, v) in trip {
+            if last == Some((c, r)) {
+                *vals.last_mut().unwrap() += v;
+            } else {
+                row_idx.push(r);
+                vals.push(v);
+                col_ptr[c + 1] += 1;
+                last = Some((c, r));
+            }
+        }
+        for c in 0..cols {
+            col_ptr[c + 1] += col_ptr[c];
+        }
+        let mut m = CscMatrix {
+            rows,
+            cols,
+            col_ptr,
+            row_idx,
+            vals,
+        };
+        m.drop_zeros();
+        m
+    }
+
+    /// Remove stored zeros (keeps invariants).
+    fn drop_zeros(&mut self) {
+        let mut new_ptr = vec![0usize; self.cols + 1];
+        let mut new_rows = Vec::with_capacity(self.row_idx.len());
+        let mut new_vals = Vec::with_capacity(self.vals.len());
+        for c in 0..self.cols {
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                if self.vals[k] != 0.0 {
+                    new_rows.push(self.row_idx[k]);
+                    new_vals.push(self.vals[k]);
+                }
+            }
+            new_ptr[c + 1] = new_rows.len();
+        }
+        self.col_ptr = new_ptr;
+        self.row_idx = new_rows;
+        self.vals = new_vals;
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> CscMatrix {
+        CscMatrix::from_triplets(n, n, (0..n).map(|i| (i, i, 1.0)))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Entries of column `c` as `(row, value)` pairs.
+    pub fn col(&self, c: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let range = self.col_ptr[c]..self.col_ptr[c + 1];
+        self.row_idx[range.clone()]
+            .iter()
+            .copied()
+            .zip(self.vals[range].iter().copied())
+    }
+
+    /// `y = A x`
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = A x` into a caller buffer (hot path: no allocation).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        assert_eq!(y.len(), self.rows);
+        y.fill(0.0);
+        for c in 0..self.cols {
+            let xc = x[c];
+            if xc == 0.0 {
+                continue;
+            }
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                y[self.row_idx[k]] += self.vals[k] * xc;
+            }
+        }
+    }
+
+    /// `y = Aᵀ x` — in CSC this is the row-gather direction; no transpose
+    /// materialization needed.
+    pub fn matvec_transpose(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_transpose dim mismatch");
+        let mut y = vec![0.0; self.cols];
+        for c in 0..self.cols {
+            let mut acc = 0.0;
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                acc += self.vals[k] * x[self.row_idx[k]];
+            }
+            y[c] = acc;
+        }
+        y
+    }
+
+    /// Transposed copy (used when building the symmetric KKT block `[ [I,Aᵀ],[A,0] ]`).
+    pub fn transpose(&self) -> CscMatrix {
+        let mut trips = Vec::with_capacity(self.nnz());
+        for c in 0..self.cols {
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                trips.push((c, self.row_idx[k], self.vals[k]));
+            }
+        }
+        CscMatrix::from_triplets(self.cols, self.rows, trips)
+    }
+
+    /// All stored entries as triplets.
+    pub fn triplets(&self) -> Vec<(usize, usize, f64)> {
+        let mut t = Vec::with_capacity(self.nnz());
+        for c in 0..self.cols {
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                t.push((self.row_idx[k], c, self.vals[k]));
+            }
+        }
+        t
+    }
+
+    /// Convert to dense (tests / tiny systems only).
+    pub fn to_dense(&self) -> super::DenseMatrix {
+        let mut d = super::DenseMatrix::zeros(self.rows, self.cols);
+        for c in 0..self.cols {
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                d[(self.row_idx[k], c)] += self.vals[k];
+            }
+        }
+        d
+    }
+
+    /// Convert to CSR arrays `(row_ptr, col_idx, vals)` — the layout the
+    /// ILU(0) factorization and its triangular solves iterate over.
+    pub fn to_csr(&self) -> (Vec<usize>, Vec<usize>, Vec<f64>) {
+        let mut row_counts = vec![0usize; self.rows];
+        for &r in &self.row_idx {
+            row_counts[r] += 1;
+        }
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        for i in 0..self.rows {
+            row_ptr[i + 1] = row_ptr[i] + row_counts[i];
+        }
+        let mut col_idx = vec![0usize; self.nnz()];
+        let mut vals = vec![0.0; self.nnz()];
+        let mut next = row_ptr.clone();
+        for c in 0..self.cols {
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                let r = self.row_idx[k];
+                let slot = next[r];
+                col_idx[slot] = c;
+                vals[slot] = self.vals[k];
+                next[r] += 1;
+            }
+        }
+        // Columns within a row come out sorted because we scan c ascending.
+        (row_ptr, col_idx, vals)
+    }
+
+    /// Build a block matrix from a grid of optional blocks, each scaled.
+    /// `blocks[i][j]` is placed at block row i / block col j.
+    pub fn block(
+        row_sizes: &[usize],
+        col_sizes: &[usize],
+        blocks: &[(usize, usize, f64, &CscMatrix)],
+    ) -> CscMatrix {
+        let rows: usize = row_sizes.iter().sum();
+        let cols: usize = col_sizes.iter().sum();
+        let row_off: Vec<usize> = std::iter::once(0)
+            .chain(row_sizes.iter().scan(0, |s, &x| {
+                *s += x;
+                Some(*s)
+            }))
+            .collect();
+        let col_off: Vec<usize> = std::iter::once(0)
+            .chain(col_sizes.iter().scan(0, |s, &x| {
+                *s += x;
+                Some(*s)
+            }))
+            .collect();
+        let mut trips = Vec::new();
+        for &(bi, bj, scale, m) in blocks {
+            assert_eq!(m.rows(), row_sizes[bi], "block ({bi},{bj}) row size");
+            assert_eq!(m.cols(), col_sizes[bj], "block ({bi},{bj}) col size");
+            for (r, c, v) in m.triplets() {
+                trips.push((row_off[bi] + r, col_off[bj] + c, scale * v));
+            }
+        }
+        CscMatrix::from_triplets(rows, cols, trips)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        CscMatrix::from_triplets(
+            3,
+            3,
+            vec![(0, 0, 1.0), (2, 0, 4.0), (1, 1, 3.0), (0, 2, 2.0), (2, 2, 5.0)],
+        )
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = sample();
+        let x = [1.0, 2.0, 3.0];
+        assert_eq!(a.matvec(&x), vec![7.0, 6.0, 19.0]);
+        assert_eq!(a.to_dense().matvec(&x), a.matvec(&x));
+    }
+
+    #[test]
+    fn transpose_matvec() {
+        let a = sample();
+        let x = [1.0, 2.0, 3.0];
+        assert_eq!(a.matvec_transpose(&x), a.transpose().matvec(&x));
+    }
+
+    #[test]
+    fn duplicates_are_summed_and_zeros_dropped() {
+        let a = CscMatrix::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 0.0)]);
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.to_dense()[(0, 0)], 3.0);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let a = sample();
+        let (rp, ci, v) = a.to_csr();
+        assert_eq!(rp, vec![0, 2, 3, 5]);
+        assert_eq!(ci, vec![0, 2, 1, 0, 2]);
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn block_assembly() {
+        let i2 = CscMatrix::eye(2);
+        let a = CscMatrix::from_triplets(1, 2, vec![(0, 0, 1.0), (0, 1, -1.0)]);
+        // [[I2, A^T], [A, 0]] shape 3x3
+        let at = a.transpose();
+        let kkt = CscMatrix::block(&[2, 1], &[2, 1], &[(0, 0, 1.0, &i2), (0, 1, 1.0, &at), (1, 0, 1.0, &a)]);
+        let d = kkt.to_dense();
+        assert_eq!(d.rows(), 3);
+        assert_eq!(d[(0, 0)], 1.0);
+        assert_eq!(d[(0, 2)], 1.0);
+        assert_eq!(d[(1, 2)], -1.0);
+        assert_eq!(d[(2, 0)], 1.0);
+        assert_eq!(d[(2, 1)], -1.0);
+        assert_eq!(d[(2, 2)], 0.0);
+        assert!(d.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn eye_and_col_iter() {
+        let i3 = CscMatrix::eye(3);
+        assert_eq!(i3.nnz(), 3);
+        let col1: Vec<(usize, f64)> = i3.col(1).collect();
+        assert_eq!(col1, vec![(1, 1.0)]);
+    }
+}

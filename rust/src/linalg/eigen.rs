@@ -1,0 +1,269 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi rotation method.
+//!
+//! Used in three places that the paper depends on:
+//! 1. the consensus-rate objective `r_asym(W) = max{|λ₂|, |λₙ|}` (Eq. 3),
+//! 2. the PSD/NSD projections inside ADMM (Eq. 25): clamp eigenvalues of the
+//!    slack matrices `S₁`, `T₁`,
+//! 3. verification of the Laplacian spectrum bounds (Eq. 7).
+//!
+//! Jacobi is exactly right for this size regime (n ≤ 128 symmetric matrices):
+//! unconditionally stable, produces orthonormal eigenvectors, ~O(n³) with a
+//! small constant, and has no failure modes that would need LAPACK-grade
+//! shifting logic.
+
+use super::DenseMatrix;
+
+/// Eigendecomposition `A = V · diag(λ) · Vᵀ` of a symmetric matrix.
+///
+/// Eigenvalues are sorted **descending**; `vectors.column(k)` (row-major:
+/// `vectors[(i, k)]`) is the unit eigenvector for `values[k]`.
+#[derive(Debug, Clone)]
+pub struct SymEigen {
+    pub values: Vec<f64>,
+    pub vectors: DenseMatrix,
+}
+
+impl SymEigen {
+    /// Decompose a symmetric matrix. Panics if `a` is not square; asserts
+    /// approximate symmetry in debug builds.
+    pub fn new(a: &DenseMatrix) -> SymEigen {
+        assert_eq!(a.rows(), a.cols(), "eigendecomposition needs square matrix");
+        debug_assert!(
+            a.is_symmetric(1e-8 * (1.0 + a.frob())),
+            "matrix is not symmetric"
+        );
+        let n = a.rows();
+        let mut m = a.clone();
+        let mut v = DenseMatrix::eye(n);
+
+        // Cyclic Jacobi sweeps until off-diagonal mass is negligible.
+        let max_sweeps = 64;
+        let tol = 1e-14 * (1.0 + a.frob());
+        for _sweep in 0..max_sweeps {
+            let off = off_diag_norm(&m);
+            if off <= tol {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let apq = m[(p, q)];
+                    if apq.abs() <= tol / (n as f64) {
+                        continue;
+                    }
+                    let app = m[(p, p)];
+                    let aqq = m[(q, q)];
+                    // Rotation angle: tan(2θ) = 2apq / (app - aqq)
+                    let theta = 0.5 * (2.0 * apq).atan2(app - aqq);
+                    let c = theta.cos();
+                    let s = theta.sin();
+                    rotate(&mut m, p, q, c, s);
+                    rotate_cols(&mut v, p, q, c, s);
+                }
+            }
+        }
+
+        // Extract and sort descending.
+        let mut idx: Vec<usize> = (0..n).collect();
+        let vals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+        idx.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+        let values: Vec<f64> = idx.iter().map(|&i| vals[i]).collect();
+        let mut vectors = DenseMatrix::zeros(n, n);
+        for (new_col, &old_col) in idx.iter().enumerate() {
+            for r in 0..n {
+                vectors[(r, new_col)] = v[(r, old_col)];
+            }
+        }
+        SymEigen { values, vectors }
+    }
+
+    /// Reconstruct `V · diag(f(λ)) · Vᵀ` — the spectral-function primitive
+    /// behind the ADMM projections (e.g. `f = min(λ, 0)` for `S₁ ⪯ 0`).
+    pub fn apply_spectral<F: Fn(f64) -> f64>(&self, f: F) -> DenseMatrix {
+        let n = self.values.len();
+        let mut out = DenseMatrix::zeros(n, n);
+        for k in 0..n {
+            let lk = f(self.values[k]);
+            if lk == 0.0 {
+                continue;
+            }
+            for i in 0..n {
+                let vik = self.vectors[(i, k)];
+                if vik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[(i, j)] += lk * vik * self.vectors[(j, k)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Largest eigenvalue.
+    pub fn max(&self) -> f64 {
+        self.values[0]
+    }
+
+    /// Smallest eigenvalue.
+    pub fn min(&self) -> f64 {
+        *self.values.last().unwrap()
+    }
+}
+
+/// Project a symmetric matrix onto the PSD cone (clamp negative eigenvalues).
+pub fn project_psd(a: &DenseMatrix) -> DenseMatrix {
+    SymEigen::new(a).apply_spectral(|l| l.max(0.0))
+}
+
+/// Project a symmetric matrix onto the NSD cone (Eq. 25 of the paper).
+pub fn project_nsd(a: &DenseMatrix) -> DenseMatrix {
+    SymEigen::new(a).apply_spectral(|l| l.min(0.0))
+}
+
+fn off_diag_norm(m: &DenseMatrix) -> f64 {
+    let n = m.rows();
+    let mut s = 0.0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            s += m[(i, j)] * m[(i, j)];
+        }
+    }
+    (2.0 * s).sqrt()
+}
+
+/// Two-sided Jacobi rotation of rows/cols p,q of symmetric `m`.
+fn rotate(m: &mut DenseMatrix, p: usize, q: usize, c: f64, s: f64) {
+    let n = m.rows();
+    for k in 0..n {
+        let mkp = m[(k, p)];
+        let mkq = m[(k, q)];
+        m[(k, p)] = c * mkp + s * mkq;
+        m[(k, q)] = -s * mkp + c * mkq;
+    }
+    for k in 0..n {
+        let mpk = m[(p, k)];
+        let mqk = m[(q, k)];
+        m[(p, k)] = c * mpk + s * mqk;
+        m[(q, k)] = -s * mpk + c * mqk;
+    }
+}
+
+/// Right-multiply `v` by the rotation (accumulate eigenvectors).
+fn rotate_cols(v: &mut DenseMatrix, p: usize, q: usize, c: f64, s: f64) {
+    let n = v.rows();
+    for k in 0..n {
+        let vkp = v[(k, p)];
+        let vkq = v[(k, q)];
+        v[(k, p)] = c * vkp + s * vkq;
+        v[(k, q)] = -s * vkp + c * vkq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_sym(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.next_gaussian();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    fn reconstruct(e: &SymEigen) -> DenseMatrix {
+        e.apply_spectral(|l| l)
+    }
+
+    #[test]
+    fn diagonal_matrix_eigen() {
+        let mut a = DenseMatrix::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -1.0;
+        a[(2, 2)] = 2.0;
+        let e = SymEigen::new(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = DenseMatrix::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let e = SymEigen::new(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_random() {
+        for n in [2usize, 5, 16, 40] {
+            let a = random_sym(n, 1000 + n as u64);
+            let e = SymEigen::new(&a);
+            let r = reconstruct(&e);
+            assert!(
+                a.max_abs_diff(&r) < 1e-8 * (1.0 + a.frob()),
+                "n={n} reconstruction error {}",
+                a.max_abs_diff(&r)
+            );
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_sym(24, 7);
+        let e = SymEigen::new(&a);
+        let vt_v = e.vectors.transpose().matmul(&e.vectors);
+        assert!(vt_v.max_abs_diff(&DenseMatrix::eye(24)) < 1e-9);
+    }
+
+    #[test]
+    fn eigen_sorted_descending() {
+        let a = random_sym(33, 99);
+        let e = SymEigen::new(&a);
+        for k in 1..e.values.len() {
+            assert!(e.values[k - 1] >= e.values[k] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn psd_nsd_projections() {
+        let a = random_sym(12, 21);
+        let p = project_psd(&a);
+        let m = project_nsd(&a);
+        // Projections sum back to A.
+        assert!(a.max_abs_diff(&p.add_scaled(1.0, &m)) < 1e-8);
+        // Eigenvalues in the right half-lines.
+        let ep = SymEigen::new(&p);
+        let em = SymEigen::new(&m);
+        assert!(ep.min() > -1e-9, "psd min {}", ep.min());
+        assert!(em.max() < 1e-9, "nsd max {}", em.max());
+    }
+
+    #[test]
+    fn laplacian_spectrum_properties() {
+        // Path graph P4 Laplacian: eigenvalues 0, 2-sqrt(2), 2, 2+sqrt(2).
+        let a = DenseMatrix::from_vec(
+            4,
+            4,
+            vec![
+                1., -1., 0., 0., //
+                -1., 2., -1., 0., //
+                0., -1., 2., -1., //
+                0., 0., -1., 1.,
+            ],
+        );
+        let e = SymEigen::new(&a);
+        let expected = [2.0 + 2f64.sqrt(), 2.0, 2.0 - 2f64.sqrt(), 0.0];
+        for (got, want) in e.values.iter().zip(expected) {
+            assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+        }
+    }
+}

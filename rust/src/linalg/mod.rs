@@ -1,0 +1,35 @@
+//! Numerical substrates: dense matrices, a symmetric eigensolver, CSC sparse
+//! matrices, ILU(0) preconditioning and the Bi-CGSTAB Krylov solver — the
+//! exact toolbox the paper's §V-C prescribes for solving the ADMM KKT systems
+//! at scale (hundreds of nodes).
+
+pub mod bicgstab;
+pub mod csc;
+pub mod dense;
+pub mod eigen;
+pub mod ilu;
+
+pub use bicgstab::{bicgstab, BicgstabOptions, BicgstabOutcome};
+pub use csc::CscMatrix;
+pub use dense::DenseMatrix;
+pub use eigen::SymEigen;
+pub use ilu::Ilu0;
+
+/// Euclidean norm of a slice.
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Dot product of two slices (panics on length mismatch).
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += alpha * x`
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}

@@ -1,0 +1,174 @@
+//! `batopo` — the BA-Topo leader CLI.
+//!
+//! ```text
+//! batopo optimize  --n 16 --r 32 [--scenario homogeneous] [--out topo.json]
+//! batopo consensus --topology ring|...|<topo.json> --n 16 [--scenario …]
+//! batopo allocate  --bw 9.76,9.76,3.25,3.25 --r 4
+//! batopo train     --topology torus --n 16 --model tiny --epochs 10
+//! batopo info
+//! ```
+
+use batopo::bandwidth::allocation::allocate_edge_capacity;
+use batopo::bandwidth::timing::TimeModel;
+use batopo::bench::experiments;
+use batopo::config;
+use batopo::consensus::{run_consensus, ConsensusConfig};
+use batopo::graph::Topology;
+use batopo::optimizer::BaTopoOptimizer;
+use batopo::runtime::mixer::MixVariant;
+use batopo::runtime::PjRtEngine;
+use batopo::training::{DsgdConfig, DsgdTrainer};
+use batopo::util::cli::Args;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "optimize" => cmd_optimize(&args),
+        "consensus" => cmd_consensus(&args),
+        "allocate" => cmd_allocate(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: batopo <optimize|consensus|allocate|train|info> [options]\n\
+                 \n\
+                 optimize  --n N --r R [--scenario S] [--seed X] [--quick] [--out file.json]\n\
+                 consensus --topology NAME|file.json --n N [--scenario S] [--eps 1e-4]\n\
+                 allocate  --bw b1,b2,... --r R [--caps c1,c2,...]\n\
+                 train     --topology NAME|file.json --n N [--scenario S] [--model tiny]\n\
+                 \u{20}          [--epochs E] [--target 0.75]\n\
+                 info\n\
+                 \n\
+                 scenarios: homogeneous (any n) | node-level (even n) |\n\
+                 \u{20}          intra-server (n=8) | inter-server (n=16)"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn topology_arg(args: &Args, n: usize) -> Result<Topology, String> {
+    let name = args.get("topology").ok_or("missing --topology")?;
+    if name.ends_with(".json") {
+        config::load_topology(Path::new(name))
+    } else {
+        config::baseline_by_name(name, n, args.parse_or("seed", 42u64).unwrap_or(42))
+    }
+}
+
+fn cmd_optimize(args: &Args) -> Result<(), String> {
+    let n: usize = args.parse_req("n").map_err(|e| e.to_string())?;
+    let r: usize = args.parse_req("r").map_err(|e| e.to_string())?;
+    let scenario = config::scenario_by_name(&args.str_or("scenario", "homogeneous"), n)?;
+    let mut spec = experiments::ba_spec(scenario, r, args.flag("quick"));
+    spec.seed = args.parse_or("seed", 42u64).map_err(|e| e.to_string())?;
+    let t0 = std::time::Instant::now();
+    let report = BaTopoOptimizer::new(spec).run_detailed().map_err(|e| e.to_string())?;
+    println!("BA-Topo(n={n}, r={r}):");
+    println!("  r_asym           = {:.4} (warm start {:.4})", report.r_asym, report.warm_start_r_asym);
+    println!("  admm iterations  = {} (converged={}, residual {:.2e})",
+        report.admm_iterations, report.admm_converged, report.final_residual);
+    println!("  krylov iterations= {}", report.krylov_iterations);
+    println!("  constraint check = {:?}", report.constraint_check);
+    println!("  edges            = {:?}", report.topology.graph.edges());
+    println!("  wall time        = {:.2}s", t0.elapsed().as_secs_f64());
+    if let Some(out) = args.get("out") {
+        config::save_topology(&report.topology, Path::new(out)).map_err(|e| e.to_string())?;
+        println!("  saved to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_consensus(args: &Args) -> Result<(), String> {
+    let n: usize = args.parse_req("n").map_err(|e| e.to_string())?;
+    let scenario = config::scenario_by_name(&args.str_or("scenario", "homogeneous"), n)?;
+    let topo = topology_arg(args, n)?;
+    let cfg = ConsensusConfig {
+        eps: args.parse_or("eps", 1e-4).map_err(|e| e.to_string())?,
+        seed: args.parse_or("seed", 7u64).map_err(|e| e.to_string())?,
+        ..Default::default()
+    };
+    let run = run_consensus(None, &topo, &scenario, &TimeModel::default(), &cfg)
+        .map_err(|e| e.to_string())?;
+    println!("consensus on {} under {} bandwidth:", topo.name, scenario.name());
+    println!("  r_asym (spectral) = {:.4}", topo.asymptotic_convergence_factor());
+    println!("  empirical rate    = {:.4}", run.empirical_rate);
+    println!("  b_min             = {:.3} GB/s", scenario.min_edge_bandwidth(&topo));
+    println!("  t_iter            = {:.3} ms", run.iter_time * 1e3);
+    match (run.convergence_rounds, run.convergence_time) {
+        (Some(k), Some(t)) => println!("  err<{:.0e} after {k} rounds = {:.1} ms", cfg.eps, t * 1e3),
+        _ => println!("  did not reach eps within {} rounds", cfg.max_rounds),
+    }
+    Ok(())
+}
+
+fn cmd_allocate(args: &Args) -> Result<(), String> {
+    let bw: Vec<f64> = args.parse_list("bw", &[]).map_err(|e| e.to_string())?;
+    if bw.is_empty() {
+        return Err("missing --bw b1,b2,...".into());
+    }
+    let r: usize = args.parse_req("r").map_err(|e| e.to_string())?;
+    let caps: Vec<usize> = args
+        .parse_list("caps", &vec![bw.len() - 1; bw.len()])
+        .map_err(|e| e.to_string())?;
+    let out = allocate_edge_capacity(&bw, r, &caps).map_err(|e| e.to_string())?;
+    println!("Algorithm 1 allocation for r={r}:");
+    println!("  b_unit = {:.4} GB/s", out.b_unit);
+    for (i, (b, e)) in bw.iter().zip(&out.edges_per_node).enumerate() {
+        println!("  node {i:>3}: bw {b:>6.2} -> {e} edges ({:.3} GB/s per edge)",
+            if *e > 0 { b / *e as f64 } else { f64::INFINITY });
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let n: usize = args.parse_req("n").map_err(|e| e.to_string())?;
+    let scenario = config::scenario_by_name(&args.str_or("scenario", "homogeneous"), n)?;
+    let topo = topology_arg(args, n)?;
+    let engine = PjRtEngine::from_artifacts().map_err(|e| e.to_string())?;
+    let mut cfg = DsgdConfig::new(&args.str_or("model", "tiny"));
+    cfg.epochs = args.parse_or("epochs", 10usize).map_err(|e| e.to_string())?;
+    cfg.seed = args.parse_or("seed", 17u64).map_err(|e| e.to_string())?;
+    if let Some(t) = args.get("target") {
+        cfg.target_accuracy = Some(t.parse().map_err(|_| "bad --target")?);
+    }
+    if args.get("mix").map(|m| m == "pallas").unwrap_or(false) {
+        cfg.mix_variant = MixVariant::Pallas;
+    }
+    let trainer = DsgdTrainer::new(&engine, scenario, cfg);
+    let out = trainer.run(&topo).map_err(|e| e.to_string())?;
+    println!("DSGD on {} ({} iters/epoch, t_iter {:.2} ms):",
+        out.topology, out.iters_per_epoch, out.iter_time * 1e3);
+    println!("  {:>5} {:>12} {:>12} {:>10} {:>10}", "epoch", "sim time (s)", "train loss", "eval loss", "eval acc");
+    for r in &out.records {
+        println!("  {:>5} {:>12.2} {:>12.4} {:>10.4} {:>10.4}",
+            r.epoch, r.sim_time, r.train_loss, r.eval_loss, r.eval_acc);
+    }
+    if let Some(t) = out.time_to_target {
+        println!("  target reached at simulated {t:.2} s");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    match batopo::runtime::find_artifacts_dir() {
+        Some(dir) => {
+            let m = batopo::runtime::Manifest::load(&dir).map_err(|e| e.to_string())?;
+            println!("artifacts: {}", dir.display());
+            println!("  {} artifacts, lr={}, beta={}", m.artifacts.len(), m.lr, m.beta);
+            for (name, cfg) in &m.configs {
+                println!("  config {name}: {} params in {} tensors", cfg.num_params, cfg.params.len());
+            }
+            let eng = PjRtEngine::new(m).map_err(|e| e.to_string())?;
+            println!("  PJRT platform ok ({} executables cached)", eng.compiled_count());
+        }
+        None => println!("artifacts: NOT FOUND (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,441 @@
+//! Algorithm 2: the ADMM loop for both the homogeneous (Eq. 20) and the
+//! heterogeneous (Eq. 28) Mixed-Integer SDP reformulations.
+//!
+//! Per iteration:
+//! 1. `Y ← Proj_{C_Y}(X + D/ρ)` — segment-wise projections (Eq. 24/30),
+//! 2. `X ← KKT⁻¹ [Y − (D + C)/ρ; b]` — one ILU(0)-preconditioned Bi-CGSTAB
+//!    solve of the *constant* saddle-point system (Eq. 27/31), warm-started
+//!    from the previous iterate,
+//! 3. `D ← D + ρ (X − Y)` (Eq. 22/33),
+//!
+//! stopping when the summed squared primal residual `‖X − Y‖²` drops below
+//! `ε` (the paper's while-condition).
+
+use super::extract;
+use super::operators::{self, AdmmOperators};
+use super::projections as proj;
+use super::{OptimizeError, OptimizeReport, OptimizeSpec};
+use crate::bandwidth::ConstraintSet;
+use crate::graph::laplacian::laplacian_from_edge_space;
+use crate::graph::{incidence, Graph};
+use crate::linalg::bicgstab::{bicgstab_ws, BicgstabOptions, BicgstabWorkspace};
+use crate::linalg::{Ilu0, SymEigen};
+use crate::topo::annealing::{anneal_aspl, AnnealOptions};
+use crate::topo::weights::metropolis;
+
+/// Raw ADMM solution (projected `Y` iterate + relaxed `X` iterate).
+pub struct AdmmSolution {
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    /// Snapshot of the best projected iterate seen (by estimated `r_asym` of
+    /// its top-r support) — the cardinality projection makes the splitting
+    /// nonconvex, so the residual typically plateaus while the support keeps
+    /// improving; we track the best candidate instead of trusting the last.
+    pub best_y: Vec<f64>,
+    /// Estimated `r_asym` of `best_y`'s support with its relaxed weights.
+    pub best_r_est: f64,
+    pub iterations: usize,
+    pub residual: f64,
+    pub converged: bool,
+    pub krylov_iterations: usize,
+}
+
+/// Solve the full BA-Topo pipeline for `spec`, keeping the best of
+/// `spec.restarts` independently-seeded runs.
+pub fn solve(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
+    let restarts = spec.restarts.max(1);
+    let mut best: Option<OptimizeReport> = None;
+    let mut last_err = None;
+    for k in 0..restarts {
+        let mut s = spec.clone();
+        s.seed = spec.seed.wrapping_add(k as u64 * 1009);
+        match solve_once(&s) {
+            Ok(rep) => {
+                if best.as_ref().map(|b| rep.r_asym < b.r_asym).unwrap_or(true) {
+                    best = Some(rep);
+                }
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    best.ok_or_else(|| last_err.unwrap_or(OptimizeError::Infeasible("no restart succeeded".into())))
+}
+
+/// One full pipeline run (warm start → ADMM → extraction → polish).
+fn solve_once(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
+    let n = spec.scenario.num_nodes();
+    if spec.r < n - 1 {
+        return Err(OptimizeError::Infeasible(format!(
+            "edge budget r={} cannot connect n={n} nodes",
+            spec.r
+        )));
+    }
+    if spec.r > incidence::num_possible_edges(n) {
+        return Err(OptimizeError::Infeasible(format!(
+            "edge budget r={} exceeds |E|={}",
+            spec.r,
+            incidence::num_possible_edges(n)
+        )));
+    }
+    let cs = spec.scenario.constraints(spec.r)?;
+    if cs.num_eligible() < spec.r {
+        return Err(OptimizeError::Infeasible(format!(
+            "only {} eligible edges for budget r={}",
+            cs.num_eligible(),
+            spec.r
+        )));
+    }
+
+    // ---- Warm start (§VI: SA-minimized ASPL initial topology). ----
+    let warm = warm_start_graph(spec, &cs);
+    let warm_topo = crate::graph::Topology::new(
+        warm.clone(),
+        crate::graph::laplacian::weight_matrix_from_edge_weights(&warm, &metropolis(&warm)),
+        "warm-start",
+    );
+    let warm_r_asym = warm_topo.asymptotic_convergence_factor();
+
+    // ---- Operators + preconditioner (built once; §V-C). ----
+    // The homogeneous problem keeps the pure Eq.-20 form (no binary z); its
+    // Algorithm-1 degree rows are enforced by the warm start, the extraction
+    // and the polish. Every other scenario runs the Eq.-28 Mixed-Integer form.
+    let heterogeneous = !matches!(
+        spec.scenario,
+        crate::bandwidth::scenarios::BandwidthScenario::Homogeneous { .. }
+    );
+    let ops = if heterogeneous {
+        operators::build_heterogeneous(&cs, spec.alpha, 1e-8)
+    } else {
+        operators::build_homogeneous(n, spec.alpha, 1e-8)
+    };
+
+    // ---- Run ADMM. ----
+    let sol = run_admm(spec, &cs, &ops, &warm);
+
+    // ---- Extraction + refinement from the best tracked iterate. ----
+    let mut topo = extract::extract_topology(spec, &cs, &ops.layout, &sol.best_y, &sol.best_y)?;
+    // Guard: never return something worse than the (refined) warm start when
+    // the warm start is itself feasible.
+    if extract::check_relaxed(&cs, &warm.edge_indices()).is_ok() {
+        let warm_weights =
+            crate::topo::weights::optimize_weights(&warm, None, spec.refine_iters);
+        let warm_refined = crate::graph::Topology::new(
+            warm.clone(),
+            crate::graph::laplacian::weight_matrix_from_edge_weights(&warm, &warm_weights),
+            format!("ba-topo(r={})", spec.r),
+        );
+        if warm_refined.asymptotic_convergence_factor() < topo.asymptotic_convergence_factor() {
+            topo = warm_refined;
+        }
+    }
+
+    // ---- Local-search polish of the support (extraction final mile). ----
+    if spec.polish_swaps > 0 {
+        let init_w = topo.edge_weights();
+        let (polished, pw) =
+            extract::polish_support(&topo.graph, &init_w, &cs, spec.polish_swaps, spec.seed);
+        let final_w = crate::topo::weights::optimize_weights(&polished, Some(&pw), spec.refine_iters);
+        let cand = crate::graph::Topology::new(
+            polished.clone(),
+            crate::graph::laplacian::weight_matrix_from_edge_weights(&polished, &final_w),
+            format!("ba-topo(r={})", spec.r),
+        );
+        if cand.asymptotic_convergence_factor() < topo.asymptotic_convergence_factor() {
+            topo = cand;
+        }
+    }
+    let r_asym = topo.asymptotic_convergence_factor();
+    let selected = topo.graph.edge_indices();
+    let constraint_check = extract::check_relaxed(&cs, &selected);
+
+    Ok(OptimizeReport {
+        topology: topo,
+        admm_iterations: sol.iterations,
+        final_residual: sol.residual,
+        admm_converged: sol.converged,
+        warm_start_r_asym: warm_r_asym,
+        r_asym,
+        krylov_iterations: sol.krylov_iterations,
+        constraint_check,
+    })
+}
+
+/// Construct the warm-start graph: annealed ASPL under per-node caps where
+/// the scenario provides them; greedy eligible selection for masked edge
+/// spaces (BCube).
+fn warm_start_graph(spec: &OptimizeSpec, cs: &ConstraintSet) -> Graph {
+    let n = cs.n;
+    let all_eligible = cs.eligible.iter().all(|&e| e);
+    if all_eligible {
+        // Node-level equality rows induce per-node degree caps.
+        let caps = node_caps(cs);
+        let opts = AnnealOptions {
+            steps: spec.anneal_steps,
+            ..Default::default()
+        };
+        let annealed = anneal_aspl(n, spec.r, caps.as_deref(), &opts, spec.seed);
+        // Non-node rows (intra-server links, switch ports) are invisible to
+        // the annealer; keep the annealed graph only if it happens to be
+        // feasible, else fall back to constraint-aware greedy construction.
+        if extract::check_relaxed(cs, &annealed.edge_indices()).is_ok() {
+            annealed
+        } else {
+            extract::greedy_constrained_graph(cs, spec.seed)
+        }
+    } else {
+        extract::greedy_constrained_graph(cs, spec.seed)
+    }
+}
+
+/// Per-node degree caps implied by single-node equality rows (node-level
+/// scenario): row "node i" covering exactly the edges incident to i.
+fn node_caps(cs: &ConstraintSet) -> Option<Vec<usize>> {
+    let n = cs.n;
+    if cs.rows.len() != n {
+        return None;
+    }
+    let mut caps = vec![usize::MAX; n];
+    for (i, row) in cs.rows.iter().enumerate() {
+        if row.edges.len() != n - 1 {
+            return None;
+        }
+        caps[i] = row.cap;
+    }
+    Some(caps)
+}
+
+/// The ADMM loop proper.
+pub fn run_admm(
+    spec: &OptimizeSpec,
+    cs: &ConstraintSet,
+    ops: &AdmmOperators,
+    warm: &Graph,
+) -> AdmmSolution {
+    let lay = &ops.layout;
+    let n = lay.n;
+    let rho = spec.rho;
+
+    // ---- Initial point: feasible w.r.t. the equality rows. ----
+    let mut x = vec![0.0; lay.total];
+    {
+        let w0 = metropolis(warm);
+        for (&(i, j), &w) in warm.edges().iter().zip(&w0) {
+            x[lay.g + incidence::edge_index(n, i, j)] = w;
+        }
+        let l0 = laplacian_from_edge_space(n, &x[lay.g..lay.g + lay.m]);
+        let eig = SymEigen::new(&l0);
+        // λ̃ between the spectrum bounds; conservative positive start.
+        let lam0 = (eig.values[eig.values.len() - 2]).clamp(0.05, 1.0);
+        x[lay.lam] = lam0;
+        // S = −(L + B0 − λ̃ I), T = 2I − L − λ̃ I, y = 1 − diag(L).
+        for i in 0..n {
+            for j in 0..n {
+                let b0 = spec.alpha / n as f64;
+                let lam_t = if i == j { lam0 } else { 0.0 };
+                x[lay.s + i * n + j] = -(l0[(i, j)] + b0 - lam_t);
+                x[lay.t + i * n + j] = (if i == j { 2.0 } else { 0.0 }) - l0[(i, j)] - lam_t;
+            }
+            x[lay.y + i] = 1.0 - l0[(i, i)];
+        }
+        if lay.heterogeneous {
+            for &(i, j) in warm.edges() {
+                x[lay.z + incidence::edge_index(n, i, j)] = 1.0;
+            }
+            for l in 0..lay.m {
+                x[lay.nu + l] = x[lay.z + l] - x[lay.g + l];
+            }
+            // Inequality slacks u = e − (M z).
+            let mut slack = 0usize;
+            for row in &cs.rows {
+                if !row.equality {
+                    let used: f64 = row.edges.iter().map(|&l| x[lay.z + l]).sum();
+                    x[lay.u + slack] = (row.cap as f64 - used).max(0.0);
+                    slack += 1;
+                }
+            }
+        }
+    }
+
+    let mut y = x.clone();
+    let mut du = vec![0.0; lay.total];
+
+    // ---- Constant-matrix preconditioner (§V-C). ----
+    let ilu = Ilu0::factor(&ops.kkt, 1e-6);
+    let kdim = lay.total + lay.rows;
+    let mut kkt_x = vec![0.0; kdim]; // warm-started [X; λ]
+    kkt_x[..lay.total].copy_from_slice(&x);
+    let mut kkt_rhs = vec![0.0; kdim];
+    let mut ws = BicgstabWorkspace::new(kdim);
+    let opts = BicgstabOptions {
+        rtol: 1e-9,
+        atol: 1e-12,
+        max_iter: 4000,
+    };
+
+    let mut residual = f64::INFINITY;
+    let mut krylov_total = 0usize;
+    let mut iterations = 0usize;
+    let mut converged = false;
+
+    // Best-candidate tracking: start from the warm-start iterate.
+    let mut best_y = x.clone();
+    let mut best_r_est = candidate_r_asym(n, &x[lay.g..lay.g + lay.m]);
+    const EVAL_EVERY: usize = 5;
+
+    for it in 0..spec.max_iters {
+        iterations = it + 1;
+
+        // ---- Y-step: segment-wise projections of X + D/ρ. ----
+        for i in 0..lay.total {
+            y[i] = x[i] + du[i] / rho;
+        }
+        proj::project_nonneg_top_r(&mut y[lay.g..lay.g + lay.m], cs.r, &cs.eligible);
+        if y[lay.lam] < 0.0 {
+            y[lay.lam] = 0.0;
+        }
+        proj::project_nsd_inplace(&mut y[lay.s..lay.s + n * n], n);
+        proj::project_nonneg(&mut y[lay.y..lay.y + n]);
+        proj::project_psd_inplace(&mut y[lay.t..lay.t + n * n], n);
+        if lay.heterogeneous {
+            proj::project_binary_top_r(&mut y[lay.z..lay.z + lay.m], cs);
+            proj::project_nonneg(&mut y[lay.nu..lay.nu + lay.m]);
+            proj::project_nonneg(&mut y[lay.u..lay.u + lay.q_ineq]);
+        }
+
+        // ---- X-step: KKT solve (Eq. 27/31). ----
+        for i in 0..lay.total {
+            kkt_rhs[i] = y[i] - (du[i] + ops.c[i]) / rho;
+        }
+        kkt_rhs[lay.total..].copy_from_slice(&ops.b);
+        let out = bicgstab_ws(&ops.kkt, &kkt_rhs, &mut kkt_x, Some(&ilu), &opts, &mut ws);
+        krylov_total += out.iterations;
+        x.copy_from_slice(&kkt_x[..lay.total]);
+
+        // ---- Dual step + residual. ----
+        let mut res = 0.0;
+        for i in 0..lay.total {
+            let d = x[i] - y[i];
+            du[i] += rho * d;
+            res += d * d;
+        }
+        residual = res;
+
+        // ---- Candidate tracking. ----
+        if it % EVAL_EVERY == 0 || res < spec.eps {
+            let r_est = candidate_r_asym(n, &y[lay.g..lay.g + lay.m]);
+            if r_est < best_r_est {
+                best_r_est = r_est;
+                best_y.copy_from_slice(&y);
+            }
+        }
+
+        if res < spec.eps {
+            converged = true;
+            break;
+        }
+    }
+
+    AdmmSolution {
+        x,
+        y,
+        best_y,
+        best_r_est,
+        iterations,
+        residual,
+        converged,
+        krylov_iterations: krylov_total,
+    }
+}
+
+/// Cheap candidate quality estimate: `r_asym` of `W = I − A·Diag(g)·Aᵀ`
+/// built directly from a (projected, top-r) edge-space weight vector.
+/// Returns ∞ for iterates whose support is disconnected (`r_asym` would be 1
+/// and useless as a discriminator).
+fn candidate_r_asym(n: usize, g: &[f64]) -> f64 {
+    let support: Vec<(usize, usize)> = g
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v > 1e-9)
+        .map(|(l, _)| incidence::edge_pair(n, l))
+        .collect();
+    if support.len() < n - 1 {
+        return f64::INFINITY;
+    }
+    let graph = Graph::new(n, support);
+    if !crate::graph::metrics::is_connected(&graph) {
+        return f64::INFINITY;
+    }
+    let w = crate::graph::laplacian::weight_matrix_from_edge_space(n, g);
+    crate::graph::spectral::asymptotic_convergence_factor(&w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::scenarios::BandwidthScenario;
+    use crate::optimizer::OptimizeSpec;
+
+    fn small_spec(n: usize, r: usize) -> OptimizeSpec {
+        let mut s = OptimizeSpec::homogeneous(n, r);
+        s.max_iters = 150;
+        s.anneal_steps = 300;
+        s.refine_iters = 120;
+        s
+    }
+
+    #[test]
+    fn homogeneous_small_run_beats_ring() {
+        // n=8, r=12: BA-Topo must clearly beat the ring (r=8 budget is looser).
+        let spec = small_spec(8, 12);
+        let rep = solve(&spec).expect("solve");
+        let ring = crate::topo::baselines::ring(8);
+        assert!(
+            rep.r_asym < ring.asymptotic_convergence_factor(),
+            "BA {} vs ring {}",
+            rep.r_asym,
+            ring.asymptotic_convergence_factor()
+        );
+        assert_eq!(rep.topology.num_edges(), 12);
+        assert!(rep.topology.validate(1e-6).is_ok());
+        assert!(rep.constraint_check.is_ok());
+    }
+
+    #[test]
+    fn homogeneous_improves_on_warm_start() {
+        let spec = small_spec(10, 15);
+        let rep = solve(&spec).expect("solve");
+        assert!(
+            rep.r_asym <= rep.warm_start_r_asym + 1e-9,
+            "final {} vs warm {}",
+            rep.r_asym,
+            rep.warm_start_r_asym
+        );
+    }
+
+    #[test]
+    fn infeasible_budgets_rejected() {
+        assert!(matches!(
+            solve(&small_spec(8, 5)),
+            Err(OptimizeError::Infeasible(_))
+        ));
+        assert!(matches!(
+            solve(&small_spec(4, 7)),
+            Err(OptimizeError::Infeasible(_))
+        ));
+    }
+
+    #[test]
+    fn node_level_run_respects_allocation() {
+        let mut bw = vec![9.76; 4];
+        bw.extend(vec![3.25; 4]);
+        let mut spec = OptimizeSpec::with_scenario(BandwidthScenario::NodeLevel { bw }, 10);
+        spec.max_iters = 120;
+        spec.anneal_steps = 300;
+        spec.refine_iters = 100;
+        let rep = solve(&spec).expect("solve");
+        assert_eq!(rep.topology.num_edges(), 10);
+        // Caps from Algorithm 1 must hold (relaxed check covers it).
+        assert!(rep.constraint_check.is_ok(), "{:?}", rep.constraint_check);
+        assert!(rep.r_asym < 1.0);
+    }
+}

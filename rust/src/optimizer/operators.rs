@@ -1,0 +1,360 @@
+//! Assembly of the ADMM linear operators (paper Eq. 26 / Eq. 32).
+//!
+//! Variable vector layout (homogeneous, Eq. 20):
+//!
+//! ```text
+//! X = [ g (m) | λ̃ (1) | vec(S) (n²) | y (n) | vec(T) (n²) ]
+//! ```
+//!
+//! Heterogeneous (Eq. 28) appends `z (m) | ν (m) | u (q≤)` where `u` are our
+//! slack variables for *inequality* capacity rows (`M z ≤ e` ⇔ `M z + u = e`,
+//! `u ≥ 0`) — the paper's node-level rows stay equalities exactly as written.
+//!
+//! Constraint rows:
+//!
+//! ```text
+//! R1 (n²): vec(L(g) − λ̃I) + vec(S)            = vec(−α·11ᵀ/n)
+//! R2 (n²): vec(L(g) + λ̃I)          + vec(T)   = vec(2I)
+//! R3 (n):  abs(A)·g        + y                 = 1
+//! R4 (q):  M·z (+ u on ≤-rows)                 = e        (heterogeneous)
+//! R5 (m):  g − z + ν                           = 0        (heterogeneous)
+//! ```
+//!
+//! The KKT matrix `[[I, Aᵀ],[A, −δI]]` is assembled **once** per run in CSC
+//! (the tiny `−δ` regularization keeps ILU(0) defined on the saddle-point
+//! zero block; see `linalg::ilu`).
+
+use crate::bandwidth::ConstraintSet;
+use crate::graph::incidence::{edge_pair, num_possible_edges};
+use crate::linalg::CscMatrix;
+
+/// Segment offsets into the stacked primal vector `X`.
+#[derive(Debug, Clone)]
+pub struct VarLayout {
+    pub n: usize,
+    /// Number of logical edges m = n(n−1)/2.
+    pub m: usize,
+    /// Offsets.
+    pub g: usize,
+    pub lam: usize,
+    pub s: usize,
+    pub y: usize,
+    pub t: usize,
+    /// Heterogeneous segments (usize::MAX when absent).
+    pub z: usize,
+    pub nu: usize,
+    pub u: usize,
+    /// Number of inequality slack variables.
+    pub q_ineq: usize,
+    /// Total primal dimension N.
+    pub total: usize,
+    /// Number of constraint rows.
+    pub rows: usize,
+    /// Heterogeneous problem?
+    pub heterogeneous: bool,
+}
+
+impl VarLayout {
+    /// Homogeneous layout for `n` nodes.
+    pub fn homogeneous(n: usize) -> VarLayout {
+        let m = num_possible_edges(n);
+        let g = 0;
+        let lam = m;
+        let s = m + 1;
+        let y = s + n * n;
+        let t = y + n;
+        let total = t + n * n;
+        VarLayout {
+            n,
+            m,
+            g,
+            lam,
+            s,
+            y,
+            t,
+            z: usize::MAX,
+            nu: usize::MAX,
+            u: usize::MAX,
+            q_ineq: 0,
+            total,
+            rows: 2 * n * n + n,
+            heterogeneous: false,
+        }
+    }
+
+    /// Heterogeneous layout for a constraint system with `q` rows of which
+    /// `q_ineq` are inequalities.
+    pub fn heterogeneous(n: usize, q: usize, q_ineq: usize) -> VarLayout {
+        let mut l = VarLayout::homogeneous(n);
+        l.z = l.total;
+        l.nu = l.z + l.m;
+        l.u = l.nu + l.m;
+        l.q_ineq = q_ineq;
+        l.total = l.u + q_ineq;
+        l.rows = 2 * n * n + n + q + l.m;
+        l.heterogeneous = true;
+        l
+    }
+}
+
+/// The assembled constraint system `A X = b` plus the objective vector `c`
+/// (c has a single −1 at the λ̃ slot: maximize λ̃).
+pub struct AdmmOperators {
+    pub layout: VarLayout,
+    /// Constraint matrix `A` (rows × total).
+    pub a: CscMatrix,
+    /// Right-hand side `b`.
+    pub b: Vec<f64>,
+    /// Objective vector `c` (length `total`).
+    pub c: Vec<f64>,
+    /// KKT matrix `[[I, Aᵀ],[A, −δI]]` of dimension `total + rows`.
+    pub kkt: CscMatrix,
+}
+
+/// Row-major vec index of matrix entry (i, j).
+#[inline]
+fn vidx(n: usize, i: usize, j: usize) -> usize {
+    i * n + j
+}
+
+/// Assemble operators for the homogeneous problem (Eq. 26).
+pub fn build_homogeneous(n: usize, alpha: f64, delta: f64) -> AdmmOperators {
+    let layout = VarLayout::homogeneous(n);
+    let (trips, b) = base_blocks(&layout, alpha);
+    finish(layout, trips, b, delta)
+}
+
+/// Assemble operators for the heterogeneous problem (Eq. 32), extended with
+/// slack columns for inequality rows.
+pub fn build_heterogeneous(cs: &ConstraintSet, alpha: f64, delta: f64) -> AdmmOperators {
+    let n = cs.n;
+    let q = cs.rows.len();
+    let q_ineq = cs.rows.iter().filter(|r| !r.equality).count();
+    let layout = VarLayout::heterogeneous(n, q, q_ineq);
+    let (mut trips, mut b) = base_blocks(&layout, alpha);
+
+    let r4 = 2 * n * n + n; // first R4 row
+    let r5 = r4 + q; // first R5 row
+
+    // R4: M z (+u) = e.
+    let mut slack = 0usize;
+    for (qi, row) in cs.rows.iter().enumerate() {
+        for &l in &row.edges {
+            trips.push((r4 + qi, layout.z + l, 1.0));
+        }
+        if !row.equality {
+            trips.push((r4 + qi, layout.u + slack, 1.0));
+            slack += 1;
+        }
+        b.push(row.cap as f64);
+    }
+    debug_assert_eq!(slack, q_ineq);
+
+    // R5: g − z + ν = 0.
+    for l in 0..layout.m {
+        trips.push((r5 + l, layout.g + l, 1.0));
+        trips.push((r5 + l, layout.z + l, -1.0));
+        trips.push((r5 + l, layout.nu + l, 1.0));
+        b.push(0.0);
+    }
+
+    finish(layout, trips, b, delta)
+}
+
+/// R1–R3 blocks shared by both problems.
+fn base_blocks(layout: &VarLayout, alpha: f64) -> (Vec<(usize, usize, f64)>, Vec<f64>) {
+    let n = layout.n;
+    let m = layout.m;
+    let r1 = 0usize; // n² rows
+    let r2 = n * n; // n² rows
+    let r3 = 2 * n * n; // n rows
+    let mut trips: Vec<(usize, usize, f64)> = Vec::with_capacity(16 * m + 6 * n * n);
+
+    // L(g) columns: edge l touches (i,i), (j,j) with +1 and (i,j), (j,i) with −1,
+    // appearing identically in R1 and R2.
+    for l in 0..m {
+        let (i, j) = edge_pair(n, l);
+        for (base, _) in [(r1, ()), (r2, ())] {
+            trips.push((base + vidx(n, i, i), layout.g + l, 1.0));
+            trips.push((base + vidx(n, j, j), layout.g + l, 1.0));
+            trips.push((base + vidx(n, i, j), layout.g + l, -1.0));
+            trips.push((base + vidx(n, j, i), layout.g + l, -1.0));
+        }
+        // R3: diag(L) rows i and j get g_l.
+        trips.push((r3 + i, layout.g + l, 1.0));
+        trips.push((r3 + j, layout.g + l, 1.0));
+    }
+    // λ̃ columns: −I in R1, +I in R2.
+    for k in 0..n {
+        trips.push((r1 + vidx(n, k, k), layout.lam, -1.0));
+        trips.push((r2 + vidx(n, k, k), layout.lam, 1.0));
+    }
+    // Slack identities: S in R1, T in R2, y in R3.
+    for e in 0..n * n {
+        trips.push((r1 + e, layout.s + e, 1.0));
+        trips.push((r2 + e, layout.t + e, 1.0));
+    }
+    for k in 0..n {
+        trips.push((r3 + k, layout.y + k, 1.0));
+    }
+
+    // b: R1 = vec(−α·11ᵀ/n); R2 = vec(2I); R3 = 1.
+    let mut b = Vec::with_capacity(layout.rows);
+    b.extend(std::iter::repeat(-alpha / n as f64).take(n * n));
+    for i in 0..n {
+        for j in 0..n {
+            b.push(if i == j { 2.0 } else { 0.0 });
+        }
+    }
+    b.extend(std::iter::repeat(1.0).take(n));
+    (trips, b)
+}
+
+fn finish(
+    layout: VarLayout,
+    trips: Vec<(usize, usize, f64)>,
+    b: Vec<f64>,
+    delta: f64,
+) -> AdmmOperators {
+    debug_assert_eq!(b.len(), layout.rows);
+    let a = CscMatrix::from_triplets(layout.rows, layout.total, trips);
+    let mut c = vec![0.0; layout.total];
+    c[layout.lam] = -1.0; // minimize −λ̃ ⇔ maximize λ̃
+
+    // KKT = [[I, Aᵀ], [A, −δI]].
+    let nt = layout.total;
+    let nr = layout.rows;
+    let mut kt: Vec<(usize, usize, f64)> = Vec::with_capacity(nt + 2 * a.nnz() + nr);
+    for i in 0..nt {
+        kt.push((i, i, 1.0));
+    }
+    for (r, cidx, v) in a.triplets() {
+        kt.push((nt + r, cidx, v)); // A block
+        kt.push((cidx, nt + r, v)); // Aᵀ block
+    }
+    for r in 0..nr {
+        kt.push((nt + r, nt + r, -delta));
+    }
+    let kkt = CscMatrix::from_triplets(nt + nr, nt + nr, kt);
+
+    AdmmOperators { layout, a, b, c, kkt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::scenarios::BandwidthScenario;
+    use crate::graph::laplacian::laplacian_from_edge_space;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Apply the R1/R2/R3 operator blocks to a manually constructed X and
+    /// verify they equal the direct formulas.
+    #[test]
+    fn homogeneous_operator_matches_direct_formulas() {
+        let n = 5;
+        let alpha = 2.0;
+        let ops = build_homogeneous(n, alpha, 1e-8);
+        let lay = &ops.layout;
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let mut x = vec![0.0; lay.total];
+        for l in 0..lay.m {
+            x[lay.g + l] = rng.next_f64();
+        }
+        x[lay.lam] = 0.37;
+        // Leave S, y, T zero: then A·X rows must equal vec(L−λ̃I), vec(L+λ̃I), diag(L).
+        let ax = ops.a.matvec(&x);
+        let l_mat = laplacian_from_edge_space(n, &x[lay.g..lay.g + lay.m]);
+        for i in 0..n {
+            for j in 0..n {
+                let lam_term = if i == j { 0.37 } else { 0.0 };
+                let want_minus = l_mat[(i, j)] - lam_term;
+                let want_plus = l_mat[(i, j)] + lam_term;
+                assert!((ax[i * n + j] - want_minus).abs() < 1e-12);
+                assert!((ax[n * n + i * n + j] - want_plus).abs() < 1e-12);
+            }
+        }
+        for i in 0..n {
+            assert!((ax[2 * n * n + i] - l_mat[(i, i)]).abs() < 1e-12);
+        }
+        // b checks.
+        assert!((ops.b[0] + alpha / n as f64).abs() < 1e-15);
+        assert!((ops.b[n * n] - 2.0).abs() < 1e-15);
+        assert!((ops.b[2 * n * n] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn slack_identities_present() {
+        let n = 4;
+        let ops = build_homogeneous(n, 2.0, 1e-8);
+        let lay = &ops.layout;
+        let mut x = vec![0.0; lay.total];
+        x[lay.s + 5] = 3.0;
+        x[lay.y + 2] = -1.5;
+        x[lay.t + 7] = 2.5;
+        let ax = ops.a.matvec(&x);
+        assert_eq!(ax[5], 3.0);
+        assert_eq!(ax[2 * n * n + 2], -1.5);
+        assert_eq!(ax[n * n + 7], 2.5);
+    }
+
+    #[test]
+    fn kkt_is_symmetric_with_reg() {
+        let ops = build_homogeneous(4, 2.0, 1e-8);
+        let d = ops.kkt.to_dense();
+        assert!(d.is_symmetric(0.0));
+        assert_eq!(ops.kkt.rows(), ops.layout.total + ops.layout.rows);
+        // Identity block.
+        assert_eq!(d[(0, 0)], 1.0);
+        // Regularized zero block.
+        assert_eq!(d[(ops.layout.total, ops.layout.total)], -1e-8);
+    }
+
+    #[test]
+    fn heterogeneous_blocks() {
+        let sc = BandwidthScenario::paper_node_level();
+        let cs = sc.constraints(16).unwrap();
+        let ops = build_heterogeneous(&cs, 2.0, 1e-8);
+        let lay = &ops.layout;
+        assert!(lay.heterogeneous);
+        assert_eq!(lay.q_ineq, 0); // node-level rows are all equalities
+        let n = 16;
+        let q = 16;
+        assert_eq!(lay.rows, 2 * n * n + n + q + lay.m);
+        // R5 check: set g_l = 0.4, z_l = 1.0, ν_l = 0.6 → row value 0.
+        let mut x = vec![0.0; lay.total];
+        x[lay.g] = 0.4;
+        x[lay.z] = 1.0;
+        x[lay.nu] = 0.6;
+        let ax = ops.a.matvec(&x);
+        let r5 = 2 * n * n + n + q;
+        assert!((ax[r5] - 0.0).abs() < 1e-15);
+        // R4 check: z edge 0 belongs to nodes (0,1) → rows 0 and 1 get 1.
+        let r4 = 2 * n * n + n;
+        assert!((ax[r4] - 1.0).abs() < 1e-15);
+        assert!((ax[r4 + 1] - 1.0).abs() < 1e-15);
+        assert!((ax[r4 + 2] - 0.0).abs() < 1e-15);
+        // b for R4 = caps from Algorithm 1.
+        assert_eq!(ops.b[r4], 3.0);
+        assert_eq!(ops.b[r4 + 15], 1.0);
+    }
+
+    #[test]
+    fn heterogeneous_inequality_slacks() {
+        let sc = BandwidthScenario::paper_intra_server();
+        let cs = sc.constraints(12).unwrap();
+        let ops = build_heterogeneous(&cs, 2.0, 1e-8);
+        let lay = &ops.layout;
+        assert_eq!(lay.q_ineq, 7); // all 7 tree rows are inequalities
+        // Each inequality row has a slack with coefficient 1.
+        let n = 8;
+        let r4 = 2 * n * n + n;
+        let mut x = vec![0.0; lay.total];
+        for s in 0..7 {
+            x[lay.u + s] = (s + 1) as f64;
+        }
+        let ax = ops.a.matvec(&x);
+        for s in 0..7 {
+            assert!((ax[r4 + s] - (s + 1) as f64).abs() < 1e-15);
+        }
+    }
+}

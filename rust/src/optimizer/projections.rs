@@ -1,0 +1,197 @@
+//! The ADMM `Y`-step projections (paper Eq. 24, 25, 30).
+//!
+//! Each segment of `Y = Proj(X + D/ρ)` projects onto its own constraint set:
+//!
+//! - `g₁ ≥ 0` with `Card(g₁) ≤ r` → keep the `r` largest positive entries,
+//! - `λ̃₁ ≥ 0`, `y₁ ≥ 0`, `ν₁ ≥ 0`, `u₁ ≥ 0` → entrywise clamp,
+//! - `S₁ ⪯ 0` / `T₁ ⪰ 0` → eigendecompose and clamp the spectrum (Eq. 25),
+//! - `z₁ ∈ {0,1}` with budget/capacity awareness → greedy top-r rounding
+//!   honoring the physical capacity rows (the paper's top-r rule, made
+//!   capacity-aware so iterates don't fight the `M z = e` rows).
+
+use crate::bandwidth::ConstraintSet;
+use crate::linalg::{DenseMatrix, SymEigen};
+
+/// Entrywise clamp to the non-negative orthant.
+pub fn project_nonneg(xs: &mut [f64]) {
+    for v in xs.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Projection onto `{x ≥ 0, Card(x) ≤ r, x_l = 0 for ineligible l}`:
+/// clamp, then zero everything but the `r` largest entries.
+pub fn project_nonneg_top_r(xs: &mut [f64], r: usize, eligible: &[bool]) {
+    debug_assert_eq!(xs.len(), eligible.len());
+    for (v, &ok) in xs.iter_mut().zip(eligible) {
+        if *v < 0.0 || !ok {
+            *v = 0.0;
+        }
+    }
+    let positive = xs.iter().filter(|&&v| v > 0.0).count();
+    if positive <= r {
+        return;
+    }
+    let mut idx: Vec<usize> = (0..xs.len()).filter(|&i| xs[i] > 0.0).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    for &i in &idx[r..] {
+        xs[i] = 0.0;
+    }
+}
+
+/// Eq. 25: project the symmetric matrix stored row-major in `xs` onto the
+/// NSD cone (`S₁ ⪯ 0`). The buffer is symmetrized first (ADMM iterates can
+/// drift by round-off).
+pub fn project_nsd_inplace(xs: &mut [f64], n: usize) {
+    project_spectral(xs, n, |l| l.min(0.0));
+}
+
+/// Project onto the PSD cone (`T₁ ⪰ 0`).
+pub fn project_psd_inplace(xs: &mut [f64], n: usize) {
+    project_spectral(xs, n, |l| l.max(0.0));
+}
+
+fn project_spectral<F: Fn(f64) -> f64>(xs: &mut [f64], n: usize, f: F) {
+    debug_assert_eq!(xs.len(), n * n);
+    let mut m = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 0.5 * (xs[i * n + j] + xs[j * n + i]);
+            m[(i, j)] = v;
+        }
+    }
+    let out = SymEigen::new(&m).apply_spectral(f);
+    for i in 0..n {
+        for j in 0..n {
+            xs[i * n + j] = out[(i, j)];
+        }
+    }
+}
+
+/// The paper's binary projection for `z₁` (§V-B): set the largest `r`
+/// entries to one, the rest to zero — extended to respect eligibility and the
+/// capacity rows of `M` greedily (equality rows are treated as caps here; the
+/// dual updates pull the counts up to the required equality over iterations).
+pub fn project_binary_top_r(xs: &mut [f64], cs: &ConstraintSet) {
+    let m = xs.len();
+    debug_assert_eq!(m, cs.eligible.len());
+    // Row membership lookup.
+    let mut rows_of_edge: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (ri, row) in cs.rows.iter().enumerate() {
+        for &l in &row.edges {
+            rows_of_edge[l].push(ri);
+        }
+    }
+    let mut order: Vec<usize> = (0..m).filter(|&l| cs.eligible[l]).collect();
+    order.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    let mut used = vec![0usize; cs.rows.len()];
+    let mut taken = 0usize;
+    let mut selected = vec![false; m];
+    for &l in &order {
+        if taken == cs.r {
+            break;
+        }
+        if xs[l] <= 0.0 && taken >= cs.r.min(m) {
+            break;
+        }
+        let fits = rows_of_edge[l].iter().all(|&ri| used[ri] < cs.rows[ri].cap);
+        if fits {
+            for &ri in &rows_of_edge[l] {
+                used[ri] += 1;
+            }
+            selected[l] = true;
+            taken += 1;
+        }
+    }
+    for (l, v) in xs.iter_mut().enumerate() {
+        *v = if selected[l] { 1.0 } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::{ConstraintRow, ConstraintSet};
+
+    #[test]
+    fn nonneg_clamp() {
+        let mut v = vec![-1.0, 0.5, -0.2, 2.0];
+        project_nonneg(&mut v);
+        assert_eq!(v, vec![0.0, 0.5, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn top_r_keeps_largest() {
+        let mut v = vec![0.1, 0.9, -0.5, 0.4, 0.7];
+        let elig = vec![true; 5];
+        project_nonneg_top_r(&mut v, 2, &elig);
+        assert_eq!(v, vec![0.0, 0.9, 0.0, 0.0, 0.7]);
+    }
+
+    #[test]
+    fn top_r_respects_eligibility() {
+        let mut v = vec![0.9, 0.8, 0.7];
+        let elig = vec![false, true, true];
+        project_nonneg_top_r(&mut v, 2, &elig);
+        assert_eq!(v, vec![0.0, 0.8, 0.7]);
+    }
+
+    #[test]
+    fn nsd_projection_is_nsd_and_idempotent() {
+        let n = 4;
+        let mut xs: Vec<f64> = (0..16).map(|i| ((i * 7 % 5) as f64) - 2.0).collect();
+        project_nsd_inplace(&mut xs, n);
+        let m = DenseMatrix::from_vec(n, n, xs.clone());
+        let e = SymEigen::new(&m);
+        assert!(e.max() < 1e-9, "max eig {}", e.max());
+        let mut again = xs.clone();
+        project_nsd_inplace(&mut again, n);
+        for (a, b) in xs.iter().zip(&again) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn psd_projection_complements_nsd() {
+        let n = 3;
+        let orig: Vec<f64> = vec![1.0, 2.0, 0.0, 2.0, -1.0, 0.5, 0.0, 0.5, 0.3];
+        let mut p = orig.clone();
+        let mut q = orig.clone();
+        project_psd_inplace(&mut p, n);
+        project_nsd_inplace(&mut q, n);
+        for k in 0..9 {
+            // symmetric part decomposes exactly
+            let sym = 0.5 * (orig[k] + orig[(k % 3) * 3 + k / 3]);
+            assert!((p[k] + q[k] - sym).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn binary_projection_budget_and_caps() {
+        let mut cs = ConstraintSet::cardinality_only(4, 3);
+        cs.rows.push(ConstraintRow {
+            name: "cap01".into(),
+            edges: vec![0, 1],
+            cap: 1,
+            equality: false,
+        });
+        // Edge scores favor 0 and 1, but the cap allows only one of them.
+        let mut z = vec![0.9, 0.8, 0.5, 0.4, 0.3, 0.1];
+        project_binary_top_r(&mut z, &cs);
+        assert_eq!(z.iter().filter(|&&v| v == 1.0).count(), 3);
+        assert!(z[0] == 1.0 && z[1] == 0.0, "{z:?}");
+        assert!(z.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn binary_projection_eligibility() {
+        let mut cs = ConstraintSet::cardinality_only(4, 6);
+        cs.eligible[2] = false;
+        let mut z = vec![0.9; 6];
+        project_binary_top_r(&mut z, &cs);
+        assert_eq!(z[2], 0.0);
+        assert_eq!(z.iter().filter(|&&v| v == 1.0).count(), 5);
+    }
+}

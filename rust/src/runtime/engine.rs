@@ -1,0 +1,283 @@
+//! PJRT engine: one CPU client, lazily compiled executables per artifact.
+//!
+//! The compile step (`HloModuleProto::from_text_file → XlaComputation →
+//! client.compile`) happens once per artifact per process; the hot path is
+//! `execute` on the cached executable.
+
+use super::manifest::{ArtifactEntry, Manifest, TensorSpec};
+use super::RuntimeError;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Host-side tensor value fed to / read from an executable.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice (panics on dtype mismatch).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    /// First element as f64 (for scalar outputs like the loss).
+    pub fn scalar(&self) -> f64 {
+        match self {
+            HostTensor::F32(v) => v[0] as f64,
+            HostTensor::I32(v) => v[0] as f64,
+        }
+    }
+}
+
+/// The PJRT engine.
+pub struct PjRtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjRtEngine {
+    /// Create an engine over an artifacts directory.
+    pub fn new(manifest: Manifest) -> Result<PjRtEngine, RuntimeError> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjRtEngine {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Create from the auto-discovered artifacts directory.
+    pub fn from_artifacts() -> Result<PjRtEngine, RuntimeError> {
+        let dir = super::find_artifacts_dir().ok_or(RuntimeError::ArtifactsMissing)?;
+        Self::new(Manifest::load(&dir)?)
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let entry = self.manifest.artifact(name)?;
+        let path = entry
+            .file
+            .to_str()
+            .ok_or_else(|| RuntimeError::Manifest("non-utf8 path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors, validating arity/shape against
+    /// the manifest, and return the decomposed output tuple as host tensors.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>, RuntimeError> {
+        let entry = self.manifest.artifact(name)?.clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(RuntimeError::Shape(format!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                entry.inputs.len()
+            )));
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&entry.inputs)
+            .enumerate()
+            .map(|(i, (t, spec))| to_literal(t, spec).map_err(|e| {
+                RuntimeError::Shape(format!("{name} input {i}: {e}"))
+            }))
+            .collect::<Result<_, _>>()?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        decompose(result, &entry)
+    }
+
+    /// Number of artifacts compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+fn to_literal(t: &HostTensor, spec: &TensorSpec) -> Result<xla::Literal, String> {
+    if t.len() != spec.numel() {
+        return Err(format!("{} elements for shape {:?}", t.len(), spec.shape));
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (t, spec.dtype.as_str()) {
+        (HostTensor::F32(v), "float32") => xla::Literal::vec1(v.as_slice()),
+        (HostTensor::I32(v), "int32") => xla::Literal::vec1(v.as_slice()),
+        (t, d) => {
+            return Err(format!(
+                "dtype mismatch: host {} vs artifact {d}",
+                match t {
+                    HostTensor::F32(_) => "float32",
+                    HostTensor::I32(_) => "int32",
+                }
+            ))
+        }
+    };
+    if dims.len() == 1 && dims[0] as usize == t.len() {
+        Ok(lit)
+    } else if dims.is_empty() {
+        lit.reshape(&[]).map_err(|e| e.to_string())
+    } else {
+        lit.reshape(&dims).map_err(|e| e.to_string())
+    }
+}
+
+fn decompose(result: xla::Literal, entry: &ArtifactEntry) -> Result<Vec<HostTensor>, RuntimeError> {
+    // aot.py lowers with return_tuple=True: the single output is a tuple.
+    let parts = result.to_tuple()?;
+    if parts.len() != entry.outputs.len() {
+        return Err(RuntimeError::Shape(format!(
+            "{}: {} outputs returned, {} expected",
+            entry.name,
+            parts.len(),
+            entry.outputs.len()
+        )));
+    }
+    parts
+        .into_iter()
+        .zip(&entry.outputs)
+        .map(|(lit, spec)| {
+            let t = match spec.dtype.as_str() {
+                "float32" => HostTensor::F32(lit.to_vec::<f32>()?),
+                "int32" => HostTensor::I32(lit.to_vec::<i32>()?),
+                other => return Err(RuntimeError::Shape(format!("unhandled dtype {other}"))),
+            };
+            if t.len() != spec.numel() {
+                return Err(RuntimeError::Shape(format!(
+                    "output numel {} vs spec {:?}",
+                    t.len(),
+                    spec.shape
+                )));
+            }
+            Ok(t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<PjRtEngine> {
+        crate::runtime::find_artifacts_dir()?;
+        PjRtEngine::from_artifacts().ok()
+    }
+
+    #[test]
+    fn mix_native_runs_and_matches_cpu_matmul() {
+        let Some(eng) = engine() else { return };
+        let n = 16;
+        let d = 512;
+        // W = permutation-ish doubly stochastic, X = ramp.
+        let mut w = vec![0.0f32; n * n];
+        for i in 0..n {
+            w[i * n + i] = 0.5;
+            w[i * n + (i + 1) % n] = 0.25;
+            w[i * n + (i + n - 1) % n] = 0.25;
+        }
+        let x: Vec<f32> = (0..n * d).map(|i| (i % 97) as f32 * 0.01).collect();
+        let out = eng
+            .run(
+                "mix_native_n16_d512",
+                &[HostTensor::F32(w.clone()), HostTensor::F32(x.clone())],
+            )
+            .expect("run");
+        assert_eq!(out.len(), 1);
+        let got = out[0].as_f32();
+        // Reference on host.
+        for i in 0..n {
+            for j in [0usize, 17, 511] {
+                let mut want = 0.0f32;
+                for k in 0..n {
+                    want += w[i * n + k] * x[k * d + j];
+                }
+                let g = got[i * d + j];
+                assert!((g - want).abs() < 1e-4, "({i},{j}): {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn pallas_and_native_mix_agree() {
+        let Some(eng) = engine() else { return };
+        let n = 16;
+        let d = 512;
+        let w: Vec<f32> = (0..n * n).map(|i| ((i * 31 % 11) as f32 - 5.0) * 0.01).collect();
+        let x: Vec<f32> = (0..n * d).map(|i| ((i * 7 % 23) as f32 - 11.0) * 0.1).collect();
+        let a = eng
+            .run("mix_native_n16_d512", &[HostTensor::F32(w.clone()), HostTensor::F32(x.clone())])
+            .unwrap();
+        let b = eng
+            .run("mix_pallas_n16_d512", &[HostTensor::F32(w), HostTensor::F32(x)])
+            .unwrap();
+        for (p, q) in a[0].as_f32().iter().zip(b[0].as_f32()) {
+            assert!((p - q).abs() < 1e-4, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn arity_and_shape_validation() {
+        let Some(eng) = engine() else { return };
+        // wrong arity
+        assert!(matches!(
+            eng.run("mix_native_n16_d512", &[HostTensor::F32(vec![0.0; 256])]),
+            Err(RuntimeError::Shape(_))
+        ));
+        // wrong numel
+        assert!(matches!(
+            eng.run(
+                "mix_native_n16_d512",
+                &[HostTensor::F32(vec![0.0; 10]), HostTensor::F32(vec![0.0; 16 * 512])]
+            ),
+            Err(RuntimeError::Shape(_))
+        ));
+        // wrong dtype
+        assert!(matches!(
+            eng.run(
+                "mix_native_n16_d512",
+                &[HostTensor::I32(vec![0; 256]), HostTensor::F32(vec![0.0; 16 * 512])]
+            ),
+            Err(RuntimeError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(eng) = engine() else { return };
+        let _ = eng.executable("mix_native_n16_d512").unwrap();
+        let c1 = eng.compiled_count();
+        let _ = eng.executable("mix_native_n16_d512").unwrap();
+        assert_eq!(eng.compiled_count(), c1);
+    }
+}

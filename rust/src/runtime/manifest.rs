@@ -1,0 +1,282 @@
+//! The artifact manifest written by `python/compile/aot.py` — the single
+//! source of truth the runtime trusts about shapes, dtypes, parameter specs
+//! and baked optimizer constants.
+
+use super::RuntimeError;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor spec: shape + dtype string (e.g. "float32", "int32").
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// `mix` artifacts: padded node count / feature chunk.
+    pub n: Option<usize>,
+    pub d: Option<usize>,
+    /// Variant tag ("pallas" / "native") where applicable.
+    pub variant: Option<String>,
+    /// Model config name for train/eval artifacts.
+    pub config: Option<String>,
+}
+
+/// Parameter spec of a model config, in canonical flat order.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One model config block.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub params: Vec<ParamSpec>,
+    pub num_params: usize,
+    /// Raw hyperparameters (vocab, d_model, seq, classes, batch, …).
+    pub hyper: BTreeMap<String, f64>,
+}
+
+impl ModelConfig {
+    /// Hyperparameter accessor.
+    pub fn hp(&self, key: &str) -> usize {
+        *self
+            .hyper
+            .get(key)
+            .unwrap_or_else(|| panic!("config {} missing hyperparameter {key}", self.name))
+            as usize
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub configs: BTreeMap<String, ModelConfig>,
+    /// Baked optimizer constants (lr, beta).
+    pub lr: f64,
+    pub beta: f64,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest, RuntimeError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| RuntimeError::Manifest(format!("read manifest: {e}")))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (factored out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, RuntimeError> {
+        let doc = Json::parse(text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let err = |m: &str| RuntimeError::Manifest(m.to_string());
+
+        let consts = doc.get("constants").ok_or_else(|| err("missing constants"))?;
+        let lr = consts
+            .get("lr")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| err("missing lr"))?;
+        let beta = consts
+            .get("beta")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| err("missing beta"))?;
+
+        let parse_specs = |v: &Json| -> Result<Vec<TensorSpec>, RuntimeError> {
+            v.as_arr()
+                .ok_or_else(|| err("specs not an array"))?
+                .iter()
+                .map(|s| {
+                    let shape = s
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| err("spec missing shape"))?
+                        .iter()
+                        .map(|x| x.as_usize().ok_or_else(|| err("bad dim")))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    let dtype = s
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| err("spec missing dtype"))?
+                        .to_string();
+                    Ok(TensorSpec { shape, dtype })
+                })
+                .collect()
+        };
+
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(arts)) = doc.get("artifacts") {
+            for (name, entry) in arts {
+                let file = entry
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| err("artifact missing file"))?;
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactEntry {
+                        name: name.clone(),
+                        file: dir.join(file),
+                        kind: entry
+                            .get("kind")
+                            .and_then(Json::as_str)
+                            .unwrap_or("unknown")
+                            .to_string(),
+                        inputs: parse_specs(entry.get("inputs").ok_or_else(|| err("no inputs"))?)?,
+                        outputs: parse_specs(
+                            entry.get("outputs").ok_or_else(|| err("no outputs"))?,
+                        )?,
+                        n: entry.get("n").and_then(Json::as_usize),
+                        d: entry.get("d").and_then(Json::as_usize),
+                        variant: entry.get("variant").and_then(Json::as_str).map(String::from),
+                        config: entry.get("config").and_then(Json::as_str).map(String::from),
+                    },
+                );
+            }
+        }
+
+        let mut configs = BTreeMap::new();
+        if let Some(Json::Obj(cfgs)) = doc.get("configs") {
+            for (name, entry) in cfgs {
+                let params = entry
+                    .get("params")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| err("config missing params"))?
+                    .iter()
+                    .map(|p| {
+                        Ok(ParamSpec {
+                            name: p
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| err("param missing name"))?
+                                .to_string(),
+                            shape: p
+                                .get("shape")
+                                .and_then(Json::as_arr)
+                                .ok_or_else(|| err("param missing shape"))?
+                                .iter()
+                                .map(|x| x.as_usize().ok_or_else(|| err("bad dim")))
+                                .collect::<Result<Vec<_>, _>>()?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, RuntimeError>>()?;
+                let mut hyper = BTreeMap::new();
+                if let Some(Json::Obj(h)) = entry.get("model") {
+                    for (k, v) in h {
+                        if let Some(x) = v.as_f64() {
+                            hyper.insert(k.clone(), x);
+                        }
+                    }
+                }
+                configs.insert(
+                    name.clone(),
+                    ModelConfig {
+                        name: name.clone(),
+                        num_params: entry
+                            .get("num_params")
+                            .and_then(Json::as_usize)
+                            .unwrap_or_else(|| {
+                                params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+                            }),
+                        params,
+                        hyper,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            configs,
+            lr,
+            beta,
+        })
+    }
+
+    /// Artifact lookup.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry, RuntimeError> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))
+    }
+
+    /// Available padded mix sizes (sorted) for a variant.
+    pub fn mix_sizes(&self, variant: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "mix" && a.variant.as_deref() == Some(variant))
+            .filter_map(|a| Some((a.n?, a.d?)))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "constants": {"beta": 0.9, "lr": 0.05},
+      "configs": {"tiny": {"model": {"vocab": 64, "seq": 32, "classes": 10, "batch": 16},
+                           "num_params": 100,
+                           "params": [{"name": "tok_emb", "shape": [64, 4]},
+                                      {"name": "head_b", "shape": [10]}]}},
+      "artifacts": {
+        "mix_native_n16_d512": {"file": "mix_native_n16_d512.hlo.txt", "kind": "mix",
+          "variant": "native", "n": 16, "d": 512,
+          "inputs": [{"shape": [16,16], "dtype": "float32"}, {"shape": [16,512], "dtype": "float32"}],
+          "outputs": [{"shape": [16,512], "dtype": "float32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.lr, 0.05);
+        assert_eq!(m.beta, 0.9);
+        let a = m.artifact("mix_native_n16_d512").unwrap();
+        assert_eq!(a.n, Some(16));
+        assert_eq!(a.inputs[1].shape, vec![16, 512]);
+        assert_eq!(a.inputs[1].numel(), 16 * 512);
+        let c = &m.configs["tiny"];
+        assert_eq!(c.hp("vocab"), 64);
+        assert_eq!(c.params[0].name, "tok_emb");
+        assert_eq!(m.mix_sizes("native"), vec![(16, 512)]);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_when_available() {
+        if let Some(dir) = crate::runtime::find_artifacts_dir() {
+            let m = Manifest::load(&dir).expect("real manifest parses");
+            assert!(m.artifacts.len() >= 10);
+            assert!(m.configs.contains_key("tiny"));
+            let tiny = &m.configs["tiny"];
+            // 2 emb + 12/layer * 2 + 4 head/ln = 30 tensors
+            assert_eq!(tiny.params.len(), 30);
+            let train = m.artifact("train_tiny_native").unwrap();
+            assert_eq!(train.inputs.len(), 2 * 30 + 2);
+            assert_eq!(train.outputs.len(), 2 * 30 + 1);
+        }
+    }
+}

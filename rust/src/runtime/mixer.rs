@@ -1,0 +1,267 @@
+//! The gossip-mixing executor: applies `X' = W X` for a topology's weight
+//! matrix over the stacked per-node state, through the AOT artifacts
+//! (L1 Pallas kernel or XLA-native matmul) with n-padding and D-chunking,
+//! plus a pure-Rust fallback used when artifacts are absent and as the
+//! perf-baseline comparator.
+
+use super::engine::PjRtEngine;
+use super::RuntimeError;
+use crate::graph::Topology;
+use crate::linalg::DenseMatrix;
+
+/// Which mixing artifact family to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixVariant {
+    /// The L1 Pallas kernel (interpret-lowered).
+    Pallas,
+    /// The XLA-native fused matmul.
+    Native,
+    /// Pure-Rust host matmul (no PJRT) — fallback + perf baseline.
+    HostFallback,
+}
+
+impl MixVariant {
+    fn tag(self) -> &'static str {
+        match self {
+            MixVariant::Pallas => "pallas",
+            MixVariant::Native => "native",
+            MixVariant::HostFallback => "host",
+        }
+    }
+}
+
+/// Mixing executor bound to one topology.
+pub struct Mixer<'e> {
+    engine: Option<&'e PjRtEngine>,
+    variant: MixVariant,
+    /// Live node count.
+    n: usize,
+    /// Padded node count (artifact n).
+    n_pad: usize,
+    /// Feature chunk (artifact d); 0 for host fallback.
+    d_chunk: usize,
+    /// Artifact name.
+    artifact: String,
+    /// Dense W for the host path.
+    w_dense: DenseMatrix,
+    /// Pre-built PJRT literal for W — created once, reused every chunk and
+    /// every round (§Perf: avoids an n_pad² upload per chunk).
+    w_literal: Option<xla::Literal>,
+}
+
+impl<'e> Mixer<'e> {
+    /// Build a mixer for `topo`. For PJRT variants, picks the smallest padded
+    /// artifact size `n_pad ≥ n` available in the manifest.
+    pub fn new(
+        engine: Option<&'e PjRtEngine>,
+        topo: &Topology,
+        variant: MixVariant,
+    ) -> Result<Mixer<'e>, RuntimeError> {
+        let n = topo.num_nodes();
+        let w_dense = topo.weights.clone();
+        let (n_pad, d_chunk, artifact) = match variant {
+            MixVariant::HostFallback => (n, 0, String::new()),
+            v => {
+                let eng = engine.ok_or(RuntimeError::ArtifactsMissing)?;
+                let sizes = eng.manifest().mix_sizes(v.tag());
+                let (np, dc) = sizes
+                    .iter()
+                    .copied()
+                    .filter(|&(np, _)| np >= n)
+                    .min_by_key(|&(np, dc)| (np, std::cmp::Reverse(dc)))
+                    .ok_or_else(|| {
+                        RuntimeError::Shape(format!("no {} mix artifact covers n={n}", v.tag()))
+                    })?;
+                (np, dc, format!("mix_{}_n{np}_d{dc}", v.tag()))
+            }
+        };
+        let mut w_pad = vec![0.0f32; n_pad * n_pad];
+        for i in 0..n {
+            for j in 0..n {
+                w_pad[i * n_pad + j] = w_dense[(i, j)] as f32;
+            }
+        }
+        for k in n..n_pad {
+            w_pad[k * n_pad + k] = 1.0; // isolated self-loop padding nodes
+        }
+        let w_literal = if matches!(variant, MixVariant::HostFallback) {
+            None
+        } else {
+            Some(
+                xla::Literal::vec1(w_pad.as_slice())
+                    .reshape(&[n_pad as i64, n_pad as i64])
+                    .map_err(|e| RuntimeError::Xla(e.to_string()))?,
+            )
+        };
+        Ok(Mixer {
+            engine,
+            variant,
+            n,
+            n_pad,
+            d_chunk,
+            artifact,
+            w_dense,
+            w_literal,
+        })
+    }
+
+    /// The artifact in use (diagnostics).
+    pub fn artifact_name(&self) -> &str {
+        &self.artifact
+    }
+
+    /// Padded node count.
+    pub fn padded_n(&self) -> usize {
+        self.n_pad
+    }
+
+    /// Mix the stacked state: `x` has one row per node (`n` rows), row width
+    /// `d` arbitrary. Returns the mixed rows.
+    pub fn mix(&self, x: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        assert_eq!(x.len(), self.n, "row count != node count");
+        let d = x[0].len();
+        assert!(x.iter().all(|r| r.len() == d), "ragged rows");
+        match self.variant {
+            MixVariant::HostFallback => Ok(self.mix_host(x, d)),
+            _ => self.mix_pjrt(x, d),
+        }
+    }
+
+    fn mix_host(&self, x: &[Vec<f32>], d: usize) -> Vec<Vec<f32>> {
+        let n = self.n;
+        let mut out = vec![vec![0.0f32; d]; n];
+        for i in 0..n {
+            let oi = &mut out[i];
+            for k in 0..n {
+                let w = self.w_dense[(i, k)] as f32;
+                if w == 0.0 {
+                    continue;
+                }
+                let xk = &x[k];
+                for (o, &v) in oi.iter_mut().zip(xk) {
+                    *o += w * v;
+                }
+            }
+        }
+        out
+    }
+
+    fn mix_pjrt(&self, x: &[Vec<f32>], d: usize) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        let eng = self.engine.ok_or(RuntimeError::ArtifactsMissing)?;
+        let exe = eng.executable(&self.artifact)?;
+        let w_lit = self.w_literal.as_ref().expect("pjrt mixer has W literal");
+        let n = self.n;
+        let np = self.n_pad;
+        let dc = self.d_chunk;
+        let chunks = d.div_ceil(dc);
+        let mut out = vec![vec![0.0f32; d]; n];
+        // Stage one padded (np × dc) tile per chunk; zero-fill tails. The W
+        // literal is pre-built once; only the X tile is uploaded per chunk.
+        let mut tile = vec![0.0f32; np * dc];
+        for c in 0..chunks {
+            let lo = c * dc;
+            let hi = (lo + dc).min(d);
+            let w_c = hi - lo;
+            tile.iter_mut().for_each(|v| *v = 0.0);
+            for (i, row) in x.iter().enumerate() {
+                tile[i * dc..i * dc + w_c].copy_from_slice(&row[lo..hi]);
+            }
+            let x_lit = xla::Literal::vec1(tile.as_slice())
+                .reshape(&[np as i64, dc as i64])
+                .map_err(|e| RuntimeError::Xla(e.to_string()))?;
+            let result = exe.execute::<&xla::Literal>(&[w_lit, &x_lit])?[0][0]
+                .to_literal_sync()?
+                .to_tuple1()?;
+            let mixed = result.to_vec::<f32>()?;
+            for (i, row) in out.iter_mut().enumerate() {
+                row[lo..hi].copy_from_slice(&mixed[i * dc..i * dc + w_c]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::baselines;
+
+    fn state(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn host_fallback_matches_dense_matmul() {
+        let topo = baselines::ring(8);
+        let mixer = Mixer::new(None, &topo, MixVariant::HostFallback).unwrap();
+        let x = state(8, 33, 5);
+        let out = mixer.mix(&x).unwrap();
+        for i in 0..8 {
+            for j in 0..33 {
+                let mut want = 0.0f32;
+                for k in 0..8 {
+                    want += topo.weights[(i, k)] as f32 * x[k][j];
+                }
+                assert!((out[i][j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn host_mix_preserves_column_means() {
+        let topo = baselines::torus2d(16);
+        let mixer = Mixer::new(None, &topo, MixVariant::HostFallback).unwrap();
+        let x = state(16, 10, 7);
+        let out = mixer.mix(&x).unwrap();
+        for j in 0..10 {
+            let m0: f32 = x.iter().map(|r| r[j]).sum::<f32>();
+            let m1: f32 = out.iter().map(|r| r[j]).sum::<f32>();
+            assert!((m0 - m1).abs() < 1e-4, "col {j}: {m0} vs {m1}");
+        }
+    }
+
+    #[test]
+    fn pjrt_variants_match_host_with_padding_and_chunking() {
+        let Some(_) = crate::runtime::find_artifacts_dir() else { return };
+        let eng = PjRtEngine::from_artifacts().unwrap();
+        // n=12 forces padding to 16; d=700 forces chunking + zero tail.
+        let topo = baselines::u_equistatic(12, 2, 3);
+        let x = state(12, 700, 11);
+        let host = Mixer::new(None, &topo, MixVariant::HostFallback)
+            .unwrap()
+            .mix(&x)
+            .unwrap();
+        for variant in [MixVariant::Native, MixVariant::Pallas] {
+            let mixer = Mixer::new(Some(&eng), &topo, variant).unwrap();
+            assert_eq!(mixer.padded_n(), 16);
+            let got = mixer.mix(&x).unwrap();
+            for i in 0..12 {
+                for j in 0..700 {
+                    assert!(
+                        (got[i][j] - host[i][j]).abs() < 1e-4,
+                        "{variant:?} ({i},{j}): {} vs {}",
+                        got[i][j],
+                        host[i][j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn directed_exponential_mixes() {
+        let topo = baselines::exponential(8);
+        let mixer = Mixer::new(None, &topo, MixVariant::HostFallback).unwrap();
+        let x = state(8, 5, 1);
+        let out = mixer.mix(&x).unwrap();
+        // Column means preserved (W column-stochastic).
+        for j in 0..5 {
+            let m0: f32 = x.iter().map(|r| r[j]).sum();
+            let m1: f32 = out.iter().map(|r| r[j]).sum();
+            assert!((m0 - m1).abs() < 1e-4);
+        }
+    }
+}

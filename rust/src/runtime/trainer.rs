@@ -1,0 +1,285 @@
+//! The DSGD local-step executor: runs the AOT train/eval artifacts for one
+//! model config, and owns the manifest-driven parameter initialization
+//! (mirroring `model.init_params`: unit LayerNorm scales, zero biases,
+//! scaled-normal matrices).
+
+use super::engine::{HostTensor, PjRtEngine};
+use super::manifest::ModelConfig;
+use super::RuntimeError;
+use crate::util::rng::Xoshiro256pp;
+
+/// Executor for one model config.
+pub struct ModelRunner<'e> {
+    engine: &'e PjRtEngine,
+    cfg: ModelConfig,
+    train_artifact: String,
+    eval_artifact: String,
+}
+
+impl<'e> ModelRunner<'e> {
+    /// Bind to a config; `variant` selects the optimizer lowering
+    /// ("native" or "pallas").
+    pub fn new(
+        engine: &'e PjRtEngine,
+        config: &str,
+        variant: &str,
+    ) -> Result<ModelRunner<'e>, RuntimeError> {
+        let cfg = engine
+            .manifest()
+            .configs
+            .get(config)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(format!("config {config}")))?
+            .clone();
+        let train_artifact = format!("train_{config}_{variant}");
+        let eval_artifact = format!("eval_{config}");
+        engine.manifest().artifact(&train_artifact)?;
+        engine.manifest().artifact(&eval_artifact)?;
+        Ok(ModelRunner {
+            engine,
+            cfg,
+            train_artifact,
+            eval_artifact,
+        })
+    }
+
+    /// The model config.
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Batch size / sequence length / class count the artifacts were traced at.
+    pub fn batch(&self) -> usize {
+        self.cfg.hp("batch")
+    }
+    pub fn seq(&self) -> usize {
+        self.cfg.hp("seq")
+    }
+    pub fn classes(&self) -> usize {
+        self.cfg.hp("classes")
+    }
+    pub fn vocab(&self) -> usize {
+        self.cfg.hp("vocab")
+    }
+
+    /// Initialize one node's parameters (seeded; nodes use distinct seeds in
+    /// DSGD only if desired — the paper starts from a common model, which the
+    /// coordinator arranges by sharing the seed).
+    pub fn init_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        self.cfg
+            .params
+            .iter()
+            .map(|spec| {
+                let numel: usize = spec.shape.iter().product();
+                if spec.name.ends_with("_scale") {
+                    vec![1.0f32; numel]
+                } else if spec.name.ends_with("_bias")
+                    || spec.name.ends_with(".bqkv")
+                    || spec.name.ends_with(".bo")
+                    || spec.name.ends_with(".b1")
+                    || spec.name.ends_with(".b2")
+                    || spec.name == "head_b"
+                {
+                    vec![0.0f32; numel]
+                } else {
+                    let fan_in = if spec.shape.len() > 1 { spec.shape[0] } else { 1 };
+                    let std = if spec.name.contains("emb") {
+                        0.02
+                    } else {
+                        1.0 / (fan_in as f64).sqrt()
+                    };
+                    (0..numel)
+                        .map(|_| (rng.next_gaussian() * std) as f32)
+                        .collect()
+                }
+            })
+            .collect()
+    }
+
+    /// Zero momenta matching the parameter shapes.
+    pub fn zero_momenta(&self) -> Vec<Vec<f32>> {
+        self.cfg
+            .params
+            .iter()
+            .map(|s| vec![0.0f32; s.shape.iter().product()])
+            .collect()
+    }
+
+    /// One DSGD local step: fwd + bwd + fused momentum-SGD. Updates `params`
+    /// and `momenta` in place, returns the batch loss.
+    pub fn train_step(
+        &self,
+        params: &mut [Vec<f32>],
+        momenta: &mut [Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f64, RuntimeError> {
+        let n_p = self.cfg.params.len();
+        assert_eq!(params.len(), n_p);
+        assert_eq!(momenta.len(), n_p);
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(2 * n_p + 2);
+        inputs.extend(params.iter().map(|p| HostTensor::F32(p.clone())));
+        inputs.extend(momenta.iter().map(|m| HostTensor::F32(m.clone())));
+        inputs.push(HostTensor::I32(tokens.to_vec()));
+        inputs.push(HostTensor::I32(targets.to_vec()));
+        let out = self.engine.run(&self.train_artifact, &inputs)?;
+        debug_assert_eq!(out.len(), 2 * n_p + 1);
+        for (dst, src) in params.iter_mut().zip(&out[..n_p]) {
+            dst.copy_from_slice(src.as_f32());
+        }
+        for (dst, src) in momenta.iter_mut().zip(&out[n_p..2 * n_p]) {
+            dst.copy_from_slice(src.as_f32());
+        }
+        Ok(out[2 * n_p].scalar())
+    }
+
+    /// Evaluate a batch: returns (mean loss, accuracy).
+    pub fn eval(
+        &self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f64, f64), RuntimeError> {
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(params.len() + 2);
+        inputs.extend(params.iter().map(|p| HostTensor::F32(p.clone())));
+        inputs.push(HostTensor::I32(tokens.to_vec()));
+        inputs.push(HostTensor::I32(targets.to_vec()));
+        let out = self.engine.run(&self.eval_artifact, &inputs)?;
+        Ok((out[0].scalar(), out[1].scalar()))
+    }
+
+    /// Concatenate a node's parameters into one flat vector (the mixing
+    /// representation) — inverse of [`Self::unflatten_into`].
+    pub fn flatten(&self, params: &[Vec<f32>]) -> Vec<f32> {
+        let total: usize = params.iter().map(|p| p.len()).sum();
+        let mut flat = Vec::with_capacity(total);
+        for p in params {
+            flat.extend_from_slice(p);
+        }
+        flat
+    }
+
+    /// Scatter a flat vector back into parameter tensors.
+    pub fn unflatten_into(&self, flat: &[f32], params: &mut [Vec<f32>]) {
+        let mut off = 0;
+        for p in params.iter_mut() {
+            let len = p.len();
+            p.copy_from_slice(&flat[off..off + len]);
+            off += len;
+        }
+        assert_eq!(off, flat.len(), "flat length mismatch");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<PjRtEngine> {
+        crate::runtime::find_artifacts_dir()?;
+        PjRtEngine::from_artifacts().ok()
+    }
+
+    fn batch(runner: &ModelRunner, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let b = runner.batch();
+        let s = runner.seq();
+        let v = runner.vocab();
+        let c = runner.classes();
+        let targets: Vec<i32> = (0..b).map(|_| rng.index(c) as i32).collect();
+        let tokens: Vec<i32> = (0..b)
+            .flat_map(|i| {
+                let cls = targets[i] as usize;
+                (0..s)
+                    .map(|_| {
+                        if rng.next_f64() < 0.6 {
+                            ((cls + rng.index(3)) % v) as i32
+                        } else {
+                            rng.index(v) as i32
+                        }
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        (tokens, targets)
+    }
+
+    #[test]
+    fn init_params_shapes_and_scheme() {
+        let Some(eng) = engine() else { return };
+        let runner = ModelRunner::new(&eng, "tiny", "native").unwrap();
+        let params = runner.init_params(1);
+        assert_eq!(params.len(), runner.config().params.len());
+        for (p, spec) in params.iter().zip(&runner.config().params) {
+            assert_eq!(p.len(), spec.shape.iter().product::<usize>(), "{}", spec.name);
+            if spec.name.ends_with("_scale") {
+                assert!(p.iter().all(|&v| v == 1.0));
+            }
+            if spec.name == "head_b" {
+                assert!(p.iter().all(|&v| v == 0.0));
+            }
+        }
+        // Deterministic in seed.
+        assert_eq!(runner.init_params(1)[0], params[0]);
+        assert_ne!(runner.init_params(2)[0], params[0]);
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        let Some(eng) = engine() else { return };
+        let runner = ModelRunner::new(&eng, "tiny", "native").unwrap();
+        let mut params = runner.init_params(3);
+        let mut momenta = runner.zero_momenta();
+        let (tokens, targets) = batch(&runner, 5);
+        let mut first = None;
+        let mut last = f64::INFINITY;
+        for _ in 0..30 {
+            last = runner
+                .train_step(&mut params, &mut momenta, &tokens, &targets)
+                .unwrap();
+            first.get_or_insert(last);
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first * 0.6,
+            "loss did not drop enough: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn native_and_pallas_train_steps_agree() {
+        let Some(eng) = engine() else { return };
+        let nat = ModelRunner::new(&eng, "tiny", "native").unwrap();
+        let pal = ModelRunner::new(&eng, "tiny", "pallas").unwrap();
+        let (tokens, targets) = batch(&nat, 9);
+        let mut p1 = nat.init_params(7);
+        let mut m1 = nat.zero_momenta();
+        let mut p2 = pal.init_params(7);
+        let mut m2 = pal.zero_momenta();
+        let l1 = nat.train_step(&mut p1, &mut m1, &tokens, &targets).unwrap();
+        let l2 = pal.train_step(&mut p2, &mut m2, &tokens, &targets).unwrap();
+        assert!((l1 - l2).abs() < 1e-5, "loss {l1} vs {l2}");
+        for (a, b) in p1.iter().zip(&p2) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_matches_training_signal_and_flatten_roundtrip() {
+        let Some(eng) = engine() else { return };
+        let runner = ModelRunner::new(&eng, "tiny", "native").unwrap();
+        let params = runner.init_params(11);
+        let (tokens, targets) = batch(&runner, 13);
+        let (loss, acc) = runner.eval(&params, &tokens, &targets).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+        // flatten/unflatten roundtrip
+        let flat = runner.flatten(&params);
+        assert_eq!(flat.len(), runner.config().num_params);
+        let mut back = runner.zero_momenta();
+        runner.unflatten_into(&flat, &mut back);
+        assert_eq!(back, params);
+    }
+}

@@ -1,0 +1,360 @@
+//! Simulated-annealing warm start (paper §VI, [40]).
+//!
+//! The ADMM problem is sensitive to initialization, so the paper constructs
+//! the initial topology by simulated annealing over r-edge graphs minimizing
+//! the average shortest path length (ASPL) — a proxy for communication delay
+//! [41]. The move set swaps one present edge for one absent edge, keeping the
+//! edge budget fixed; disconnected proposals are rejected outright (their
+//! ASPL is infinite).
+
+use crate::graph::metrics::avg_shortest_path_len;
+use crate::graph::{incidence, Graph};
+use crate::util::rng::Xoshiro256pp;
+
+/// Annealing schedule parameters.
+#[derive(Debug, Clone)]
+pub struct AnnealOptions {
+    /// Monte-Carlo steps.
+    pub steps: usize,
+    /// Initial temperature (in ASPL units).
+    pub t0: f64,
+    /// Final temperature.
+    pub t1: f64,
+}
+
+impl Default for AnnealOptions {
+    fn default() -> Self {
+        AnnealOptions {
+            steps: 4000,
+            t0: 0.5,
+            t1: 1e-3,
+        }
+    }
+}
+
+/// Degree-capped random connected graph with exactly `r` edges: start from a
+/// random spanning tree, add random extra edges. `max_deg[i]` caps node
+/// degrees when provided (used for the heterogeneous warm start where
+/// Algorithm 1 fixed per-node edge budgets).
+pub fn random_r_edge_graph(
+    n: usize,
+    r: usize,
+    max_deg: Option<&[usize]>,
+    rng: &mut Xoshiro256pp,
+) -> Graph {
+    assert!(r >= n - 1, "need at least n-1 = {} edges, got {r}", n - 1);
+    assert!(
+        r <= incidence::num_possible_edges(n),
+        "r={r} exceeds |E| = {}",
+        incidence::num_possible_edges(n)
+    );
+    let cap = |i: usize| max_deg.map(|d| d[i]).unwrap_or(usize::MAX);
+    'outer: for _attempt in 0..256 {
+        let mut deg = vec![0usize; n];
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        // Attach high-capacity nodes first: with tight caps (e.g. the
+        // node-level allocation's (3,…,3,1,…,1)) low-capacity nodes must end
+        // up as leaves, so process them last and attach each new node to the
+        // earlier node with the most remaining headroom (random tie-break).
+        perm.sort_by_key(|&i| std::cmp::Reverse(cap(i).min(n)));
+        let mut edges: Vec<(usize, usize)> = Vec::with_capacity(r);
+        for k in 1..n {
+            let best_headroom = (0..k)
+                .map(|j| cap(perm[j]).min(n).saturating_sub(deg[perm[j]]))
+                .max()
+                .unwrap_or(0);
+            if best_headroom == 0 {
+                continue 'outer;
+            }
+            let candidates: Vec<usize> = (0..k)
+                .filter(|&j| cap(perm[j]).min(n) - deg[perm[j]] == best_headroom)
+                .collect();
+            let j = candidates[rng.index(candidates.len())];
+            let (a, b) = (perm[k].min(perm[j]), perm[k].max(perm[j]));
+            edges.push((a, b));
+            deg[a] += 1;
+            deg[b] += 1;
+        }
+        // Fill to r edges among pairs that still have headroom.
+        let mut guard = 0usize;
+        while edges.len() < r {
+            guard += 1;
+            if guard > 4 * n * n + 64 {
+                continue 'outer;
+            }
+            let open: Vec<usize> = (0..n).filter(|&i| deg[i] < cap(i)).collect();
+            if open.len() < 2 {
+                continue 'outer;
+            }
+            let a = open[rng.index(open.len())];
+            let b = open[rng.index(open.len())];
+            if a == b {
+                continue;
+            }
+            let e = (a.min(b), a.max(b));
+            if edges.contains(&e) {
+                continue;
+            }
+            edges.push(e);
+            deg[e.0] += 1;
+            deg[e.1] += 1;
+        }
+        return Graph::new(n, edges);
+    }
+    // Random construction failed — typical for *exact* capacity packings
+    // (Σ caps = 2r, e.g. the node-level allocation at large r). Fall back to
+    // Havel–Hakimi on a target degree sequence, then repair connectivity
+    // with degree-preserving double-edge swaps.
+    havel_hakimi_capped(n, r, max_deg, rng)
+        .unwrap_or_else(|| panic!("could not build a degree-capped connected graph (n={n}, r={r})"))
+}
+
+/// Deterministic degree-sequence construction for tight caps: choose target
+/// degrees `d_i ≤ cap_i` with `Σd = 2r` (greedily shaving the largest), run
+/// Havel–Hakimi, then repair connectivity by 2-swaps.
+fn havel_hakimi_capped(
+    n: usize,
+    r: usize,
+    max_deg: Option<&[usize]>,
+    rng: &mut Xoshiro256pp,
+) -> Option<Graph> {
+    let caps: Vec<usize> = (0..n)
+        .map(|i| max_deg.map(|d| d[i]).unwrap_or(n - 1).min(n - 1))
+        .collect();
+    let mut target = caps.clone();
+    let mut total: usize = target.iter().sum();
+    if total < 2 * r {
+        return None;
+    }
+    while total > 2 * r {
+        let imax = (0..n).max_by_key(|&i| target[i]).unwrap();
+        if target[imax] == 0 {
+            return None;
+        }
+        target[imax] -= 1;
+        total -= 1;
+    }
+    // Havel–Hakimi: connect the node with the largest remaining degree to
+    // the next-largest ones.
+    let mut remaining: Vec<(usize, usize)> = target.iter().copied().zip(0..n).collect();
+    let mut adj = vec![std::collections::HashSet::new(); n];
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(r);
+    loop {
+        remaining.sort_unstable_by(|a, b| b.cmp(a));
+        let (d, v) = remaining[0];
+        if d == 0 {
+            break;
+        }
+        if d >= remaining.len() {
+            return None;
+        }
+        remaining[0].0 = 0;
+        for k in 1..=d {
+            let (dk, u) = remaining[k];
+            if dk == 0 || adj[v].contains(&u) {
+                return None; // non-graphical under this ordering
+            }
+            remaining[k].0 -= 1;
+            adj[v].insert(u);
+            adj[u].insert(v);
+            edges.push((v.min(u), v.max(u)));
+        }
+    }
+    if edges.len() != r {
+        return None;
+    }
+    // Connectivity repair: merge components with degree-preserving 2-swaps.
+    let mut graph = Graph::new(n, edges.clone());
+    let mut guard = 0;
+    while !crate::graph::metrics::is_connected(&graph) && guard < 4 * n {
+        guard += 1;
+        // Pick components via BFS from node 0.
+        let dist = crate::graph::metrics::bfs_distances(&graph, 0);
+        let in_c0: Vec<bool> = dist.iter().map(|&d| d != usize::MAX).collect();
+        let e_in: Vec<(usize, usize)> = edges
+            .iter()
+            .copied()
+            .filter(|&(a, b)| in_c0[a] && in_c0[b])
+            .collect();
+        let e_out: Vec<(usize, usize)> = edges
+            .iter()
+            .copied()
+            .filter(|&(a, b)| !in_c0[a] && !in_c0[b])
+            .collect();
+        if e_in.is_empty() || e_out.is_empty() {
+            break;
+        }
+        let (a, b) = e_in[rng.index(e_in.len())];
+        let (c, d) = e_out[rng.index(e_out.len())];
+        if graph.has_edge(a, c) || graph.has_edge(b, d) {
+            continue;
+        }
+        edges.retain(|&e| e != (a.min(b), a.max(b)) && e != (c.min(d), c.max(d)));
+        edges.push((a.min(c), a.max(c)));
+        edges.push((b.min(d), b.max(d)));
+        graph = Graph::new(n, edges.clone());
+    }
+    crate::graph::metrics::is_connected(&graph).then_some(graph)
+}
+
+/// Simulated-annealing minimization of ASPL over connected r-edge graphs,
+/// optionally under per-node degree caps. Returns the best graph seen.
+pub fn anneal_aspl(
+    n: usize,
+    r: usize,
+    max_deg: Option<&[usize]>,
+    opts: &AnnealOptions,
+    seed: u64,
+) -> Graph {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut current = random_r_edge_graph(n, r, max_deg, &mut rng);
+    let mut cur_cost = avg_shortest_path_len(&current).expect("initial graph connected");
+    let mut best = current.clone();
+    let mut best_cost = cur_cost;
+    let cap = |i: usize| max_deg.map(|d| d[i]).unwrap_or(usize::MAX);
+
+    // If the edge budget saturates the complete graph there is nothing to move.
+    if r == incidence::num_possible_edges(n) {
+        return current;
+    }
+
+    for step in 0..opts.steps {
+        let frac = step as f64 / opts.steps.max(1) as f64;
+        let temp = opts.t0 * (opts.t1 / opts.t0).powf(frac);
+
+        // Propose: remove a random edge, add a random absent edge.
+        let edges = current.edges().to_vec();
+        let rm = edges[rng.index(edges.len())];
+        let mut add;
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            if guard > 10_000 {
+                add = rm; // degenerate no-op proposal
+                break;
+            }
+            let a = rng.index(n);
+            let b = rng.index(n);
+            if a == b {
+                continue;
+            }
+            add = (a.min(b), a.max(b));
+            if add == rm || current.has_edge(add.0, add.1) {
+                continue;
+            }
+            // Degree caps after the swap.
+            let mut deg_ok = true;
+            for &v in &[add.0, add.1] {
+                let mut d = current.degrees()[v] + 1;
+                if v == rm.0 || v == rm.1 {
+                    d -= 1;
+                }
+                if d > cap(v) {
+                    deg_ok = false;
+                }
+            }
+            if deg_ok {
+                break;
+            }
+        }
+        if add == rm {
+            continue;
+        }
+        let proposal = Graph::new(
+            n,
+            current
+                .edges()
+                .iter()
+                .copied()
+                .filter(|&e| e != rm)
+                .chain(std::iter::once(add)),
+        );
+        let Some(cost) = avg_shortest_path_len(&proposal) else {
+            continue; // disconnected → reject
+        };
+        let accept = cost <= cur_cost || rng.next_f64() < ((cur_cost - cost) / temp).exp();
+        if accept {
+            current = proposal;
+            cur_cost = cost;
+            if cost < best_cost {
+                best = current.clone();
+                best_cost = cost;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::metrics::is_connected;
+
+    #[test]
+    fn random_graph_has_exact_budget_and_connectivity() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for &(n, r) in &[(8usize, 10usize), (16, 24), (5, 4)] {
+            let g = random_r_edge_graph(n, r, None, &mut rng);
+            assert_eq!(g.num_edges(), r);
+            assert!(is_connected(&g));
+        }
+    }
+
+    #[test]
+    fn degree_caps_respected() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let caps = vec![3usize; 10];
+        let g = random_r_edge_graph(10, 14, Some(&caps), &mut rng);
+        assert!(g.degrees().iter().all(|&d| d <= 3), "{:?}", g.degrees());
+    }
+
+    #[test]
+    fn annealing_improves_aspl_over_random() {
+        let n = 16;
+        let r = 24;
+        let mut rng = Xoshiro256pp::seed_from_u64(100);
+        let start = random_r_edge_graph(n, r, None, &mut rng);
+        let start_aspl = avg_shortest_path_len(&start).unwrap();
+        let annealed = anneal_aspl(
+            n,
+            r,
+            None,
+            &AnnealOptions {
+                steps: 1500,
+                ..Default::default()
+            },
+            100,
+        );
+        let end_aspl = avg_shortest_path_len(&annealed).unwrap();
+        assert_eq!(annealed.num_edges(), r);
+        assert!(is_connected(&annealed));
+        assert!(
+            end_aspl <= start_aspl + 1e-12,
+            "annealed {end_aspl} vs random {start_aspl}"
+        );
+    }
+
+    #[test]
+    fn annealing_with_caps_stays_capped() {
+        let caps = vec![4usize; 12];
+        let g = anneal_aspl(
+            12,
+            18,
+            Some(&caps),
+            &AnnealOptions {
+                steps: 600,
+                ..Default::default()
+            },
+            5,
+        );
+        assert!(g.degrees().iter().all(|&d| d <= 4));
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn complete_budget_shortcut() {
+        let g = anneal_aspl(5, 10, None, &AnnealOptions::default(), 1);
+        assert_eq!(g.num_edges(), 10);
+    }
+}

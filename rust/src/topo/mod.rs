@@ -1,0 +1,8 @@
+//! Topology constructions: the benchmark topologies of the paper's §VI
+//! (ring, 2D grid, 2D torus, hypercube, exponential [16], U-EquiStatic [19]),
+//! the degree-based and optimization-based weight rules, and the
+//! simulated-annealing ASPL warm start used to initialize the ADMM solver.
+
+pub mod annealing;
+pub mod baselines;
+pub mod weights;

@@ -1,0 +1,210 @@
+//! Weight rules for a fixed graph.
+//!
+//! Intuition-based topologies assign weights from node degrees ([17]); we
+//! implement the two standard rules plus the Xiao–Boyd "best constant" [22]
+//! which serves as the restricted-solution-space baseline the paper contrasts
+//! BA-Topo against, and a projected-gradient *optimal weight* refinement used
+//! by the BA-Topo extraction step.
+
+use crate::graph::laplacian::{laplacian_from_weights, weight_matrix_from_edge_weights};
+use crate::graph::spectral::asymptotic_convergence_factor;
+use crate::graph::{Graph, Topology};
+use crate::linalg::SymEigen;
+
+/// Metropolis–Hastings weights: `W_ij = 1 / (1 + max(d_i, d_j))` on edges.
+/// For regular graphs of degree `d` this reduces to the uniform `1/(d+1)`
+/// rule the intuition-based literature uses.
+pub fn metropolis(graph: &Graph) -> Vec<f64> {
+    let deg = graph.degrees();
+    graph
+        .edges()
+        .iter()
+        .map(|&(i, j)| 1.0 / (1.0 + deg[i].max(deg[j]) as f64))
+        .collect()
+}
+
+/// Max-degree rule: uniform `1/(d_max + 1)` on every edge.
+pub fn max_degree(graph: &Graph) -> Vec<f64> {
+    let d = graph.max_degree();
+    vec![1.0 / (d as f64 + 1.0); graph.num_edges()]
+}
+
+/// Xiao–Boyd *best constant* edge weight [22]: `α* = 2 / (λ₁(L) + λ_{n−1}(L))`
+/// applied uniformly, where `L` is the unweighted Laplacian. This is the
+/// optimum within the constant-weight subset of the solution space — exactly
+/// the restriction the paper criticizes in §II.
+pub fn best_constant(graph: &Graph) -> Vec<f64> {
+    let l_unweighted = laplacian_from_weights(graph, &vec![1.0; graph.num_edges()]);
+    let eig = SymEigen::new(&l_unweighted);
+    let l1 = eig.values[0];
+    let ln1 = eig.values[eig.values.len() - 2]; // second-smallest
+    let alpha = 2.0 / (l1 + ln1);
+    vec![alpha; graph.num_edges()]
+}
+
+/// Projected-subgradient refinement of per-edge weights minimizing
+/// `r_asym(W)` on a **fixed** support (the spectral-function subgradient of
+/// `max{λ₂, −λₙ}` restricted to the edge pattern). Used by the BA-Topo
+/// extraction step after ADMM fixes the support, and as the "optimal weights"
+/// baseline for small graphs.
+///
+/// Returns per-edge weights (aligned to `graph.edges()`).
+pub fn optimize_weights(graph: &Graph, init: Option<&[f64]>, iters: usize) -> Vec<f64> {
+    let n = graph.num_nodes();
+    let m = graph.num_edges();
+    assert!(m > 0, "cannot optimize weights of an empty graph");
+    let mut g: Vec<f64> = match init {
+        Some(w) => w.to_vec(),
+        None => metropolis(graph),
+    };
+    let mut best = g.clone();
+    let mut best_r = asymptotic_convergence_factor(&weight_matrix_from_edge_weights(graph, &g));
+
+    for it in 0..iters {
+        let w = weight_matrix_from_edge_weights(graph, &g);
+        let eig = SymEigen::new(&w);
+        // Consensus eigenvector is 1/√n; λ₂ is the largest non-consensus
+        // eigenvalue, λₙ the smallest.
+        let (lam2, v2, lamn, vn) = split_modes(&eig, n);
+        let r = lam2.abs().max(lamn.abs());
+        if r < best_r {
+            best_r = r;
+            best.copy_from_slice(&g);
+        }
+        // Subgradient of r wrt g_l: edge {i,j} contributes −(v_i−v_j)² for the
+        // active eigenvalue λ₂ (W = I − A Diag(g) Aᵀ), +(u_i−u_j)² for −λₙ.
+        let mut grad = vec![0.0; m];
+        for (l, &(i, j)) in graph.edges().iter().enumerate() {
+            if lam2.abs() >= lamn.abs() {
+                let d = v2[i] - v2[j];
+                grad[l] = -d * d * lam2.signum();
+            } else {
+                let d = vn[i] - vn[j];
+                grad[l] = -d * d * lamn.signum();
+            }
+        }
+        // Diminishing step; project to g ≥ 0 and diag(L) ≤ 1.
+        let step = 0.5 / (1.0 + it as f64).sqrt();
+        for l in 0..m {
+            g[l] = (g[l] - step * grad[l]).max(0.0);
+        }
+        project_diag_cap(graph, &mut g);
+    }
+    best
+}
+
+/// Scale weights so that every node's total incident weight (diag of L) is at
+/// most 1 — keeps all of `W` non-negative, as required for DSGD averaging.
+fn project_diag_cap(graph: &Graph, g: &mut [f64]) {
+    let n = graph.num_nodes();
+    let mut incident = vec![0.0; n];
+    for (l, &(i, j)) in graph.edges().iter().enumerate() {
+        incident[i] += g[l];
+        incident[j] += g[l];
+    }
+    let worst = incident.iter().cloned().fold(0.0, f64::max);
+    if worst > 1.0 {
+        for gl in g.iter_mut() {
+            *gl /= worst;
+        }
+    }
+}
+
+/// Extract (λ₂, v₂, λₙ, vₙ) from a gossip-matrix eigendecomposition by
+/// removing the eigenvalue closest to 1 (the consensus mode).
+fn split_modes(eig: &SymEigen, n: usize) -> (f64, Vec<f64>, f64, Vec<f64>) {
+    let idx_one = (0..n)
+        .min_by(|&a, &b| {
+            (eig.values[a] - 1.0)
+                .abs()
+                .partial_cmp(&(eig.values[b] - 1.0).abs())
+                .unwrap()
+        })
+        .unwrap();
+    let lam2_idx = (0..n).filter(|&k| k != idx_one).min_by(|&a, &b| {
+        eig.values[b].partial_cmp(&eig.values[a]).unwrap()
+    });
+    let lamn_idx = (0..n).filter(|&k| k != idx_one).max_by(|&a, &b| {
+        eig.values[b].partial_cmp(&eig.values[a]).unwrap()
+    });
+    let (i2, in_) = (lam2_idx.unwrap(), lamn_idx.unwrap());
+    let col = |k: usize| -> Vec<f64> { (0..n).map(|r| eig.vectors[(r, k)]).collect() };
+    (eig.values[i2], col(i2), eig.values[in_], col(in_))
+}
+
+/// Convenience: build a [`Topology`] with the given weight rule name.
+pub fn topology_with_rule(graph: Graph, rule: &str, name: impl Into<String>) -> Topology {
+    let weights = match rule {
+        "metropolis" => metropolis(&graph),
+        "max-degree" => max_degree(&graph),
+        "best-constant" => best_constant(&graph),
+        "optimal" => optimize_weights(&graph, None, 200),
+        other => panic!("unknown weight rule {other}"),
+    };
+    let w = weight_matrix_from_edge_weights(&graph, &weights);
+    Topology::new(graph, w, name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: usize) -> Graph {
+        Graph::new(n, (0..n).map(|i| (i, (i + 1) % n)))
+    }
+
+    #[test]
+    fn metropolis_regular_equals_uniform() {
+        let g = ring(6);
+        let w = metropolis(&g);
+        assert!(w.iter().all(|&x| (x - 1.0 / 3.0).abs() < 1e-15));
+    }
+
+    #[test]
+    fn metropolis_star() {
+        let g = Graph::new(4, vec![(0, 1), (0, 2), (0, 3)]);
+        let w = metropolis(&g);
+        // hub degree 3 dominates
+        assert!(w.iter().all(|&x| (x - 0.25).abs() < 1e-15));
+    }
+
+    #[test]
+    fn best_constant_beats_metropolis_on_ring() {
+        let g = ring(10);
+        let w_m = weight_matrix_from_edge_weights(&g, &metropolis(&g));
+        let w_b = weight_matrix_from_edge_weights(&g, &best_constant(&g));
+        let r_m = asymptotic_convergence_factor(&w_m);
+        let r_b = asymptotic_convergence_factor(&w_b);
+        assert!(r_b <= r_m + 1e-12, "best-constant {r_b} vs metropolis {r_m}");
+    }
+
+    #[test]
+    fn optimize_weights_improves_or_matches() {
+        for g in [ring(8), Graph::new(5, vec![(0, 1), (1, 2), (2, 3), (3, 4), (0, 4), (1, 3)])] {
+            let base = metropolis(&g);
+            let r0 = asymptotic_convergence_factor(&weight_matrix_from_edge_weights(&g, &base));
+            let opt = optimize_weights(&g, Some(&base), 150);
+            let r1 = asymptotic_convergence_factor(&weight_matrix_from_edge_weights(&g, &opt));
+            assert!(r1 <= r0 + 1e-9, "optimized {r1} vs base {r0}");
+        }
+    }
+
+    #[test]
+    fn optimized_weights_stay_feasible() {
+        let g = ring(9);
+        let opt = optimize_weights(&g, None, 100);
+        assert!(opt.iter().all(|&x| x >= 0.0));
+        let w = weight_matrix_from_edge_weights(&g, &opt);
+        // Non-negative diagonal (diag(L) ≤ 1).
+        for i in 0..9 {
+            assert!(w[(i, i)] >= -1e-12, "negative self-weight {}", w[(i, i)]);
+        }
+    }
+
+    #[test]
+    fn topology_with_rule_builds() {
+        let t = topology_with_rule(ring(6), "metropolis", "ring6");
+        assert!(t.validate(1e-9).is_ok());
+        assert_eq!(t.num_edges(), 6);
+    }
+}

@@ -1,0 +1,231 @@
+//! Synthetic class-conditional sequence datasets — the CIFAR-10/100 stand-in
+//! (DESIGN.md Substitutions).
+//!
+//! Class `c` emits tokens biased toward the congruence classes
+//! `{c, c+1, c+2} mod vocab` with probability `bias`, uniform otherwise: a
+//! linearly separable-ish but noisy task a small transformer learns in a few
+//! hundred steps, giving the time-to-target-accuracy experiments a real
+//! learning curve. Each node samples the same number of examples per class
+//! (the paper's balanced-shard setup).
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Dataset hyperparameters (aligned with the model config's vocab/seq/classes).
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub vocab: usize,
+    pub seq: usize,
+    pub classes: usize,
+    /// Batch size per node (the artifact's traced batch).
+    pub batch: usize,
+    /// Training examples per class per node.
+    pub train_per_class: usize,
+    /// Held-out examples per class per node.
+    pub eval_per_class: usize,
+    /// Probability a token is class-biased (0.6 ≈ moderately hard).
+    pub bias: f64,
+}
+
+impl DatasetSpec {
+    /// Spec matching a model config, with paper-ish shard sizes.
+    pub fn for_config(cfg: &crate::runtime::manifest::ModelConfig) -> DatasetSpec {
+        DatasetSpec {
+            vocab: cfg.hp("vocab"),
+            seq: cfg.hp("seq"),
+            classes: cfg.hp("classes"),
+            batch: cfg.hp("batch"),
+            train_per_class: 16,
+            eval_per_class: 8,
+            // 0.38 keeps the task learnable but non-trivial (several epochs
+            // to saturation) so the time axis of Table II has real extent.
+            bias: 0.38,
+        }
+    }
+
+    /// Iterations per epoch for one node: examples / batch.
+    pub fn iters_per_epoch(&self) -> usize {
+        (self.classes * self.train_per_class).div_ceil(self.batch)
+    }
+}
+
+/// The dataset factory: hands out per-node shards.
+#[derive(Debug, Clone)]
+pub struct SyntheticDataset {
+    spec: DatasetSpec,
+}
+
+/// One node's materialized shard with a cycling batch cursor.
+#[derive(Debug)]
+pub struct Shard {
+    spec: DatasetSpec,
+    train: Vec<(Vec<i32>, i32)>,
+    eval: Vec<(Vec<i32>, i32)>,
+    cursor: usize,
+    rng: Xoshiro256pp,
+}
+
+impl SyntheticDataset {
+    /// Create a dataset factory.
+    pub fn new(spec: DatasetSpec) -> SyntheticDataset {
+        SyntheticDataset { spec }
+    }
+
+    /// The spec.
+    pub fn spec(&self) -> &DatasetSpec {
+        &self.spec
+    }
+
+    /// Materialize node `node`'s shard (balanced per class, seeded).
+    pub fn shard(&self, node: usize, seed: u64) -> Shard {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ (0xA5A5_0000 + node as u64));
+        let gen_split = |rng: &mut Xoshiro256pp, per_class: usize| {
+            let mut items = Vec::with_capacity(per_class * self.spec.classes);
+            for c in 0..self.spec.classes {
+                for _ in 0..per_class {
+                    items.push((self.sample_sequence(rng, c), c as i32));
+                }
+            }
+            items
+        };
+        let mut train = gen_split(&mut rng, self.spec.train_per_class);
+        let eval = gen_split(&mut rng, self.spec.eval_per_class);
+        rng.shuffle(&mut train);
+        Shard {
+            spec: self.spec.clone(),
+            train,
+            eval,
+            cursor: 0,
+            rng,
+        }
+    }
+
+    fn sample_sequence(&self, rng: &mut Xoshiro256pp, class: usize) -> Vec<i32> {
+        (0..self.spec.seq)
+            .map(|_| {
+                if rng.next_f64() < self.spec.bias {
+                    ((class + rng.index(3)) % self.spec.vocab) as i32
+                } else {
+                    rng.index(self.spec.vocab) as i32
+                }
+            })
+            .collect()
+    }
+}
+
+impl Shard {
+    /// Next training batch (cycles through the shard, reshuffling each pass).
+    pub fn next_train_batch(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let b = self.spec.batch;
+        let mut tokens = Vec::with_capacity(b * self.spec.seq);
+        let mut targets = Vec::with_capacity(b);
+        for _ in 0..b {
+            if self.cursor >= self.train.len() {
+                self.cursor = 0;
+                let mut rng = self.rng.clone();
+                rng.shuffle(&mut self.train);
+                self.rng = rng;
+            }
+            let (seq, cls) = &self.train[self.cursor];
+            tokens.extend_from_slice(seq);
+            targets.push(*cls);
+            self.cursor += 1;
+        }
+        (tokens, targets)
+    }
+
+    /// A fixed-size eval batch sampled (seeded) from the held-out split.
+    pub fn eval_batch(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let b = self.spec.batch;
+        let mut tokens = Vec::with_capacity(b * self.spec.seq);
+        let mut targets = Vec::with_capacity(b);
+        for _ in 0..b {
+            let idx = self.rng.index(self.eval.len());
+            let (seq, cls) = &self.eval[idx];
+            tokens.extend_from_slice(seq);
+            targets.push(*cls);
+        }
+        (tokens, targets)
+    }
+
+    /// Training examples in this shard.
+    pub fn train_len(&self) -> usize {
+        self.train.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec {
+            vocab: 32,
+            seq: 16,
+            classes: 4,
+            batch: 8,
+            train_per_class: 10,
+            eval_per_class: 4,
+            bias: 0.7,
+        }
+    }
+
+    #[test]
+    fn shard_is_balanced_and_seeded() {
+        let ds = SyntheticDataset::new(spec());
+        let shard = ds.shard(0, 9);
+        assert_eq!(shard.train_len(), 40);
+        let mut counts = [0usize; 4];
+        for (_, c) in &shard.train {
+            counts[*c as usize] += 1;
+        }
+        assert_eq!(counts, [10, 10, 10, 10]);
+        // Determinism per (node, seed).
+        let s2 = ds.shard(0, 9);
+        assert_eq!(shard.train, s2.train);
+        let s3 = ds.shard(1, 9);
+        assert_ne!(shard.train, s3.train);
+    }
+
+    #[test]
+    fn batches_have_correct_shape_and_cycle() {
+        let ds = SyntheticDataset::new(spec());
+        let mut shard = ds.shard(2, 3);
+        for _ in 0..12 {
+            // > one epoch (40/8 = 5 batches)
+            let (tokens, targets) = shard.next_train_batch();
+            assert_eq!(tokens.len(), 8 * 16);
+            assert_eq!(targets.len(), 8);
+            assert!(tokens.iter().all(|&t| (0..32).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn class_bias_is_learnable_signal() {
+        // Tokens of class-c sequences should over-represent {c, c+1, c+2} mod v.
+        let ds = SyntheticDataset::new(spec());
+        let mut shard = ds.shard(0, 5);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for _ in 0..10 {
+            let (tokens, targets) = shard.next_train_batch();
+            for (i, &cls) in targets.iter().enumerate() {
+                for &t in &tokens[i * 16..(i + 1) * 16] {
+                    let c = cls as usize;
+                    let m = (t as usize) % 32;
+                    if m == c || m == (c + 1) % 32 || m == (c + 2) % 32 {
+                        hits += 1;
+                    }
+                    total += 1;
+                }
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        // bias 0.7 + uniform leakage 3/32 ≈ 0.73; demand well above chance.
+        assert!(frac > 0.5, "bias fraction {frac}");
+    }
+
+    #[test]
+    fn iters_per_epoch_matches() {
+        assert_eq!(spec().iters_per_epoch(), 5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Decentralized-SGD training (paper §VI-B): synthetic class-conditional
+//! datasets (the CIFAR stand-in — see DESIGN.md Substitutions), the DSGD
+//! driver combining local steps with gossip mixing over a topology, and the
+//! time-to-target-accuracy measurement used by Table II / Figs. 7–10.
+
+pub mod data;
+pub mod dsgd;
+
+pub use data::{DatasetSpec, SyntheticDataset};
+pub use dsgd::{DsgdConfig, DsgdRunSummary, DsgdTrainer, EpochRecord};

@@ -1,0 +1,246 @@
+//! Tiny CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and a generated usage string. Used by the `batopo`
+//! binary, the examples and the bench harness.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// CLI error type.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("invalid value for --{key}: {value:?} ({reason})")]
+    Invalid {
+        key: String,
+        value: String,
+        reason: String,
+    },
+}
+
+/// Declarative option spec used to build usage text and validate flags.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse a raw argv slice (excluding the program name).
+    ///
+    /// Keys that appear multiple times accumulate. A `--key` followed by
+    /// another `--...` token or end-of-args is treated as a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let toks: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    let (k, v) = rest.split_at(eq);
+                    args.opts
+                        .entry(k.to_string())
+                        .or_default()
+                        .push(v[1..].to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.opts
+                        .entry(rest.to_string())
+                        .or_default()
+                        .push(toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// True if `--name` was given as a bare flag or with a truthy value.
+    pub fn flag(&self, name: &str) -> bool {
+        if self.flags.iter().any(|f| f == name) {
+            return true;
+        }
+        matches!(
+            self.get(name),
+            Some(v) if v == "1" || v.eq_ignore_ascii_case("true")
+        )
+    }
+
+    /// Last value for `--name`, if any.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// All values for `--name`.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.opts.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// String option with a default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with a default; errors on unparseable values.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| CliError::Invalid {
+                key: name.to_string(),
+                value: v.to_string(),
+                reason: e.to_string(),
+            }),
+        }
+    }
+
+    /// Typed required option.
+    pub fn parse_req<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self.get(name).ok_or_else(|| CliError::Missing(name.into()))?;
+        v.parse::<T>().map_err(|e| CliError::Invalid {
+            key: name.to_string(),
+            value: v.to_string(),
+            reason: e.to_string(),
+        })
+    }
+
+    /// Comma-separated list of a parseable type, e.g. `--sizes 4,8,16`.
+    pub fn parse_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse::<T>().map_err(|e| CliError::Invalid {
+                        key: name.to_string(),
+                        value: s.to_string(),
+                        reason: e.to_string(),
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(prog: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{prog} — {about}\n\nOptions:\n");
+    for spec in specs {
+        let val = if spec.takes_value { " <value>" } else { "" };
+        let def = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\n      {}{def}\n", spec.name, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = argv("cmd pos2 --n 16 --edges=32 --seed 7 --verbose");
+        assert_eq!(a.positional(), &["cmd".to_string(), "pos2".to_string()]);
+        assert_eq!(a.get("n"), Some("16"));
+        assert_eq!(a.get("edges"), Some("32"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn bare_flag_consumes_next_non_dash_token() {
+        // Greedy-value semantics: `--verbose pos` binds pos as the value.
+        let a = argv("--verbose pos --flag --other 3");
+        assert_eq!(a.get("verbose"), Some("pos"));
+        assert!(a.flag("flag"));
+        assert_eq!(a.get("other"), Some("3"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = argv("--n 16 --rho 1.5 --bad xyz");
+        assert_eq!(a.parse_or("n", 0usize).unwrap(), 16);
+        assert_eq!(a.parse_or("rho", 0.0f64).unwrap(), 1.5);
+        assert_eq!(a.parse_or("missing", 9usize).unwrap(), 9);
+        assert!(a.parse_or("bad", 0usize).is_err());
+        assert!(a.parse_req::<usize>("nope").is_err());
+    }
+
+    #[test]
+    fn lists_and_repeats() {
+        let a = argv("--sizes 4,8,16 --topo ring --topo grid");
+        assert_eq!(a.parse_list("sizes", &[1usize]).unwrap(), vec![4, 8, 16]);
+        assert_eq!(a.get_all("topo"), &["ring".to_string(), "grid".to_string()]);
+        assert_eq!(a.parse_list("missing", &[3usize]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn flag_with_truthy_value() {
+        let a = argv("--verbose true --quiet=1");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "batopo",
+            "topology optimizer",
+            &[OptSpec {
+                name: "nodes",
+                help: "number of nodes",
+                takes_value: true,
+                default: Some("16"),
+            }],
+        );
+        assert!(u.contains("--nodes <value>"));
+        assert!(u.contains("default: 16"));
+    }
+}

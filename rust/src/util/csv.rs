@@ -1,0 +1,99 @@
+//! Small CSV writer used by every experiment driver to emit the series/rows
+//! behind each paper table and figure into `results/*.csv`.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with header enforcement.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+    rows: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) `path`, writing the header row immediately.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            w,
+            cols: header.len(),
+            rows: 0,
+        })
+    }
+
+    /// Write a row of already-formatted fields. Panics if the arity differs
+    /// from the header (catching bugs in experiment drivers early).
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.cols,
+            "csv row arity {} != header arity {}",
+            fields.len(),
+            self.cols
+        );
+        let escaped: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.w, "{}", escaped.join(","))?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Convenience: write a row of display-able values.
+    pub fn rowd(&mut self, fields: &[&dyn std::fmt::Display]) -> std::io::Result<()> {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&v)
+    }
+
+    /// Rows written so far (excluding header).
+    pub fn rows_written(&self) -> usize {
+        self.rows
+    }
+
+    /// Flush buffered output.
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+fn escape(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("batopo_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,y".into()]).unwrap();
+            w.rowd(&[&2.5f64, &"ok"]).unwrap();
+            assert_eq!(w.rows_written(), 2);
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2.5,ok\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row arity")]
+    fn arity_mismatch_panics() {
+        let dir = std::env::temp_dir().join("batopo_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

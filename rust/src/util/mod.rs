@@ -1,0 +1,11 @@
+//! General-purpose substrates built from scratch for the offline image:
+//! PRNG, JSON, CLI parsing, a thread pool, CSV emission and a mini
+//! property-testing framework (the vendored crate set has no `rand`,
+//! `serde`, `clap`, `tokio`, `criterion` or `proptest`).
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

