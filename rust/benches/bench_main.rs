@@ -39,11 +39,16 @@ fn main() {
     } else {
         args.flag("quick") || bare
     };
-    let opts = experiments::ExpOptions {
+    let mut opts = experiments::ExpOptions {
         quick,
         out_dir: args.str_or("out", "results").into(),
         seed: args.parse_or("seed", 42u64).unwrap(),
+        ..Default::default()
     };
+    opts.override_threads(args.parse_or("threads", 0usize).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }));
     println!(
         "batopo bench: experiments {:?} (quick={}, out={})",
         names,

@@ -17,13 +17,32 @@ pub struct AllocationResult {
 }
 
 /// Allocation failure modes.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum AllocationError {
-    #[error("edge budget r={r} cannot be reached: caps admit at most {max} edges")]
-    BudgetUnreachable { r: usize, max: usize },
-    #[error("invalid input: {0}")]
+    /// The caps cannot host the requested edge budget.
+    BudgetUnreachable {
+        /// Requested edge budget.
+        r: usize,
+        /// Maximum edges the caps admit.
+        max: usize,
+    },
+    /// Malformed input (too few nodes, bad lengths, non-positive bandwidth).
     Invalid(String),
 }
+
+impl std::fmt::Display for AllocationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocationError::BudgetUnreachable { r, max } => write!(
+                f,
+                "edge budget r={r} cannot be reached: caps admit at most {max} edges"
+            ),
+            AllocationError::Invalid(msg) => write!(f, "invalid input: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for AllocationError {}
 
 /// Algorithm 1. `bw[i] > 0` is node i's bandwidth, `r` the edge budget,
 /// `caps[i]` the max edges on node i (use `n-1` for "no cap").

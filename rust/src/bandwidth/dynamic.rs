@@ -5,22 +5,30 @@
 //! bandwidth scenarios with a time-varying network topology optimization
 //! solution". This module provides that extension:
 //!
-//! - [`BandwidthTrace`] — a piecewise-constant per-node bandwidth process
-//!   (random-walk drift or scripted phases),
+//! - [`BandwidthTrace`] — a piecewise-constant per-node bandwidth process;
+//!   rich scripted traces come from the
+//!   [`ScenarioBuilder`](crate::bandwidth::scenario_dsl::ScenarioBuilder) DSL,
+//!   with [`BandwidthTrace::random_walk`] / [`BandwidthTrace::degradation`]
+//!   kept as presets over it,
 //! - [`DynamicTopologyController`] — monitors the realized `b_min` of the
 //!   current topology, and re-optimizes (warm-started from the incumbent
 //!   support) when the achievable unit bandwidth improves by more than a
 //!   hysteresis factor,
-//! - [`simulate_dynamic_consensus`] — consensus progress under a drifting
-//!   trace with and without adaptation, quantifying the benefit.
+//! - [`simulate_dynamic_consensus`] / [`simulate_scripted_consensus`] —
+//!   consensus progress under a drifting or scripted trace with and without
+//!   adaptation, quantifying the benefit (plus [`PhaseReport`] checkpoints
+//!   for scripted `report_stats` events).
 
+use crate::bandwidth::scenario_dsl::{CompiledScenario, ScenarioBuilder};
 use crate::bandwidth::scenarios::BandwidthScenario;
 use crate::bandwidth::timing::TimeModel;
 use crate::graph::Topology;
 use crate::optimizer::{BaTopoOptimizer, OptimizeSpec};
 use crate::util::rng::Xoshiro256pp;
 
-/// Piecewise-constant per-node bandwidth process.
+/// Piecewise-constant per-node bandwidth process. Arbitrary scripted traces
+/// are built with [`ScenarioBuilder`]; the constructors here are thin
+/// presets over the same DSL.
 #[derive(Debug, Clone)]
 pub struct BandwidthTrace {
     /// Bandwidths per phase: `phases[k][i]` is node i's bandwidth in phase k.
@@ -32,6 +40,7 @@ pub struct BandwidthTrace {
 impl BandwidthTrace {
     /// Multiplicative random-walk drift: each phase scales every node's
     /// bandwidth by `exp(σ·ξ)`, clamped to `[lo, hi]`.
+    /// Preset for `ScenarioBuilder::new(initial).drift(sigma)`.
     pub fn random_walk(
         initial: Vec<f64>,
         phases: usize,
@@ -41,23 +50,19 @@ impl BandwidthTrace {
         phase_seconds: f64,
         seed: u64,
     ) -> BandwidthTrace {
-        let mut rng = Xoshiro256pp::seed_from_u64(seed);
-        let mut cur = initial;
-        let mut out = vec![cur.clone()];
-        for _ in 1..phases {
-            for b in cur.iter_mut() {
-                *b = (*b * (sigma * rng.next_gaussian()).exp()).clamp(lo, hi);
-            }
-            out.push(cur.clone());
-        }
-        BandwidthTrace {
-            phases: out,
-            phase_seconds,
-        }
+        ScenarioBuilder::new(initial)
+            .phases(phases.max(1))
+            .phase_seconds(phase_seconds)
+            .clamp(lo, hi)
+            .drift(sigma)
+            .compile(seed)
+            .trace
     }
 
-    /// Scripted two-phase degradation: half the nodes drop to `slow_bw` at
-    /// phase `switch` (models e.g. co-tenant interference).
+    /// Scripted two-phase degradation: half the nodes drop to `slow_bw`
+    /// (which must be positive) at phase `switch` (models e.g. co-tenant
+    /// interference).
+    /// Preset for `ScenarioBuilder::new(...).at_phase(switch).set_bandwidth(...)`.
     pub fn degradation(
         n: usize,
         fast_bw: f64,
@@ -66,20 +71,18 @@ impl BandwidthTrace {
         switch: usize,
         phase_seconds: f64,
     ) -> BandwidthTrace {
-        let mut out = Vec::with_capacity(phases);
-        for k in 0..phases {
-            let mut bw = vec![fast_bw; n];
-            if k >= switch {
-                for b in bw.iter_mut().skip(n / 2) {
-                    *b = slow_bw;
-                }
+        // Wide-open clamp: scripted values pass through exactly as given.
+        let mut b = ScenarioBuilder::new(vec![fast_bw; n])
+            .phases(phases.max(1))
+            .phase_seconds(phase_seconds)
+            .clamp(0.0, f64::INFINITY);
+        if switch < phases {
+            b = b.at_phase(switch);
+            for i in n / 2..n {
+                b = b.set_bandwidth(i, slow_bw);
             }
-            out.push(bw);
         }
-        BandwidthTrace {
-            phases: out,
-            phase_seconds,
-        }
+        b.build().trace
     }
 
     /// Number of nodes.
@@ -101,6 +104,7 @@ pub struct DynamicPolicy {
     /// Charge for installing a new topology (seconds of simulated time) —
     /// models the coordination barrier + connection setup.
     pub switch_cost: f64,
+    /// Base RNG seed for the per-phase re-optimizations.
     pub seed: u64,
 }
 
@@ -186,6 +190,36 @@ pub struct DynamicRun {
     pub switches: usize,
 }
 
+/// One `report_stats` checkpoint emitted at the end of its phase.
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    /// Phase index the checkpoint was scheduled at.
+    pub phase: usize,
+    /// Label from [`ScenarioBuilder::report_stats`].
+    pub label: String,
+    /// Simulated seconds elapsed at the end of the phase.
+    pub sim_time: f64,
+    /// log10 of the normalized consensus error so far.
+    pub log_error: f64,
+    /// Gossip rounds executed so far.
+    pub rounds: usize,
+    /// Topology switches installed so far.
+    pub switches: usize,
+    /// Minimum available edge bandwidth of the current topology under the
+    /// phase's bandwidths (GB/s).
+    pub b_min: f64,
+}
+
+/// Outcome of a scripted run: the aggregate [`DynamicRun`] plus every
+/// scheduled [`PhaseReport`].
+#[derive(Debug, Clone)]
+pub struct ScriptedRun {
+    /// Aggregate outcome (same fields as the unscripted simulation).
+    pub outcome: DynamicRun,
+    /// Checkpoints, in phase order.
+    pub reports: Vec<PhaseReport>,
+}
+
 /// Simulate consensus over a drifting bandwidth trace. With `adapt = false`
 /// the initial topology is kept throughout (the static strawman); with
 /// `adapt = true` the controller re-optimizes per phase under the policy.
@@ -195,6 +229,29 @@ pub fn simulate_dynamic_consensus(
     adapt: bool,
     seed: u64,
 ) -> DynamicRun {
+    simulate_core(trace, &[], policy, adapt, seed).outcome
+}
+
+/// Simulate consensus over a [`CompiledScenario`]: like
+/// [`simulate_dynamic_consensus`] over the compiled trace, but additionally
+/// materializes the scenario's `report_stats` checkpoints as
+/// [`PhaseReport`] rows.
+pub fn simulate_scripted_consensus(
+    scenario: &CompiledScenario,
+    policy: DynamicPolicy,
+    adapt: bool,
+    seed: u64,
+) -> ScriptedRun {
+    simulate_core(&scenario.trace, &scenario.reports, policy, adapt, seed)
+}
+
+fn simulate_core(
+    trace: &BandwidthTrace,
+    report_schedule: &[(usize, String)],
+    policy: DynamicPolicy,
+    adapt: bool,
+    seed: u64,
+) -> ScriptedRun {
     let n = trace.num_nodes();
     let tm = TimeModel::default();
     let dim = 32usize;
@@ -206,6 +263,7 @@ pub fn simulate_dynamic_consensus(
 
     let mut controller = DynamicTopologyController::new(trace, policy.clone());
     let mut rounds = 0usize;
+    let mut reports = Vec::with_capacity(report_schedule.len());
     for (k, bw) in trace.phases.iter().enumerate() {
         let sc = BandwidthScenario::NodeLevel { bw: bw.clone() };
         let mut budget = trace.phase_seconds;
@@ -233,11 +291,25 @@ pub fn simulate_dynamic_consensus(
             }
             x = nx;
         }
+        for (_, label) in report_schedule.iter().filter(|(phase, _)| *phase == k) {
+            reports.push(PhaseReport {
+                phase: k,
+                label: label.clone(),
+                sim_time: (k + 1) as f64 * trace.phase_seconds,
+                log_error: (error_of(&x) / e0).max(1e-300).log10(),
+                rounds,
+                switches: controller.switches.len(),
+                b_min: sc.min_edge_bandwidth(&topo),
+            });
+        }
     }
-    DynamicRun {
-        final_log_error: (error_of(&x) / e0).max(1e-300).log10(),
-        rounds,
-        switches: controller.switches.len(),
+    ScriptedRun {
+        outcome: DynamicRun {
+            final_log_error: (error_of(&x) / e0).max(1e-300).log10(),
+            rounds,
+            switches: controller.switches.len(),
+        },
+        reports,
     }
 }
 

@@ -6,8 +6,11 @@
 
 pub mod allocation;
 pub mod dynamic;
+pub mod scenario_dsl;
 pub mod scenarios;
 pub mod timing;
+
+pub use scenario_dsl::{CompiledScenario, ScenarioBuilder, ScenarioEvent, ScheduledEvent};
 
 /// One linear edge-capacity constraint row of `M z {=, ≤} e` over the logical
 /// edge space: the listed edge indices consume this physical resource.

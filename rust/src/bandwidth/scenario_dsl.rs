@@ -1,0 +1,428 @@
+//! Scripted bandwidth scenarios: a fluent [`ScenarioBuilder`] DSL that
+//! compiles phase-indexed events into a [`BandwidthTrace`] plus a report
+//! schedule, replacing the hardcoded random-walk-only traces that the
+//! dynamic-bandwidth extension (`bandwidth::dynamic`, the paper's §VII future
+//! work) started from.
+//!
+//! A scenario is a sequence of **phases** (piecewise-constant bandwidth
+//! intervals). The builder positions a cursor with [`at_phase`] and attaches
+//! events at it:
+//!
+//! ```
+//! use batopo::bandwidth::scenario_dsl::ScenarioBuilder;
+//!
+//! let scenario = ScenarioBuilder::new(vec![9.76; 8])
+//!     .phases(6)
+//!     .phase_seconds(1.5)
+//!     .at_phase(0).drift(0.10)                  // background random walk
+//!     .at_phase(2).link_degrade(&[4, 5, 6, 7], 0.25)
+//!     .at_phase(2).report_stats("after degradation")
+//!     .at_phase(4).node_churn(2, None)          // node 2 leaves
+//!     .at_phase(5).node_churn(2, Some(9.76))    // ...and rejoins
+//!     .at_phase(5).report_stats("after recovery")
+//!     .compile(42);
+//! assert_eq!(scenario.trace.phases.len(), 6);
+//! assert_eq!(scenario.reports.len(), 2);
+//! ```
+//!
+//! The compiled trace feeds [`DynamicTopologyController`] and
+//! [`simulate_scripted_consensus`]; the report schedule turns into
+//! [`PhaseReport`] rows (the `report_stats` checkpoints of the EcNode-style
+//! scenario-analysis workflow).
+//!
+//! [`at_phase`]: ScenarioBuilder::at_phase
+//! [`DynamicTopologyController`]: crate::bandwidth::dynamic::DynamicTopologyController
+//! [`simulate_scripted_consensus`]: crate::bandwidth::dynamic::simulate_scripted_consensus
+//! [`PhaseReport`]: crate::bandwidth::dynamic::PhaseReport
+
+use crate::bandwidth::dynamic::BandwidthTrace;
+use crate::util::rng::Xoshiro256pp;
+
+/// One scripted event. Events fire at the **start** of their phase, after the
+/// background drift step (so an explicit `set_bandwidth` wins over drift
+/// within its phase).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioEvent {
+    /// Set the multiplicative random-walk drift rate from this phase on:
+    /// every later phase transition scales each node's bandwidth by
+    /// `exp(σ·ξ)`, `ξ ~ N(0,1)`. `sigma = 0` turns drift off again.
+    Drift {
+        /// Per-phase log-scale drift rate σ.
+        sigma: f64,
+    },
+    /// Pin one node's bandwidth to an exact value (GB/s).
+    SetBandwidth {
+        /// Node index.
+        node: usize,
+        /// New bandwidth in GB/s.
+        bw: f64,
+    },
+    /// Scale a set of nodes' bandwidths by a factor (e.g. co-tenant
+    /// interference at `factor < 1`, recovery at `factor > 1`).
+    LinkDegrade {
+        /// Affected node indices.
+        nodes: Vec<usize>,
+        /// Multiplicative factor applied to each node's current bandwidth.
+        factor: f64,
+    },
+    /// Node churn: with `rejoin_bw = None` the node leaves (its bandwidth
+    /// collapses to the churn floor, so the optimizer routes around it);
+    /// with `Some(bw)` it rejoins at that bandwidth.
+    NodeChurn {
+        /// Node index.
+        node: usize,
+        /// `None` = leave, `Some(bw)` = rejoin at `bw` GB/s.
+        rejoin_bw: Option<f64>,
+    },
+    /// Emit a labelled stats checkpoint at the end of this phase (consumed by
+    /// [`simulate_scripted_consensus`]).
+    ///
+    /// [`simulate_scripted_consensus`]: crate::bandwidth::dynamic::simulate_scripted_consensus
+    ReportStats {
+        /// Checkpoint label for reports/CSV.
+        label: String,
+    },
+}
+
+/// A [`ScenarioEvent`] bound to its phase index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduledEvent {
+    /// Phase at which the event fires.
+    pub phase: usize,
+    /// The event itself.
+    pub event: ScenarioEvent,
+}
+
+/// Fluent builder for scripted bandwidth scenarios. See the
+/// [module docs](self) for an end-to-end example.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    initial: Vec<f64>,
+    phase_seconds: f64,
+    horizon: Option<usize>,
+    lo: f64,
+    hi: f64,
+    churn_floor: f64,
+    cursor: usize,
+    events: Vec<ScheduledEvent>,
+}
+
+impl ScenarioBuilder {
+    /// Start a scenario from per-node initial bandwidths (GB/s). The cursor
+    /// starts at phase 0; phase duration defaults to 1 simulated second.
+    pub fn new(initial_bw: Vec<f64>) -> ScenarioBuilder {
+        assert!(!initial_bw.is_empty(), "scenario needs at least one node");
+        ScenarioBuilder {
+            initial: initial_bw,
+            phase_seconds: 1.0,
+            horizon: None,
+            lo: 1e-3,
+            hi: f64::INFINITY,
+            churn_floor: 0.05,
+            cursor: 0,
+            events: Vec::new(),
+        }
+    }
+
+    /// Set the simulated duration of every phase (seconds).
+    pub fn phase_seconds(mut self, seconds: f64) -> Self {
+        assert!(seconds > 0.0, "phase duration must be positive");
+        self.phase_seconds = seconds;
+        self
+    }
+
+    /// Set the scenario horizon (total number of phases). Without an explicit
+    /// horizon the trace extends to the last scheduled event; the horizon is
+    /// never shorter than that.
+    pub fn phases(mut self, phases: usize) -> Self {
+        assert!(phases > 0, "scenario needs at least one phase");
+        self.horizon = Some(phases);
+        self
+    }
+
+    /// Clamp all bandwidths (drifted or scripted) to `[lo, hi]` GB/s.
+    /// Defaults to `[1e-3, ∞)`; `lo = 0` is permitted for raw traces, but
+    /// note the time model divides by `b_min`, so a simulated scenario needs
+    /// strictly positive bandwidths.
+    pub fn clamp(mut self, lo: f64, hi: f64) -> Self {
+        assert!(lo >= 0.0 && hi >= lo, "need 0 <= lo <= hi");
+        self.lo = lo;
+        self.hi = hi;
+        self
+    }
+
+    /// Bandwidth assigned to a node that leaves via [`node_churn`]
+    /// (default 0.05 GB/s — effectively unreachable, but nonzero so the
+    /// Algorithm-1 allocation stays well-defined).
+    ///
+    /// [`node_churn`]: ScenarioBuilder::node_churn
+    pub fn churn_floor(mut self, bw: f64) -> Self {
+        assert!(bw > 0.0, "churn floor must be positive");
+        self.churn_floor = bw;
+        self
+    }
+
+    /// Move the cursor: subsequent events attach to phase `k`.
+    pub fn at_phase(mut self, k: usize) -> Self {
+        self.cursor = k;
+        self
+    }
+
+    fn push(mut self, event: ScenarioEvent) -> Self {
+        self.events.push(ScheduledEvent {
+            phase: self.cursor,
+            event,
+        });
+        self
+    }
+
+    /// Enable random-walk drift with rate `sigma` from the cursor phase on
+    /// (see [`ScenarioEvent::Drift`]).
+    pub fn drift(self, sigma: f64) -> Self {
+        assert!(sigma >= 0.0, "drift sigma must be non-negative");
+        self.push(ScenarioEvent::Drift { sigma })
+    }
+
+    fn check_node(&self, node: usize) {
+        assert!(
+            node < self.initial.len(),
+            "node {node} out of range (scenario has {} nodes)",
+            self.initial.len()
+        );
+    }
+
+    /// Pin `node`'s bandwidth to `bw` GB/s at the cursor phase.
+    pub fn set_bandwidth(self, node: usize, bw: f64) -> Self {
+        self.check_node(node);
+        assert!(bw > 0.0, "bandwidth must be positive");
+        self.push(ScenarioEvent::SetBandwidth { node, bw })
+    }
+
+    /// Scale `nodes`' bandwidths by `factor` at the cursor phase.
+    pub fn link_degrade(self, nodes: &[usize], factor: f64) -> Self {
+        for &i in nodes {
+            self.check_node(i);
+        }
+        assert!(factor > 0.0, "degradation factor must be positive");
+        self.push(ScenarioEvent::LinkDegrade {
+            nodes: nodes.to_vec(),
+            factor,
+        })
+    }
+
+    /// Node churn at the cursor phase: `None` = node leaves (bandwidth drops
+    /// to the churn floor), `Some(bw)` = node rejoins at `bw` GB/s.
+    pub fn node_churn(self, node: usize, rejoin_bw: Option<f64>) -> Self {
+        self.check_node(node);
+        if let Some(bw) = rejoin_bw {
+            assert!(bw > 0.0, "rejoin bandwidth must be positive");
+        }
+        self.push(ScenarioEvent::NodeChurn { node, rejoin_bw })
+    }
+
+    /// Schedule a labelled stats checkpoint at the end of the cursor phase.
+    pub fn report_stats(self, label: &str) -> Self {
+        self.push(ScenarioEvent::ReportStats {
+            label: label.to_string(),
+        })
+    }
+
+    /// Events scheduled so far (insertion order).
+    pub fn events(&self) -> &[ScheduledEvent] {
+        &self.events
+    }
+
+    /// Compile with a fixed drift seed. Walks phases in order carrying the
+    /// current bandwidth vector: each transition applies the active drift
+    /// (if any), then the phase's scripted events in schedule order.
+    pub fn compile(self, seed: u64) -> CompiledScenario {
+        let min_horizon = self
+            .events
+            .iter()
+            .map(|e| e.phase + 1)
+            .max()
+            .unwrap_or(1);
+        let horizon = self.horizon.unwrap_or(min_horizon).max(min_horizon);
+
+        let mut events = self.events;
+        events.sort_by_key(|e| e.phase); // stable: same-phase order preserved
+
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut bw = self.initial;
+        let mut sigma = 0.0f64;
+        let mut phases = Vec::with_capacity(horizon);
+        let mut reports = Vec::new();
+        for k in 0..horizon {
+            if k > 0 && sigma > 0.0 {
+                for b in bw.iter_mut() {
+                    *b = (*b * (sigma * rng.next_gaussian()).exp()).clamp(self.lo, self.hi);
+                }
+            }
+            for ev in events.iter().filter(|e| e.phase == k) {
+                match &ev.event {
+                    ScenarioEvent::Drift { sigma: s } => sigma = *s,
+                    ScenarioEvent::SetBandwidth { node, bw: v } => {
+                        bw[*node] = v.clamp(self.lo, self.hi);
+                    }
+                    ScenarioEvent::LinkDegrade { nodes, factor } => {
+                        for &i in nodes {
+                            bw[i] = (bw[i] * factor).clamp(self.lo, self.hi);
+                        }
+                    }
+                    ScenarioEvent::NodeChurn { node, rejoin_bw } => {
+                        bw[*node] = match rejoin_bw {
+                            Some(v) => v.clamp(self.lo, self.hi),
+                            None => self.churn_floor,
+                        };
+                    }
+                    ScenarioEvent::ReportStats { label } => {
+                        reports.push((k, label.clone()));
+                    }
+                }
+            }
+            phases.push(bw.clone());
+        }
+        CompiledScenario {
+            trace: BandwidthTrace {
+                phases,
+                phase_seconds: self.phase_seconds,
+            },
+            reports,
+            events,
+        }
+    }
+
+    /// Compile with the default drift seed 0. Scenarios without [`drift`]
+    /// events are fully deterministic, so the seed is irrelevant for them.
+    ///
+    /// [`drift`]: ScenarioBuilder::drift
+    pub fn build(self) -> CompiledScenario {
+        self.compile(0)
+    }
+}
+
+/// A compiled scenario: the bandwidth trace plus the event/report schedule.
+#[derive(Debug, Clone)]
+pub struct CompiledScenario {
+    /// Piecewise-constant per-node bandwidth trace (one row per phase).
+    pub trace: BandwidthTrace,
+    /// `(phase, label)` checkpoints from [`ScenarioBuilder::report_stats`],
+    /// in phase order.
+    pub reports: Vec<(usize, String)>,
+    /// The full event schedule, sorted by phase (stable).
+    pub events: Vec<ScheduledEvent>,
+}
+
+impl CompiledScenario {
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.trace.num_nodes()
+    }
+
+    /// Number of phases.
+    pub fn num_phases(&self) -> usize {
+        self.trace.phases.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_compile_in_phase_order() {
+        // Events scheduled out of order still apply phase-by-phase.
+        let s = ScenarioBuilder::new(vec![10.0; 4])
+            .at_phase(3)
+            .set_bandwidth(0, 1.0)
+            .at_phase(1)
+            .set_bandwidth(0, 5.0)
+            .build();
+        assert_eq!(s.num_phases(), 4);
+        assert_eq!(s.trace.phases[0][0], 10.0);
+        assert_eq!(s.trace.phases[1][0], 5.0);
+        assert_eq!(s.trace.phases[2][0], 5.0); // persists until next event
+        assert_eq!(s.trace.phases[3][0], 1.0);
+        // Schedule is sorted by phase after compile.
+        assert!(s.events.windows(2).all(|w| w[0].phase <= w[1].phase));
+    }
+
+    #[test]
+    fn horizon_extends_to_last_event() {
+        let s = ScenarioBuilder::new(vec![1.0]).at_phase(7).report_stats("x").build();
+        assert_eq!(s.num_phases(), 8);
+        let s2 = ScenarioBuilder::new(vec![1.0]).phases(3).build();
+        assert_eq!(s2.num_phases(), 3);
+    }
+
+    #[test]
+    fn degrade_churn_and_clamp() {
+        let s = ScenarioBuilder::new(vec![8.0; 4])
+            .clamp(0.5, 10.0)
+            .phases(4)
+            .at_phase(1)
+            .link_degrade(&[2, 3], 0.01) // would be 0.08, clamped to 0.5
+            .at_phase(2)
+            .node_churn(0, None)
+            .at_phase(3)
+            .node_churn(0, Some(6.0))
+            .build();
+        assert_eq!(s.trace.phases[1][2], 0.5);
+        assert_eq!(s.trace.phases[1][3], 0.5);
+        assert_eq!(s.trace.phases[1][0], 8.0);
+        assert_eq!(s.trace.phases[2][0], 0.05); // churn floor, below clamp by design
+        assert_eq!(s.trace.phases[3][0], 6.0);
+    }
+
+    #[test]
+    fn drift_is_seeded_and_clamped() {
+        let a = ScenarioBuilder::new(vec![5.0; 6])
+            .phases(10)
+            .clamp(1.0, 20.0)
+            .drift(0.4)
+            .compile(9);
+        let b = ScenarioBuilder::new(vec![5.0; 6])
+            .phases(10)
+            .clamp(1.0, 20.0)
+            .drift(0.4)
+            .compile(9);
+        assert_eq!(a.trace.phases, b.trace.phases, "same seed, same trace");
+        assert!(a.trace.phases.iter().flatten().all(|&x| (1.0..=20.0).contains(&x)));
+        // Drift actually moves the values.
+        assert_ne!(a.trace.phases[0], a.trace.phases[9]);
+        let c = ScenarioBuilder::new(vec![5.0; 6])
+            .phases(10)
+            .clamp(1.0, 20.0)
+            .drift(0.4)
+            .compile(10);
+        assert_ne!(a.trace.phases, c.trace.phases, "different seed, different trace");
+    }
+
+    #[test]
+    fn drift_can_be_turned_off() {
+        let s = ScenarioBuilder::new(vec![5.0; 2])
+            .phases(6)
+            .drift(0.5)
+            .at_phase(3)
+            .drift(0.0)
+            .compile(4);
+        // After phase 3 the values freeze.
+        assert_eq!(s.trace.phases[4], s.trace.phases[3]);
+        assert_eq!(s.trace.phases[5], s.trace.phases[3]);
+        assert_ne!(s.trace.phases[0], s.trace.phases[3]);
+    }
+
+    #[test]
+    fn reports_are_collected_in_phase_order() {
+        let s = ScenarioBuilder::new(vec![1.0; 2])
+            .at_phase(4)
+            .report_stats("late")
+            .at_phase(1)
+            .report_stats("early")
+            .build();
+        assert_eq!(
+            s.reports,
+            vec![(1, "early".to_string()), (4, "late".to_string())]
+        );
+    }
+}

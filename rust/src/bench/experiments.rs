@@ -10,10 +10,19 @@
 //! | `fig6`   | Fig. 6  (inter-server consensus)|
 //! | `table1` | Table I (scalability)          |
 //! | `fig7`–`fig10`, `table2` | DSGD curves + time-to-accuracy |
+//! | `dynamic`| §VII extension (scripted bandwidth scenarios) |
+//!
+//! Independent (topology × scenario × seed) sweep cells fan out over
+//! [`crate::util::threadpool::parallel_map`]; rows are written back in
+//! deterministic input order, and every run ends with a `run_manifest.json`
+//! artifact index. Drivers are reachable from the CLI via
+//! `batopo reproduce <target…>`.
 //!
 //! Optimized topologies are cached as JSON under `results/topos/` — delete
 //! the cache to force re-optimization.
 
+use crate::bandwidth::dynamic::{simulate_scripted_consensus, DynamicPolicy};
+use crate::bandwidth::scenario_dsl::{CompiledScenario, ScenarioBuilder};
 use crate::bandwidth::scenarios::BandwidthScenario;
 use crate::bandwidth::timing::TimeModel;
 use crate::config;
@@ -25,6 +34,8 @@ use crate::runtime::PjRtEngine;
 use crate::topo::baselines::{self, Baseline};
 use crate::training::{DsgdConfig, DsgdTrainer};
 use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+use crate::util::threadpool::parallel_map;
 use std::path::PathBuf;
 
 /// Options shared by every driver.
@@ -36,6 +47,9 @@ pub struct ExpOptions {
     pub out_dir: PathBuf,
     /// Base seed.
     pub seed: u64,
+    /// Worker threads for the (topology × scenario × seed) sweep cells
+    /// (default: all available CPUs).
+    pub threads: usize,
 }
 
 impl Default for ExpOptions {
@@ -44,6 +58,17 @@ impl Default for ExpOptions {
             quick: false,
             out_dir: PathBuf::from("results"),
             seed: 42,
+            threads: crate::util::threadpool::num_cpus(),
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Override the sweep worker count; `0` (the CLI "unset" sentinel) keeps
+    /// the CPU-count default.
+    pub fn override_threads(&mut self, threads: usize) {
+        if threads > 0 {
+            self.threads = threads;
         }
     }
 }
@@ -133,8 +158,13 @@ fn consensus_figure(
         "{:<26} {:>6} {:>8} {:>8} {:>12} {:>16}",
         "topology", "edges", "r_asym", "b_min", "t_iter(ms)", "t(err<1e-4) ms"
     );
-    for topo in entries {
+    // Every (topology) cell is independent; fan out, then write rows in the
+    // original deterministic order (parallel_map preserves input order).
+    let runs = parallel_map(entries, opts.threads, |topo| {
         let run = run_consensus(None, &topo, scenario, &tm, &cfg).expect("consensus");
+        (topo, run)
+    });
+    for (topo, run) in runs {
         for p in &run.trajectory {
             // Thin the trace: log every point early, then every 8th.
             if p.round > 64 && p.round % 8 != 0 {
@@ -281,36 +311,48 @@ pub fn table1(opts: &ExpOptions) {
         "{:>4} | {:<24} {:>6} {:>8} {:>14}",
         "n", "topology", "edges", "r_asym", "conv time (ms)"
     );
-    for &n in &sizes {
+    // Fan the (n × topology-family) cells out over the pool: each cell builds
+    // (or optimizes, for BA-Topo — the expensive part) its topology and runs
+    // consensus independently; rows are then written back in input order.
+    let cells: Vec<(usize, usize)> = sizes
+        .iter()
+        .flat_map(|&n| (0..3usize).map(move |family| (n, family)))
+        .collect();
+    let rows = parallel_map(cells, opts.threads, |(n, family)| {
         let sc = BandwidthScenario::paper_homogeneous(n);
         let d = (n as f64).log2().ceil() as usize;
-        let r_ba = (n * d / 2).max(n - 1);
-        let m_equi = (d / 2).max(1).min(n / 2);
-        let mut row_entries: Vec<Topology> = vec![
-            baselines::exponential(n),
-            baselines::u_equistatic(n, m_equi, opts.seed),
-        ];
-        row_entries.push(ba_topo_cached(&sc, r_ba, opts, &format!("ba_homog_n{n}_r{r_ba}")));
-        for topo in row_entries {
-            let run = run_consensus(None, &topo, &sc, &tm, &cfg).expect("consensus");
-            let t_conv = run.convergence_time.map(|t| t * 1e3);
-            csv.row(&[
-                n.to_string(),
-                topo.name.clone(),
-                topo.num_edges().to_string(),
-                format!("{:.4}", topo.asymptotic_convergence_factor()),
-                t_conv.map(|t| format!("{t:.1}")).unwrap_or("-".into()),
-            ])
-            .unwrap();
-            println!(
-                "{:>4} | {:<24} {:>6} {:>8.4} {:>14}",
-                n,
-                topo.name,
-                topo.num_edges(),
-                topo.asymptotic_convergence_factor(),
-                t_conv.map(|t| format!("{t:.1}")).unwrap_or("-".into()),
-            );
-        }
+        let topo = match family {
+            0 => baselines::exponential(n),
+            1 => {
+                let m_equi = (d / 2).max(1).min(n / 2);
+                baselines::u_equistatic(n, m_equi, opts.seed)
+            }
+            _ => {
+                let r_ba = (n * d / 2).max(n - 1);
+                ba_topo_cached(&sc, r_ba, opts, &format!("ba_homog_n{n}_r{r_ba}"))
+            }
+        };
+        let run = run_consensus(None, &topo, &sc, &tm, &cfg).expect("consensus");
+        (n, topo, run)
+    });
+    for (n, topo, run) in rows {
+        let t_conv = run.convergence_time.map(|t| t * 1e3);
+        csv.row(&[
+            n.to_string(),
+            topo.name.clone(),
+            topo.num_edges().to_string(),
+            format!("{:.4}", topo.asymptotic_convergence_factor()),
+            t_conv.map(|t| format!("{t:.1}")).unwrap_or("-".into()),
+        ])
+        .unwrap();
+        println!(
+            "{:>4} | {:<24} {:>6} {:>8.4} {:>14}",
+            n,
+            topo.name,
+            topo.num_edges(),
+            topo.asymptotic_convergence_factor(),
+            t_conv.map(|t| format!("{t:.1}")).unwrap_or("-".into()),
+        );
     }
     csv.flush().unwrap();
 }
@@ -455,9 +497,15 @@ fn dsgd_figure(
 
 /// Table II (plus Figs. 7–10 curves): DSGD time-to-target-accuracy across the
 /// four bandwidth scenarios and both synthetic datasets.
-pub fn table2(opts: &ExpOptions) {
-    let engine = PjRtEngine::from_artifacts()
-        .expect("PJRT engine (run `make artifacts` first)");
+/// Returns false when the target had to be skipped (no PJRT engine).
+pub fn table2(opts: &ExpOptions) -> bool {
+    let engine = match PjRtEngine::from_artifacts() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("table2 skipped — PJRT engine unavailable: {e}");
+            return false;
+        }
+    };
     let mut t2 = CsvWriter::create(
         opts.out_dir.join("table2.csv"),
         &[
@@ -496,25 +544,35 @@ pub fn table2(opts: &ExpOptions) {
     }
     t2.flush().unwrap();
     println!("table2.csv written to {}", opts.out_dir.display());
+    true
 }
 
-/// Single DSGD figure entrypoints (tiny dataset).
+/// Fig. 7 — DSGD under homogeneous bandwidth (tiny dataset).
 pub fn fig7(opts: &ExpOptions) {
     single_fig("fig7", opts);
 }
+/// Fig. 8 — DSGD under node-level heterogeneity (tiny dataset).
 pub fn fig8(opts: &ExpOptions) {
     single_fig("fig8", opts);
 }
+/// Fig. 9 — DSGD under intra-server link heterogeneity (tiny dataset).
 pub fn fig9(opts: &ExpOptions) {
     single_fig("fig9", opts);
 }
+/// Fig. 10 — DSGD under inter-server switch-port heterogeneity (tiny dataset).
 pub fn fig10(opts: &ExpOptions) {
     single_fig("fig10", opts);
 }
 
-fn single_fig(fig: &str, opts: &ExpOptions) {
-    let engine = PjRtEngine::from_artifacts()
-        .expect("PJRT engine (run `make artifacts` first)");
+/// Returns false when the figure had to be skipped (no PJRT engine).
+fn single_fig(fig: &str, opts: &ExpOptions) -> bool {
+    let engine = match PjRtEngine::from_artifacts() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{fig} skipped — PJRT engine unavailable: {e}");
+            return false;
+        }
+    };
     let mut t2 = CsvWriter::create(
         opts.out_dir.join(format!("{fig}_rows.csv")),
         &[
@@ -526,13 +584,187 @@ fn single_fig(fig: &str, opts: &ExpOptions) {
     let target = if opts.quick { 0.55 } else { 0.75 };
     dsgd_figure(&engine, fig, "tiny", target, opts, &mut t2);
     t2.flush().unwrap();
+    true
 }
 
-/// Dispatch by name.
-pub fn run(names: &[String], opts: &ExpOptions) {
+// ---------------------------------------------------------------------------
+// Dynamic-bandwidth extension (§VII) — scripted scenario sweep
+// ---------------------------------------------------------------------------
+
+/// The scripted scenario suite: one [`CompiledScenario`] per failure mode the
+/// DSL models (background drift, mid-run link degradation, node churn, and a
+/// compound flash-crowd), each with `report_stats` checkpoints.
+fn dynamic_scenarios(n: usize, opts: &ExpOptions) -> Vec<(String, CompiledScenario)> {
+    let phases = if opts.quick { 3 } else { 6 };
+    let fast = 9.76;
+    let half: Vec<usize> = (n / 2..n).collect();
+    let last = phases - 1;
+    vec![
+        (
+            "drift".into(),
+            ScenarioBuilder::new(vec![fast; n])
+                .phases(phases)
+                .phase_seconds(1.5)
+                .drift(0.25)
+                .at_phase(last)
+                .report_stats("end of drift")
+                .compile(opts.seed),
+        ),
+        (
+            "degrade".into(),
+            ScenarioBuilder::new(vec![fast; n])
+                .phases(phases)
+                .phase_seconds(1.5)
+                .at_phase(1)
+                .link_degrade(&half, 0.1)
+                .report_stats("after degradation")
+                .at_phase(last)
+                .report_stats("end")
+                .compile(opts.seed),
+        ),
+        (
+            "churn".into(),
+            ScenarioBuilder::new(vec![fast; n])
+                .phases(phases)
+                .phase_seconds(1.5)
+                .at_phase(1)
+                .node_churn(n - 1, None)
+                .report_stats("after leave")
+                .at_phase(last)
+                .node_churn(n - 1, Some(fast))
+                .report_stats("after rejoin")
+                .compile(opts.seed),
+        ),
+        (
+            "flash-crowd".into(),
+            ScenarioBuilder::new(vec![fast; n])
+                .phases(phases)
+                .phase_seconds(1.5)
+                .drift(0.05)
+                .at_phase(1)
+                .link_degrade(&(0..n).collect::<Vec<_>>(), 0.5)
+                .report_stats("under load")
+                .at_phase(last)
+                .link_degrade(&(0..n).collect::<Vec<_>>(), 2.0)
+                .report_stats("recovered")
+                .compile(opts.seed),
+        ),
+    ]
+}
+
+/// Dynamic-bandwidth extension: sweep the scripted scenario suite over
+/// (scenario × {static, adaptive} × seed) cells in parallel, writing the
+/// aggregate outcomes to `dynamic.csv` and every `report_stats` checkpoint to
+/// `dynamic_reports.csv`.
+pub fn dynamic(opts: &ExpOptions) {
+    let n = 8usize;
+    let policy = DynamicPolicy {
+        r: 10,
+        hysteresis: 1.05,
+        quick: true,
+        ..Default::default()
+    };
+    let seeds: Vec<u64> = if opts.quick {
+        vec![opts.seed]
+    } else {
+        (0..3).map(|k| opts.seed + k).collect()
+    };
+    let scenarios = dynamic_scenarios(n, opts);
+
+    let mut cells: Vec<(&str, &CompiledScenario, bool, u64)> = Vec::new();
+    for (name, sc) in &scenarios {
+        for adapt in [false, true] {
+            for &seed in &seeds {
+                cells.push((name.as_str(), sc, adapt, seed));
+            }
+        }
+    }
+    let results = parallel_map(cells, opts.threads, |(name, sc, adapt, seed)| {
+        let run = simulate_scripted_consensus(sc, policy.clone(), adapt, seed);
+        (name, sc, adapt, seed, run)
+    });
+
+    let mut csv = CsvWriter::create(
+        opts.out_dir.join("dynamic.csv"),
+        &[
+            "scenario", "n", "phases", "adapt", "seed", "rounds", "switches",
+            "final_log10_error",
+        ],
+    )
+    .expect("csv");
+    let mut reports = CsvWriter::create(
+        opts.out_dir.join("dynamic_reports.csv"),
+        &[
+            "scenario", "adapt", "seed", "phase", "label", "sim_time_s",
+            "log10_error", "rounds", "switches", "b_min_gbps",
+        ],
+    )
+    .expect("csv");
+
+    println!("── dynamic: scripted bandwidth scenarios (n={n}, r={}) ──", policy.r);
+    println!(
+        "{:<14} {:>8} {:>6} {:>8} {:>10} {:>16}",
+        "scenario", "adapt", "seed", "rounds", "switches", "final log10 err"
+    );
+    for (name, sc, adapt, seed, run) in results {
+        csv.row(&[
+            name.to_string(),
+            n.to_string(),
+            sc.num_phases().to_string(),
+            adapt.to_string(),
+            seed.to_string(),
+            run.outcome.rounds.to_string(),
+            run.outcome.switches.to_string(),
+            format!("{:.3}", run.outcome.final_log_error),
+        ])
+        .unwrap();
+        for r in &run.reports {
+            reports
+                .row(&[
+                    name.to_string(),
+                    adapt.to_string(),
+                    seed.to_string(),
+                    r.phase.to_string(),
+                    r.label.clone(),
+                    format!("{:.3}", r.sim_time),
+                    format!("{:.3}", r.log_error),
+                    r.rounds.to_string(),
+                    r.switches.to_string(),
+                    format!("{:.3}", r.b_min),
+                ])
+                .unwrap();
+        }
+        println!(
+            "{:<14} {:>8} {:>6} {:>8} {:>10} {:>16.3}",
+            name, adapt, seed, run.outcome.rounds, run.outcome.switches,
+            run.outcome.final_log_error,
+        );
+    }
+    csv.flush().unwrap();
+    reports.flush().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// Experiment names `run` understands (the `batopo reproduce` targets).
+pub const TARGETS: &[&str] = &[
+    "fig1", "fig2", "fig4", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
+    "table2", "dynamic", "all",
+];
+
+/// Dispatch by name, then write a deterministic `run_manifest.json` listing
+/// the run configuration and every CSV artifact this run produced. Returns
+/// the targets that had to be skipped (PJRT engine unavailable) so callers
+/// can decide whether that is an error — `batopo reproduce` fails on skipped
+/// targets that were requested explicitly, and tolerates them under `all`.
+pub fn run(names: &[String], opts: &ExpOptions) -> Vec<String> {
     std::fs::create_dir_all(&opts.out_dir).expect("results dir");
+    let started = std::time::SystemTime::now();
     let all = names.iter().any(|n| n == "all");
     let want = |n: &str| all || names.iter().any(|x| x == n);
+    let mut skipped: Vec<String> = Vec::new();
     if want("fig1") {
         fig1(opts);
     }
@@ -548,15 +780,72 @@ pub fn run(names: &[String], opts: &ExpOptions) {
     if want("table1") {
         table1(opts);
     }
-    if want("table2") {
-        table2(opts);
-    } else {
-        for f in ["fig7", "fig8", "fig9", "fig10"] {
-            if want(f) {
-                single_fig(f, opts);
-            }
+    if want("dynamic") {
+        dynamic(opts);
+    }
+    if want("table2") && !table2(opts) {
+        skipped.push("table2".to_string());
+    }
+    // `all` relies on table2 for the DSGD curves; an explicitly named figN
+    // always produces its own figN_rows.csv, even alongside table2.
+    for f in ["fig7", "fig8", "fig9", "fig10"] {
+        if names.iter().any(|x| x == f) && !single_fig(f, opts) {
+            skipped.push(f.to_string());
         }
     }
+    write_run_manifest(names, &skipped, opts, started);
+    skipped
+}
+
+/// Emit `run_manifest.json` (via the deterministic `util::json` serializer:
+/// object keys are sorted, files are listed sorted) so reproduction scripts
+/// can locate every artifact of a run programmatically. Only CSVs written
+/// (or rewritten) by this run are listed — stale artifacts from earlier runs
+/// into the same directory are excluded by modification time.
+fn write_run_manifest(
+    names: &[String],
+    skipped: &[String],
+    opts: &ExpOptions,
+    started: std::time::SystemTime,
+) {
+    // 2s slack below the run start guards against coarse (1s) mtime
+    // granularity misclassifying files written right at startup.
+    let cutoff = started
+        .checked_sub(std::time::Duration::from_secs(2))
+        .unwrap_or(started);
+    let mut files: Vec<String> = std::fs::read_dir(&opts.out_dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| {
+                    e.metadata()
+                        .and_then(|m| m.modified())
+                        .map(|t| t >= cutoff)
+                        .unwrap_or(true)
+                })
+                .filter_map(|e| e.file_name().into_string().ok())
+                .filter(|f| f.ends_with(".csv"))
+                .collect()
+        })
+        .unwrap_or_default();
+    files.sort();
+    let manifest = Json::obj(vec![
+        ("schema_version", Json::Num(1.0)),
+        (
+            "targets",
+            Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect()),
+        ),
+        (
+            "skipped",
+            Json::Arr(skipped.iter().map(|n| Json::Str(n.clone())).collect()),
+        ),
+        ("quick", Json::Bool(opts.quick)),
+        // Seed as a string: u64 seeds above 2^53 would lose precision as a
+        // JSON number, and the manifest exists for exact reproduction.
+        ("seed", Json::Str(opts.seed.to_string())),
+        ("artifacts", Json::Arr(files.into_iter().map(Json::Str).collect())),
+    ]);
+    let path = opts.out_dir.join("run_manifest.json");
+    std::fs::write(&path, format!("{manifest}\n")).expect("run manifest");
 }
 
 #[cfg(test)]
@@ -581,6 +870,7 @@ mod tests {
             quick: true,
             out_dir: dir.clone(),
             seed: 3,
+            ..Default::default()
         };
         let sc = BandwidthScenario::paper_homogeneous(8);
         let t1 = ba_topo_cached(&sc, 12, &opts, "test_n8_r12");

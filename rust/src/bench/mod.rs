@@ -12,12 +12,19 @@ use std::time::Instant;
 /// Summary statistics over timed iterations (seconds).
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark label.
     pub name: String,
+    /// Number of timed iterations.
     pub iters: usize,
+    /// Mean iteration time (s).
     pub mean: f64,
+    /// Median iteration time (s).
     pub median: f64,
+    /// Population standard deviation (s).
     pub stddev: f64,
+    /// Fastest iteration (s).
     pub min: f64,
+    /// Slowest iteration (s).
     pub max: f64,
 }
 

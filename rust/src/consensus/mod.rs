@@ -43,7 +43,9 @@ impl Default for ConsensusConfig {
 /// One trajectory point.
 #[derive(Debug, Clone, Copy)]
 pub struct ConsensusPoint {
+    /// Gossip round index (0 = initial state).
     pub round: usize,
+    /// Simulated seconds elapsed (Eq. 34 per-round time).
     pub sim_time: f64,
     /// ‖x_k − x̄‖₂ over the stacked state, normalized by the initial error.
     pub error: f64,
@@ -52,7 +54,9 @@ pub struct ConsensusPoint {
 /// Full experiment output.
 #[derive(Debug, Clone)]
 pub struct ConsensusRun {
+    /// Topology name the run was executed on.
     pub topology: String,
+    /// Error trajectory, one point per round (round 0 included).
     pub trajectory: Vec<ConsensusPoint>,
     /// Simulated seconds per round (Eq. 34).
     pub iter_time: f64,

@@ -15,9 +15,13 @@ struct Worker {
 /// Statistics a worker accumulates locally and returns at shutdown.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerStats {
+    /// Node index this worker simulates.
     pub node: usize,
+    /// Training batches executed.
     pub batches_produced: usize,
+    /// Loss values reported to the coordinator.
     pub losses_recorded: usize,
+    /// Most recent training loss.
     pub last_loss: f64,
 }
 

@@ -45,6 +45,7 @@ pub struct EdgeSpace {
 }
 
 impl EdgeSpace {
+    /// Iterate `(edge_index, (i, j))` over all n(n−1)/2 node pairs.
     pub fn new(n: usize) -> EdgeSpace {
         EdgeSpace { n, l: 0 }
     }

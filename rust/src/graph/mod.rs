@@ -54,10 +54,12 @@ impl Graph {
         Graph { n, edges }
     }
 
+    /// Number of nodes.
     pub fn num_nodes(&self) -> usize {
         self.n
     }
 
+    /// Number of edges.
     pub fn num_edges(&self) -> usize {
         self.edges.len()
     }

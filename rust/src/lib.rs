@@ -16,6 +16,8 @@
 //! Python never runs at request time: after `make artifacts` the binary is
 //! self-contained.
 
+#![warn(missing_docs)]
+
 pub mod bandwidth;
 pub mod bench;
 pub mod config;
@@ -30,7 +32,32 @@ pub mod training;
 pub mod util;
 
 /// Convenience re-exports of the most common public types.
+///
+/// The 30-second tour — build a baseline topology, run a short consensus
+/// experiment under the paper's homogeneous bandwidth model, and check that
+/// the error contracts:
+///
+/// ```
+/// use batopo::prelude::*;
+///
+/// // A 8-node ring with Metropolis weights…
+/// let topo: Topology = Baseline::Ring.build(8, 42);
+/// assert_eq!(topo.num_nodes(), 8);
+///
+/// // …gossiping under 9.76 GB/s per-node bandwidth (Eq. 34 time model).
+/// let scenario = BandwidthScenario::paper_homogeneous(8);
+/// let cfg = ConsensusConfig { max_rounds: 200, ..Default::default() };
+/// let run = run_consensus(None, &topo, &scenario, &TimeModel::default(), &cfg).unwrap();
+///
+/// assert!(run.trajectory.last().unwrap().error < run.trajectory[0].error);
+/// assert!(run.iter_time > 0.0);
+/// ```
 pub mod prelude {
+    pub use crate::bandwidth::scenario_dsl::{CompiledScenario, ScenarioBuilder};
+    pub use crate::bandwidth::scenarios::BandwidthScenario;
+    pub use crate::bandwidth::timing::TimeModel;
+    pub use crate::consensus::{run_consensus, ConsensusConfig};
     pub use crate::graph::{Graph, Topology};
+    pub use crate::optimizer::{BaTopoOptimizer, OptimizeSpec};
     pub use crate::topo::baselines::Baseline;
 }

@@ -84,10 +84,12 @@ impl CscMatrix {
         CscMatrix::from_triplets(n, n, (0..n).map(|i| (i, i, 1.0)))
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }

@@ -19,7 +19,9 @@ use super::DenseMatrix;
 /// `vectors[(i, k)]`) is the unit eigenvector for `values[k]`.
 #[derive(Debug, Clone)]
 pub struct SymEigen {
+    /// Eigenvalues, sorted descending.
     pub values: Vec<f64>,
+    /// Unit eigenvectors as columns, aligned with `values`.
     pub vectors: DenseMatrix,
 }
 

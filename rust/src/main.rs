@@ -5,6 +5,7 @@
 //! batopo consensus --topology ring|...|<topo.json> --n 16 [--scenario …]
 //! batopo allocate  --bw 9.76,9.76,3.25,3.25 --r 4
 //! batopo train     --topology torus --n 16 --model tiny --epochs 10
+//! batopo reproduce fig1 table1 [--quick] [--out results/] [--threads 8]
 //! batopo info
 //! ```
 
@@ -29,16 +30,19 @@ fn main() {
         "consensus" => cmd_consensus(&args),
         "allocate" => cmd_allocate(&args),
         "train" => cmd_train(&args),
+        "reproduce" => cmd_reproduce(&args),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: batopo <optimize|consensus|allocate|train|info> [options]\n\
+                "usage: batopo <optimize|consensus|allocate|train|reproduce|info> [options]\n\
                  \n\
                  optimize  --n N --r R [--scenario S] [--seed X] [--quick] [--out file.json]\n\
                  consensus --topology NAME|file.json --n N [--scenario S] [--eps 1e-4]\n\
                  allocate  --bw b1,b2,... --r R [--caps c1,c2,...]\n\
                  train     --topology NAME|file.json --n N [--scenario S] [--model tiny]\n\
                  \u{20}          [--epochs E] [--target 0.75]\n\
+                 reproduce <fig1|fig2|fig4|fig6|fig7..fig10|table1|table2|dynamic|all>...\n\
+                 \u{20}          [--quick] [--out results/] [--seed X] [--threads T]\n\
                  info\n\
                  \n\
                  scenarios: homogeneous (any n) | node-level (even n) |\n\
@@ -152,6 +156,70 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     }
     if let Some(t) = out.time_to_target {
         println!("  target reached at simulated {t:.2} s");
+    }
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<(), String> {
+    let mut targets: Vec<String> = args.positional()[1..].to_vec();
+    let mut quick = args.flag("quick");
+    // The tiny CLI parser greedily binds the next token to a bare flag, so
+    // `reproduce table1 --quick table2` captures "table2" as --quick's value.
+    // Reclaim known target names so flag position never silently drops a
+    // target (and still counts as quick=true).
+    if let Some(v) = args.get("quick") {
+        if experiments::TARGETS.contains(&v) {
+            targets.push(v.to_string());
+            quick = true;
+        }
+    }
+    if targets.is_empty() {
+        return Err(format!(
+            "reproduce needs at least one target: {}",
+            experiments::TARGETS.join("|")
+        ));
+    }
+    for t in &targets {
+        if !experiments::TARGETS.contains(&t.as_str()) {
+            return Err(format!(
+                "unknown target {t} (expected one of {})",
+                experiments::TARGETS.join("|")
+            ));
+        }
+    }
+    let mut opts = experiments::ExpOptions {
+        quick,
+        out_dir: args.str_or("out", "results").into(),
+        seed: args.parse_or("seed", 42u64).map_err(|e| e.to_string())?,
+        ..Default::default()
+    };
+    opts.override_threads(args.parse_or("threads", 0usize).map_err(|e| e.to_string())?);
+    println!(
+        "reproduce {:?} (quick={}, seed={}, threads={}) → {}",
+        targets,
+        opts.quick,
+        opts.seed,
+        opts.threads,
+        opts.out_dir.display()
+    );
+    let t0 = std::time::Instant::now();
+    let skipped = experiments::run(&targets, &opts);
+    println!(
+        "reproduce done in {:.1}s — artifacts in {} (see run_manifest.json)",
+        t0.elapsed().as_secs_f64(),
+        opts.out_dir.display()
+    );
+    // A skipped target the user asked for by name is a failure; skips under
+    // a blanket `all` are tolerated (and recorded in the manifest).
+    let explicit: Vec<&String> = skipped
+        .iter()
+        .filter(|s| targets.iter().any(|t| t == *s))
+        .collect();
+    if !explicit.is_empty() {
+        return Err(format!(
+            "requested target(s) skipped — PJRT engine unavailable: {}",
+            explicit.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
+        ));
     }
     Ok(())
 }

@@ -25,7 +25,9 @@ use crate::topo::weights::metropolis;
 
 /// Raw ADMM solution (projected `Y` iterate + relaxed `X` iterate).
 pub struct AdmmSolution {
+    /// Final relaxed `X` iterate (stacked primal vector).
     pub x: Vec<f64>,
+    /// Final projected `Y` iterate.
     pub y: Vec<f64>,
     /// Snapshot of the best projected iterate seen (by estimated `r_asym` of
     /// its top-r support) — the cardinality projection makes the splitting
@@ -34,9 +36,13 @@ pub struct AdmmSolution {
     pub best_y: Vec<f64>,
     /// Estimated `r_asym` of `best_y`'s support with its relaxed weights.
     pub best_r_est: f64,
+    /// ADMM iterations performed.
     pub iterations: usize,
+    /// Final summed squared primal residual.
     pub residual: f64,
+    /// Whether the residual criterion was met before the iteration cap.
     pub converged: bool,
+    /// Total Bi-CGSTAB iterations across all `X`-steps.
     pub krylov_iterations: usize,
 }
 

@@ -102,12 +102,29 @@ pub struct OptimizeReport {
 }
 
 /// Optimizer errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum OptimizeError {
-    #[error("allocation: {0}")]
-    Allocation(#[from] crate::bandwidth::allocation::AllocationError),
-    #[error("infeasible: {0}")]
+    /// Algorithm-1 edge-capacity allocation failed.
+    Allocation(crate::bandwidth::allocation::AllocationError),
+    /// The constraint system admits no connected topology at this budget.
     Infeasible(String),
+}
+
+impl std::fmt::Display for OptimizeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OptimizeError::Allocation(e) => write!(f, "allocation: {e}"),
+            OptimizeError::Infeasible(msg) => write!(f, "infeasible: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for OptimizeError {}
+
+impl From<crate::bandwidth::allocation::AllocationError> for OptimizeError {
+    fn from(e: crate::bandwidth::allocation::AllocationError) -> Self {
+        OptimizeError::Allocation(e)
+    }
 }
 
 /// The BA-Topo optimizer (paper Algorithm 2 + extraction).

@@ -31,18 +31,28 @@ use crate::linalg::CscMatrix;
 /// Segment offsets into the stacked primal vector `X`.
 #[derive(Debug, Clone)]
 pub struct VarLayout {
+    /// Number of nodes.
     pub n: usize,
     /// Number of logical edges m = n(n−1)/2.
     pub m: usize,
-    /// Offsets.
+    /// Offset of the edge-weight segment `g` (length m).
     pub g: usize,
+    /// Offset of the λ̃ scalar.
     pub lam: usize,
+    /// Offset of the PSD slack matrix `S` (length n²).
     pub s: usize,
+    /// Offset of the per-node segment `y` (length n).
     pub y: usize,
+    /// Offset of the NSD slack matrix `T` (length n²).
     pub t: usize,
-    /// Heterogeneous segments (usize::MAX when absent).
+    /// Heterogeneous only: offset of the binary edge-selection segment `z`
+    /// (length m; `usize::MAX` when absent).
     pub z: usize,
+    /// Heterogeneous only: offset of the coupling segment ν (length m;
+    /// `usize::MAX` when absent).
     pub nu: usize,
+    /// Heterogeneous only: offset of the inequality slacks `u`
+    /// (`usize::MAX` when absent).
     pub u: usize,
     /// Number of inequality slack variables.
     pub q_ineq: usize,
@@ -100,6 +110,7 @@ impl VarLayout {
 /// The assembled constraint system `A X = b` plus the objective vector `c`
 /// (c has a single −1 at the λ̃ slot: maximize λ̃).
 pub struct AdmmOperators {
+    /// Variable layout of the stacked primal vector.
     pub layout: VarLayout,
     /// Constraint matrix `A` (rows × total).
     pub a: CscMatrix,

@@ -5,6 +5,7 @@
 //! `execute` on the cached executable.
 
 use super::manifest::{ArtifactEntry, Manifest, TensorSpec};
+use super::xla_stub as xla;
 use super::RuntimeError;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -13,7 +14,9 @@ use std::rc::Rc;
 /// Host-side tensor value fed to / read from an executable.
 #[derive(Debug, Clone)]
 pub enum HostTensor {
+    /// 32-bit float tensor (row-major).
     F32(Vec<f32>),
+    /// 32-bit integer tensor (row-major).
     I32(Vec<i32>),
 }
 

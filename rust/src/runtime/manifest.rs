@@ -10,7 +10,9 @@ use std::path::{Path, PathBuf};
 /// Tensor spec: shape + dtype string (e.g. "float32", "int32").
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Tensor shape (empty = scalar).
     pub shape: Vec<usize>,
+    /// Dtype string ("float32" / "int32").
     pub dtype: String,
 }
 
@@ -24,13 +26,19 @@ impl TensorSpec {
 /// One artifact entry.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Artifact name (e.g. `mix_native_n16_d512`).
     pub name: String,
+    /// HLO text file path (absolute, resolved against the manifest dir).
     pub file: PathBuf,
+    /// Artifact kind ("mix" / "train" / "eval").
     pub kind: String,
+    /// Input tensor specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs (the artifact returns one tuple).
     pub outputs: Vec<TensorSpec>,
-    /// `mix` artifacts: padded node count / feature chunk.
+    /// `mix` artifacts: padded node count.
     pub n: Option<usize>,
+    /// `mix` artifacts: feature chunk width.
     pub d: Option<usize>,
     /// Variant tag ("pallas" / "native") where applicable.
     pub variant: Option<String>,
@@ -41,15 +49,20 @@ pub struct ArtifactEntry {
 /// Parameter spec of a model config, in canonical flat order.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Parameter name (e.g. `blocks.0.attn.wq`).
     pub name: String,
+    /// Parameter tensor shape.
     pub shape: Vec<usize>,
 }
 
 /// One model config block.
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
+    /// Config name ("tiny", "tiny100", …).
     pub name: String,
+    /// Parameter specs in canonical flat order.
     pub params: Vec<ParamSpec>,
+    /// Total scalar parameter count.
     pub num_params: usize,
     /// Raw hyperparameters (vocab, d_model, seq, classes, batch, …).
     pub hyper: BTreeMap<String, f64>,
@@ -69,11 +82,15 @@ impl ModelConfig {
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Artifact entries by name.
     pub artifacts: BTreeMap<String, ArtifactEntry>,
+    /// Model configs by name.
     pub configs: BTreeMap<String, ModelConfig>,
-    /// Baked optimizer constants (lr, beta).
+    /// Baked optimizer learning rate.
     pub lr: f64,
+    /// Baked optimizer momentum coefficient.
     pub beta: f64,
 }
 

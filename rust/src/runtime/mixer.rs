@@ -5,6 +5,7 @@
 //! perf-baseline comparator.
 
 use super::engine::PjRtEngine;
+use super::xla_stub as xla;
 use super::RuntimeError;
 use crate::graph::Topology;
 use crate::linalg::DenseMatrix;

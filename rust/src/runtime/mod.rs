@@ -15,6 +15,11 @@ pub mod engine;
 pub mod manifest;
 pub mod mixer;
 pub mod trainer;
+pub mod xla_stub;
+
+// The offline crate set has no `xla` dependency; the in-tree stub mirrors its
+// API (see `xla_stub` docs for how to swap the real bindings back in).
+use xla_stub as xla;
 
 pub use engine::PjRtEngine;
 pub use manifest::Manifest;
@@ -45,19 +50,35 @@ pub fn find_artifacts_dir() -> Option<PathBuf> {
 }
 
 /// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("artifacts directory not found (run `make artifacts`)")]
+    /// No `artifacts/manifest.json` found (run `make artifacts`).
     ArtifactsMissing,
-    #[error("artifact {0} not in manifest")]
+    /// The named artifact is not in the manifest.
     UnknownArtifact(String),
-    #[error("manifest: {0}")]
+    /// Manifest parse / validation failure.
     Manifest(String),
-    #[error("xla: {0}")]
+    /// Error surfaced by the XLA/PJRT layer.
     Xla(String),
-    #[error("shape mismatch: {0}")]
+    /// Host tensor arity/shape/dtype mismatch against the manifest.
     Shape(String),
 }
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::ArtifactsMissing => {
+                write!(f, "artifacts directory not found (run `make artifacts`)")
+            }
+            RuntimeError::UnknownArtifact(a) => write!(f, "artifact {a} not in manifest"),
+            RuntimeError::Manifest(m) => write!(f, "manifest: {m}"),
+            RuntimeError::Xla(m) => write!(f, "xla: {m}"),
+            RuntimeError::Shape(m) => write!(f, "shape mismatch: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
 
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {

@@ -47,16 +47,19 @@ impl<'e> ModelRunner<'e> {
         &self.cfg
     }
 
-    /// Batch size / sequence length / class count the artifacts were traced at.
+    /// Batch size the artifacts were traced at.
     pub fn batch(&self) -> usize {
         self.cfg.hp("batch")
     }
+    /// Sequence length the artifacts were traced at.
     pub fn seq(&self) -> usize {
         self.cfg.hp("seq")
     }
+    /// Class count the artifacts were traced at.
     pub fn classes(&self) -> usize {
         self.cfg.hp("classes")
     }
+    /// Vocabulary size the artifacts were traced at.
     pub fn vocab(&self) -> usize {
         self.cfg.hp("vocab")
     }

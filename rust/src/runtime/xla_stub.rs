@@ -1,0 +1,216 @@
+//! Minimal in-tree stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The offline build environment ships no PJRT runtime, so this shim keeps
+//! [`engine`](super::engine) / [`mixer`](super::mixer) compiling against the
+//! exact API surface they use, while reporting "PJRT unavailable" from every
+//! entry point that would need the real runtime. Everything that runs with
+//! `engine: None` (the host-fallback mixer, all consensus experiments, the
+//! optimizer, `batopo reproduce` consensus targets) is unaffected; PJRT-backed
+//! paths (`batopo train`, `table2`) fail with a clear [`Error`] instead.
+//!
+//! To re-enable real PJRT execution, add the `xla` crate to `Cargo.toml`,
+//! delete this module and replace the `use super::xla_stub as xla;` aliases in
+//! `runtime/{mod,engine,mixer}.rs` with `use xla;`. The stub intentionally
+//! mirrors the signatures of `xla-rs` (`PjRtClient::cpu`, `compile`,
+//! `execute`, `Literal::vec1/reshape/to_vec/to_tuple`) so the swap is a
+//! two-line diff per file.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (message-only in the stub).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: PJRT runtime unavailable (offline build uses the in-tree xla stub; \
+         see runtime::xla_stub docs)"
+    )))
+}
+
+/// Element types a [`Literal`] can hold (f32 / i32 in this codebase).
+pub trait NativeType: Copy {
+    /// Wrap a host slice as literal storage.
+    fn store(v: &[Self]) -> Data;
+    /// Read literal storage back as a host vector.
+    fn read(d: &Data) -> Result<Vec<Self>, Error>;
+}
+
+/// Backing storage of a stub literal.
+#[derive(Debug, Clone)]
+pub enum Data {
+    /// 32-bit floats.
+    F32(Vec<f32>),
+    /// 32-bit signed integers.
+    I32(Vec<i32>),
+}
+
+impl NativeType for f32 {
+    fn store(v: &[Self]) -> Data {
+        Data::F32(v.to_vec())
+    }
+    fn read(d: &Data) -> Result<Vec<Self>, Error> {
+        match d {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(Error("literal holds i32, asked for f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn store(v: &[Self]) -> Data {
+        Data::I32(v.to_vec())
+    }
+    fn read(d: &Data) -> Result<Vec<Self>, Error> {
+        match d {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error("literal holds f32, asked for i32".into())),
+        }
+    }
+}
+
+/// Host-side tensor literal (stub: data + dims, no device transfer).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::store(v),
+        }
+    }
+
+    /// Reshape without changing storage (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let numel: i64 = dims.iter().product();
+        let have = match &self.data {
+            Data::F32(v) => v.len() as i64,
+            Data::I32(v) => v.len() as i64,
+        };
+        // Scalar reshape (`&[]`) has product 1 and is only valid for 1 element.
+        if numel != have {
+            return Err(Error(format!("reshape {dims:?} vs {have} elements")));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy the literal out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::read(&self.data)
+    }
+
+    /// Destructure a tuple literal (unreachable in the stub: executables
+    /// never produce outputs).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Destructure a 1-tuple literal (unreachable in the stub).
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        unavailable("Literal::to_tuple1")
+    }
+}
+
+/// Parsed HLO module (stub: the text is read and discarded).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Load HLO text from a file. Reading succeeds so manifest validation
+    /// stays meaningful; the failure is deferred to compile time.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        std::fs::read_to_string(path).map_err(|e| Error(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto)
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub, so no
+/// instance can be constructed — every downstream method is unreachable but
+/// present for signature parity.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client — always `Err` in the stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation — unreachable (no client exists).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle (stub; never constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments — unreachable (no executable exists).
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub; never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer back to a host literal — unreachable.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_roundtrip_on_host() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}

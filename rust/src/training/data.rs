@@ -13,8 +13,11 @@ use crate::util::rng::Xoshiro256pp;
 /// Dataset hyperparameters (aligned with the model config's vocab/seq/classes).
 #[derive(Debug, Clone)]
 pub struct DatasetSpec {
+    /// Token vocabulary size.
     pub vocab: usize,
+    /// Sequence length.
     pub seq: usize,
+    /// Number of label classes.
     pub classes: usize,
     /// Batch size per node (the artifact's traced batch).
     pub batch: usize,

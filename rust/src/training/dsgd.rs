@@ -59,23 +59,28 @@ impl DsgdConfig {
 /// Per-epoch record (one row of the Fig. 7–10 curves).
 #[derive(Debug, Clone)]
 pub struct EpochRecord {
+    /// Epoch index (1-based).
     pub epoch: usize,
     /// Simulated time at the end of the epoch (seconds).
     pub sim_time: f64,
     /// Mean train loss across nodes over the epoch.
     pub train_loss: f64,
-    /// Mean eval loss / accuracy across nodes.
+    /// Mean eval loss across nodes.
     pub eval_loss: f64,
+    /// Mean eval accuracy across nodes.
     pub eval_acc: f64,
 }
 
 /// Run result.
 #[derive(Debug, Clone)]
 pub struct DsgdRunSummary {
+    /// Topology name the run was executed on.
     pub topology: String,
+    /// Per-epoch records (the Fig. 7–10 curve points).
     pub records: Vec<EpochRecord>,
     /// First simulated time at which mean accuracy hit the target.
     pub time_to_target: Option<f64>,
+    /// Mean eval accuracy after the final epoch.
     pub final_accuracy: f64,
     /// Simulated seconds per training iteration (Eq. 35 inner term).
     pub iter_time: f64,

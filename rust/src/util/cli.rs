@@ -15,24 +15,44 @@ pub struct Args {
 }
 
 /// CLI error type.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required option --{0}")]
+    /// A required `--option` was not supplied.
     Missing(String),
-    #[error("invalid value for --{key}: {value:?} ({reason})")]
+    /// An option value failed to parse.
     Invalid {
+        /// Option name (without the `--`).
         key: String,
+        /// The raw value supplied.
         value: String,
+        /// Why it failed to parse.
         reason: String,
     },
 }
 
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(name) => write!(f, "missing required option --{name}"),
+            CliError::Invalid { key, value, reason } => {
+                write!(f, "invalid value for --{key}: {value:?} ({reason})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
 /// Declarative option spec used to build usage text and validate flags.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Option name (without the `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Whether the option takes a value (vs a bare flag).
     pub takes_value: bool,
+    /// Rendered default, if any.
     pub default: Option<&'static str>,
 }
 

@@ -10,21 +10,36 @@ use std::fmt;
 /// A parsed JSON value. Objects use `BTreeMap` for deterministic ordering.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as `f64`).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (key-sorted).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub offset: usize,
+    /// Human-readable description.
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     /// Parse a JSON document from a string.

@@ -54,8 +54,7 @@ impl ThreadPool {
 
     /// Pool sized to the number of available CPUs (at least 1).
     pub fn with_num_cpus() -> ThreadPool {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ThreadPool::new(n)
+        ThreadPool::new(num_cpus())
     }
 
     /// Submit a job.
@@ -81,6 +80,12 @@ impl Drop for ThreadPool {
             let _ = w.join();
         }
     }
+}
+
+/// Number of available CPUs (at least 1) — the default worker count for
+/// [`ThreadPool::with_num_cpus`] and the experiment sweep runner.
+pub fn num_cpus() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// Apply `f` to each item of `items` across `threads` OS threads and return

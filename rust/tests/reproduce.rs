@@ -1,0 +1,161 @@
+//! Integration tests for the scenario DSL + the `batopo reproduce` harness:
+//! the ScenarioBuilder compiles scripted events into well-formed traces, the
+//! compiled traces round-trip through the dynamic consensus simulation, and
+//! the `table1 --quick` reproduction target writes non-empty CSV artifacts
+//! through the parallel sweep runner.
+
+use batopo::bandwidth::dynamic::{
+    simulate_dynamic_consensus, simulate_scripted_consensus, BandwidthTrace, DynamicPolicy,
+};
+use batopo::bandwidth::scenario_dsl::{ScenarioBuilder, ScenarioEvent};
+use batopo::bench::experiments::{self, ExpOptions};
+
+// ---------------------------------------------------------------------------
+// ScenarioBuilder DSL
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_compiles_events_in_phase_order() {
+    // Schedule out of order; the compiled schedule and trace must be
+    // phase-ordered and apply-then-persist.
+    let s = ScenarioBuilder::new(vec![9.76; 4])
+        .phases(5)
+        .at_phase(3)
+        .link_degrade(&[0], 0.5)
+        .at_phase(1)
+        .set_bandwidth(0, 4.0)
+        .at_phase(2)
+        .report_stats("mid")
+        .build();
+    assert_eq!(s.num_phases(), 5);
+    assert!(s.events.windows(2).all(|w| w[0].phase <= w[1].phase));
+    assert_eq!(s.trace.phases[0][0], 9.76);
+    assert_eq!(s.trace.phases[1][0], 4.0);
+    assert_eq!(s.trace.phases[2][0], 4.0);
+    assert_eq!(s.trace.phases[3][0], 2.0); // 4.0 × 0.5
+    assert_eq!(s.trace.phases[4][0], 2.0);
+    assert_eq!(s.reports, vec![(2, "mid".to_string())]);
+    assert!(matches!(
+        s.events.last().unwrap().event,
+        ScenarioEvent::LinkDegrade { .. }
+    ));
+}
+
+#[test]
+fn builder_subsumes_the_legacy_trace_presets() {
+    // The legacy constructors are now thin wrappers over the DSL; the DSL
+    // spelled out by hand must produce bit-identical traces.
+    let legacy = BandwidthTrace::random_walk(vec![9.76; 6], 8, 0.2, 1.0, 20.0, 1.0, 7);
+    let dsl = ScenarioBuilder::new(vec![9.76; 6])
+        .phases(8)
+        .clamp(1.0, 20.0)
+        .drift(0.2)
+        .compile(7)
+        .trace;
+    assert_eq!(legacy.phases, dsl.phases);
+
+    let legacy = BandwidthTrace::degradation(8, 9.76, 0.8, 5, 2, 1.5);
+    let mut b = ScenarioBuilder::new(vec![9.76; 8]).phases(5).phase_seconds(1.5).at_phase(2);
+    for i in 4..8 {
+        b = b.set_bandwidth(i, 0.8);
+    }
+    let dsl = b.build().trace;
+    assert_eq!(legacy.phases, dsl.phases);
+    assert_eq!(legacy.phase_seconds, dsl.phase_seconds);
+}
+
+#[test]
+fn builder_churn_floor_keeps_bandwidths_positive() {
+    // A departed node must never hit bandwidth 0 (the time model divides by
+    // b_min), and rejoin must restore the scripted value.
+    let s = ScenarioBuilder::new(vec![9.76; 4])
+        .phases(4)
+        .at_phase(1)
+        .node_churn(3, None)
+        .at_phase(3)
+        .node_churn(3, Some(9.76))
+        .build();
+    assert!(s.trace.phases.iter().flatten().all(|&b| b > 0.0));
+    assert!(s.trace.phases[1][3] < 0.1);
+    assert_eq!(s.trace.phases[3][3], 9.76);
+}
+
+// ---------------------------------------------------------------------------
+// Scripted traces through the dynamic simulation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scripted_trace_roundtrips_through_dynamic_consensus() {
+    let scenario = ScenarioBuilder::new(vec![9.76; 8])
+        .phases(3)
+        .phase_seconds(1.0)
+        .at_phase(1)
+        .link_degrade(&[4, 5, 6, 7], 0.3)
+        .report_stats("after degradation")
+        .at_phase(2)
+        .report_stats("end")
+        .build();
+    let policy = DynamicPolicy {
+        r: 10,
+        quick: true,
+        ..Default::default()
+    };
+
+    // The plain trace entry point consumes the compiled trace...
+    let run = simulate_dynamic_consensus(&scenario.trace, policy.clone(), false, 5);
+    assert!(run.rounds > 0, "no gossip rounds executed");
+    assert!(run.final_log_error < 0.0, "consensus error did not contract");
+
+    // ...and the scripted entry point additionally materializes checkpoints.
+    let scripted = simulate_scripted_consensus(&scenario, policy, false, 5);
+    assert_eq!(scripted.outcome.rounds, run.rounds);
+    assert_eq!(scripted.outcome.switches, run.switches);
+    assert!((scripted.outcome.final_log_error - run.final_log_error).abs() < 1e-12);
+    assert_eq!(scripted.reports.len(), 2);
+    let after = &scripted.reports[0];
+    assert_eq!((after.phase, after.label.as_str()), (1, "after degradation"));
+    assert!(after.b_min > 0.0);
+    assert!(after.sim_time > 0.0);
+    let end = &scripted.reports[1];
+    assert!(end.rounds >= after.rounds);
+    assert!(
+        end.log_error <= after.log_error + 1e-9,
+        "error must not grow between checkpoints: {} vs {}",
+        end.log_error,
+        after.log_error
+    );
+}
+
+// ---------------------------------------------------------------------------
+// `batopo reproduce table1 --quick` (library-level)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reproduce_table1_quick_writes_nonempty_csv() {
+    let dir = std::env::temp_dir().join("batopo_reproduce_table1_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let opts = ExpOptions {
+        quick: true,
+        out_dir: dir.clone(),
+        seed: 42,
+        ..Default::default()
+    };
+    experiments::run(&["table1".to_string()], &opts);
+
+    let csv = std::fs::read_to_string(dir.join("table1.csv")).expect("table1.csv written");
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines[0], "n,topology,edges,r_asym,conv_time_ms");
+    assert!(
+        lines.len() > 1,
+        "table1.csv has a header but no data rows:\n{csv}"
+    );
+    // Quick mode sweeps 7 sizes × 3 topology families.
+    assert_eq!(lines.len() - 1, 7 * 3, "unexpected row count:\n{csv}");
+
+    // The run manifest indexes the artifact deterministically.
+    let manifest =
+        std::fs::read_to_string(dir.join("run_manifest.json")).expect("run_manifest.json");
+    assert!(manifest.contains("\"table1.csv\""), "{manifest}");
+    assert!(manifest.contains("\"quick\":true"), "{manifest}");
+    std::fs::remove_dir_all(&dir).ok();
+}
