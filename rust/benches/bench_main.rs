@@ -5,9 +5,14 @@
 //! ```text
 //! cargo bench                 # everything at CI budgets (~15 min)
 //! cargo bench -- fig1 table1  # selected experiments (full budgets)
-//! cargo bench -- perf         # perf benches only
+//! cargo bench -- perf         # perf benches only (mixing+solver+admm+scale)
+//! cargo bench -- scale        # one perf target
 //! cargo bench -- all --full   # everything at paper budgets (hours)
 //! ```
+//!
+//! The perf benches are also available as `batopo bench <target> --json …`,
+//! which additionally persists schema-stable `BenchRecord` JSON for the CI
+//! perf-regression gate (docs/BENCHMARKS.md).
 //!
 //! Optimized BA-Topo instances are cached under `results/topos/`; a plain
 //! `cargo bench` after a full per-figure run reuses the full-quality

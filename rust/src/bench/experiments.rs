@@ -50,6 +50,11 @@ pub struct ExpOptions {
     /// Worker threads for the (topology × scenario × seed) sweep cells
     /// (default: all available CPUs).
     pub threads: usize,
+    /// Names of the artifacts written by this run, recorded at creation time
+    /// — the source of truth for `run_manifest.json`. (Shared across clones
+    /// so parallel drivers append to one log; mtime-based scoping raced on
+    /// fast filesystems and coarse-mtime platforms.)
+    pub artifacts: std::sync::Arc<std::sync::Mutex<Vec<String>>>,
 }
 
 impl Default for ExpOptions {
@@ -59,6 +64,7 @@ impl Default for ExpOptions {
             out_dir: PathBuf::from("results"),
             seed: 42,
             threads: crate::util::threadpool::num_cpus(),
+            artifacts: std::sync::Arc::new(std::sync::Mutex::new(Vec::new())),
         }
     }
 }
@@ -70,6 +76,21 @@ impl ExpOptions {
         if threads > 0 {
             self.threads = threads;
         }
+    }
+
+    /// Create a CSV artifact named `name` under `out_dir`, recording it in
+    /// the run's artifact log (what `run_manifest.json` lists).
+    fn artifact_csv(&self, name: &str, header: &[&str]) -> CsvWriter {
+        self.artifacts.lock().unwrap().push(name.to_string());
+        CsvWriter::create(self.out_dir.join(name), header).expect("csv")
+    }
+
+    /// The artifact names recorded so far (sorted, deduplicated).
+    pub fn tracked_artifacts(&self) -> Vec<String> {
+        let mut v = self.artifacts.lock().unwrap().clone();
+        v.sort();
+        v.dedup();
+        v
     }
 }
 
@@ -135,13 +156,12 @@ fn consensus_figure(
         seed: opts.seed,
         ..Default::default()
     };
-    let mut curve = CsvWriter::create(
-        opts.out_dir.join(format!("{fig}.csv")),
+    let mut curve = opts.artifact_csv(
+        &format!("{fig}.csv"),
         &["topology", "edges", "round", "sim_time_s", "error"],
-    )
-    .expect("csv");
-    let mut summary = CsvWriter::create(
-        opts.out_dir.join(format!("{fig}_summary.csv")),
+    );
+    let mut summary = opts.artifact_csv(
+        &format!("{fig}_summary.csv"),
         &[
             "topology",
             "edges",
@@ -150,8 +170,7 @@ fn consensus_figure(
             "iter_time_ms",
             "time_to_1e-4_ms",
         ],
-    )
-    .expect("csv");
+    );
 
     println!("── {fig}: consensus under {} bandwidth ──", scenario.name());
     println!(
@@ -300,11 +319,10 @@ pub fn table1(opts: &ExpOptions) {
         dim: 64,
         ..Default::default()
     };
-    let mut csv = CsvWriter::create(
-        opts.out_dir.join("table1.csv"),
+    let mut csv = opts.artifact_csv(
+        "table1.csv",
         &["n", "topology", "edges", "r_asym", "conv_time_ms"],
-    )
-    .expect("csv");
+    );
 
     println!("── Table I: scalability (homogeneous) ──");
     println!(
@@ -428,13 +446,12 @@ fn dsgd_figure(
     table2: &mut CsvWriter,
 ) {
     let (scenario, entries) = dsgd_entries(fig, opts);
-    let mut curve = CsvWriter::create(
-        opts.out_dir.join(format!("{fig}_{model}.csv")),
+    let mut curve = opts.artifact_csv(
+        &format!("{fig}_{model}.csv"),
         &[
             "topology", "edges", "epoch", "sim_time_s", "train_loss", "eval_loss", "eval_acc",
         ],
-    )
-    .expect("csv");
+    );
 
     println!(
         "── {fig} ({model}): DSGD under {} bandwidth, target acc {target} ──",
@@ -506,14 +523,13 @@ pub fn table2(opts: &ExpOptions) -> bool {
             return false;
         }
     };
-    let mut t2 = CsvWriter::create(
-        opts.out_dir.join("table2.csv"),
+    let mut t2 = opts.artifact_csv(
+        "table2.csv",
         &[
             "dataset", "scenario", "topology", "edges", "target_acc", "time_to_target_s",
             "final_acc",
         ],
-    )
-    .expect("csv");
+    );
     // Targets chosen (like the paper's 84%/62%) to be reachable by every
     // topology on the synthetic tasks; see EXPERIMENTS.md.
     let specs: Vec<(&str, &str, f64)> = if opts.quick {
@@ -573,14 +589,13 @@ fn single_fig(fig: &str, opts: &ExpOptions) -> bool {
             return false;
         }
     };
-    let mut t2 = CsvWriter::create(
-        opts.out_dir.join(format!("{fig}_rows.csv")),
+    let mut t2 = opts.artifact_csv(
+        &format!("{fig}_rows.csv"),
         &[
             "dataset", "scenario", "topology", "edges", "target_acc", "time_to_target_s",
             "final_acc",
         ],
-    )
-    .expect("csv");
+    );
     let target = if opts.quick { 0.55 } else { 0.75 };
     dsgd_figure(&engine, fig, "tiny", target, opts, &mut t2);
     t2.flush().unwrap();
@@ -684,22 +699,20 @@ pub fn dynamic(opts: &ExpOptions) {
         (name, sc, adapt, seed, run)
     });
 
-    let mut csv = CsvWriter::create(
-        opts.out_dir.join("dynamic.csv"),
+    let mut csv = opts.artifact_csv(
+        "dynamic.csv",
         &[
             "scenario", "n", "phases", "adapt", "seed", "rounds", "switches",
             "final_log10_error",
         ],
-    )
-    .expect("csv");
-    let mut reports = CsvWriter::create(
-        opts.out_dir.join("dynamic_reports.csv"),
+    );
+    let mut reports = opts.artifact_csv(
+        "dynamic_reports.csv",
         &[
             "scenario", "adapt", "seed", "phase", "label", "sim_time_s",
             "log10_error", "rounds", "switches", "b_min_gbps",
         ],
-    )
-    .expect("csv");
+    );
 
     println!("── dynamic: scripted bandwidth scenarios (n={n}, r={}) ──", policy.r);
     println!(
@@ -761,7 +774,6 @@ pub const TARGETS: &[&str] = &[
 /// targets that were requested explicitly, and tolerates them under `all`.
 pub fn run(names: &[String], opts: &ExpOptions) -> Vec<String> {
     std::fs::create_dir_all(&opts.out_dir).expect("results dir");
-    let started = std::time::SystemTime::now();
     let all = names.iter().any(|n| n == "all");
     let want = |n: &str| all || names.iter().any(|x| x == n);
     let mut skipped: Vec<String> = Vec::new();
@@ -793,41 +805,21 @@ pub fn run(names: &[String], opts: &ExpOptions) -> Vec<String> {
             skipped.push(f.to_string());
         }
     }
-    write_run_manifest(names, &skipped, opts, started);
+    write_run_manifest(names, &skipped, opts);
     skipped
 }
 
 /// Emit `run_manifest.json` (via the deterministic `util::json` serializer:
 /// object keys are sorted, files are listed sorted) so reproduction scripts
-/// can locate every artifact of a run programmatically. Only CSVs written
-/// (or rewritten) by this run are listed — stale artifacts from earlier runs
-/// into the same directory are excluded by modification time.
-fn write_run_manifest(
-    names: &[String],
-    skipped: &[String],
-    opts: &ExpOptions,
-    started: std::time::SystemTime,
-) {
-    // 2s slack below the run start guards against coarse (1s) mtime
-    // granularity misclassifying files written right at startup.
-    let cutoff = started
-        .checked_sub(std::time::Duration::from_secs(2))
-        .unwrap_or(started);
-    let mut files: Vec<String> = std::fs::read_dir(&opts.out_dir)
-        .map(|rd| {
-            rd.filter_map(|e| e.ok())
-                .filter(|e| {
-                    e.metadata()
-                        .and_then(|m| m.modified())
-                        .map(|t| t >= cutoff)
-                        .unwrap_or(true)
-                })
-                .filter_map(|e| e.file_name().into_string().ok())
-                .filter(|f| f.ends_with(".csv"))
-                .collect()
-        })
-        .unwrap_or_default();
-    files.sort();
+/// can locate every artifact of a run programmatically. Only artifacts this
+/// run actually created are listed: each driver records the exact file name
+/// at `CsvWriter` creation time ([`ExpOptions::tracked_artifacts`]). The
+/// previous implementation scoped the listing by file mtime relative to the
+/// run start, which raced on fast filesystems and coarse-mtime platforms
+/// (1s-granularity mtimes made *stale* files from an earlier run in the same
+/// directory indistinguishable from fresh ones).
+fn write_run_manifest(names: &[String], skipped: &[String], opts: &ExpOptions) {
+    let files = opts.tracked_artifacts();
     let manifest = Json::obj(vec![
         ("schema_version", Json::Num(1.0)),
         (
@@ -860,6 +852,36 @@ mod tests {
         assert!(s_big.polish_swaps <= s_small.polish_swaps);
         let q = ba_spec(BandwidthScenario::paper_homogeneous(16), 32, true);
         assert!(q.max_iters <= 60);
+    }
+
+    #[test]
+    fn manifest_lists_only_tracked_artifacts() {
+        let dir = std::env::temp_dir().join("batopo_manifest_tracking_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        // A stale CSV from "an earlier run" into the same directory: the old
+        // mtime-based scoping could list it; path tracking must not.
+        std::fs::write(dir.join("stale.csv"), "a,b\n1,2\n").unwrap();
+        let opts = ExpOptions {
+            out_dir: dir.clone(),
+            ..Default::default()
+        };
+        let mut w = opts.artifact_csv("fresh.csv", &["col"]);
+        w.row(&["1".to_string()]).unwrap();
+        w.flush().unwrap();
+        write_run_manifest(&["test".to_string()], &[], &opts);
+        let manifest =
+            Json::parse(&std::fs::read_to_string(dir.join("run_manifest.json")).unwrap()).unwrap();
+        let files: Vec<&str> = manifest
+            .get("artifacts")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.as_str().unwrap())
+            .collect();
+        assert_eq!(files, vec!["fresh.csv"]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -6,6 +6,7 @@
 pub mod ablations;
 pub mod experiments;
 pub mod perf;
+pub mod records;
 
 use std::time::Instant;
 
@@ -20,6 +21,8 @@ pub struct BenchStats {
     pub mean: f64,
     /// Median iteration time (s).
     pub median: f64,
+    /// 95th-percentile iteration time (s).
+    pub p95: f64,
     /// Population standard deviation (s).
     pub stddev: f64,
     /// Fastest iteration (s).
@@ -82,10 +85,18 @@ pub fn stats_from(name: &str, mut samples: Vec<f64>) -> BenchStats {
         iters: n,
         mean,
         median: samples[n / 2],
+        p95: percentile(&samples, 0.95),
         stddev: var.sqrt(),
         min: samples[0],
         max: samples[n - 1],
     }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample vector, `q ∈ [0, 1]`.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
 }
 
 #[cfg(test)]
@@ -99,7 +110,17 @@ mod tests {
         assert_eq!(s.median, 3.0);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
+        assert_eq!(s.p95, 5.0);
         assert!((s.stddev - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.5), 50.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[7.0], 0.95), 7.0);
     }
 
     #[test]

@@ -1,74 +1,130 @@
-//! Performance micro-benches (§Perf of EXPERIMENTS.md):
+//! The `batopo bench` subsystem: structured performance micro-benches that
+//! print human-readable stats **and** return schema-stable
+//! [`BenchRecord`] rows for `BENCH_<target>.json` (consumed by the CI
+//! perf-regression gate — see docs/BENCHMARKS.md).
 //!
-//! - `perf_mixing` — L1 path: host matmul vs XLA-native vs Pallas-interpret
-//!   mixing at n∈{16,128}, D=80k (model-sized state),
-//! - `perf_solver` — §V-C ablation: Bi-CGSTAB on the ADMM KKT system with
-//!   and without the ILU(0) preconditioner, with and without warm starts,
-//! - `perf_admm`  — per-iteration ADMM cost vs n,
-//! - `perf_train` — end-to-end DSGD steps/second through the PJRT runtime.
+//! Targets:
+//!
+//! - `mixing` — L1 path: host matmul vs XLA-native vs Pallas-interpret
+//!   gossip mixing at n∈{16,128}, D=80k (model-sized state),
+//! - `solver` — §V-C ablation: Bi-CGSTAB on the ADMM KKT system (assembled
+//!   CSC vs matrix-free operator, ± ILU(0), ± warm starts),
+//! - `admm`  — per-iteration ADMM cost vs n,
+//! - `scale` — the large-`n` regime: matrix-free Lanczos λ₂/λ_max and
+//!   parallel CSR SpMV at n up to 2048 — sizes where the dense
+//!   eigendecomposition path cannot run,
+//! - `train` — end-to-end DSGD steps/second through the PJRT runtime
+//!   (skipped without artifacts).
 
+use super::records::{git_rev, BenchRecord};
 use super::{stats_from, time_fn, BenchStats};
 use crate::bandwidth::scenarios::BandwidthScenario;
-use crate::bench::experiments::ExpOptions;
+use crate::graph::spectral::{
+    asymptotic_convergence_factor, asymptotic_convergence_factor_lanczos,
+    laplacian_extremes_lanczos,
+};
 use crate::linalg::bicgstab::{bicgstab_ws, BicgstabOptions, BicgstabWorkspace};
-use crate::linalg::Ilu0;
+use crate::linalg::{CsrMatrix, Ilu0, LanczosOptions, Preconditioner};
 use crate::optimizer::operators;
 use crate::runtime::mixer::{MixVariant, Mixer};
 use crate::runtime::trainer::ModelRunner;
 use crate::runtime::PjRtEngine;
 use crate::topo::baselines;
+use crate::topo::weights::metropolis;
 use crate::util::rng::Xoshiro256pp;
+
+/// Options for the perf benches.
+#[derive(Debug, Clone)]
+pub struct PerfOptions {
+    /// Reduced budgets for CI-speed runs.
+    pub quick: bool,
+    /// Worker threads for the parallel-SpMV benches.
+    pub threads: usize,
+    /// Override the per-target size list (tests use tiny sizes; `None` keeps
+    /// each target's defaults).
+    pub sizes: Option<Vec<usize>>,
+}
+
+impl Default for PerfOptions {
+    fn default() -> Self {
+        PerfOptions {
+            quick: false,
+            threads: crate::util::threadpool::num_cpus(),
+            sizes: None,
+        }
+    }
+}
+
+impl PerfOptions {
+    fn sizes_or(&self, default: &[usize]) -> Vec<usize> {
+        self.sizes.clone().unwrap_or_else(|| default.to_vec())
+    }
+}
+
+/// The bench targets `batopo bench` understands (besides `all`, which runs
+/// every target except `train` — the one target that needs PJRT artifacts).
+pub const BENCH_TARGETS: &[&str] = &["mixing", "solver", "admm", "scale", "train"];
+
+/// Targets run by `bench all`.
+pub const ALL_TARGETS: &[&str] = &["mixing", "solver", "admm", "scale"];
 
 fn print_stats(s: &BenchStats) {
     println!("  {}", s.report());
 }
 
+fn record(stats: &BenchStats, name: &str, n: usize, rev: &str) -> BenchRecord {
+    print_stats(stats);
+    BenchRecord::from_stats(name, n, stats, rev)
+}
+
 /// L1 mixing path comparison.
-pub fn perf_mixing(opts: &ExpOptions) {
-    println!("── perf_mixing: gossip X'=WX, D = 81,920 (model-sized) ──");
+pub fn perf_mixing(opts: &PerfOptions) -> Vec<BenchRecord> {
+    println!("── bench mixing: gossip X'=WX, D = 81,920 (model-sized) ──");
+    let rev = git_rev();
+    let mut out = Vec::new();
     let d = 81_920;
     let engine = PjRtEngine::from_artifacts().ok();
     let (warm, iters) = if opts.quick { (1, 3) } else { (2, 8) };
-    for n in [16usize, 128] {
-        let topo = if n == 16 {
-            baselines::torus2d(16)
-        } else {
+    for n in opts.sizes_or(&[16, 128]) {
+        let topo = if n == 128 {
             baselines::exponential(128)
+        } else {
+            baselines::torus2d(n)
         };
         let mut rng = Xoshiro256pp::seed_from_u64(1);
         let x: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..d).map(|_| rng.next_f32()).collect())
             .collect();
         let host = Mixer::new(None, &topo, MixVariant::HostFallback).unwrap();
-        print_stats(&time_fn(&format!("host matmul        n={n}"), warm, iters, || {
+        let s = time_fn(&format!("host matmul        n={n}"), warm, iters, || {
             std::hint::black_box(host.mix(&x).unwrap());
-        }));
+        });
+        out.push(record(&s, "mix_host", n, &rev));
         if let Some(eng) = engine.as_ref() {
-            for (variant, label) in [
-                (MixVariant::Native, "xla-native artifact"),
-                (MixVariant::Pallas, "pallas-interpret   "),
+            for (variant, label, rec_name) in [
+                (MixVariant::Native, "xla-native artifact", "mix_native"),
+                (MixVariant::Pallas, "pallas-interpret   ", "mix_pallas"),
             ] {
                 let mixer = Mixer::new(Some(eng), &topo, variant).unwrap();
-                print_stats(&time_fn(
-                    &format!("{label} n={n}"),
-                    warm,
-                    iters,
-                    || {
-                        std::hint::black_box(mixer.mix(&x).unwrap());
-                    },
-                ));
+                let s = time_fn(&format!("{label} n={n}"), warm, iters, || {
+                    std::hint::black_box(mixer.mix(&x).unwrap());
+                });
+                out.push(record(&s, rec_name, n, &rev));
             }
         } else {
             println!("  (artifacts missing — PJRT variants skipped)");
         }
     }
+    out
 }
 
 /// §V-C solver ablation on the real ADMM KKT operator.
-pub fn perf_solver(opts: &ExpOptions) {
-    println!("── perf_solver: Bi-CGSTAB on the ADMM KKT system ──");
-    let sizes: &[usize] = if opts.quick { &[16, 32] } else { &[16, 32, 64] };
-    for &n in sizes {
+pub fn perf_solver(opts: &PerfOptions) -> Vec<BenchRecord> {
+    println!("── bench solver: Bi-CGSTAB on the ADMM KKT system ──");
+    let rev = git_rev();
+    let mut out = Vec::new();
+    let default_sizes: &[usize] = if opts.quick { &[16, 32] } else { &[16, 32, 64] };
+    for n in opts.sizes_or(default_sizes) {
         let ops = operators::build_homogeneous(n, 2.0, 1e-8);
         let dim = ops.kkt.rows();
         let mut rng = Xoshiro256pp::seed_from_u64(5);
@@ -78,41 +134,56 @@ pub fn perf_solver(opts: &ExpOptions) {
             ..Default::default()
         };
 
-        // ILU factorization cost (once per run).
-        let t_ilu = time_fn(&format!("ILU(0) factor          n={n} dim={dim}"), 0, 1, || {
+        // ILU factorization cost. Warmup + 3 samples (not a single shot):
+        // the CI perf gate compares mean times, and a 1-sample mean on a
+        // shared runner is all scheduler jitter.
+        let s = time_fn(&format!("ILU(0) factor          n={n} dim={dim}"), 1, 3, || {
             std::hint::black_box(Ilu0::factor(&ops.kkt, 1e-6));
         });
-        print_stats(&t_ilu);
+        out.push(record(&s, "ilu_factor", n, &rev));
 
         let ilu = Ilu0::factor(&ops.kkt, 1e-6);
-        let report = |name: &str, pre: Option<&Ilu0>, warm: bool| {
+        let kkt_op = ops.kkt_operator();
+        let reps = if opts.quick { 3 } else { 4 };
+        let mut report = |label: &str,
+                          rec_name: &str,
+                          matrix_free: bool,
+                          pre: Option<&dyn Preconditioner>,
+                          warm: bool| {
             let mut samples = Vec::new();
             let mut iters_used = 0usize;
-            let reps = if opts.quick { 2 } else { 4 };
             let mut x_prev = vec![0.0; dim];
             for _ in 0..reps {
                 let mut x = if warm { x_prev.clone() } else { vec![0.0; dim] };
                 let mut ws = BicgstabWorkspace::new(dim);
                 let t0 = std::time::Instant::now();
-                let out = bicgstab_ws(&ops.kkt, &b, &mut x, pre, &opts_k, &mut ws);
+                let outcome = if matrix_free {
+                    bicgstab_ws(&kkt_op, &b, &mut x, pre, &opts_k, &mut ws)
+                } else {
+                    bicgstab_ws(&ops.kkt, &b, &mut x, pre, &opts_k, &mut ws)
+                };
                 samples.push(t0.elapsed().as_secs_f64());
-                iters_used = out.iterations;
+                iters_used = outcome.iterations;
                 x_prev = x;
             }
-            let s = stats_from(&format!("{name} n={n} (krylov {iters_used})"), samples);
-            print_stats(&s);
+            let s = stats_from(&format!("{label} n={n} (krylov {iters_used})"), samples);
+            out.push(record(&s, rec_name, n, &rev));
         };
-        report("bicgstab unpreconditioned", None, false);
-        report("bicgstab + ILU(0)        ", Some(&ilu), false);
-        report("bicgstab + ILU + warm    ", Some(&ilu), true);
+        report("bicgstab unpreconditioned", "bicgstab_plain", false, None, false);
+        report("bicgstab + ILU(0)        ", "bicgstab_ilu", false, Some(&ilu), false);
+        report("bicgstab + ILU + warm    ", "bicgstab_ilu_warm", false, Some(&ilu), true);
+        report("bicgstab + ILU matrixfree", "bicgstab_ilu_matfree", true, Some(&ilu), false);
     }
+    out
 }
 
 /// ADMM per-iteration cost vs n.
-pub fn perf_admm(opts: &ExpOptions) {
-    println!("── perf_admm: full optimizer wall time ──");
-    let sizes: &[usize] = if opts.quick { &[8, 16] } else { &[8, 16, 32] };
-    for &n in sizes {
+pub fn perf_admm(opts: &PerfOptions) -> Vec<BenchRecord> {
+    println!("── bench admm: full optimizer wall time ──");
+    let rev = git_rev();
+    let mut out = Vec::new();
+    let default_sizes: &[usize] = if opts.quick { &[8, 16] } else { &[8, 16, 32] };
+    for n in opts.sizes_or(default_sizes) {
         let d = (n as f64).log2().ceil() as usize;
         let r = (n * d / 2).max(n - 1);
         let mut spec = crate::bench::experiments::ba_spec(
@@ -128,22 +199,118 @@ pub fn perf_admm(opts: &ExpOptions) {
             .run_detailed()
             .expect("optimizer");
         let dt = t0.elapsed().as_secs_f64();
+        let iters = rep.admm_iterations.max(1);
+        let per_iter = dt / iters as f64;
         println!(
-            "  n={n:<4} r={r:<4} 30 admm iters in {:>8}  ({:>8}/iter, krylov total {})",
+            "  n={n:<4} r={r:<4} {iters} admm iters in {:>8}  ({:>8}/iter, krylov total {})",
             super::fmt_time(dt),
-            super::fmt_time(dt / rep.admm_iterations.max(1) as f64),
+            super::fmt_time(per_iter),
             rep.krylov_iterations
         );
+        let per_iter_ns = per_iter * 1e9;
+        out.push(BenchRecord {
+            name: "admm_iter".into(),
+            n,
+            iters,
+            mean_ns: per_iter_ns,
+            p50_ns: per_iter_ns,
+            p95_ns: per_iter_ns,
+            throughput_per_s: if per_iter > 0.0 { 1.0 / per_iter } else { 0.0 },
+            git_rev: rev.clone(),
+        });
     }
+    out
+}
+
+/// Large-`n` spectral + SpMV benches on the matrix-free paths. At the top
+/// sizes the dense `SymEigen` path is not runnable (`O(n³)` Jacobi on an
+/// assembled `n × n` matrix); the Lanczos records below are the evidence the
+/// matrix-free refactor unlocked that regime.
+pub fn perf_scale(opts: &PerfOptions) -> Vec<BenchRecord> {
+    println!(
+        "── bench scale: matrix-free Lanczos + parallel SpMV ({} threads) ──",
+        opts.threads
+    );
+    let rev = git_rev();
+    let mut out = Vec::new();
+    let default_sizes: &[usize] = if opts.quick {
+        &[256, 1024]
+    } else {
+        &[256, 1024, 2048]
+    };
+    let lan_iters = if opts.quick { 2 } else { 3 };
+    for n in opts.sizes_or(default_sizes) {
+        let graph = baselines::chorded_ring_graph(n);
+        let w = metropolis(&graph);
+        let lopts = LanczosOptions::default();
+
+        let s = time_fn(
+            &format!("lanczos λ₂/λ_max       n={n} |E|={}", graph.num_edges()),
+            1,
+            lan_iters,
+            || {
+                std::hint::black_box(laplacian_extremes_lanczos(&graph, &w, &lopts));
+            },
+        );
+        out.push(record(&s, "lanczos_extremes", n, &rev));
+
+        let s = time_fn(&format!("r_asym lanczos         n={n}"), 1, lan_iters, || {
+            std::hint::black_box(asymptotic_convergence_factor_lanczos(&graph, &w, &lopts));
+        });
+        out.push(record(&s, "r_asym_lanczos", n, &rev));
+
+        // Dense contrast point: only at the smallest size and full budgets —
+        // beyond that the O(n³) Jacobi sweep stops being benchmarkable.
+        if !opts.quick && n <= 256 {
+            let wm = crate::graph::laplacian::weight_matrix_from_edge_weights(&graph, &w);
+            let s = time_fn(&format!("r_asym dense (contrast) n={n}"), 0, 1, || {
+                std::hint::black_box(asymptotic_convergence_factor(&wm));
+            });
+            out.push(record(&s, "r_asym_dense", n, &rev));
+        }
+
+        // Parallel SpMV on the assembled Laplacian.
+        let csr = CsrMatrix::from_triplets(
+            n,
+            n,
+            crate::graph::laplacian::laplacian_triplets(&graph, &w),
+        );
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut y = vec![0.0; n];
+        let spmv_iters = if opts.quick { 50 } else { 200 };
+        let s = time_fn(
+            &format!("spmv serial            n={n} nnz={}", csr.nnz()),
+            3,
+            spmv_iters,
+            || {
+                csr.matvec_into(&x, &mut y);
+                std::hint::black_box(&y);
+            },
+        );
+        out.push(record(&s, "spmv_serial", n, &rev));
+        let s = time_fn(
+            &format!("spmv parallel          n={n} t={}", opts.threads),
+            3,
+            spmv_iters,
+            || {
+                csr.par_matvec_into(&x, &mut y, opts.threads);
+                std::hint::black_box(&y);
+            },
+        );
+        out.push(record(&s, "spmv_par", n, &rev));
+    }
+    out
 }
 
 /// End-to-end DSGD hot-path throughput.
-pub fn perf_train(opts: &ExpOptions) {
-    println!("── perf_train: DSGD steps/sec (tiny model, n=16, PJRT) ──");
+pub fn perf_train(opts: &PerfOptions) -> Vec<BenchRecord> {
+    println!("── bench train: DSGD steps/sec (tiny model, n=16, PJRT) ──");
     let Ok(engine) = PjRtEngine::from_artifacts() else {
         println!("  (artifacts missing — skipped)");
-        return;
+        return Vec::new();
     };
+    let rev = git_rev();
     let runner = ModelRunner::new(&engine, "tiny", "native").expect("runner");
     let topo = baselines::torus2d(16);
     let mixer = Mixer::new(Some(&engine), &topo, MixVariant::Native).unwrap();
@@ -157,8 +324,9 @@ pub fn perf_train(opts: &ExpOptions) {
     let targets: Vec<i32> = (0..b).map(|_| rng.index(runner.classes()) as i32).collect();
 
     let rounds = if opts.quick { 3 } else { 10 };
-    let t0 = std::time::Instant::now();
+    let mut samples = Vec::with_capacity(rounds);
     for _ in 0..rounds {
+        let t0 = std::time::Instant::now();
         for node in 0..n {
             runner
                 .train_step(&mut params[node], &mut momenta[node], &tokens, &targets)
@@ -169,31 +337,48 @@ pub fn perf_train(opts: &ExpOptions) {
         for (node, flat) in mixed.iter().enumerate() {
             runner.unflatten_into(flat, &mut params[node]);
         }
+        samples.push(t0.elapsed().as_secs_f64());
     }
-    let dt = t0.elapsed().as_secs_f64();
+    let total: f64 = samples.iter().sum();
     let steps = (rounds * n) as f64;
     println!(
         "  {rounds} rounds x {n} nodes: {:>8} total, {:.1} node-steps/s, {:>8}/round",
-        super::fmt_time(dt),
-        steps / dt,
-        super::fmt_time(dt / rounds as f64)
+        super::fmt_time(total),
+        steps / total,
+        super::fmt_time(total / rounds as f64)
     );
+    let stats = stats_from("dsgd round", samples);
+    vec![BenchRecord::from_stats("dsgd_round", n, &stats, &rev)]
 }
 
-/// Dispatch by name.
-pub fn run(names: &[String], opts: &ExpOptions) {
+/// Run one named bench target, returning its records. Unknown targets panic
+/// (the CLI validates names before dispatching).
+pub fn run_target(target: &str, opts: &PerfOptions) -> Vec<BenchRecord> {
+    match target {
+        "mixing" => perf_mixing(opts),
+        "solver" => perf_solver(opts),
+        "admm" => perf_admm(opts),
+        "scale" => perf_scale(opts),
+        "train" => perf_train(opts),
+        other => panic!("unknown bench target {other:?}"),
+    }
+}
+
+/// Legacy dispatch used by `cargo bench` (`bench_main.rs`): accepts the old
+/// `perf`/`perf_<name>` spellings alongside the new target names; records are
+/// printed but not persisted (use `batopo bench --json` for that).
+pub fn run(names: &[String], opts: &super::experiments::ExpOptions) {
+    let popts = PerfOptions {
+        quick: opts.quick,
+        threads: opts.threads,
+        sizes: None,
+    };
     let all = names.iter().any(|n| n == "all" || n == "perf");
-    let want = |n: &str| all || names.iter().any(|x| x == n);
-    if want("perf_mixing") {
-        perf_mixing(opts);
-    }
-    if want("perf_solver") {
-        perf_solver(opts);
-    }
-    if want("perf_admm") {
-        perf_admm(opts);
-    }
-    if want("perf_train") {
-        perf_train(opts);
+    for target in BENCH_TARGETS {
+        let legacy = format!("perf_{target}");
+        let run_all = all && ALL_TARGETS.contains(target);
+        if run_all || names.iter().any(|x| x == target || *x == legacy) {
+            run_target(target, &popts);
+        }
     }
 }

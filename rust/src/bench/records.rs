@@ -1,0 +1,340 @@
+//! Schema-stable benchmark records: the JSON interchange between
+//! `batopo bench`, the committed `BENCH_baseline.json`, and the CI
+//! perf-regression gate (`batopo bench compare`).
+//!
+//! File layout (one file per bench target, `BENCH_<target>.json`):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "target": "solver",
+//!   "quick": true,
+//!   "git_rev": "abc1234",
+//!   "records": [
+//!     {"name": "bicgstab_ilu", "n": 32, "iters": 4,
+//!      "mean_ns": 1.2e6, "p50_ns": 1.1e6, "p95_ns": 1.4e6,
+//!      "throughput_per_s": 833.0, "git_rev": "abc1234"}
+//!   ]
+//! }
+//! ```
+//!
+//! The schema is append-only: consumers must tolerate extra fields, and any
+//! change to the existing fields bumps [`BENCH_SCHEMA_VERSION`].
+
+use super::BenchStats;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Version of the `BENCH_*.json` record schema.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// One benchmark measurement row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Stable benchmark name (the compare key together with `n`).
+    pub name: String,
+    /// Problem size (node count or dimension; 0 when not applicable).
+    pub n: usize,
+    /// Timed iterations behind the statistics.
+    pub iters: usize,
+    /// Mean iteration time in nanoseconds.
+    pub mean_ns: f64,
+    /// Median iteration time in nanoseconds.
+    pub p50_ns: f64,
+    /// 95th-percentile iteration time in nanoseconds.
+    pub p95_ns: f64,
+    /// Iterations per second (`1e9 / mean_ns`).
+    pub throughput_per_s: f64,
+    /// Git revision the record was measured at ("unknown" outside a repo).
+    pub git_rev: String,
+}
+
+impl BenchRecord {
+    /// Build a record from [`BenchStats`] (seconds → nanoseconds).
+    pub fn from_stats(name: &str, n: usize, stats: &BenchStats, git_rev: &str) -> BenchRecord {
+        let mean_ns = stats.mean * 1e9;
+        BenchRecord {
+            name: name.to_string(),
+            n,
+            iters: stats.iters,
+            mean_ns,
+            p50_ns: stats.median * 1e9,
+            p95_ns: stats.p95 * 1e9,
+            throughput_per_s: if mean_ns > 0.0 { 1e9 / mean_ns } else { 0.0 },
+            git_rev: git_rev.to_string(),
+        }
+    }
+
+    /// Compare key: records match across runs on `(name, n)`.
+    pub fn key(&self) -> (String, usize) {
+        (self.name.clone(), self.n)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+            ("throughput_per_s", Json::Num(self.throughput_per_s)),
+            ("git_rev", Json::Str(self.git_rev.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<BenchRecord, String> {
+        let field = |k: &str| j.get(k).ok_or_else(|| format!("record missing field {k:?}"));
+        let num = |k: &str| -> Result<f64, String> {
+            field(k)?.as_f64().ok_or_else(|| format!("field {k:?} not a number"))
+        };
+        Ok(BenchRecord {
+            name: field("name")?
+                .as_str()
+                .ok_or("record name not a string")?
+                .to_string(),
+            n: field("n")?.as_usize().ok_or("field \"n\" not a usize")?,
+            iters: field("iters")?.as_usize().ok_or("field \"iters\" not a usize")?,
+            mean_ns: num("mean_ns")?,
+            p50_ns: num("p50_ns")?,
+            p95_ns: num("p95_ns")?,
+            throughput_per_s: num("throughput_per_s")?,
+            git_rev: field("git_rev")?
+                .as_str()
+                .ok_or("record git_rev not a string")?
+                .to_string(),
+        })
+    }
+}
+
+/// Current git revision (short hash): `GITHUB_SHA` when set (CI), else
+/// `git rev-parse --short HEAD`, else `"unknown"`.
+pub fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha.chars().take(12).collect();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Serialize records to the `BENCH_<target>.json` document.
+pub fn records_to_json(target: &str, quick: bool, git_rev: &str, records: &[BenchRecord]) -> Json {
+    Json::obj(vec![
+        ("schema_version", Json::Num(BENCH_SCHEMA_VERSION as f64)),
+        ("target", Json::Str(target.to_string())),
+        ("quick", Json::Bool(quick)),
+        ("git_rev", Json::Str(git_rev.to_string())),
+        (
+            "records",
+            Json::Arr(records.iter().map(|r| r.to_json()).collect()),
+        ),
+    ])
+}
+
+/// Write records to `path` (creating parent directories).
+pub fn write_records(
+    path: &Path,
+    target: &str,
+    quick: bool,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let doc = records_to_json(target, quick, &git_rev(), records);
+    std::fs::write(path, format!("{doc}\n"))
+}
+
+/// Parse a `BENCH_*.json` document, validating the schema version and every
+/// record's fields.
+pub fn read_records(path: &Path) -> Result<Vec<BenchRecord>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse_records(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Parse the document from a string (separated out for tests).
+pub fn parse_records(text: &str) -> Result<Vec<BenchRecord>, String> {
+    let doc = Json::parse(text).map_err(|e| e.to_string())?;
+    let ver = doc
+        .get("schema_version")
+        .and_then(|v| v.as_usize())
+        .ok_or("missing schema_version")?;
+    if ver as u64 != BENCH_SCHEMA_VERSION {
+        return Err(format!(
+            "schema_version {ver} unsupported (expected {BENCH_SCHEMA_VERSION})"
+        ));
+    }
+    let records = doc
+        .get("records")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing records array")?;
+    records.iter().map(BenchRecord::from_json).collect()
+}
+
+/// One mean-time regression found by [`compare`].
+#[derive(Debug, Clone)]
+pub struct Regression {
+    /// Benchmark name.
+    pub name: String,
+    /// Problem size.
+    pub n: usize,
+    /// Baseline mean (ns).
+    pub baseline_ns: f64,
+    /// Candidate mean (ns).
+    pub candidate_ns: f64,
+    /// `candidate / baseline`.
+    pub ratio: f64,
+}
+
+/// Outcome of a baseline-vs-candidate comparison.
+#[derive(Debug, Clone, Default)]
+pub struct CompareReport {
+    /// Records compared (matched on `(name, n)` and above the noise floor).
+    pub compared: usize,
+    /// Candidate records with no baseline counterpart (new benches — not a
+    /// failure, the baseline just needs a refresh).
+    pub missing_baseline: usize,
+    /// Baseline records with no candidate counterpart (removed benches).
+    pub missing_candidate: usize,
+    /// Matched records skipped because the baseline mean sits below the
+    /// noise floor (micro-timings regress by scheduling jitter alone).
+    pub below_noise_floor: usize,
+    /// Mean-time regressions exceeding the threshold, worst first.
+    pub regressions: Vec<Regression>,
+}
+
+/// Compare candidate records against a baseline: a record regresses when
+/// `candidate.mean_ns > threshold × baseline.mean_ns` (threshold 1.25 = the
+/// CI gate's 25%). Records are matched on `(name, n)`; baseline means below
+/// `min_ns` are skipped as noise.
+pub fn compare(
+    baseline: &[BenchRecord],
+    candidate: &[BenchRecord],
+    threshold: f64,
+    min_ns: f64,
+) -> CompareReport {
+    let mut report = CompareReport::default();
+    let base: std::collections::BTreeMap<(String, usize), &BenchRecord> =
+        baseline.iter().map(|r| (r.key(), r)).collect();
+    let cand_keys: std::collections::BTreeSet<(String, usize)> =
+        candidate.iter().map(|r| r.key()).collect();
+    report.missing_candidate = baseline
+        .iter()
+        .filter(|r| !cand_keys.contains(&r.key()))
+        .count();
+    for c in candidate {
+        let Some(b) = base.get(&c.key()) else {
+            report.missing_baseline += 1;
+            continue;
+        };
+        if b.mean_ns < min_ns {
+            report.below_noise_floor += 1;
+            continue;
+        }
+        report.compared += 1;
+        let ratio = c.mean_ns / b.mean_ns;
+        if ratio > threshold {
+            report.regressions.push(Regression {
+                name: c.name.clone(),
+                n: c.n,
+                baseline_ns: b.mean_ns,
+                candidate_ns: c.mean_ns,
+                ratio,
+            });
+        }
+    }
+    report
+        .regressions
+        .sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap());
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &str, n: usize, mean_ns: f64) -> BenchRecord {
+        BenchRecord {
+            name: name.into(),
+            n,
+            iters: 5,
+            mean_ns,
+            p50_ns: mean_ns,
+            p95_ns: mean_ns * 1.2,
+            throughput_per_s: 1e9 / mean_ns,
+            git_rev: "test".into(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_records() {
+        let recs = vec![rec("spmv", 1024, 1.5e6), rec("lanczos", 2048, 3.25e8)];
+        let doc = records_to_json("scale", true, "abc1234", &recs);
+        let back = parse_records(&doc.to_string()).unwrap();
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn parse_rejects_bad_schema() {
+        assert!(parse_records("{}").is_err());
+        assert!(parse_records(r#"{"schema_version": 99, "records": []}"#).is_err());
+        assert!(
+            parse_records(r#"{"schema_version": 1, "records": [{"name": "x"}]}"#).is_err()
+        );
+        // Valid empty document.
+        assert_eq!(
+            parse_records(r#"{"schema_version": 1, "records": []}"#).unwrap(),
+            Vec::<BenchRecord>::new()
+        );
+    }
+
+    #[test]
+    fn compare_flags_only_real_regressions() {
+        let base = vec![rec("a", 16, 1e6), rec("b", 16, 1e6), rec("tiny", 16, 10.0)];
+        let cand = vec![
+            rec("a", 16, 1.2e6),  // +20% — under the 25% gate
+            rec("b", 16, 1.6e6),  // +60% — regression
+            rec("tiny", 16, 40.0), // 4× but below noise floor
+            rec("new", 16, 1e6),  // no baseline
+        ];
+        let rep = compare(&base, &cand, 1.25, 1000.0);
+        assert_eq!(rep.compared, 2);
+        assert_eq!(rep.missing_baseline, 1);
+        assert_eq!(rep.missing_candidate, 0);
+        assert_eq!(rep.below_noise_floor, 1);
+        assert_eq!(rep.regressions.len(), 1);
+        assert_eq!(rep.regressions[0].name, "b");
+        assert!((rep.regressions[0].ratio - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compare_counts_removed_benches() {
+        let base = vec![rec("gone", 8, 1e6)];
+        let rep = compare(&base, &[], 1.25, 0.0);
+        assert_eq!(rep.missing_candidate, 1);
+        assert!(rep.regressions.is_empty());
+    }
+
+    #[test]
+    fn record_from_stats_converts_units() {
+        let stats = crate::bench::stats_from("x", vec![0.001, 0.002, 0.003]);
+        let r = BenchRecord::from_stats("x", 64, &stats, "rev");
+        assert!((r.mean_ns - 2e6).abs() < 1e-3);
+        assert!((r.p50_ns - 2e6).abs() < 1e-3);
+        assert!((r.throughput_per_s - 500.0).abs() < 1e-9);
+        assert_eq!(r.n, 64);
+        assert_eq!(r.iters, 3);
+    }
+}

@@ -65,13 +65,24 @@ pub fn topology_from_json(j: &Json) -> Result<Topology, String> {
     }
     let graph = Graph::new(n, edges);
     let w = DenseMatrix::from_vec(n, n, weights);
-    Ok(Topology {
+    let t = Topology {
         graph,
         weights: w,
         name: name.to_string(),
         directed,
         r_asym_override: r_override,
-    })
+    };
+    // Loaded files are untrusted: enforce the §III weight-matrix conditions
+    // the spectral paths assume. In particular the large-`n` Lanczos path
+    // reconstructs `W` from the stored off-diagonal edge weights, which is
+    // only equivalent to the stored matrix for a genuine `I − L(g)` gossip
+    // matrix — a malformed file would silently get an r_asym for a different
+    // matrix than the one consensus then iterates with.
+    if !directed {
+        t.validate(1e-6)
+            .map_err(|e| format!("invalid topology: {e}"))?;
+    }
+    Ok(t)
 }
 
 /// Save a topology to a file.

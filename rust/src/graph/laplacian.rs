@@ -25,6 +25,23 @@ pub fn laplacian_from_edge_space(n: usize, g: &[f64]) -> DenseMatrix {
     l
 }
 
+/// Triplets `(row, col, value)` of the weighted Laplacian — the sparse
+/// counterpart of [`laplacian_from_weights`], ready for
+/// `CscMatrix`/`CsrMatrix::from_triplets` (used by the SpMV benches and the
+/// operator-parity tests; duplicate diagonal contributions are summed by the
+/// triplet assembly).
+pub fn laplacian_triplets(graph: &Graph, weights: &[f64]) -> Vec<(usize, usize, f64)> {
+    assert_eq!(weights.len(), graph.num_edges(), "per-edge weight mismatch");
+    let mut trips = Vec::with_capacity(4 * graph.num_edges());
+    for (&(i, j), &w) in graph.edges().iter().zip(weights) {
+        trips.push((i, i, w));
+        trips.push((j, j, w));
+        trips.push((i, j, -w));
+        trips.push((j, i, -w));
+    }
+    trips
+}
+
 /// Weighted Laplacian of a graph with per-edge weights aligned to
 /// `graph.edges()` order.
 pub fn laplacian_from_weights(graph: &Graph, weights: &[f64]) -> DenseMatrix {
@@ -97,6 +114,15 @@ mod tests {
         }
         let from_space = laplacian_from_edge_space(n, &g_full);
         assert!(from_graph.max_abs_diff(&from_space) < 1e-15);
+    }
+
+    #[test]
+    fn laplacian_triplets_match_dense() {
+        let g = Graph::new(4, vec![(0, 1), (1, 2), (2, 3), (0, 3)]);
+        let w = [0.2, 0.3, 0.2, 0.3];
+        let dense = laplacian_from_weights(&g, &w);
+        let sparse = crate::linalg::CscMatrix::from_triplets(4, 4, laplacian_triplets(&g, &w));
+        assert!(dense.max_abs_diff(&sparse.to_dense()) < 1e-15);
     }
 
     #[test]

@@ -192,10 +192,19 @@ impl Topology {
 
     /// The paper's optimization objective `r_asym(W) = max{|λ₂|, |λₙ|}` (Eq. 3).
     /// Directed circulant builders supply the DFT closed form via
-    /// `r_asym_override`; the symmetric eigensolver handles everything else.
+    /// `r_asym_override`; small symmetric topologies go through the dense
+    /// eigensolver, large ones (`n > spectral::LANCZOS_CUTOFF`) through the
+    /// matrix-free deflated Lanczos path.
     pub fn asymptotic_convergence_factor(&self) -> f64 {
         if let Some(r) = self.r_asym_override {
             return r;
+        }
+        if self.num_nodes() > spectral::LANCZOS_CUTOFF {
+            return spectral::asymptotic_convergence_factor_lanczos(
+                &self.graph,
+                &self.edge_weights(),
+                &crate::linalg::LanczosOptions::default(),
+            );
         }
         spectral::asymptotic_convergence_factor(&self.weights)
     }

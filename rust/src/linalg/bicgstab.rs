@@ -7,8 +7,14 @@
 //! once and passes it to every solve; warm-starting from the previous
 //! iteration's solution cuts the Krylov work substantially (see
 //! EXPERIMENTS.md §Perf).
+//!
+//! The solver is generic over [`LinearOperator`], so the same code runs
+//! against assembled CSC matrices, dense matrices, and matrix-free operators
+//! (e.g. [`crate::optimizer::operators::KktOperator`]); the preconditioner
+//! slot takes any [`Preconditioner`] (ILU(0) in the ADMM path).
 
-use super::{dot, norm2, CscMatrix, Ilu0};
+use super::operator::{LinearOperator, Preconditioner};
+use super::{dot, norm2};
 
 /// Solver options.
 #[derive(Debug, Clone)]
@@ -73,25 +79,26 @@ impl BicgstabWorkspace {
 
 /// Preconditioned Bi-CGSTAB: solve `A x = b`, mutating `x` (its incoming value
 /// is the warm start). `precond` applies `M⁻¹` (pass `None` for
-/// unpreconditioned).
-pub fn bicgstab_ws(
-    a: &CscMatrix,
+/// unpreconditioned). `A` is any [`LinearOperator`] — assembled or
+/// matrix-free.
+pub fn bicgstab_ws<A: LinearOperator + ?Sized>(
+    a: &A,
     b: &[f64],
     x: &mut [f64],
-    precond: Option<&Ilu0>,
+    precond: Option<&dyn Preconditioner>,
     opts: &BicgstabOptions,
     ws: &mut BicgstabWorkspace,
 ) -> BicgstabOutcome {
     let n = b.len();
-    assert_eq!(a.rows(), n);
-    assert_eq!(a.cols(), n);
+    assert_eq!(a.nrows(), n);
+    assert_eq!(a.ncols(), n);
     assert_eq!(x.len(), n);
 
     let bnorm = norm2(b).max(f64::MIN_POSITIVE);
     let target = opts.rtol * bnorm + opts.atol;
 
     // r = b - A x
-    a.matvec_into(x, &mut ws.r);
+    a.apply(x, &mut ws.r);
     for i in 0..n {
         ws.r[i] = b[i] - ws.r[i];
     }
@@ -112,7 +119,7 @@ pub fn bicgstab_ws(
     let mut omega = 1.0f64;
 
     let apply_m = |src: &[f64], dst: &mut [f64]| match precond {
-        Some(m) => m.solve_into(src, dst),
+        Some(m) => m.precondition(src, dst),
         None => dst.copy_from_slice(src),
     };
 
@@ -133,7 +140,7 @@ pub fn bicgstab_ws(
         }
 
         apply_m(&ws.p, &mut ws.phat);
-        a.matvec_into(&ws.phat, &mut ws.v);
+        a.apply(&ws.phat, &mut ws.v);
         let r0v = dot(&ws.r0, &ws.v);
         if r0v.abs() < 1e-300 {
             return BicgstabOutcome {
@@ -161,7 +168,7 @@ pub fn bicgstab_ws(
         }
 
         apply_m(&ws.s, &mut ws.shat);
-        a.matvec_into(&ws.shat, &mut ws.t);
+        a.apply(&ws.shat, &mut ws.t);
         let tt = dot(&ws.t, &ws.t);
         omega = if tt > 0.0 { dot(&ws.t, &ws.s) / tt } else { 0.0 };
 
@@ -198,10 +205,10 @@ pub fn bicgstab_ws(
 }
 
 /// Allocating convenience wrapper: zero initial guess, fresh workspace.
-pub fn bicgstab(
-    a: &CscMatrix,
+pub fn bicgstab<A: LinearOperator + ?Sized>(
+    a: &A,
     b: &[f64],
-    precond: Option<&Ilu0>,
+    precond: Option<&dyn Preconditioner>,
     opts: &BicgstabOptions,
 ) -> (Vec<f64>, BicgstabOutcome) {
     let mut x = vec![0.0; b.len()];
@@ -213,6 +220,7 @@ pub fn bicgstab(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::{CscMatrix, Ilu0};
     use crate::util::rng::Xoshiro256pp;
 
     fn residual(a: &CscMatrix, x: &[f64], b: &[f64]) -> f64 {

@@ -134,8 +134,16 @@ impl CscMatrix {
     /// `y = Aᵀ x` — in CSC this is the row-gather direction; no transpose
     /// materialization needed.
     pub fn matvec_transpose(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.rows, "matvec_transpose dim mismatch");
         let mut y = vec![0.0; self.cols];
+        self.matvec_transpose_into(x, &mut y);
+        y
+    }
+
+    /// `y = Aᵀ x` into a caller buffer (hot path: no allocation). Used by the
+    /// matrix-free KKT operator's `Aᵀλ` half.
+    pub fn matvec_transpose_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "matvec_transpose dim mismatch");
+        assert_eq!(y.len(), self.cols);
         for c in 0..self.cols {
             let mut acc = 0.0;
             for k in self.col_ptr[c]..self.col_ptr[c + 1] {
@@ -143,7 +151,6 @@ impl CscMatrix {
             }
             y[c] = acc;
         }
-        y
     }
 
     /// Transposed copy (used when building the symmetric KKT block `[ [I,Aᵀ],[A,0] ]`).

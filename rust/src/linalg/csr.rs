@@ -1,0 +1,204 @@
+//! Compressed Sparse Row (CSR) matrices with a threadpool-backed parallel
+//! SpMV.
+//!
+//! CSC's column-scatter matvec writes to overlapping output slots and cannot
+//! be parallelized without atomics; CSR's row-gather form computes each `y_i`
+//! independently, so the rows can be chunked across scoped worker threads
+//! with zero synchronization. This is the SpMV behind the large-`n` spectral
+//! benches (`batopo bench scale`) and any operator big enough for the
+//! per-product thread fan-out to pay for itself.
+
+use super::operator::LinearOperator;
+use super::CscMatrix;
+
+/// Sparse matrix in compressed-sparse-row format.
+#[derive(Debug, Clone)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    vals: Vec<f64>,
+    /// Worker threads used by [`LinearOperator::apply`] (1 = serial).
+    threads: usize,
+}
+
+/// Row count below which the parallel path falls back to serial: thread
+/// spawn/join overhead (~10µs) dwarfs the SpMV itself on small operators.
+const PAR_MIN_ROWS: usize = 512;
+
+impl CsrMatrix {
+    /// Convert from CSC storage (serial apply by default).
+    pub fn from_csc(a: &CscMatrix) -> CsrMatrix {
+        let (row_ptr, col_idx, vals) = a.to_csr();
+        CsrMatrix {
+            rows: a.rows(),
+            cols: a.cols(),
+            row_ptr,
+            col_idx,
+            vals,
+            threads: 1,
+        }
+    }
+
+    /// Build from (row, col, value) triplets (duplicates summed, explicit
+    /// zeros dropped — same semantics as [`CscMatrix::from_triplets`]).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> CsrMatrix {
+        CsrMatrix::from_csc(&CscMatrix::from_triplets(rows, cols, triplets))
+    }
+
+    /// Set the worker-thread count used by [`LinearOperator::apply`]
+    /// (clamped to ≥ 1). Returns `self` for builder-style chaining.
+    pub fn with_threads(mut self, threads: usize) -> CsrMatrix {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Serial `y = A x` (row-gather form).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        assert_eq!(y.len(), self.rows);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.vals[k] * x[self.col_idx[k]];
+            }
+            *yi = acc;
+        }
+    }
+
+    /// Parallel `y = A x` over `threads` scoped worker threads. Rows are
+    /// split into contiguous chunks; each thread owns a disjoint slice of
+    /// `y`, so no synchronization is needed. Falls back to the serial path
+    /// for small matrices or `threads == 1`.
+    pub fn par_matvec_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        assert_eq!(y.len(), self.rows);
+        let threads = threads.max(1).min(self.rows.max(1));
+        if threads == 1 || self.rows < PAR_MIN_ROWS {
+            return self.matvec_into(x, y);
+        }
+        let chunk = (self.rows + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (c, ys) in y.chunks_mut(chunk).enumerate() {
+                let start = c * chunk;
+                s.spawn(move || {
+                    for (k, yi) in ys.iter_mut().enumerate() {
+                        let i = start + k;
+                        let mut acc = 0.0;
+                        for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                            acc += self.vals[p] * x[self.col_idx[p]];
+                        }
+                        *yi = acc;
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl LinearOperator for CsrMatrix {
+    fn nrows(&self) -> usize {
+        self.rows
+    }
+    fn ncols(&self) -> usize {
+        self.cols
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.par_matvec_into(x, y, self.threads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_csc(rows: usize, cols: usize, seed: u64) -> CscMatrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut trips = Vec::new();
+        for i in 0..rows {
+            for _ in 0..4 {
+                trips.push((i, rng.index(cols), rng.next_gaussian()));
+            }
+        }
+        CscMatrix::from_triplets(rows, cols, trips)
+    }
+
+    #[test]
+    fn csr_matches_csc() {
+        let a = random_csc(30, 20, 1);
+        let csr = CsrMatrix::from_csc(&a);
+        assert_eq!(csr.nnz(), a.nnz());
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let x: Vec<f64> = (0..20).map(|_| rng.next_gaussian()).collect();
+        let y_csc = a.matvec(&x);
+        let mut y_csr = vec![0.0; 30];
+        csr.matvec_into(&x, &mut y_csr);
+        for (p, q) in y_csc.iter().zip(&y_csr) {
+            assert!((p - q).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        // Big enough to take the parallel path.
+        let rows = 2048;
+        let a = random_csc(rows, rows, 7);
+        let csr = CsrMatrix::from_csc(&a);
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let x: Vec<f64> = (0..rows).map(|_| rng.next_gaussian()).collect();
+        let mut y_ser = vec![0.0; rows];
+        csr.matvec_into(&x, &mut y_ser);
+        for threads in [2usize, 3, 8] {
+            let mut y_par = vec![0.0; rows];
+            csr.par_matvec_into(&x, &mut y_par, threads);
+            for (p, q) in y_ser.iter().zip(&y_par) {
+                assert!((p - q).abs() < 1e-12, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn operator_apply_respects_thread_setting() {
+        let a = random_csc(600, 600, 3);
+        let csr_ser = CsrMatrix::from_csc(&a);
+        let csr_par = CsrMatrix::from_csc(&a).with_threads(4);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let x: Vec<f64> = (0..600).map(|_| rng.next_gaussian()).collect();
+        let ys = csr_ser.apply_vec(&x);
+        let yp = csr_par.apply_vec(&x);
+        for (p, q) in ys.iter().zip(&yp) {
+            assert!((p - q).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn small_matrices_fall_back_to_serial() {
+        let a = random_csc(10, 10, 5);
+        let csr = CsrMatrix::from_csc(&a).with_threads(16);
+        let x = vec![1.0; 10];
+        // Must not panic chunking 10 rows across 16 threads.
+        let y = csr.apply_vec(&x);
+        assert_eq!(y.len(), 10);
+    }
+}

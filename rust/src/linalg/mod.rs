@@ -1,19 +1,29 @@
-//! Numerical substrates: dense matrices, a symmetric eigensolver, CSC sparse
-//! matrices, ILU(0) preconditioning and the Bi-CGSTAB Krylov solver — the
-//! exact toolbox the paper's §V-C prescribes for solving the ADMM KKT systems
-//! at scale (hundreds of nodes).
+//! Numerical substrates: dense matrices, a symmetric eigensolver, CSC/CSR
+//! sparse matrices, ILU(0) preconditioning, the Bi-CGSTAB Krylov solver and a
+//! deflated Lanczos eigensolver — the toolbox the paper's §V-C prescribes for
+//! solving the ADMM KKT systems at scale, generalized over the
+//! [`LinearOperator`] trait so dense, sparse and matrix-free operators share
+//! one solver stack.
 
 pub mod bicgstab;
 pub mod csc;
+pub mod csr;
 pub mod dense;
 pub mod eigen;
 pub mod ilu;
+pub mod lanczos;
+pub mod operator;
 
 pub use bicgstab::{bicgstab, BicgstabOptions, BicgstabOutcome};
 pub use csc::CscMatrix;
+pub use csr::CsrMatrix;
 pub use dense::DenseMatrix;
 pub use eigen::SymEigen;
 pub use ilu::Ilu0;
+pub use lanczos::{lanczos_extremal, LanczosOptions, LanczosResult};
+pub use operator::{
+    GossipOperator, IdentityPrecond, LaplacianOperator, LinearOperator, Preconditioner,
+};
 
 /// Euclidean norm of a slice.
 pub fn norm2(x: &[f64]) -> f64 {

@@ -1,0 +1,268 @@
+//! The [`LinearOperator`] abstraction: anything that can apply `y = A x`.
+//!
+//! The solver stack (Bi-CGSTAB, Lanczos) only ever needs matrix-vector
+//! products, so it is written against this trait instead of a concrete
+//! storage format. Implementations:
+//!
+//! - [`super::DenseMatrix`] — small dense objects (`W`, `L` at n ≤ 128),
+//! - [`super::CscMatrix`] — assembled sparse operators (the ADMM `A`),
+//! - [`super::CsrMatrix`] — row-major sparse with threadpool-backed SpMV,
+//! - [`LaplacianOperator`] / [`GossipOperator`] — **matrix-free** graph
+//!   Laplacian `L(g)` and gossip matrix `W = I − L(g)` applied straight from
+//!   the edge list, `O(|E|)` per product with zero assembled storage — the
+//!   path that lets λ₂/λ_max evaluations scale to thousands of nodes,
+//! - [`crate::optimizer::operators::KktOperator`] — matrix-free ADMM KKT
+//!   apply `[[I, Aᵀ], [A, −δI]]` from the constraint matrix alone.
+//!
+//! [`Preconditioner`] is the companion hook ( `z = M⁻¹ r` ) implemented by
+//! [`super::Ilu0`] and the no-op [`IdentityPrecond`].
+
+/// A linear map `R^{ncols} → R^{nrows}` exposed through matrix-vector
+/// products only.
+pub trait LinearOperator {
+    /// Output dimension (number of rows).
+    fn nrows(&self) -> usize;
+    /// Input dimension (number of columns).
+    fn ncols(&self) -> usize;
+    /// `y = A x` (must overwrite `y` completely; no accumulation).
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+    /// Allocating convenience wrapper around [`Self::apply`].
+    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows()];
+        self.apply(x, &mut y);
+        y
+    }
+}
+
+/// A preconditioner application `z = M⁻¹ r`.
+pub trait Preconditioner {
+    /// Apply `M⁻¹` to `r`, writing the result into `z`.
+    fn precondition(&self, r: &[f64], z: &mut [f64]);
+}
+
+/// Identity preconditioner (`z = r`).
+#[derive(Debug, Clone, Default)]
+pub struct IdentityPrecond;
+
+impl Preconditioner for IdentityPrecond {
+    fn precondition(&self, r: &[f64], z: &mut [f64]) {
+        z.copy_from_slice(r);
+    }
+}
+
+impl Preconditioner for super::Ilu0 {
+    fn precondition(&self, r: &[f64], z: &mut [f64]) {
+        self.solve_into(r, z);
+    }
+}
+
+impl LinearOperator for super::DenseMatrix {
+    fn nrows(&self) -> usize {
+        self.rows()
+    }
+    fn ncols(&self) -> usize {
+        self.cols()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols());
+        assert_eq!(y.len(), self.rows());
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = super::dot(self.row(i), x);
+        }
+    }
+}
+
+impl LinearOperator for super::CscMatrix {
+    fn nrows(&self) -> usize {
+        self.rows()
+    }
+    fn ncols(&self) -> usize {
+        self.cols()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+}
+
+/// Matrix-free weighted graph Laplacian `L(g) = A·Diag(g)·Aᵀ` applied from
+/// the edge list: `(Lx)_i = d_i x_i − Σ_{j∼i} w_{ij} x_j` with weighted
+/// degrees `d_i = Σ_{j∼i} w_{ij}`. One product costs `O(n + |E|)`.
+#[derive(Debug, Clone)]
+pub struct LaplacianOperator {
+    n: usize,
+    edges: Vec<(usize, usize)>,
+    weights: Vec<f64>,
+    diag: Vec<f64>,
+}
+
+impl LaplacianOperator {
+    /// Build from an edge list with aligned per-edge weights.
+    pub fn new(n: usize, edges: &[(usize, usize)], weights: &[f64]) -> LaplacianOperator {
+        assert_eq!(edges.len(), weights.len(), "edge/weight length mismatch");
+        let mut diag = vec![0.0; n];
+        for (&(i, j), &w) in edges.iter().zip(weights) {
+            assert!(i < n && j < n && i != j, "bad edge ({i},{j}) for n={n}");
+            diag[i] += w;
+            diag[j] += w;
+        }
+        LaplacianOperator {
+            n,
+            edges: edges.to_vec(),
+            weights: weights.to_vec(),
+            diag,
+        }
+    }
+
+    /// Weighted degree vector (the Laplacian diagonal).
+    pub fn degrees(&self) -> &[f64] {
+        &self.diag
+    }
+}
+
+impl LinearOperator for LaplacianOperator {
+    fn nrows(&self) -> usize {
+        self.n
+    }
+    fn ncols(&self) -> usize {
+        self.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            y[i] = self.diag[i] * x[i];
+        }
+        for (&(i, j), &w) in self.edges.iter().zip(&self.weights) {
+            y[i] -= w * x[j];
+            y[j] -= w * x[i];
+        }
+    }
+}
+
+/// Matrix-free gossip matrix `W = I − L(g)` (paper Eq. 5), applied as
+/// `Wx = x − Lx` through a [`LaplacianOperator`].
+#[derive(Debug, Clone)]
+pub struct GossipOperator {
+    lap: LaplacianOperator,
+}
+
+impl GossipOperator {
+    /// Build from an edge list with aligned per-edge weights.
+    pub fn new(n: usize, edges: &[(usize, usize)], weights: &[f64]) -> GossipOperator {
+        GossipOperator {
+            lap: LaplacianOperator::new(n, edges, weights),
+        }
+    }
+}
+
+impl LinearOperator for GossipOperator {
+    fn nrows(&self) -> usize {
+        self.lap.nrows()
+    }
+    fn ncols(&self) -> usize {
+        self.lap.ncols()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.lap.apply(x, y);
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi = xi - *yi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{CscMatrix, DenseMatrix};
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_graph(n: usize, seed: u64) -> (Vec<(usize, usize)>, Vec<f64>) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut edges = Vec::new();
+        let mut weights = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.next_f64() < 0.3 {
+                    edges.push((i, j));
+                    weights.push(rng.next_f64());
+                }
+            }
+        }
+        (edges, weights)
+    }
+
+    fn laplacian_dense(n: usize, edges: &[(usize, usize)], w: &[f64]) -> DenseMatrix {
+        let mut l = DenseMatrix::zeros(n, n);
+        for (&(i, j), &wv) in edges.iter().zip(w) {
+            l[(i, i)] += wv;
+            l[(j, j)] += wv;
+            l[(i, j)] -= wv;
+            l[(j, i)] -= wv;
+        }
+        l
+    }
+
+    #[test]
+    fn laplacian_operator_matches_dense_and_csc() {
+        for seed in 0..5u64 {
+            let n = 12 + seed as usize;
+            let (edges, w) = random_graph(n, seed);
+            let dense = laplacian_dense(n, &edges, &w);
+            let csc = CscMatrix::from_triplets(
+                n,
+                n,
+                (0..n)
+                    .flat_map(|i| (0..n).map(move |j| (i, j)))
+                    .map(|(i, j)| (i, j, dense[(i, j)]))
+                    .collect::<Vec<_>>(),
+            );
+            let op = LaplacianOperator::new(n, &edges, &w);
+            let mut rng = Xoshiro256pp::seed_from_u64(seed + 100);
+            let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let yd = dense.apply_vec(&x);
+            let yc = csc.apply_vec(&x);
+            let yf = op.apply_vec(&x);
+            for i in 0..n {
+                assert!((yd[i] - yc[i]).abs() < 1e-12, "csc mismatch at {i}");
+                assert!((yd[i] - yf[i]).abs() < 1e-12, "matrix-free mismatch at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_operator_is_identity_minus_laplacian() {
+        let n = 9;
+        let (edges, w) = random_graph(n, 3);
+        let lap = LaplacianOperator::new(n, &edges, &w);
+        let gos = GossipOperator::new(n, &edges, &w);
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let lx = lap.apply_vec(&x);
+        let wx = gos.apply_vec(&x);
+        for i in 0..n {
+            assert!((wx[i] - (x[i] - lx[i])).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn gossip_operator_preserves_constants() {
+        // W·1 = 1 structurally (double stochasticity).
+        let n = 14;
+        let (edges, w) = random_graph(n, 9);
+        let gos = GossipOperator::new(n, &edges, &w);
+        let ones = vec![1.0; n];
+        let w1 = gos.apply_vec(&ones);
+        for v in w1 {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_preconditioner_copies() {
+        let p = IdentityPrecond;
+        let r = [1.0, -2.0, 3.0];
+        let mut z = [0.0; 3];
+        p.precondition(&r, &mut z);
+        assert_eq!(z, r);
+    }
+}

@@ -6,12 +6,19 @@
 //! batopo allocate  --bw 9.76,9.76,3.25,3.25 --r 4
 //! batopo train     --topology torus --n 16 --model tiny --epochs 10
 //! batopo reproduce fig1 table1 [--quick] [--out results/] [--threads 8]
+//! batopo bench     mixing|solver|admm|scale|train|all [--quick] [--threads 8]
+//!                  [--json out/BENCH_pr.json] [--out out/]
+//! batopo bench     compare BENCH_baseline.json out/BENCH_pr.json
+//!                  [--threshold 1.25] [--min-ns 50000]
 //! batopo info
 //! ```
 
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use batopo::bandwidth::allocation::allocate_edge_capacity;
 use batopo::bandwidth::timing::TimeModel;
-use batopo::bench::experiments;
+use batopo::bench::records::{self, BenchRecord};
+use batopo::bench::{experiments, perf};
 use batopo::config;
 use batopo::consensus::{run_consensus, ConsensusConfig};
 use batopo::graph::Topology;
@@ -31,10 +38,11 @@ fn main() {
         "allocate" => cmd_allocate(&args),
         "train" => cmd_train(&args),
         "reproduce" => cmd_reproduce(&args),
+        "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: batopo <optimize|consensus|allocate|train|reproduce|info> [options]\n\
+                "usage: batopo <optimize|consensus|allocate|train|reproduce|bench|info> [options]\n\
                  \n\
                  optimize  --n N --r R [--scenario S] [--seed X] [--quick] [--out file.json]\n\
                  consensus --topology NAME|file.json --n N [--scenario S] [--eps 1e-4]\n\
@@ -43,6 +51,10 @@ fn main() {
                  \u{20}          [--epochs E] [--target 0.75]\n\
                  reproduce <fig1|fig2|fig4|fig6|fig7..fig10|table1|table2|dynamic|all>...\n\
                  \u{20}          [--quick] [--out results/] [--seed X] [--threads T]\n\
+                 bench     <mixing|solver|admm|scale|train|all>...\n\
+                 \u{20}          [--quick] [--threads T] [--json FILE] [--out out/]\n\
+                 bench     compare BASELINE.json CANDIDATE.json\n\
+                 \u{20}          [--threshold 1.25] [--min-ns 50000]\n\
                  info\n\
                  \n\
                  scenarios: homogeneous (any n) | node-level (even n) |\n\
@@ -171,6 +183,13 @@ fn cmd_reproduce(args: &Args) -> Result<(), String> {
         if experiments::TARGETS.contains(&v) {
             targets.push(v.to_string());
             quick = true;
+        } else if !(v == "1" || v.eq_ignore_ascii_case("true")) {
+            // Same trap as `bench`: a typo'd target bound as --quick's value
+            // must not silently drop both the flag and the target.
+            return Err(format!(
+                "unknown reproduce target {v:?} (captured as --quick's value; expected one of {})",
+                experiments::TARGETS.join("|")
+            ));
         }
     }
     if targets.is_empty() {
@@ -222,6 +241,160 @@ fn cmd_reproduce(args: &Args) -> Result<(), String> {
         ));
     }
     Ok(())
+}
+
+/// `batopo bench <targets…>` — run the perf benches and persist
+/// `BenchRecord` JSON; `batopo bench compare A B` — the CI perf gate.
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let positional = &args.positional()[1..];
+    if positional.first().map(|s| s.as_str()) == Some("compare") {
+        return cmd_bench_compare(args);
+    }
+
+    let mut targets: Vec<String> = positional.to_vec();
+    let mut quick = args.flag("quick");
+    // The tiny CLI parser greedily binds the next token to a bare flag, so
+    // `bench solver --quick scale` captures "scale" as --quick's value;
+    // reclaim known target names (mirrors `reproduce`).
+    if let Some(v) = args.get("quick") {
+        if perf::BENCH_TARGETS.contains(&v) || v == "all" {
+            targets.push(v.to_string());
+            quick = true;
+        } else if !(v == "1" || v.eq_ignore_ascii_case("true")) {
+            // Don't let a typo'd target vanish into --quick's value (and
+            // silently run at full budgets on top of it).
+            return Err(format!(
+                "unknown bench target {v:?} (captured as --quick's value; expected one of {}|all)",
+                perf::BENCH_TARGETS.join("|")
+            ));
+        }
+    }
+    if targets.is_empty() {
+        return Err(format!(
+            "bench needs at least one target: {}|all (or `bench compare A B`)",
+            perf::BENCH_TARGETS.join("|")
+        ));
+    }
+    let mut expanded: Vec<String> = Vec::new();
+    for t in &targets {
+        if t == "all" {
+            for a in perf::ALL_TARGETS {
+                if !expanded.iter().any(|e| e == a) {
+                    expanded.push(a.to_string());
+                }
+            }
+        } else if perf::BENCH_TARGETS.contains(&t.as_str()) {
+            if !expanded.contains(t) {
+                expanded.push(t.clone());
+            }
+        } else {
+            return Err(format!(
+                "unknown bench target {t} (expected one of {}|all)",
+                perf::BENCH_TARGETS.join("|")
+            ));
+        }
+    }
+
+    let mut opts = perf::PerfOptions {
+        quick,
+        ..Default::default()
+    };
+    let threads: usize = args.parse_or("threads", 0usize).map_err(|e| e.to_string())?;
+    if threads > 0 {
+        opts.threads = threads;
+    }
+    println!(
+        "bench {:?} (quick={}, threads={})",
+        expanded, opts.quick, opts.threads
+    );
+    let t0 = std::time::Instant::now();
+    let mut per_target: Vec<(String, Vec<BenchRecord>)> = Vec::new();
+    for t in &expanded {
+        let recs = perf::run_target(t, &opts);
+        per_target.push((t.clone(), recs));
+    }
+    println!("bench done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    if let Some(json_path) = args.get("json") {
+        // Single combined file (the CI perf-smoke shape).
+        let all: Vec<BenchRecord> = per_target.iter().flat_map(|(_, r)| r.clone()).collect();
+        let target_name = if expanded.iter().map(String::as_str).collect::<Vec<_>>()
+            == perf::ALL_TARGETS.to_vec()
+        {
+            "all".to_string()
+        } else {
+            expanded.join("+")
+        };
+        records::write_records(Path::new(json_path), &target_name, quick, &all)
+            .map_err(|e| e.to_string())?;
+        println!("wrote {} records to {json_path}", all.len());
+    } else {
+        // One BENCH_<target>.json per target.
+        let out_dir = std::path::PathBuf::from(args.str_or("out", "out"));
+        for (t, recs) in &per_target {
+            let path = out_dir.join(format!("BENCH_{t}.json"));
+            records::write_records(&path, t, quick, recs).map_err(|e| e.to_string())?;
+            println!("wrote {} records to {}", recs.len(), path.display());
+        }
+    }
+    Ok(())
+}
+
+/// The CI perf gate: fail (exit 1) on any >threshold mean-time regression of
+/// a candidate record against its committed baseline counterpart.
+fn cmd_bench_compare(args: &Args) -> Result<(), String> {
+    let pos = &args.positional()[2..];
+    if pos.len() != 2 {
+        return Err("bench compare needs exactly two files: BASELINE.json CANDIDATE.json".into());
+    }
+    let baseline = records::read_records(Path::new(&pos[0]))?;
+    let candidate = records::read_records(Path::new(&pos[1]))?;
+    let threshold: f64 = args.parse_or("threshold", 1.25).map_err(|e| e.to_string())?;
+    let min_ns: f64 = args.parse_or("min-ns", 50_000.0).map_err(|e| e.to_string())?;
+    let rep = records::compare(&baseline, &candidate, threshold, min_ns);
+    println!(
+        "bench compare: {} record(s) compared (gate at {:.0}% regression, noise floor {:.0} ns)",
+        rep.compared,
+        (threshold - 1.0) * 100.0,
+        min_ns
+    );
+    if rep.missing_baseline > 0 {
+        println!(
+            "  note: {} candidate record(s) have no baseline — refresh BENCH_baseline.json",
+            rep.missing_baseline
+        );
+    }
+    if rep.missing_candidate > 0 {
+        println!(
+            "  note: {} baseline record(s) not present in candidate",
+            rep.missing_candidate
+        );
+    }
+    if rep.below_noise_floor > 0 {
+        println!(
+            "  note: {} matched record(s) below the noise floor were skipped",
+            rep.below_noise_floor
+        );
+    }
+    if rep.regressions.is_empty() {
+        println!("  OK — no mean-time regressions");
+        return Ok(());
+    }
+    for r in &rep.regressions {
+        println!(
+            "  REGRESSION {} (n={}): {:.3} ms -> {:.3} ms ({:+.1}%)",
+            r.name,
+            r.n,
+            r.baseline_ns / 1e6,
+            r.candidate_ns / 1e6,
+            (r.ratio - 1.0) * 100.0
+        );
+    }
+    Err(format!(
+        "{} perf regression(s) above the {:.0}% gate",
+        rep.regressions.len(),
+        (threshold - 1.0) * 100.0
+    ))
 }
 
 fn cmd_info() -> Result<(), String> {

@@ -266,7 +266,11 @@ pub fn run_admm(
     let mut du = vec![0.0; lay.total];
 
     // ---- Constant-matrix preconditioner (§V-C). ----
+    // ILU(0) factors the assembled CSC pattern; the Krylov matvecs themselves
+    // run through the matrix-free KKT operator (parity locked by tests in
+    // `operators`).
     let ilu = Ilu0::factor(&ops.kkt, 1e-6);
+    let kkt_op = ops.kkt_operator();
     let kdim = lay.total + lay.rows;
     let mut kkt_x = vec![0.0; kdim]; // warm-started [X; λ]
     kkt_x[..lay.total].copy_from_slice(&x);
@@ -313,7 +317,7 @@ pub fn run_admm(
             kkt_rhs[i] = y[i] - (du[i] + ops.c[i]) / rho;
         }
         kkt_rhs[lay.total..].copy_from_slice(&ops.b);
-        let out = bicgstab_ws(&ops.kkt, &kkt_rhs, &mut kkt_x, Some(&ilu), &opts, &mut ws);
+        let out = bicgstab_ws(&kkt_op, &kkt_rhs, &mut kkt_x, Some(&ilu), &opts, &mut ws);
         krylov_total += out.iterations;
         x.copy_from_slice(&kkt_x[..lay.total]);
 
@@ -356,14 +360,21 @@ pub fn run_admm(
 /// Cheap candidate quality estimate: `r_asym` of `W = I − A·Diag(g)·Aᵀ`
 /// built directly from a (projected, top-r) edge-space weight vector.
 /// Returns ∞ for iterates whose support is disconnected (`r_asym` would be 1
-/// and useless as a discriminator).
+/// and useless as a discriminator). The spectral evaluation goes through
+/// [`crate::graph::spectral::r_asym_graph`], so large-`n` candidates use the
+/// matrix-free Lanczos path instead of a dense eigendecomposition.
 fn candidate_r_asym(n: usize, g: &[f64]) -> f64 {
-    let support: Vec<(usize, usize)> = g
-        .iter()
-        .enumerate()
-        .filter(|(_, &v)| v > 1e-9)
-        .map(|(l, _)| incidence::edge_pair(n, l))
-        .collect();
+    // Canonical edge-space indices are lexicographic, so the filtered support
+    // comes out in `Graph::new`'s sorted order and the weight vector stays
+    // aligned with `graph.edges()`.
+    let mut support: Vec<(usize, usize)> = Vec::new();
+    let mut weights: Vec<f64> = Vec::new();
+    for (l, &v) in g.iter().enumerate() {
+        if v > 1e-9 {
+            support.push(incidence::edge_pair(n, l));
+            weights.push(v);
+        }
+    }
     if support.len() < n - 1 {
         return f64::INFINITY;
     }
@@ -371,8 +382,7 @@ fn candidate_r_asym(n: usize, g: &[f64]) -> f64 {
     if !crate::graph::metrics::is_connected(&graph) {
         return f64::INFINITY;
     }
-    let w = crate::graph::laplacian::weight_matrix_from_edge_space(n, g);
-    crate::graph::spectral::asymptotic_convergence_factor(&w)
+    crate::graph::spectral::r_asym_graph(&graph, &weights)
 }
 
 #[cfg(test)]

@@ -411,7 +411,9 @@ pub fn polish_support(
 }
 
 fn asym(g: &Graph, w: &[f64]) -> f64 {
-    crate::graph::spectral::asymptotic_convergence_factor(&weight_matrix_from_edge_weights(g, w))
+    // Size-dispatched: dense eigensolver below the Lanczos cutoff,
+    // matrix-free deflated Lanczos above it.
+    crate::graph::spectral::r_asym_graph(g, w)
 }
 
 /// Minimal union-find for the connectivity passes.

@@ -26,7 +26,7 @@
 
 use crate::bandwidth::ConstraintSet;
 use crate::graph::incidence::{edge_pair, num_possible_edges};
-use crate::linalg::CscMatrix;
+use crate::linalg::{CscMatrix, LinearOperator};
 
 /// Segment offsets into the stacked primal vector `X`.
 #[derive(Debug, Clone)]
@@ -118,8 +118,63 @@ pub struct AdmmOperators {
     pub b: Vec<f64>,
     /// Objective vector `c` (length `total`).
     pub c: Vec<f64>,
-    /// KKT matrix `[[I, Aᵀ],[A, −δI]]` of dimension `total + rows`.
+    /// KKT matrix `[[I, Aᵀ],[A, −δI]]` of dimension `total + rows`, assembled
+    /// in CSC. Needed by the ILU(0) preconditioner (which factors an explicit
+    /// sparsity pattern); the Krylov matvecs themselves go through the
+    /// matrix-free [`KktOperator`] from [`Self::kkt_operator`].
     pub kkt: CscMatrix,
+    /// δ regularization of the KKT zero block.
+    pub delta: f64,
+}
+
+impl AdmmOperators {
+    /// Matrix-free view of the KKT system `[[I, Aᵀ],[A, −δI]]`: applies the
+    /// blocks straight from `A` (one CSC matvec + one CSC transpose-matvec
+    /// per product) without touching the assembled KKT matrix.
+    pub fn kkt_operator(&self) -> KktOperator<'_> {
+        KktOperator {
+            a: &self.a,
+            delta: self.delta,
+            nt: self.layout.total,
+            nr: self.layout.rows,
+        }
+    }
+}
+
+/// Matrix-free saddle-point operator `[[I, Aᵀ],[A, −δI]]` over a borrowed
+/// constraint matrix `A` (paper Eq. 27/31). Implements [`LinearOperator`],
+/// so the operator-generic Bi-CGSTAB consumes it directly; parity with the
+/// assembled CSC matrix is locked by a test below.
+pub struct KktOperator<'a> {
+    a: &'a CscMatrix,
+    delta: f64,
+    nt: usize,
+    nr: usize,
+}
+
+impl LinearOperator for KktOperator<'_> {
+    fn nrows(&self) -> usize {
+        self.nt + self.nr
+    }
+    fn ncols(&self) -> usize {
+        self.nt + self.nr
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.nt + self.nr);
+        assert_eq!(y.len(), self.nt + self.nr);
+        let (xt, xb) = x.split_at(self.nt);
+        let (yt, yb) = y.split_at_mut(self.nt);
+        // Top block: x_t + Aᵀ x_b.
+        self.a.matvec_transpose_into(xb, yt);
+        for (yi, xi) in yt.iter_mut().zip(xt) {
+            *yi += xi;
+        }
+        // Bottom block: A x_t − δ x_b.
+        self.a.matvec_into(xt, yb);
+        for (yi, xi) in yb.iter_mut().zip(xb) {
+            *yi -= self.delta * xi;
+        }
+    }
 }
 
 /// Row-major vec index of matrix entry (i, j).
@@ -248,7 +303,14 @@ fn finish(
     }
     let kkt = CscMatrix::from_triplets(nt + nr, nt + nr, kt);
 
-    AdmmOperators { layout, a, b, c, kkt }
+    AdmmOperators {
+        layout,
+        a,
+        b,
+        c,
+        kkt,
+        delta,
+    }
 }
 
 #[cfg(test)]
@@ -306,6 +368,30 @@ mod tests {
         assert_eq!(ax[5], 3.0);
         assert_eq!(ax[2 * n * n + 2], -1.5);
         assert_eq!(ax[n * n + 7], 2.5);
+    }
+
+    #[test]
+    fn kkt_operator_matches_assembled_matrix() {
+        for (ops, seed) in [
+            (build_homogeneous(6, 2.0, 1e-8), 3u64),
+            (
+                build_heterogeneous(
+                    &BandwidthScenario::paper_node_level().constraints(16).unwrap(),
+                    2.0,
+                    1e-8,
+                ),
+                4u64,
+            ),
+        ] {
+            let dim = ops.kkt.rows();
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let x: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let assembled = ops.kkt.matvec(&x);
+            let free = ops.kkt_operator().apply_vec(&x);
+            for (i, (p, q)) in assembled.iter().zip(&free).enumerate() {
+                assert!((p - q).abs() < 1e-12, "row {i}: {p} vs {q}");
+            }
+        }
     }
 
     #[test]

@@ -183,6 +183,26 @@ pub fn exponential_edge_count(n: usize) -> usize {
     n * d / 2
 }
 
+/// Ring-plus-power-of-two-chords **graph** (the undirected projection of the
+/// exponential family): edges `{i, i + 2^k mod n}` for `k = 0..⌈log2 n⌉`.
+/// Sparse, connected and well-expanding at any `n` — the workload of the
+/// large-`n` spectral benches and tests, which need a raw [`Graph`] (building
+/// a [`Topology`] would assemble a dense `n × n` weight matrix).
+pub fn chorded_ring_graph(n: usize) -> Graph {
+    assert!(n >= 2);
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let mut step = 1usize;
+    while step < n {
+        for i in 0..n {
+            edges.push((i, (i + step) % n));
+        }
+        step *= 2;
+    }
+    // Graph::new normalizes, sorts and dedups (the step = n/2 chord emits
+    // each pair twice on even n).
+    Graph::new(n, edges)
+}
+
 /// U-EquiStatic [19]: undirected EquiTopo. Union of `m` random circulant
 /// offsets applied symmetrically (±a), uniform weight `1/(deg+1)` per
 /// neighbor. Has `n·m` edges and node degree `2m` (or `2m−1` when an offset

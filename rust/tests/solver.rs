@@ -1,0 +1,219 @@
+//! Solver-stack integration tests for the `LinearOperator` refactor and the
+//! `batopo bench` subsystem:
+//!
+//! - operator parity: dense vs CSC vs matrix-free Laplacian matvecs agree to
+//!   1e-12 on random graphs (property test),
+//! - Lanczos λ₂ / r_asym agreement with the dense eigensolver up to n = 256,
+//! - the matrix-free scale regime (n = 2048) that the dense path cannot run,
+//! - `bench --quick --json` round-trip: emitted `BenchRecord` JSON parses
+//!   back and satisfies the schema the CI perf gate consumes.
+
+use batopo::bench::perf::{perf_scale, PerfOptions};
+use batopo::bench::records::{self, BenchRecord};
+use batopo::graph::laplacian::{
+    laplacian_from_weights, laplacian_triplets, weight_matrix_from_edge_weights,
+};
+use batopo::graph::spectral::{
+    asymptotic_convergence_factor, asymptotic_convergence_factor_lanczos,
+    laplacian_eigenvalues, laplacian_extremes_lanczos,
+};
+use batopo::graph::Graph;
+use batopo::linalg::{
+    bicgstab, BicgstabOptions, CscMatrix, CsrMatrix, GossipOperator, LanczosOptions,
+    LaplacianOperator, LinearOperator,
+};
+use batopo::topo::baselines::chorded_ring_graph;
+use batopo::topo::weights::metropolis;
+use batopo::util::prop::Runner;
+
+// ---------------------------------------------------------------------------
+// Operator parity (dense == CSC == CSR == matrix-free)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_operator_parity_on_random_graphs() {
+    Runner::new("dense/CSC/CSR/matrix-free Laplacian matvecs agree", 30).run(|g| {
+        let n = g.usize_in(3..40);
+        let edges = g.connected_edges(n, 0.3);
+        let graph = Graph::new(n, edges);
+        let w: Vec<f64> = (0..graph.num_edges()).map(|_| g.f64_in(0.05..1.0)).collect();
+
+        let dense = laplacian_from_weights(&graph, &w);
+        let csc = CscMatrix::from_triplets(n, n, laplacian_triplets(&graph, &w));
+        let csr = CsrMatrix::from_csc(&csc).with_threads(3);
+        let free = LaplacianOperator::new(n, graph.edges(), &w);
+
+        let x: Vec<f64> = (0..n).map(|_| g.gaussian()).collect();
+        let y_dense = dense.apply_vec(&x);
+        let y_csc = csc.apply_vec(&x);
+        let y_csr = csr.apply_vec(&x);
+        let y_free = free.apply_vec(&x);
+        for i in 0..n {
+            assert!((y_dense[i] - y_csc[i]).abs() < 1e-12, "csc row {i}");
+            assert!((y_dense[i] - y_csr[i]).abs() < 1e-12, "csr row {i}");
+            assert!((y_dense[i] - y_free[i]).abs() < 1e-12, "matrix-free row {i}");
+        }
+
+        // Gossip operator parity against the assembled W.
+        let wm = weight_matrix_from_edge_weights(&graph, &w);
+        let gossip = GossipOperator::new(n, graph.edges(), &w);
+        let y_wm = wm.apply_vec(&x);
+        let y_go = gossip.apply_vec(&x);
+        for i in 0..n {
+            assert!((y_wm[i] - y_go[i]).abs() < 1e-12, "gossip row {i}");
+        }
+    });
+}
+
+#[test]
+fn bicgstab_is_operator_generic() {
+    // The same Laplacian-plus-shift system solved through three operator
+    // backends must give the same solution.
+    let n = 60;
+    let edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+    let graph = Graph::new(n, edges);
+    let w = vec![1.0; graph.num_edges()];
+    let mut trips = laplacian_triplets(&graph, &w);
+    for i in 0..n {
+        trips.push((i, i, 1.0)); // shift: L + I is SPD
+    }
+    let csc = CscMatrix::from_triplets(n, n, trips);
+    let csr = CsrMatrix::from_csc(&csc);
+    let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+    let opts = BicgstabOptions::default();
+    let (x_csc, out_csc) = bicgstab(&csc, &b, None, &opts);
+    let (x_csr, out_csr) = bicgstab(&csr, &b, None, &opts);
+    assert!(out_csc.converged && out_csr.converged);
+    for i in 0..n {
+        assert!((x_csc[i] - x_csr[i]).abs() < 1e-6, "row {i}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lanczos vs dense eigensolver, up to n = 256
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lanczos_lambda2_matches_dense_up_to_256() {
+    for n in [32usize, 96, 256] {
+        let graph = chorded_ring_graph(n);
+        let w = metropolis(&graph);
+        let l = laplacian_from_weights(&graph, &w);
+        let vals = laplacian_eigenvalues(&l);
+        let (dense_lam2, dense_max) = (vals[vals.len() - 2], vals[0]);
+        let (lam2, lam_max) =
+            laplacian_extremes_lanczos(&graph, &w, &LanczosOptions::default());
+        assert!(
+            (lam2 - dense_lam2).abs() < 1e-6,
+            "n={n}: λ₂ lanczos {lam2} vs dense {dense_lam2}"
+        );
+        assert!(
+            (lam_max - dense_max).abs() < 1e-6,
+            "n={n}: λ_max lanczos {lam_max} vs dense {dense_max}"
+        );
+    }
+}
+
+#[test]
+fn lanczos_r_asym_matches_dense_up_to_256() {
+    for n in [64usize, 256] {
+        let graph = chorded_ring_graph(n);
+        let w = metropolis(&graph);
+        let dense = asymptotic_convergence_factor(&weight_matrix_from_edge_weights(&graph, &w));
+        let lanczos =
+            asymptotic_convergence_factor_lanczos(&graph, &w, &LanczosOptions::default());
+        assert!(
+            (dense - lanczos).abs() < 1e-6,
+            "n={n}: r_asym lanczos {lanczos} vs dense {dense}"
+        );
+    }
+}
+
+#[test]
+fn matrix_free_scale_regime_runs_at_2048() {
+    // The regime the dense path cannot reach (an O(n³) Jacobi sweep on an
+    // assembled 2048² matrix): the matrix-free Lanczos path completes and
+    // returns a sane contracting spectrum.
+    let n = 2048;
+    let graph = chorded_ring_graph(n);
+    let w = metropolis(&graph);
+    let (lam2, lam_max) = laplacian_extremes_lanczos(&graph, &w, &LanczosOptions::default());
+    assert!(lam2 > 1e-4, "connected graph must have λ₂ > 0, got {lam2}");
+    assert!(lam_max > lam2);
+    assert!(lam_max < 2.0 + 1e-9, "metropolis Laplacian is bounded by 2");
+    let r = asymptotic_convergence_factor_lanczos(&graph, &w, &LanczosOptions::default());
+    assert!(r > 0.0 && r < 1.0, "r_asym {r} must contract");
+}
+
+// ---------------------------------------------------------------------------
+// bench --quick --json round-trip (the CI perf-smoke contract)
+// ---------------------------------------------------------------------------
+
+fn check_record_schema(r: &BenchRecord) {
+    assert!(!r.name.is_empty());
+    assert!(r.iters >= 1, "{}: iters {}", r.name, r.iters);
+    assert!(r.mean_ns > 0.0, "{}: mean {}", r.name, r.mean_ns);
+    assert!(r.p50_ns > 0.0);
+    assert!(r.p95_ns >= r.p50_ns * 0.999, "{}: p95 below p50", r.name);
+    assert!(r.throughput_per_s > 0.0);
+    assert!(!r.git_rev.is_empty());
+}
+
+#[test]
+fn bench_quick_json_roundtrip() {
+    // Tiny sizes so the scale target runs in test time; the emitted file
+    // must parse back into schema-valid records.
+    let opts = PerfOptions {
+        quick: true,
+        threads: 2,
+        sizes: Some(vec![64]),
+    };
+    let recs = perf_scale(&opts);
+    assert!(
+        recs.len() >= 4,
+        "scale must emit lanczos + r_asym + 2 spmv records, got {}",
+        recs.len()
+    );
+    for r in &recs {
+        check_record_schema(r);
+        assert_eq!(r.n, 64);
+    }
+
+    let dir = std::env::temp_dir().join("batopo_bench_json_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("BENCH_scale.json");
+    records::write_records(&path, "scale", true, &recs).unwrap();
+    let back = records::read_records(&path).unwrap();
+    assert_eq!(back, recs);
+
+    // The emitted file is a valid gate baseline for itself: zero regressions.
+    let rep = records::compare(&back, &recs, 1.25, 0.0);
+    assert_eq!(rep.compared, recs.len());
+    assert!(rep.regressions.is_empty());
+    assert_eq!(rep.missing_baseline, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn committed_baseline_parses_and_gates() {
+    // The checked-in BENCH_baseline.json must always satisfy the schema —
+    // this is the file the CI perf gate trusts.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_baseline.json");
+    let baseline = records::read_records(&path).unwrap();
+    assert!(!baseline.is_empty());
+    for r in &baseline {
+        check_record_schema(r);
+    }
+    // Identical records pass the gate; a 2x slowdown on every record fails it.
+    let rep = records::compare(&baseline, &baseline, 1.25, 0.0);
+    assert!(rep.regressions.is_empty());
+    let slowed: Vec<BenchRecord> = baseline
+        .iter()
+        .map(|r| BenchRecord {
+            mean_ns: r.mean_ns * 2.0,
+            ..r.clone()
+        })
+        .collect();
+    let rep = records::compare(&baseline, &slowed, 1.25, 0.0);
+    assert_eq!(rep.regressions.len(), baseline.len());
+}
