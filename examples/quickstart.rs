@@ -52,7 +52,7 @@ fn main() {
             t.num_edges(),
             t.asymptotic_convergence_factor(),
             scenario.min_edge_bandwidth(t),
-            tm.consensus_iter_time(&scenario, t) * 1e3,
+            tm.consensus_iter_time(&scenario, t).expect("positive bandwidth") * 1e3,
         );
     }
 

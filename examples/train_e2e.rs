@@ -1,23 +1,25 @@
 //! End-to-end driver: the full three-layer system on a real workload.
 //!
 //! Pipeline exercised: **L3** Rust coordinator (leader + worker threads,
-//! simulated cluster clock, bandwidth model) → **runtime** PJRT-compiled
-//! artifacts → **L2** transformer fwd/bwd + fused momentum-SGD → **L1**
-//! Pallas gossip mixing — decentralized SGD of a transformer classifier
-//! across 16 simulated nodes, comparing BA-Topo against ring and the
-//! exponential graph on time-to-accuracy, and logging the loss curves to
-//! `results/train_e2e.csv` (recorded in EXPERIMENTS.md).
+//! simulated cluster clock, bandwidth model) → **runtime** execution backend
+//! (PJRT-compiled artifacts when present, the host-native engine otherwise)
+//! → **L2** transformer fwd/bwd + fused momentum-SGD → **L1** gossip mixing
+//! — decentralized SGD of a transformer classifier across 16 simulated
+//! nodes, comparing BA-Topo against ring and the exponential graph on
+//! time-to-accuracy, and logging the loss curves to `results/train_e2e.csv`
+//! (recorded in EXPERIMENTS.md).
 //!
 //! ```text
 //! cargo run --release --example train_e2e [-- --model tiny --epochs 12 --quick]
 //! cargo run --release --example train_e2e -- --model base   # ~3.2M params
+//! cargo run --release --example train_e2e -- --backend host # force host
 //! ```
 
 use batopo::bandwidth::scenarios::BandwidthScenario;
 use batopo::bench::experiments;
 use batopo::optimizer::BaTopoOptimizer;
 use batopo::runtime::mixer::MixVariant;
-use batopo::runtime::PjRtEngine;
+use batopo::runtime::ExecBackend;
 use batopo::topo::baselines::Baseline;
 use batopo::training::{DsgdConfig, DsgdTrainer};
 use batopo::util::csv::CsvWriter;
@@ -31,12 +33,14 @@ fn main() {
     let target: f64 = args.parse_or("target", 0.75).unwrap();
     let n = 16usize;
 
-    let engine = PjRtEngine::from_artifacts().expect("run `make artifacts` first");
-    let cfg_info = engine.manifest().configs.get(&model).expect("model config");
+    let backend = ExecBackend::by_name(&args.str_or("backend", "auto")).expect("backend");
+    let cfg_info = backend.model_config(&model).expect("model config");
     println!(
-        "=== end-to-end DSGD: model '{model}' ({} params in {} tensors), n={n} nodes ===\n",
+        "=== end-to-end DSGD: model '{model}' ({} params in {} tensors), n={n} nodes, \
+         {} backend ===\n",
         cfg_info.num_params,
-        cfg_info.params.len()
+        cfg_info.params.len(),
+        backend.name()
     );
 
     let scenario = BandwidthScenario::paper_homogeneous(n);
@@ -70,7 +74,7 @@ fn main() {
         cfg.epochs = epochs;
         cfg.target_accuracy = Some(target);
         cfg.mix_variant = MixVariant::Native;
-        let trainer = DsgdTrainer::new(&engine, scenario.clone(), cfg);
+        let trainer = DsgdTrainer::new(&backend, scenario.clone(), cfg);
         let t0 = std::time::Instant::now();
         let out = trainer.run(&topo).expect("train");
         let wall = t0.elapsed().as_secs_f64();

@@ -126,33 +126,66 @@ pub struct DynamicTopologyController {
     current: Topology,
     /// Phases at which a re-optimization was installed.
     pub switches: Vec<usize>,
+    /// Online re-optimizations that failed (the incumbent topology was kept
+    /// — the simulation continues instead of aborting).
+    pub reopt_failures: usize,
 }
 
 impl DynamicTopologyController {
-    /// Initialize by optimizing for the first phase.
+    /// Initialize by optimizing for the first phase. If that optimization is
+    /// infeasible, fall back to a ring over the trace's nodes (logged and
+    /// counted in [`Self::reopt_failures`]) rather than aborting.
     pub fn new(trace: &BandwidthTrace, policy: DynamicPolicy) -> DynamicTopologyController {
-        let topo = optimize_for(&trace.phases[0], policy.r, policy.quick, policy.seed);
+        let n = trace.num_nodes();
+        let mut reopt_failures = 0;
+        let topo = match optimize_for(&trace.phases[0], policy.r, policy.quick, policy.seed) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!(
+                    "warning: initial dynamic optimization failed ({e}); \
+                     falling back to a ring over {n} nodes"
+                );
+                reopt_failures += 1;
+                crate::topo::baselines::ring(n)
+            }
+        };
         DynamicTopologyController {
             policy,
             current: topo,
             switches: Vec::new(),
+            reopt_failures,
         }
     }
 
-    /// Current topology.
-    pub fn topology(&self) -> &Topology {
-        &self.current
-    }
-
-    /// Observe phase `k`'s bandwidths; maybe re-optimize. Returns true when
-    /// a new topology was installed.
+    /// Observe phase `k`'s bandwidths; maybe re-optimize. Returns true when a
+    /// new topology was installed. A failed online re-optimization keeps the
+    /// incumbent (counted in [`Self::reopt_failures`], surfaced per phase in
+    /// [`PhaseReport::reopt_failures`]); an incumbent with no finite round
+    /// time under the new bandwidths (scripted outage) forces a switch
+    /// whenever the fresh optimum has one.
     pub fn observe(&mut self, k: usize, bw: &[f64], tm: &TimeModel) -> bool {
         let sc = BandwidthScenario::NodeLevel { bw: bw.to_vec() };
-        let incumbent_t = tm.consensus_iter_time(&sc, &self.current)
-            / -self.current.asymptotic_convergence_factor().max(1e-9).ln();
-        let fresh = optimize_for(bw, self.policy.r, self.policy.quick, self.policy.seed + k as u64);
-        let fresh_t = tm.consensus_iter_time(&sc, &fresh)
-            / -fresh.asymptotic_convergence_factor().max(1e-9).ln();
+        // τ ≈ t_iter / −ln(r_asym): simulated seconds per e-fold of error.
+        let tau = |topo: &Topology| -> f64 {
+            match tm.consensus_iter_time(&sc, topo) {
+                Ok(t) => t / -topo.asymptotic_convergence_factor().max(1e-9).ln(),
+                Err(_) => f64::INFINITY, // outage: no finite round time
+            }
+        };
+        let incumbent_t = tau(&self.current);
+        let seed = self.policy.seed + k as u64;
+        let fresh = match optimize_for(bw, self.policy.r, self.policy.quick, seed) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!(
+                    "warning: dynamic re-optimization failed at phase {k} ({e}); \
+                     keeping the incumbent topology"
+                );
+                self.reopt_failures += 1;
+                return false;
+            }
+        };
+        let fresh_t = tau(&fresh);
         if incumbent_t > self.policy.hysteresis * fresh_t {
             self.current = fresh;
             self.switches.push(k);
@@ -161,9 +194,19 @@ impl DynamicTopologyController {
             false
         }
     }
+
+    /// Current topology.
+    pub fn topology(&self) -> &Topology {
+        &self.current
+    }
 }
 
-fn optimize_for(bw: &[f64], r: usize, quick: bool, seed: u64) -> Topology {
+fn optimize_for(
+    bw: &[f64],
+    r: usize,
+    quick: bool,
+    seed: u64,
+) -> Result<Topology, crate::optimizer::OptimizeError> {
     let sc = BandwidthScenario::NodeLevel { bw: bw.to_vec() };
     let mut spec = OptimizeSpec::with_scenario(sc, r);
     if quick {
@@ -174,9 +217,7 @@ fn optimize_for(bw: &[f64], r: usize, quick: bool, seed: u64) -> Topology {
         spec.restarts = 1;
     }
     spec.seed = seed;
-    BaTopoOptimizer::new(spec)
-        .run()
-        .expect("dynamic re-optimization")
+    BaTopoOptimizer::new(spec).run()
 }
 
 /// Outcome of a dynamic consensus simulation.
@@ -205,6 +246,8 @@ pub struct PhaseReport {
     pub rounds: usize,
     /// Topology switches installed so far.
     pub switches: usize,
+    /// Online re-optimizations that failed so far (incumbent kept).
+    pub reopt_failures: usize,
     /// Minimum available edge bandwidth of the current topology under the
     /// phase's bandwidths (GB/s).
     pub b_min: f64,
@@ -271,7 +314,11 @@ fn simulate_core(
             budget -= policy.switch_cost; // pay for the switch
         }
         let topo = controller.topology().clone();
-        let t_iter = tm.consensus_iter_time(&sc, &topo);
+        // A scripted outage (an edge at zero bandwidth) has no finite round
+        // time: the phase elapses with no gossip instead of panicking.
+        let t_iter = tm
+            .consensus_iter_time(&sc, &topo)
+            .unwrap_or(f64::INFINITY);
         let w = &topo.weights;
         while budget >= t_iter {
             budget -= t_iter;
@@ -299,6 +346,7 @@ fn simulate_core(
                 log_error: (error_of(&x) / e0).max(1e-300).log10(),
                 rounds,
                 switches: controller.switches.len(),
+                reopt_failures: controller.reopt_failures,
                 b_min: sc.min_edge_bandwidth(&topo),
             });
         }
@@ -370,6 +418,39 @@ mod tests {
             adaptive.final_log_error,
             static_run.final_log_error
         );
+    }
+
+    #[test]
+    fn zero_bandwidth_phase_pauses_gossip_instead_of_panicking() {
+        // Regression: a trace that drives a node to exactly zero bandwidth
+        // (an outage) used to panic inside TimeModel::iter_comm_time. The
+        // phase must now simply elapse with no gossip rounds.
+        let n = 6;
+        let mut outage = vec![9.76; n];
+        outage[0] = 0.0;
+        let trace = BandwidthTrace {
+            phases: vec![vec![9.76; n], outage, vec![9.76; n]],
+            phase_seconds: 0.5,
+        };
+        let policy = DynamicPolicy {
+            r: 8,
+            quick: true,
+            ..Default::default()
+        };
+        let healthy = BandwidthTrace {
+            phases: vec![vec![9.76; n]; 3],
+            phase_seconds: 0.5,
+        };
+        let run = simulate_dynamic_consensus(&trace, policy.clone(), false, 3);
+        let base = simulate_dynamic_consensus(&healthy, policy, false, 3);
+        assert!(run.rounds > 0, "healthy phases must still gossip");
+        assert!(
+            run.rounds < base.rounds,
+            "outage phase executed gossip rounds: {} vs {}",
+            run.rounds,
+            base.rounds
+        );
+        assert!(run.final_log_error <= 0.0);
     }
 
     #[test]

@@ -11,9 +11,41 @@
 //!
 //! We keep the identical model (with the identical constants by default) so
 //! every reported time axis follows the paper's methodology.
+//!
+//! A topology whose slowest edge has zero (or negative/non-finite) available
+//! bandwidth has no finite round time; the model reports that as a
+//! [`TimingError`] instead of panicking, so scripted `link_degrade` /
+//! `node_churn` scenarios that drive an edge to zero can be handled by the
+//! caller (the dynamic simulator treats such a phase as "no gossip possible"
+//! — see [`crate::bandwidth::dynamic`]).
 
 use super::scenarios::BandwidthScenario;
 use crate::graph::Topology;
+
+/// Failure of the analytic time model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TimingError {
+    /// The topology's minimum available edge bandwidth is not a positive
+    /// finite number — Eq. 34's `b_avail / b_min` is undefined.
+    NonPositiveBandwidth {
+        /// The offending `b_min` (GB/s).
+        b_min: f64,
+    },
+}
+
+impl std::fmt::Display for TimingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TimingError::NonPositiveBandwidth { b_min } => write!(
+                f,
+                "topology has an edge with non-positive available bandwidth \
+                 (b_min = {b_min} GB/s); Eq. 34 round time is undefined"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TimingError {}
 
 /// Measured-constant time model.
 #[derive(Debug, Clone)]
@@ -39,21 +71,36 @@ impl Default for TimeModel {
 
 impl TimeModel {
     /// Communication time of one synchronization round over the slowest edge
-    /// (Eq. 34), in seconds.
-    pub fn iter_comm_time(&self, scenario: &BandwidthScenario, topo: &Topology) -> f64 {
+    /// (Eq. 34), in seconds. Errors when the slowest edge has no positive
+    /// finite bandwidth (a scripted outage).
+    pub fn iter_comm_time(
+        &self,
+        scenario: &BandwidthScenario,
+        topo: &Topology,
+    ) -> Result<f64, TimingError> {
         let b_min = scenario.min_edge_bandwidth(topo);
-        assert!(b_min > 0.0, "topology has a zero-bandwidth edge");
-        (self.b_avail / b_min) * self.t_comm
+        if !(b_min > 0.0 && b_min.is_finite()) {
+            return Err(TimingError::NonPositiveBandwidth { b_min });
+        }
+        Ok((self.b_avail / b_min) * self.t_comm)
     }
 
     /// Consensus-experiment iteration time — pure gossip, no compute.
-    pub fn consensus_iter_time(&self, scenario: &BandwidthScenario, topo: &Topology) -> f64 {
+    pub fn consensus_iter_time(
+        &self,
+        scenario: &BandwidthScenario,
+        topo: &Topology,
+    ) -> Result<f64, TimingError> {
         self.iter_comm_time(scenario, topo)
     }
 
     /// Training iteration time: communication + compute.
-    pub fn train_iter_time(&self, scenario: &BandwidthScenario, topo: &Topology) -> f64 {
-        self.iter_comm_time(scenario, topo) + self.t_comp
+    pub fn train_iter_time(
+        &self,
+        scenario: &BandwidthScenario,
+        topo: &Topology,
+    ) -> Result<f64, TimingError> {
+        Ok(self.iter_comm_time(scenario, topo)? + self.t_comp)
     }
 
     /// Epoch time (Eq. 35) for `c_iter` iterations per epoch.
@@ -62,8 +109,8 @@ impl TimeModel {
         scenario: &BandwidthScenario,
         topo: &Topology,
         c_iter: usize,
-    ) -> f64 {
-        self.train_iter_time(scenario, topo) * c_iter as f64
+    ) -> Result<f64, TimingError> {
+        Ok(self.train_iter_time(scenario, topo)? * c_iter as f64)
     }
 }
 
@@ -78,7 +125,7 @@ mod tests {
         let tm = TimeModel::default();
         let sc = BandwidthScenario::paper_homogeneous(16);
         let topo = baselines::ring(16);
-        let t = tm.consensus_iter_time(&sc, &topo);
+        let t = tm.consensus_iter_time(&sc, &topo).unwrap();
         assert!((t - 2.0 * 5.01e-3).abs() < 1e-12);
     }
 
@@ -88,7 +135,7 @@ mod tests {
         let tm = TimeModel::default();
         let sc = BandwidthScenario::paper_intra_server();
         let topo = baselines::exponential(8);
-        let t = tm.consensus_iter_time(&sc, &topo);
+        let t = tm.consensus_iter_time(&sc, &topo).unwrap();
         assert!((t - 10.0 * 5.01e-3).abs() < 1e-9, "t={t}");
     }
 
@@ -97,8 +144,8 @@ mod tests {
         let tm = TimeModel::default();
         let sc = BandwidthScenario::paper_homogeneous(16);
         let topo = baselines::ring(16);
-        let t_iter = tm.train_iter_time(&sc, &topo);
-        let t_epoch = tm.epoch_time(&sc, &topo, 97);
+        let t_iter = tm.train_iter_time(&sc, &topo).unwrap();
+        let t_epoch = tm.epoch_time(&sc, &topo, 97).unwrap();
         assert!((t_epoch - 97.0 * t_iter).abs() < 1e-12);
         assert!(t_iter > tm.t_comp);
     }
@@ -109,6 +156,32 @@ mod tests {
         let sc = BandwidthScenario::paper_homogeneous(16);
         let ring = baselines::ring(16);
         let torus = baselines::torus2d(16);
-        assert!(tm.consensus_iter_time(&sc, &ring) < tm.consensus_iter_time(&sc, &torus));
+        assert!(
+            tm.consensus_iter_time(&sc, &ring).unwrap()
+                < tm.consensus_iter_time(&sc, &torus).unwrap()
+        );
+    }
+
+    #[test]
+    fn zero_bandwidth_edge_is_an_error_not_a_panic() {
+        // Regression: a scripted link_degrade/node_churn scenario can drive a
+        // node to exactly zero bandwidth; every time-model entry point must
+        // report that as a TimingError instead of panicking.
+        let tm = TimeModel::default();
+        let mut bw = vec![9.76; 8];
+        bw[3] = 0.0;
+        let sc = BandwidthScenario::NodeLevel { bw };
+        let topo = baselines::ring(8);
+        for r in [
+            tm.iter_comm_time(&sc, &topo),
+            tm.consensus_iter_time(&sc, &topo),
+            tm.train_iter_time(&sc, &topo),
+            tm.epoch_time(&sc, &topo, 10),
+        ] {
+            match r {
+                Err(TimingError::NonPositiveBandwidth { b_min }) => assert_eq!(b_min, 0.0),
+                other => panic!("expected NonPositiveBandwidth, got {other:?}"),
+            }
+        }
     }
 }

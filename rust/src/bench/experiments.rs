@@ -30,7 +30,7 @@ use crate::consensus::{run_consensus, ConsensusConfig};
 use crate::graph::Topology;
 use crate::optimizer::{BaTopoOptimizer, OptimizeSpec};
 use crate::runtime::mixer::MixVariant;
-use crate::runtime::PjRtEngine;
+use crate::runtime::ExecBackend;
 use crate::topo::baselines::{self, Baseline};
 use crate::training::{DsgdConfig, DsgdTrainer};
 use crate::util::csv::CsvWriter;
@@ -438,7 +438,7 @@ fn baseline_set(n: usize, opts: &ExpOptions, with_equi: bool) -> Vec<Topology> {
 /// Run one DSGD figure (accuracy-vs-time curves) for one dataset config, and
 /// append its time-to-target rows to the Table II collector.
 fn dsgd_figure(
-    engine: &PjRtEngine,
+    backend: &ExecBackend,
     fig: &str,
     model: &str,
     target: f64,
@@ -454,8 +454,10 @@ fn dsgd_figure(
     );
 
     println!(
-        "── {fig} ({model}): DSGD under {} bandwidth, target acc {target} ──",
-        scenario.name()
+        "── {fig} ({model}): DSGD under {} bandwidth, target acc {target} \
+         [{} backend] ──",
+        scenario.name(),
+        backend.name()
     );
     println!(
         "{:<26} {:>6} {:>12} {:>10} {:>16}",
@@ -465,15 +467,20 @@ fn dsgd_figure(
         let mut cfg = DsgdConfig::new(model);
         cfg.seed = opts.seed;
         cfg.target_accuracy = Some(target);
-        cfg.epochs = if opts.quick { 4 } else { 16 };
+        cfg.epochs = if opts.quick { 8 } else { 16 };
         cfg.mix_variant = MixVariant::Native;
+        cfg.threads = opts.threads;
         if opts.quick {
-            let runner_cfg = engine.manifest().configs.get(model).expect("config");
+            // Smaller shards with a stronger class signal: every topology
+            // reaches the quick target within the budget, so the quick
+            // Table II still ranks on time-to-accuracy.
+            let runner_cfg = backend.model_config(model).expect("config");
             let mut spec = crate::training::data::DatasetSpec::for_config(runner_cfg);
             spec.train_per_class = 8;
+            spec.bias = 0.7;
             cfg.dataset = Some(spec);
         }
-        let trainer = DsgdTrainer::new(engine, scenario.clone(), cfg);
+        let trainer = DsgdTrainer::new(backend, scenario.clone(), cfg);
         let out = trainer.run(&topo).expect("dsgd run");
         for r in &out.records {
             curve
@@ -496,7 +503,7 @@ fn dsgd_figure(
                 topo.name.clone(),
                 topo.num_edges().to_string(),
                 format!("{:.2}", target),
-                ttt.map(|t| format!("{t:.2}")).unwrap_or("-".into()),
+                ttt.map(|t| format!("{t:.3}")).unwrap_or("-".into()),
                 format!("{:.4}", out.final_accuracy),
             ])
             .unwrap();
@@ -512,17 +519,15 @@ fn dsgd_figure(
     curve.flush().unwrap();
 }
 
-/// Table II (plus Figs. 7–10 curves): DSGD time-to-target-accuracy across the
-/// four bandwidth scenarios and both synthetic datasets.
-/// Returns false when the target had to be skipped (no PJRT engine).
-pub fn table2(opts: &ExpOptions) -> bool {
-    let engine = match PjRtEngine::from_artifacts() {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("table2 skipped — PJRT engine unavailable: {e}");
-            return false;
-        }
-    };
+/// Table II (plus Figs. 7–10 curves): DSGD time-to-target-accuracy. The full
+/// run sweeps all four bandwidth scenarios and both synthetic datasets;
+/// `--quick` keeps the CI-speed subset (the two heterogeneous-bandwidth
+/// cells on the `tiny` dataset, with a modest target every topology reaches
+/// within the reduced budget). Runs on whatever backend `ExecBackend::auto()`
+/// resolves — host-native when no PJRT artifacts exist — so this family
+/// works fully offline.
+pub fn table2(opts: &ExpOptions) {
+    let backend = ExecBackend::auto();
     let mut t2 = opts.artifact_csv(
         "table2.csv",
         &[
@@ -533,16 +538,7 @@ pub fn table2(opts: &ExpOptions) -> bool {
     // Targets chosen (like the paper's 84%/62%) to be reachable by every
     // topology on the synthetic tasks; see EXPERIMENTS.md.
     let specs: Vec<(&str, &str, f64)> = if opts.quick {
-        vec![
-            ("fig7", "tiny", 0.75),
-            ("fig8", "tiny", 0.75),
-            ("fig9", "tiny", 0.75),
-            ("fig10", "tiny", 0.75),
-            ("fig7", "tiny100", 0.22),
-            ("fig8", "tiny100", 0.22),
-            ("fig9", "tiny100", 0.22),
-            ("fig10", "tiny100", 0.22),
-        ]
+        vec![("fig8", "tiny", 0.45), ("fig9", "tiny", 0.45)]
     } else {
         vec![
             ("fig7", "tiny", 0.90),
@@ -556,11 +552,10 @@ pub fn table2(opts: &ExpOptions) -> bool {
         ]
     };
     for (fig, model, target) in specs {
-        dsgd_figure(&engine, fig, model, target, opts, &mut t2);
+        dsgd_figure(&backend, fig, model, target, opts, &mut t2);
     }
     t2.flush().unwrap();
     println!("table2.csv written to {}", opts.out_dir.display());
-    true
 }
 
 /// Fig. 7 — DSGD under homogeneous bandwidth (tiny dataset).
@@ -580,15 +575,9 @@ pub fn fig10(opts: &ExpOptions) {
     single_fig("fig10", opts);
 }
 
-/// Returns false when the figure had to be skipped (no PJRT engine).
-fn single_fig(fig: &str, opts: &ExpOptions) -> bool {
-    let engine = match PjRtEngine::from_artifacts() {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("{fig} skipped — PJRT engine unavailable: {e}");
-            return false;
-        }
-    };
+/// One DSGD figure on the auto-resolved backend (host-native offline).
+fn single_fig(fig: &str, opts: &ExpOptions) {
+    let backend = ExecBackend::auto();
     let mut t2 = opts.artifact_csv(
         &format!("{fig}_rows.csv"),
         &[
@@ -596,10 +585,9 @@ fn single_fig(fig: &str, opts: &ExpOptions) -> bool {
             "final_acc",
         ],
     );
-    let target = if opts.quick { 0.55 } else { 0.75 };
-    dsgd_figure(&engine, fig, "tiny", target, opts, &mut t2);
+    let target = if opts.quick { 0.45 } else { 0.75 };
+    dsgd_figure(&backend, fig, "tiny", target, opts, &mut t2);
     t2.flush().unwrap();
-    true
 }
 
 // ---------------------------------------------------------------------------
@@ -710,7 +698,7 @@ pub fn dynamic(opts: &ExpOptions) {
         "dynamic_reports.csv",
         &[
             "scenario", "adapt", "seed", "phase", "label", "sim_time_s",
-            "log10_error", "rounds", "switches", "b_min_gbps",
+            "log10_error", "rounds", "switches", "reopt_failures", "b_min_gbps",
         ],
     );
 
@@ -743,6 +731,7 @@ pub fn dynamic(opts: &ExpOptions) {
                     format!("{:.3}", r.log_error),
                     r.rounds.to_string(),
                     r.switches.to_string(),
+                    r.reopt_failures.to_string(),
                     format!("{:.3}", r.b_min),
                 ])
                 .unwrap();
@@ -768,15 +757,14 @@ pub const TARGETS: &[&str] = &[
 ];
 
 /// Dispatch by name, then write a deterministic `run_manifest.json` listing
-/// the run configuration and every CSV artifact this run produced. Returns
-/// the targets that had to be skipped (PJRT engine unavailable) so callers
-/// can decide whether that is an error — `batopo reproduce` fails on skipped
-/// targets that were requested explicitly, and tolerates them under `all`.
-pub fn run(names: &[String], opts: &ExpOptions) -> Vec<String> {
+/// the run configuration and every CSV artifact this run produced. Every
+/// target — including the DSGD family, via the host-native backend — runs
+/// offline, so nothing is ever skipped any more; the manifest keeps its
+/// (now always-empty) `skipped` key for schema stability.
+pub fn run(names: &[String], opts: &ExpOptions) {
     std::fs::create_dir_all(&opts.out_dir).expect("results dir");
     let all = names.iter().any(|n| n == "all");
     let want = |n: &str| all || names.iter().any(|x| x == n);
-    let mut skipped: Vec<String> = Vec::new();
     if want("fig1") {
         fig1(opts);
     }
@@ -795,18 +783,17 @@ pub fn run(names: &[String], opts: &ExpOptions) -> Vec<String> {
     if want("dynamic") {
         dynamic(opts);
     }
-    if want("table2") && !table2(opts) {
-        skipped.push("table2".to_string());
+    if want("table2") {
+        table2(opts);
     }
     // `all` relies on table2 for the DSGD curves; an explicitly named figN
     // always produces its own figN_rows.csv, even alongside table2.
     for f in ["fig7", "fig8", "fig9", "fig10"] {
-        if names.iter().any(|x| x == f) && !single_fig(f, opts) {
-            skipped.push(f.to_string());
+        if names.iter().any(|x| x == f) {
+            single_fig(f, opts);
         }
     }
-    write_run_manifest(names, &skipped, opts);
-    skipped
+    write_run_manifest(names, &[], opts);
 }
 
 /// Emit `run_manifest.json` (via the deterministic `util::json` serializer:

@@ -15,8 +15,14 @@ use std::time::Instant;
 pub struct BenchStats {
     /// Benchmark label.
     pub name: String,
-    /// Number of timed iterations.
+    /// Number of timed iterations behind the statistics (non-finite samples
+    /// are excluded — see [`BenchStats::non_finite`]).
     pub iters: usize,
+    /// Samples dropped because they were NaN/infinite. Wall-clock timers
+    /// never produce these, but derived samples (throughput ratios, external
+    /// measurements) can; they are flagged instead of poisoning the sort and
+    /// the aggregate means the CI perf gate compares.
+    pub non_finite: usize,
     /// Mean iteration time (s).
     pub mean: f64,
     /// Median iteration time (s).
@@ -34,8 +40,13 @@ pub struct BenchStats {
 impl BenchStats {
     /// One-line human-readable report.
     pub fn report(&self) -> String {
+        let flag = if self.non_finite > 0 {
+            format!("  [{} non-finite sample(s) dropped]", self.non_finite)
+        } else {
+            String::new()
+        };
         format!(
-            "{:<40} {:>10} ± {:>9}  (median {:>10}, min {:>10}, n={})",
+            "{:<40} {:>10} ± {:>9}  (median {:>10}, min {:>10}, n={}){flag}",
             self.name,
             fmt_time(self.mean),
             fmt_time(self.stddev),
@@ -74,15 +85,35 @@ pub fn time_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) ->
     stats_from(name, samples)
 }
 
-/// Build stats from raw samples.
-pub fn stats_from(name: &str, mut samples: Vec<f64>) -> BenchStats {
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+/// Build stats from raw samples. Non-finite samples (NaN/±∞) are dropped and
+/// counted in [`BenchStats::non_finite`] rather than panicking the whole
+/// bench run inside the sort; with no finite samples at all the statistics
+/// are zeroed (and flagged).
+pub fn stats_from(name: &str, samples: Vec<f64>) -> BenchStats {
+    let total = samples.len();
+    let mut samples: Vec<f64> = samples.into_iter().filter(|x| x.is_finite()).collect();
+    let non_finite = total - samples.len();
+    samples.sort_by(f64::total_cmp);
     let n = samples.len();
+    if n == 0 {
+        return BenchStats {
+            name: name.to_string(),
+            iters: 0,
+            non_finite,
+            mean: 0.0,
+            median: 0.0,
+            p95: 0.0,
+            stddev: 0.0,
+            min: 0.0,
+            max: 0.0,
+        };
+    }
     let mean = samples.iter().sum::<f64>() / n as f64;
     let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
     BenchStats {
         name: name.to_string(),
         iters: n,
+        non_finite,
         mean,
         median: samples[n / 2],
         p95: percentile(&samples, 0.95),
@@ -135,6 +166,23 @@ mod tests {
         assert!(s.mean > 0.0);
         assert!(s.min <= s.median && s.median <= s.max);
         std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped_and_flagged() {
+        // Regression: a NaN sample used to panic the partial_cmp sort and
+        // take the whole bench run down with it.
+        let s = stats_from("t", vec![1.0, f64::NAN, 3.0, f64::INFINITY, 2.0]);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.non_finite, 2);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.median, 2.0);
+        assert!(s.report().contains("non-finite"));
+        // All-non-finite degenerates to zeroed (flagged) stats, not a panic.
+        let z = stats_from("z", vec![f64::NAN, f64::NEG_INFINITY]);
+        assert_eq!(z.iters, 0);
+        assert_eq!(z.non_finite, 2);
+        assert_eq!(z.mean, 0.0);
     }
 
     #[test]

@@ -13,8 +13,10 @@
 //! - `scale` — the large-`n` regime: matrix-free Lanczos λ₂/λ_max and
 //!   parallel CSR SpMV at n up to 2048 — sizes where the dense
 //!   eigendecomposition path cannot run,
-//! - `train` — end-to-end DSGD steps/second through the PJRT runtime
-//!   (skipped without artifacts).
+//! - `train` — end-to-end DSGD steps/second: always benches the host-native
+//!   backend (`host_train_step`, `dsgd_round_host` — the `BENCH_baseline.json`
+//!   entries the CI gate compares), plus the PJRT round when artifacts are
+//!   available (`dsgd_round`).
 
 use super::records::{git_rev, BenchRecord};
 use super::{stats_from, time_fn, BenchStats};
@@ -28,7 +30,7 @@ use crate::linalg::{CsrMatrix, Ilu0, LanczosOptions, Preconditioner};
 use crate::optimizer::operators;
 use crate::runtime::mixer::{MixVariant, Mixer};
 use crate::runtime::trainer::ModelRunner;
-use crate::runtime::PjRtEngine;
+use crate::runtime::{ExecBackend, PjRtEngine};
 use crate::topo::baselines;
 use crate::topo::weights::metropolis;
 use crate::util::rng::Xoshiro256pp;
@@ -61,12 +63,13 @@ impl PerfOptions {
     }
 }
 
-/// The bench targets `batopo bench` understands (besides `all`, which runs
-/// every target except `train` — the one target that needs PJRT artifacts).
+/// The bench targets `batopo bench` understands (plus `all`, which runs
+/// every one of them — `train` benches the always-available host backend, so
+/// none of them needs PJRT artifacts any more).
 pub const BENCH_TARGETS: &[&str] = &["mixing", "solver", "admm", "scale", "train"];
 
 /// Targets run by `bench all`.
-pub const ALL_TARGETS: &[&str] = &["mixing", "solver", "admm", "scale"];
+pub const ALL_TARGETS: &[&str] = &["mixing", "solver", "admm", "scale", "train"];
 
 fn print_stats(s: &BenchStats) {
     println!("  {}", s.report());
@@ -303,18 +306,18 @@ pub fn perf_scale(opts: &PerfOptions) -> Vec<BenchRecord> {
     out
 }
 
-/// End-to-end DSGD hot-path throughput.
-pub fn perf_train(opts: &PerfOptions) -> Vec<BenchRecord> {
-    println!("── bench train: DSGD steps/sec (tiny model, n=16, PJRT) ──");
-    let Ok(engine) = PjRtEngine::from_artifacts() else {
-        println!("  (artifacts missing — skipped)");
-        return Vec::new();
-    };
-    let rev = git_rev();
-    let runner = ModelRunner::new(&engine, "tiny", "native").expect("runner");
-    let topo = baselines::torus2d(16);
-    let mixer = Mixer::new(Some(&engine), &topo, MixVariant::Native).unwrap();
-    let n = 16;
+/// One benched DSGD round over a runner + mixer: n local steps + one gossip
+/// mix of the flat parameter matrix (the serialized hot path — the simulated
+/// cluster charges one parallel step, the bench measures host wall time).
+fn bench_dsgd_round(
+    runner: &ModelRunner,
+    mixer: &Mixer,
+    n: usize,
+    rounds: usize,
+    label: &str,
+    rec_name: &str,
+    rev: &str,
+) -> BenchRecord {
     let mut params: Vec<Vec<Vec<f32>>> = (0..n).map(|_| runner.init_params(3)).collect();
     let mut momenta: Vec<Vec<Vec<f32>>> = (0..n).map(|_| runner.zero_momenta()).collect();
     let mut rng = Xoshiro256pp::seed_from_u64(9);
@@ -323,7 +326,6 @@ pub fn perf_train(opts: &PerfOptions) -> Vec<BenchRecord> {
     let tokens: Vec<i32> = (0..b * s).map(|_| rng.index(runner.vocab()) as i32).collect();
     let targets: Vec<i32> = (0..b).map(|_| rng.index(runner.classes()) as i32).collect();
 
-    let rounds = if opts.quick { 3 } else { 10 };
     let mut samples = Vec::with_capacity(rounds);
     for _ in 0..rounds {
         let t0 = std::time::Instant::now();
@@ -342,31 +344,96 @@ pub fn perf_train(opts: &PerfOptions) -> Vec<BenchRecord> {
     let total: f64 = samples.iter().sum();
     let steps = (rounds * n) as f64;
     println!(
-        "  {rounds} rounds x {n} nodes: {:>8} total, {:.1} node-steps/s, {:>8}/round",
+        "  {label}: {rounds} rounds x {n} nodes: {:>8} total, {:.1} node-steps/s, {:>8}/round",
         super::fmt_time(total),
         steps / total,
         super::fmt_time(total / rounds as f64)
     );
-    let stats = stats_from("dsgd round", samples);
-    vec![BenchRecord::from_stats("dsgd_round", n, &stats, &rev)]
+    let stats = stats_from(rec_name, samples);
+    BenchRecord::from_stats(rec_name, n, &stats, rev)
 }
 
-/// Run one named bench target, returning its records. Unknown targets panic
-/// (the CLI validates names before dispatching).
-pub fn run_target(target: &str, opts: &PerfOptions) -> Vec<BenchRecord> {
+/// End-to-end DSGD hot-path throughput: the host-native backend always, the
+/// PJRT round additionally when artifacts are present.
+pub fn perf_train(opts: &PerfOptions) -> Vec<BenchRecord> {
+    println!("── bench train: DSGD steps/sec (tiny model, n=16) ──");
+    let rev = git_rev();
+    let n = 16;
+    let topo = baselines::torus2d(n);
+    let rounds = if opts.quick { 2 } else { 8 };
+    let mut out = Vec::new();
+
+    // Host-native backend (always available — the baseline-gated records).
+    let host = ExecBackend::host();
+    let runner = ModelRunner::new(&host, "tiny", "native").expect("host runner");
+    let hm = runner.host_model().expect("host model");
+    let mut params = runner.init_params(3);
+    let mut momenta = runner.zero_momenta();
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let b = runner.batch();
+    let tokens: Vec<i32> =
+        (0..b * runner.seq()).map(|_| rng.index(runner.vocab()) as i32).collect();
+    let targets: Vec<i32> = (0..b).map(|_| rng.index(runner.classes()) as i32).collect();
+    let step_iters = if opts.quick { 3 } else { 8 };
+    let s = super::time_fn("host train step (tiny, B=16)", 1, step_iters, || {
+        std::hint::black_box(
+            hm.train_step(&mut params, &mut momenta, &tokens, &targets).unwrap(),
+        );
+    });
+    out.push(record(&s, "host_train_step", n, &rev));
+    let mixer = Mixer::for_backend(&host, &topo, MixVariant::HostFallback).unwrap();
+    out.push(bench_dsgd_round(
+        &runner,
+        &mixer,
+        n,
+        rounds,
+        "host backend",
+        "dsgd_round_host",
+        &rev,
+    ));
+
+    // PJRT backend, when the artifacts exist. The mixer is constructed
+    // explicitly (no host fallback): a `dsgd_round` record must measure PJRT
+    // mixing or fail loudly, never silently time the host path instead.
+    if let Ok(pjrt) = ExecBackend::pjrt() {
+        let runner = ModelRunner::new(&pjrt, "tiny", "native").expect("pjrt runner");
+        let engine = pjrt.engine().expect("pjrt backend has an engine");
+        let mixer = Mixer::new(Some(engine), &topo, MixVariant::Native).expect("pjrt mixer");
+        out.push(bench_dsgd_round(
+            &runner,
+            &mixer,
+            n,
+            rounds,
+            "pjrt backend",
+            "dsgd_round",
+            &rev,
+        ));
+    } else {
+        println!("  (artifacts missing — PJRT round skipped, host records above)");
+    }
+    out
+}
+
+/// Run one named bench target, returning its records. Unknown targets are a
+/// clean error (the CLI surfaces it with a non-zero exit code).
+pub fn run_target(target: &str, opts: &PerfOptions) -> Result<Vec<BenchRecord>, String> {
     match target {
-        "mixing" => perf_mixing(opts),
-        "solver" => perf_solver(opts),
-        "admm" => perf_admm(opts),
-        "scale" => perf_scale(opts),
-        "train" => perf_train(opts),
-        other => panic!("unknown bench target {other:?}"),
+        "mixing" => Ok(perf_mixing(opts)),
+        "solver" => Ok(perf_solver(opts)),
+        "admm" => Ok(perf_admm(opts)),
+        "scale" => Ok(perf_scale(opts)),
+        "train" => Ok(perf_train(opts)),
+        other => Err(format!(
+            "unknown bench target {other:?} (expected one of {}|all)",
+            BENCH_TARGETS.join("|")
+        )),
     }
 }
 
 /// Legacy dispatch used by `cargo bench` (`bench_main.rs`): accepts the old
 /// `perf`/`perf_<name>` spellings alongside the new target names; records are
-/// printed but not persisted (use `batopo bench --json` for that).
+/// printed but not persisted (use `batopo bench --json` for that). Unknown
+/// names are ignored here (the loop only dispatches known targets).
 pub fn run(names: &[String], opts: &super::experiments::ExpOptions) {
     let popts = PerfOptions {
         quick: opts.quick,
@@ -378,7 +445,7 @@ pub fn run(names: &[String], opts: &super::experiments::ExpOptions) {
         let legacy = format!("perf_{target}");
         let run_all = all && ALL_TARGETS.contains(target);
         if run_all || names.iter().any(|x| x == target || *x == legacy) {
-            run_target(target, &popts);
+            run_target(target, &popts).expect("dispatching a known target");
         }
     }
 }

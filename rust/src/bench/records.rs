@@ -257,7 +257,7 @@ pub fn compare(
     }
     report
         .regressions
-        .sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap());
+        .sort_by(|a, b| b.ratio.total_cmp(&a.ratio));
     report
 }
 

@@ -80,7 +80,9 @@ pub fn run_consensus(
     let n = topo.num_nodes();
     assert_eq!(n, scenario.num_nodes(), "topology/scenario mismatch");
     let mixer = Mixer::new(engine, topo, cfg.mix_variant)?;
-    let iter_time = tm.consensus_iter_time(scenario, topo);
+    let iter_time = tm
+        .consensus_iter_time(scenario, topo)
+        .map_err(|e| RuntimeError::Timing(e.to_string()))?;
 
     // Gaussian init (standard normal, the paper's setup).
     let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);

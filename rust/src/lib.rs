@@ -11,10 +11,14 @@
 //!   cluster clock ([`coordinator`], [`consensus`], [`training`]).
 //! - **L2/L1 (build-time Python, `python/compile/`)** — the transformer train
 //!   step and the Pallas mixing / fused-SGD kernels, AOT-lowered to HLO text
-//!   and executed from Rust through [`runtime`] (PJRT CPU via the `xla` crate).
+//!   and executed from Rust through [`runtime`] (PJRT CPU via the `xla`
+//!   crate). The same train/eval step also exists as a pure-Rust
+//!   **host-native backend** ([`runtime::hostmodel`]), selected automatically
+//!   by [`runtime::ExecBackend::auto`] when no artifacts are present — so
+//!   every experiment family, including DSGD time-to-accuracy, runs offline.
 //!
 //! Python never runs at request time: after `make artifacts` the binary is
-//! self-contained.
+//! self-contained (and without artifacts it is self-contained from the start).
 
 #![warn(missing_docs)]
 // Numerical kernels here are written index-first on purpose (they mirror the

@@ -5,6 +5,7 @@
 //! batopo consensus --topology ring|...|<topo.json> --n 16 [--scenario …]
 //! batopo allocate  --bw 9.76,9.76,3.25,3.25 --r 4
 //! batopo train     --topology torus --n 16 --model tiny --epochs 10
+//!                  [--backend auto|host|pjrt]
 //! batopo reproduce fig1 table1 [--quick] [--out results/] [--threads 8]
 //! batopo bench     mixing|solver|admm|scale|train|all [--quick] [--threads 8]
 //!                  [--json out/BENCH_pr.json] [--out out/]
@@ -24,7 +25,7 @@ use batopo::consensus::{run_consensus, ConsensusConfig};
 use batopo::graph::Topology;
 use batopo::optimizer::BaTopoOptimizer;
 use batopo::runtime::mixer::MixVariant;
-use batopo::runtime::PjRtEngine;
+use batopo::runtime::{ExecBackend, PjRtEngine};
 use batopo::training::{DsgdConfig, DsgdTrainer};
 use batopo::util::cli::Args;
 use std::path::Path;
@@ -48,7 +49,8 @@ fn main() {
                  consensus --topology NAME|file.json --n N [--scenario S] [--eps 1e-4]\n\
                  allocate  --bw b1,b2,... --r R [--caps c1,c2,...]\n\
                  train     --topology NAME|file.json --n N [--scenario S] [--model tiny]\n\
-                 \u{20}          [--epochs E] [--target 0.75]\n\
+                 \u{20}          [--epochs E] [--target 0.75] [--backend auto|host|pjrt]\n\
+                 \u{20}          [--threads T]\n\
                  reproduce <fig1|fig2|fig4|fig6|fig7..fig10|table1|table2|dynamic|all>...\n\
                  \u{20}          [--quick] [--out results/] [--seed X] [--threads T]\n\
                  bench     <mixing|solver|admm|scale|train|all>...\n\
@@ -147,20 +149,28 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let n: usize = args.parse_req("n").map_err(|e| e.to_string())?;
     let scenario = config::scenario_by_name(&args.str_or("scenario", "homogeneous"), n)?;
     let topo = topology_arg(args, n)?;
-    let engine = PjRtEngine::from_artifacts().map_err(|e| e.to_string())?;
+    // auto = PJRT when artifacts exist, host-native otherwise.
+    let backend = ExecBackend::by_name(&args.str_or("backend", "auto"))
+        .map_err(|e| e.to_string())?;
     let mut cfg = DsgdConfig::new(&args.str_or("model", "tiny"));
     cfg.epochs = args.parse_or("epochs", 10usize).map_err(|e| e.to_string())?;
     cfg.seed = args.parse_or("seed", 17u64).map_err(|e| e.to_string())?;
+    cfg.threads = args.parse_or("threads", cfg.threads).map_err(|e| e.to_string())?;
     if let Some(t) = args.get("target") {
         cfg.target_accuracy = Some(t.parse().map_err(|_| "bad --target")?);
     }
     if args.get("mix").map(|m| m == "pallas").unwrap_or(false) {
         cfg.mix_variant = MixVariant::Pallas;
     }
-    let trainer = DsgdTrainer::new(&engine, scenario, cfg);
+    let trainer = DsgdTrainer::new(&backend, scenario, cfg);
     let out = trainer.run(&topo).map_err(|e| e.to_string())?;
-    println!("DSGD on {} ({} iters/epoch, t_iter {:.2} ms):",
-        out.topology, out.iters_per_epoch, out.iter_time * 1e3);
+    println!(
+        "DSGD on {} ({} iters/epoch, t_iter {:.2} ms, {} backend):",
+        out.topology,
+        out.iters_per_epoch,
+        out.iter_time * 1e3,
+        backend.name()
+    );
     println!("  {:>5} {:>12} {:>12} {:>10} {:>10}", "epoch", "sim time (s)", "train loss", "eval loss", "eval acc");
     for r in &out.records {
         println!("  {:>5} {:>12.2} {:>12.4} {:>10.4} {:>10.4}",
@@ -222,24 +232,12 @@ fn cmd_reproduce(args: &Args) -> Result<(), String> {
         opts.out_dir.display()
     );
     let t0 = std::time::Instant::now();
-    let skipped = experiments::run(&targets, &opts);
+    experiments::run(&targets, &opts);
     println!(
         "reproduce done in {:.1}s — artifacts in {} (see run_manifest.json)",
         t0.elapsed().as_secs_f64(),
         opts.out_dir.display()
     );
-    // A skipped target the user asked for by name is a failure; skips under
-    // a blanket `all` are tolerated (and recorded in the manifest).
-    let explicit: Vec<&String> = skipped
-        .iter()
-        .filter(|s| targets.iter().any(|t| t == *s))
-        .collect();
-    if !explicit.is_empty() {
-        return Err(format!(
-            "requested target(s) skipped — PJRT engine unavailable: {}",
-            explicit.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
-        ));
-    }
     Ok(())
 }
 
@@ -310,7 +308,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let t0 = std::time::Instant::now();
     let mut per_target: Vec<(String, Vec<BenchRecord>)> = Vec::new();
     for t in &expanded {
-        let recs = perf::run_target(t, &opts);
+        let recs = perf::run_target(t, &opts)?;
         per_target.push((t.clone(), recs));
     }
     println!("bench done in {:.1}s", t0.elapsed().as_secs_f64());
@@ -409,7 +407,23 @@ fn cmd_info() -> Result<(), String> {
             let eng = PjRtEngine::new(m).map_err(|e| e.to_string())?;
             println!("  PJRT platform ok ({} executables cached)", eng.compiled_count());
         }
-        None => println!("artifacts: NOT FOUND (run `make artifacts`)"),
+        None => {
+            println!("artifacts: NOT FOUND (run `make artifacts` for the PJRT fast path)");
+            let host = ExecBackend::host();
+            println!(
+                "  host-native backend available: lr={}, beta={}",
+                host.lr(),
+                host.beta()
+            );
+            for name in host.model_names() {
+                let cfg = host.model_config(&name).map_err(|e| e.to_string())?;
+                println!(
+                    "  config {name}: {} params in {} tensors",
+                    cfg.num_params,
+                    cfg.params.len()
+                );
+            }
+        }
     }
     Ok(())
 }

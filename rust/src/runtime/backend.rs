@@ -1,0 +1,275 @@
+//! The execution-backend abstraction: one seam through which `ModelRunner`,
+//! the `Mixer`, and the DSGD driver obtain model configs and run train/eval
+//! steps — either on the PJRT engine (AOT artifacts, the fast path) or on the
+//! always-available [host-native engine](super::hostmodel) (pure Rust, no
+//! artifacts required).
+//!
+//! `ExecBackend::auto()` is the policy every CLI entry point uses: PJRT when
+//! `artifacts/manifest.json` is discoverable and the client constructs, host
+//! otherwise. The host engine ships the same built-in model configs
+//! (`tiny`, `tiny100`, `base`) and baked optimizer constants (`lr = 0.05`,
+//! `β = 0.9`, §VI-B) that `python/compile/aot.py` exports, so experiment
+//! code is byte-identical across backends.
+
+use super::engine::PjRtEngine;
+use super::manifest::{ModelConfig, ParamSpec};
+use super::RuntimeError;
+use std::collections::BTreeMap;
+
+/// The paper's training hyperparameters (§VI-B), mirrored from
+/// `python/compile/aot.py` (`LR`, `BETA`) — the host engine's baked
+/// optimizer constants.
+pub const HOST_LR: f64 = 0.05;
+/// Momentum coefficient counterpart of [`HOST_LR`].
+pub const HOST_BETA: f64 = 0.9;
+
+/// Host-native engine state: the built-in model configs and the baked
+/// optimizer constants. No artifacts, no PJRT — everything this engine needs
+/// is in the binary.
+#[derive(Debug, Clone)]
+pub struct HostEngine {
+    configs: BTreeMap<String, ModelConfig>,
+    lr: f64,
+    beta: f64,
+}
+
+impl Default for HostEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HostEngine {
+    /// Engine with the three built-in configs of `model.py::CONFIGS`.
+    pub fn new() -> HostEngine {
+        let mut configs = BTreeMap::new();
+        for cfg in [
+            // (name, vocab, d_model, n_heads, n_layers, d_ff, seq, classes, batch)
+            Self::build_config("tiny", 64, 64, 4, 2, 128, 32, 10, 16),
+            Self::build_config("tiny100", 64, 64, 4, 2, 128, 32, 100, 16),
+            Self::build_config("base", 256, 256, 8, 4, 1024, 64, 10, 16),
+        ] {
+            configs.insert(cfg.name.clone(), cfg);
+        }
+        HostEngine {
+            configs,
+            lr: HOST_LR,
+            beta: HOST_BETA,
+        }
+    }
+
+    /// Build a [`ModelConfig`] with the canonical parameter layout of
+    /// `model.py::param_specs` (used for the built-in configs and for
+    /// custom test-scale models).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_config(
+        name: &str,
+        vocab: usize,
+        d_model: usize,
+        n_heads: usize,
+        n_layers: usize,
+        d_ff: usize,
+        seq: usize,
+        classes: usize,
+        batch: usize,
+    ) -> ModelConfig {
+        let spec = |name: &str, shape: Vec<usize>| ParamSpec {
+            name: name.to_string(),
+            shape,
+        };
+        let mut params = vec![
+            spec("tok_emb", vec![vocab, d_model]),
+            spec("pos_emb", vec![seq, d_model]),
+        ];
+        for i in 0..n_layers {
+            params.push(spec(&format!("l{i}.ln1_scale"), vec![d_model]));
+            params.push(spec(&format!("l{i}.ln1_bias"), vec![d_model]));
+            params.push(spec(&format!("l{i}.wqkv"), vec![d_model, 3 * d_model]));
+            params.push(spec(&format!("l{i}.bqkv"), vec![3 * d_model]));
+            params.push(spec(&format!("l{i}.wo"), vec![d_model, d_model]));
+            params.push(spec(&format!("l{i}.bo"), vec![d_model]));
+            params.push(spec(&format!("l{i}.ln2_scale"), vec![d_model]));
+            params.push(spec(&format!("l{i}.ln2_bias"), vec![d_model]));
+            params.push(spec(&format!("l{i}.w1"), vec![d_model, d_ff]));
+            params.push(spec(&format!("l{i}.b1"), vec![d_ff]));
+            params.push(spec(&format!("l{i}.w2"), vec![d_ff, d_model]));
+            params.push(spec(&format!("l{i}.b2"), vec![d_model]));
+        }
+        params.push(spec("lnf_scale", vec![d_model]));
+        params.push(spec("lnf_bias", vec![d_model]));
+        params.push(spec("head_w", vec![d_model, classes]));
+        params.push(spec("head_b", vec![classes]));
+        let num_params = params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+        let mut hyper = BTreeMap::new();
+        for (k, v) in [
+            ("vocab", vocab),
+            ("d_model", d_model),
+            ("n_heads", n_heads),
+            ("n_layers", n_layers),
+            ("d_ff", d_ff),
+            ("seq", seq),
+            ("classes", classes),
+            ("batch", batch),
+        ] {
+            hyper.insert(k.to_string(), v as f64);
+        }
+        ModelConfig {
+            name: name.to_string(),
+            params,
+            num_params,
+            hyper,
+        }
+    }
+
+    /// Config lookup.
+    pub fn config(&self, name: &str) -> Option<&ModelConfig> {
+        self.configs.get(name)
+    }
+
+    /// Available config names.
+    pub fn config_names(&self) -> Vec<&str> {
+        self.configs.keys().map(String::as_str).collect()
+    }
+}
+
+/// The execution backend: PJRT artifacts when available, host-native Rust
+/// otherwise. `ModelRunner`, `Mixer::for_backend`, and `DsgdTrainer` are
+/// generic over this seam.
+pub enum ExecBackend {
+    /// PJRT CPU client over the AOT artifacts (fast path).
+    PjRt(PjRtEngine),
+    /// Pure-Rust host engine (always-available fallback).
+    Host(HostEngine),
+}
+
+impl ExecBackend {
+    /// PJRT when artifacts are discoverable and the client constructs,
+    /// host-native otherwise — the default policy for every CLI entry point.
+    pub fn auto() -> ExecBackend {
+        match PjRtEngine::from_artifacts() {
+            Ok(engine) => ExecBackend::PjRt(engine),
+            Err(_) => ExecBackend::Host(HostEngine::new()),
+        }
+    }
+
+    /// Force the host-native backend.
+    pub fn host() -> ExecBackend {
+        ExecBackend::Host(HostEngine::new())
+    }
+
+    /// Force the PJRT backend (errors when artifacts are unavailable).
+    pub fn pjrt() -> Result<ExecBackend, RuntimeError> {
+        Ok(ExecBackend::PjRt(PjRtEngine::from_artifacts()?))
+    }
+
+    /// Resolve a backend by name: `"auto"`, `"host"`, or `"pjrt"`.
+    pub fn by_name(name: &str) -> Result<ExecBackend, RuntimeError> {
+        match name {
+            "auto" => Ok(ExecBackend::auto()),
+            "host" => Ok(ExecBackend::host()),
+            "pjrt" => ExecBackend::pjrt(),
+            other => Err(RuntimeError::Manifest(format!(
+                "unknown backend {other:?} (expected auto|host|pjrt)"
+            ))),
+        }
+    }
+
+    /// Short backend name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::PjRt(_) => "pjrt",
+            ExecBackend::Host(_) => "host",
+        }
+    }
+
+    /// True for the host-native backend.
+    pub fn is_host(&self) -> bool {
+        matches!(self, ExecBackend::Host(_))
+    }
+
+    /// The PJRT engine, when this backend is PJRT-backed.
+    pub fn engine(&self) -> Option<&PjRtEngine> {
+        match self {
+            ExecBackend::PjRt(e) => Some(e),
+            ExecBackend::Host(_) => None,
+        }
+    }
+
+    /// Look up a model config (manifest-backed on PJRT, built-in on host).
+    pub fn model_config(&self, name: &str) -> Result<&ModelConfig, RuntimeError> {
+        match self {
+            ExecBackend::PjRt(e) => e
+                .manifest()
+                .configs
+                .get(name)
+                .ok_or_else(|| RuntimeError::UnknownArtifact(format!("config {name}"))),
+            ExecBackend::Host(h) => h
+                .config(name)
+                .ok_or_else(|| RuntimeError::UnknownArtifact(format!("config {name}"))),
+        }
+    }
+
+    /// Available model config names.
+    pub fn model_names(&self) -> Vec<String> {
+        match self {
+            ExecBackend::PjRt(e) => e.manifest().configs.keys().cloned().collect(),
+            ExecBackend::Host(h) => h.config_names().iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Baked learning rate (manifest constant on PJRT, [`HOST_LR`] on host).
+    pub fn lr(&self) -> f64 {
+        match self {
+            ExecBackend::PjRt(e) => e.manifest().lr,
+            ExecBackend::Host(h) => h.lr,
+        }
+    }
+
+    /// Baked momentum coefficient.
+    pub fn beta(&self) -> f64 {
+        match self {
+            ExecBackend::PjRt(e) => e.manifest().beta,
+            ExecBackend::Host(h) => h.beta,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_engine_ships_the_builtin_configs() {
+        let h = HostEngine::new();
+        assert_eq!(h.config_names(), vec!["base", "tiny", "tiny100"]);
+        let tiny = h.config("tiny").unwrap();
+        // 2 emb + 12/layer × 2 + 4 head/ln = 30 tensors (mirrors model.py).
+        assert_eq!(tiny.params.len(), 30);
+        assert_eq!(tiny.params[0].name, "tok_emb");
+        assert_eq!(tiny.params[0].shape, vec![64, 64]);
+        assert_eq!(tiny.params[2].name, "l0.ln1_scale");
+        assert_eq!(tiny.params.last().unwrap().name, "head_b");
+        assert_eq!(tiny.hp("batch"), 16);
+        assert_eq!(tiny.hp("classes"), 10);
+        // tiny100 differs from tiny only in the head width.
+        let t100 = h.config("tiny100").unwrap();
+        assert_eq!(t100.hp("classes"), 100);
+        assert_eq!(
+            t100.num_params - tiny.num_params,
+            90 * 64 + 90 // head_w + head_b widen by 90 classes
+        );
+    }
+
+    #[test]
+    fn auto_backend_is_always_available() {
+        // With artifacts the backend is PJRT, without it falls back to host —
+        // either way configs resolve and the constants are the paper's.
+        let b = ExecBackend::auto();
+        assert!(b.model_config("tiny").is_ok());
+        assert!(b.model_config("nope").is_err());
+        assert!((b.lr() - 0.05).abs() < 1e-12);
+        assert!((b.beta() - 0.9).abs() < 1e-12);
+        assert!(ExecBackend::by_name("bogus").is_err());
+        assert_eq!(ExecBackend::host().name(), "host");
+    }
+}

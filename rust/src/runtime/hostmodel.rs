@@ -1,0 +1,1006 @@
+//! Host-native training engine: a pure-Rust implementation of the DSGD local
+//! train/eval step — the same transformer sequence classifier, loss, and
+//! fused momentum-SGD update that `python/compile/model.py` AOT-lowers to the
+//! PJRT `train_*`/`eval_*` artifacts.
+//!
+//! This is the always-available [`ExecBackend`](super::backend::ExecBackend)
+//! fallback: it needs no artifacts and no PJRT runtime, so the Figs. 7–10 /
+//! Table II experiment family (`batopo reproduce fig7..fig10|table2`) runs
+//! fully offline. The math mirrors `model.py` exactly:
+//!
+//! - token + positional embeddings,
+//! - `n_layers` pre-LN transformer blocks (multi-head softmax attention,
+//!   GELU MLP, residuals),
+//! - final LayerNorm → mean-pool over the sequence → linear head,
+//! - mean softmax cross-entropy, full backward pass,
+//! - `m' = β·m + g`, `p' = p − lr·m'` (the fused SGD kernel semantics).
+//!
+//! Parameters are flat `f32` buffers in the canonical `param_specs` order the
+//! manifest exports, so a host run and a PJRT run are interchangeable at the
+//! [`ModelRunner`](super::trainer::ModelRunner) interface. The backward pass
+//! is verified against central finite differences in this module's tests.
+
+use super::manifest::ModelConfig;
+use super::RuntimeError;
+
+/// Parameter-tensor indices inside one transformer block (12 tensors per
+/// layer, matching `model.py::param_specs`).
+const LN1_S: usize = 0;
+const LN1_B: usize = 1;
+const WQKV: usize = 2;
+const BQKV: usize = 3;
+const WO: usize = 4;
+const BO: usize = 5;
+const LN2_S: usize = 6;
+const LN2_B: usize = 7;
+const W1: usize = 8;
+const B1: usize = 9;
+const W2: usize = 10;
+const B2: usize = 11;
+
+const LN_EPS: f32 = 1e-5;
+
+/// The host-native model: shape constants plus the baked optimizer constants
+/// (`lr`, `beta` — the manifest's §VI-B hyperparameters).
+#[derive(Debug, Clone)]
+pub struct HostModel {
+    /// Vocabulary size.
+    v: usize,
+    /// Model width `d_model`.
+    d: usize,
+    /// Attention heads.
+    h: usize,
+    /// Transformer blocks.
+    l: usize,
+    /// MLP hidden width `d_ff`.
+    f: usize,
+    /// Sequence length.
+    s: usize,
+    /// Label classes.
+    c: usize,
+    /// Learning rate (baked, like the AOT artifacts).
+    lr: f32,
+    /// Momentum coefficient (baked).
+    beta: f32,
+}
+
+/// Per-layer forward activations kept for the backward pass.
+struct LayerCache {
+    /// Block input (before the attention residual), `B*S*D`.
+    x_in: Vec<f32>,
+    /// LN1 normalized input `x̂`, `B*S*D`.
+    xhat1: Vec<f32>,
+    /// LN1 `1/σ` per position, `B*S`.
+    inv1: Vec<f32>,
+    /// LN1 output, `B*S*D`.
+    y1: Vec<f32>,
+    /// Queries / keys / values, `B*S*D` each.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    vv: Vec<f32>,
+    /// Attention probabilities, `B*H*S*S`.
+    att: Vec<f32>,
+    /// Concatenated head outputs (before the output projection), `B*S*D`.
+    o: Vec<f32>,
+    /// After the attention residual, `B*S*D`.
+    x_mid: Vec<f32>,
+    /// LN2 normalized input, `B*S*D`.
+    xhat2: Vec<f32>,
+    /// LN2 `1/σ`, `B*S`.
+    inv2: Vec<f32>,
+    /// LN2 output, `B*S*D`.
+    y2: Vec<f32>,
+    /// MLP pre-activation, `B*S*F`.
+    hbar: Vec<f32>,
+    /// MLP post-GELU, `B*S*F`.
+    g: Vec<f32>,
+}
+
+/// Whole-network forward cache.
+struct Cache {
+    layers: Vec<LayerCache>,
+    /// Final-LN normalized input, `B*S*D`.
+    xhatf: Vec<f32>,
+    /// Final-LN `1/σ`, `B*S`.
+    invf: Vec<f32>,
+    /// Mean-pooled features, `B*D`.
+    pooled: Vec<f32>,
+    /// Softmax probabilities, `B*C`.
+    probs: Vec<f32>,
+}
+
+impl HostModel {
+    /// Build a host model from a [`ModelConfig`] (its `hyper` map must carry
+    /// the architecture keys `vocab/d_model/n_heads/n_layers/d_ff/seq/classes`
+    /// — true for both the built-in host configs and AOT manifests).
+    pub fn from_config(cfg: &ModelConfig, lr: f64, beta: f64) -> Result<HostModel, RuntimeError> {
+        for key in ["vocab", "d_model", "n_heads", "n_layers", "d_ff", "seq", "classes"] {
+            if !cfg.hyper.contains_key(key) {
+                return Err(RuntimeError::Manifest(format!(
+                    "config {} lacks hyperparameter {key} (host backend needs the \
+                     full architecture description)",
+                    cfg.name
+                )));
+            }
+        }
+        let m = HostModel {
+            v: cfg.hp("vocab"),
+            d: cfg.hp("d_model"),
+            h: cfg.hp("n_heads"),
+            l: cfg.hp("n_layers"),
+            f: cfg.hp("d_ff"),
+            s: cfg.hp("seq"),
+            c: cfg.hp("classes"),
+            lr: lr as f32,
+            beta: beta as f32,
+        };
+        if m.d % m.h != 0 {
+            return Err(RuntimeError::Manifest(format!(
+                "config {}: d_model {} not divisible by n_heads {}",
+                cfg.name, m.d, m.h
+            )));
+        }
+        let expected = 2 + 12 * m.l + 4;
+        if cfg.params.len() != expected {
+            return Err(RuntimeError::Manifest(format!(
+                "config {}: {} parameter tensors, host layout expects {expected}",
+                cfg.name,
+                cfg.params.len()
+            )));
+        }
+        Ok(m)
+    }
+
+    /// Index of the first tensor of block `i` in the flat parameter list.
+    fn lbase(&self, i: usize) -> usize {
+        2 + 12 * i
+    }
+
+    /// Index of `lnf_scale` (the first post-block tensor).
+    fn nf(&self) -> usize {
+        2 + 12 * self.l
+    }
+
+    /// One DSGD local step on a batch: computes the loss and gradients at the
+    /// current parameters, then applies the fused momentum-SGD update
+    /// (`m' = β·m + g`, `p' = p − lr·m'`) in place. Returns the pre-update
+    /// batch loss — the same contract as the PJRT train artifact.
+    pub fn train_step(
+        &self,
+        params: &mut [Vec<f32>],
+        momenta: &mut [Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f64, RuntimeError> {
+        if momenta.len() != params.len()
+            || momenta.iter().zip(params.iter()).any(|(m, p)| m.len() != p.len())
+        {
+            return Err(RuntimeError::Shape(
+                "host model: momenta shapes do not match parameters".into(),
+            ));
+        }
+        let (loss, grads) = self.loss_and_grads(params, tokens, targets)?;
+        for ((p, m), g) in params.iter_mut().zip(momenta.iter_mut()).zip(&grads) {
+            for ((pv, mv), gv) in p.iter_mut().zip(m.iter_mut()).zip(g) {
+                let m_new = self.beta * *mv + *gv;
+                *mv = m_new;
+                *pv -= self.lr * m_new;
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Evaluate a batch: `(mean loss, accuracy)` — the eval-artifact contract.
+    pub fn eval(
+        &self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f64, f64), RuntimeError> {
+        let b = self.check_batch(params, tokens, targets)?;
+        let cache = self.forward(params, tokens, b);
+        let mut nll = 0.0f64;
+        let mut hits = 0usize;
+        for bi in 0..b {
+            let row = &cache.probs[bi * self.c..(bi + 1) * self.c];
+            let t = targets[bi] as usize;
+            nll -= (row[t].max(f32::MIN_POSITIVE) as f64).ln();
+            let mut arg = 0usize;
+            for (ci, &p) in row.iter().enumerate() {
+                if p > row[arg] {
+                    arg = ci;
+                }
+            }
+            if arg == t {
+                hits += 1;
+            }
+        }
+        Ok((nll / b as f64, hits as f64 / b as f64))
+    }
+
+    /// Forward-only batch loss (mean cross-entropy) — used by the
+    /// finite-difference gradient checks.
+    pub fn loss(
+        &self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f64, RuntimeError> {
+        self.eval(params, tokens, targets).map(|(l, _)| l)
+    }
+
+    /// Loss and the full parameter gradient (canonical tensor order).
+    pub fn loss_and_grads(
+        &self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f64, Vec<Vec<f32>>), RuntimeError> {
+        let b = self.check_batch(params, tokens, targets)?;
+        let cache = self.forward(params, tokens, b);
+        let grads = self.backward(params, tokens, targets, b, &cache);
+        let mut nll = 0.0f64;
+        for bi in 0..b {
+            let t = targets[bi] as usize;
+            nll -= (cache.probs[bi * self.c + t].max(f32::MIN_POSITIVE) as f64).ln();
+        }
+        Ok((nll / b as f64, grads))
+    }
+
+    /// Element counts of every parameter tensor in canonical order.
+    fn param_numels(&self) -> Vec<usize> {
+        let (v, d, f, s, c) = (self.v, self.d, self.f, self.s, self.c);
+        let mut ns = vec![v * d, s * d];
+        for _ in 0..self.l {
+            ns.extend_from_slice(&[d, d, d * 3 * d, 3 * d, d * d, d, d, d, d * f, f, f * d, d]);
+        }
+        ns.extend_from_slice(&[d, d, d * c, c]);
+        ns
+    }
+
+    fn check_batch(
+        &self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<usize, RuntimeError> {
+        if params.len() != self.nf() + 4 {
+            return Err(RuntimeError::Shape(format!(
+                "host model: {} parameter tensors, expected {}",
+                params.len(),
+                self.nf() + 4
+            )));
+        }
+        for (i, (p, want)) in params.iter().zip(self.param_numels()).enumerate() {
+            if p.len() != want {
+                return Err(RuntimeError::Shape(format!(
+                    "host model: tensor {i} has {} elements, expected {want}",
+                    p.len()
+                )));
+            }
+        }
+        let b = targets.len();
+        if b == 0 || tokens.len() != b * self.s {
+            return Err(RuntimeError::Shape(format!(
+                "host model: {} tokens for {} targets (seq {})",
+                tokens.len(),
+                b,
+                self.s
+            )));
+        }
+        if tokens.iter().any(|&t| t < 0 || t as usize >= self.v) {
+            return Err(RuntimeError::Shape("token id out of vocabulary".into()));
+        }
+        if targets.iter().any(|&t| t < 0 || t as usize >= self.c) {
+            return Err(RuntimeError::Shape("target class out of range".into()));
+        }
+        Ok(b)
+    }
+
+    // -- forward ------------------------------------------------------------
+
+    fn forward(&self, params: &[Vec<f32>], tokens: &[i32], b: usize) -> Cache {
+        let (d, s, hn) = (self.d, self.s, self.h);
+        let dh = d / hn;
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // Embeddings.
+        let mut x = vec![0.0f32; b * s * d];
+        let tok_emb = &params[0];
+        let pos_emb = &params[1];
+        for bi in 0..b {
+            for si in 0..s {
+                let t = tokens[bi * s + si] as usize;
+                let dst = &mut x[(bi * s + si) * d..(bi * s + si + 1) * d];
+                let te = &tok_emb[t * d..(t + 1) * d];
+                let pe = &pos_emb[si * d..(si + 1) * d];
+                for ((o, &a), &p) in dst.iter_mut().zip(te).zip(pe) {
+                    *o = a + p;
+                }
+            }
+        }
+
+        let rows = b * s;
+        let mut layers = Vec::with_capacity(self.l);
+        for li in 0..self.l {
+            let base = self.lbase(li);
+            let x_in = x.clone();
+
+            // Pre-LN 1.
+            let mut xhat1 = vec![0.0f32; rows * d];
+            let mut inv1 = vec![0.0f32; rows];
+            layer_norm_fwd(&x_in, rows, d, &mut xhat1, &mut inv1);
+            let mut y1 = vec![0.0f32; rows * d];
+            ln_affine(&xhat1, &params[base + LN1_S], &params[base + LN1_B], rows, d, &mut y1);
+
+            // QKV projection.
+            let mut qkv = vec![0.0f32; rows * 3 * d];
+            bias_rows(&mut qkv, &params[base + BQKV], rows, 3 * d);
+            matmul_acc(&mut qkv, &y1, &params[base + WQKV], rows, d, 3 * d);
+            let mut q = vec![0.0f32; rows * d];
+            let mut k = vec![0.0f32; rows * d];
+            let mut vv = vec![0.0f32; rows * d];
+            for r in 0..rows {
+                q[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d..r * 3 * d + d]);
+                k[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + d..r * 3 * d + 2 * d]);
+                vv[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d]);
+            }
+
+            // Multi-head softmax attention.
+            let mut att = vec![0.0f32; b * hn * s * s];
+            let mut o = vec![0.0f32; rows * d];
+            for bi in 0..b {
+                for hi in 0..hn {
+                    let hoff = hi * dh;
+                    let abase = (bi * hn + hi) * s * s;
+                    for si in 0..s {
+                        let qrow = &q[(bi * s + si) * d + hoff..(bi * s + si) * d + hoff + dh];
+                        let arow = &mut att[abase + si * s..abase + (si + 1) * s];
+                        let mut mx = f32::NEG_INFINITY;
+                        for ti in 0..s {
+                            let krow = &k[(bi * s + ti) * d + hoff..(bi * s + ti) * d + hoff + dh];
+                            let mut z = 0.0f32;
+                            for (qa, kb) in qrow.iter().zip(krow) {
+                                z += qa * kb;
+                            }
+                            let z = z * scale;
+                            arow[ti] = z;
+                            mx = mx.max(z);
+                        }
+                        let mut sum = 0.0f32;
+                        for a in arow.iter_mut() {
+                            *a = (*a - mx).exp();
+                            sum += *a;
+                        }
+                        let inv = 1.0 / sum;
+                        for a in arow.iter_mut() {
+                            *a *= inv;
+                        }
+                        // o[si] = Σ_t att[si,t] · v[t]
+                        let orow = &mut o[(bi * s + si) * d + hoff..(bi * s + si) * d + hoff + dh];
+                        for ti in 0..s {
+                            let a = arow[ti];
+                            let vrow =
+                                &vv[(bi * s + ti) * d + hoff..(bi * s + ti) * d + hoff + dh];
+                            for (ov, &vx) in orow.iter_mut().zip(vrow) {
+                                *ov += a * vx;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Output projection + residual.
+            let mut x_mid = x_in.clone();
+            bias_rows_acc(&mut x_mid, &params[base + BO], rows, d);
+            matmul_acc(&mut x_mid, &o, &params[base + WO], rows, d, d);
+
+            // Pre-LN 2 + GELU MLP + residual.
+            let mut xhat2 = vec![0.0f32; rows * d];
+            let mut inv2 = vec![0.0f32; rows];
+            layer_norm_fwd(&x_mid, rows, d, &mut xhat2, &mut inv2);
+            let mut y2 = vec![0.0f32; rows * d];
+            ln_affine(&xhat2, &params[base + LN2_S], &params[base + LN2_B], rows, d, &mut y2);
+            let mut hbar = vec![0.0f32; rows * self.f];
+            bias_rows(&mut hbar, &params[base + B1], rows, self.f);
+            matmul_acc(&mut hbar, &y2, &params[base + W1], rows, d, self.f);
+            let mut g = vec![0.0f32; rows * self.f];
+            for (gv, &hv) in g.iter_mut().zip(&hbar) {
+                *gv = gelu(hv);
+            }
+            let mut x_out = x_mid.clone();
+            bias_rows_acc(&mut x_out, &params[base + B2], rows, d);
+            matmul_acc(&mut x_out, &g, &params[base + W2], rows, self.f, d);
+
+            x = x_out;
+            layers.push(LayerCache {
+                x_in,
+                xhat1,
+                inv1,
+                y1,
+                q,
+                k,
+                vv,
+                att,
+                o,
+                x_mid,
+                xhat2,
+                inv2,
+                y2,
+                hbar,
+                g,
+            });
+        }
+
+        // Final LN → mean pool → head → softmax.
+        let nf = self.nf();
+        let mut xhatf = vec![0.0f32; rows * d];
+        let mut invf = vec![0.0f32; rows];
+        layer_norm_fwd(&x, rows, d, &mut xhatf, &mut invf);
+        let mut yf = vec![0.0f32; rows * d];
+        ln_affine(&xhatf, &params[nf], &params[nf + 1], rows, d, &mut yf);
+        let mut pooled = vec![0.0f32; b * d];
+        let inv_s = 1.0 / s as f32;
+        for bi in 0..b {
+            let prow = &mut pooled[bi * d..(bi + 1) * d];
+            for si in 0..s {
+                let row = &yf[(bi * s + si) * d..(bi * s + si + 1) * d];
+                for (p, &y) in prow.iter_mut().zip(row) {
+                    *p += y * inv_s;
+                }
+            }
+        }
+        let mut logits = vec![0.0f32; b * self.c];
+        bias_rows(&mut logits, &params[nf + 3], b, self.c);
+        matmul_acc(&mut logits, &pooled, &params[nf + 2], b, d, self.c);
+        let mut probs = logits;
+        for bi in 0..b {
+            let row = &mut probs[bi * self.c..(bi + 1) * self.c];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let mut sum = 0.0f32;
+            for z in row.iter_mut() {
+                *z = (*z - mx).exp();
+                sum += *z;
+            }
+            let inv = 1.0 / sum;
+            for z in row.iter_mut() {
+                *z *= inv;
+            }
+        }
+
+        Cache {
+            layers,
+            xhatf,
+            invf,
+            pooled,
+            probs,
+        }
+    }
+
+    // -- backward -----------------------------------------------------------
+
+    fn backward(
+        &self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+        b: usize,
+        cache: &Cache,
+    ) -> Vec<Vec<f32>> {
+        let (d, s, hn, c) = (self.d, self.s, self.h, self.c);
+        let dh = d / hn;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let rows = b * s;
+        let nf = self.nf();
+        let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+
+        // dL/dlogits = (softmax − onehot) / B.
+        let inv_b = 1.0 / b as f32;
+        let mut dlogits = cache.probs.clone();
+        for bi in 0..b {
+            dlogits[bi * c + targets[bi] as usize] -= 1.0;
+        }
+        for v in dlogits.iter_mut() {
+            *v *= inv_b;
+        }
+
+        // Head: logits = pooled @ head_w + head_b.
+        matmul_at_acc(&mut grads[nf + 2], &cache.pooled, &dlogits, b, d, c);
+        col_sums_acc(&mut grads[nf + 3], &dlogits, b, c);
+        let mut dpooled = vec![0.0f32; b * d];
+        matmul_bt_acc(&mut dpooled, &dlogits, &params[nf + 2], b, c, d);
+
+        // Mean pool → dyf, then final LN backward.
+        let inv_s = 1.0 / s as f32;
+        let mut dyf = vec![0.0f32; rows * d];
+        for bi in 0..b {
+            let prow = &dpooled[bi * d..(bi + 1) * d];
+            for si in 0..s {
+                let row = &mut dyf[(bi * s + si) * d..(bi * s + si + 1) * d];
+                for (o, &p) in row.iter_mut().zip(prow) {
+                    *o = p * inv_s;
+                }
+            }
+        }
+        let mut dx = vec![0.0f32; rows * d];
+        {
+            let (gs, rest) = grads.split_at_mut(nf + 1);
+            layer_norm_bwd(
+                &dyf,
+                &cache.xhatf,
+                &cache.invf,
+                &params[nf],
+                rows,
+                d,
+                &mut gs[nf],
+                &mut rest[0],
+                &mut dx,
+            );
+        }
+
+        // Blocks in reverse.
+        for li in (0..self.l).rev() {
+            let lc = &cache.layers[li];
+            let base = self.lbase(li);
+
+            // x_out = x_mid + g @ w2 + b2.
+            let dxout = dx;
+            col_sums_acc(&mut grads[base + B2], &dxout, rows, d);
+            matmul_at_acc(&mut grads[base + W2], &lc.g, &dxout, rows, self.f, d);
+            let mut dg = vec![0.0f32; rows * self.f];
+            matmul_bt_acc(&mut dg, &dxout, &params[base + W2], rows, d, self.f);
+            // GELU backward.
+            let mut dhbar = dg;
+            for (dv, &hv) in dhbar.iter_mut().zip(&lc.hbar) {
+                *dv *= gelu_grad(hv);
+            }
+            // hbar = y2 @ w1 + b1.
+            col_sums_acc(&mut grads[base + B1], &dhbar, rows, self.f);
+            matmul_at_acc(&mut grads[base + W1], &lc.y2, &dhbar, rows, d, self.f);
+            let mut dy2 = vec![0.0f32; rows * d];
+            matmul_bt_acc(&mut dy2, &dhbar, &params[base + W1], rows, self.f, d);
+            // LN2 backward; residual adds dxout to dx_mid.
+            let mut dx_mid = dxout;
+            {
+                let (gs, rest) = grads.split_at_mut(base + LN2_B);
+                layer_norm_bwd(
+                    &dy2,
+                    &lc.xhat2,
+                    &lc.inv2,
+                    &params[base + LN2_S],
+                    rows,
+                    d,
+                    &mut gs[base + LN2_S],
+                    &mut rest[0],
+                    &mut dx_mid,
+                );
+            }
+
+            // x_mid = x_in + o @ wo + bo.
+            col_sums_acc(&mut grads[base + BO], &dx_mid, rows, d);
+            matmul_at_acc(&mut grads[base + WO], &lc.o, &dx_mid, rows, d, d);
+            let mut do_ = vec![0.0f32; rows * d];
+            matmul_bt_acc(&mut do_, &dx_mid, &params[base + WO], rows, d, d);
+
+            // Attention backward → dq/dk/dv.
+            let mut dq = vec![0.0f32; rows * d];
+            let mut dk = vec![0.0f32; rows * d];
+            let mut dv = vec![0.0f32; rows * d];
+            let mut datt = vec![0.0f32; s];
+            for bi in 0..b {
+                for hi in 0..hn {
+                    let hoff = hi * dh;
+                    let abase = (bi * hn + hi) * s * s;
+                    for si in 0..s {
+                        let arow = &lc.att[abase + si * s..abase + (si + 1) * s];
+                        let dorow =
+                            &do_[(bi * s + si) * d + hoff..(bi * s + si) * d + hoff + dh];
+                        // datt[t] = do[si] · v[t];  dv[t] += att[t] · do[si].
+                        for ti in 0..s {
+                            let vrow =
+                                &lc.vv[(bi * s + ti) * d + hoff..(bi * s + ti) * d + hoff + dh];
+                            let mut acc = 0.0f32;
+                            for (a, &o) in vrow.iter().zip(dorow) {
+                                acc += a * o;
+                            }
+                            datt[ti] = acc;
+                            let dvrow =
+                                &mut dv[(bi * s + ti) * d + hoff..(bi * s + ti) * d + hoff + dh];
+                            let a = arow[ti];
+                            for (dvx, &o) in dvrow.iter_mut().zip(dorow) {
+                                *dvx += a * o;
+                            }
+                        }
+                        // Softmax backward: dz = att ⊙ (datt − Σ att·datt).
+                        let dot: f32 = arow.iter().zip(&datt).map(|(&a, &da)| a * da).sum();
+                        let qrow =
+                            &lc.q[(bi * s + si) * d + hoff..(bi * s + si) * d + hoff + dh];
+                        let dqrow =
+                            &mut dq[(bi * s + si) * d + hoff..(bi * s + si) * d + hoff + dh];
+                        for ti in 0..s {
+                            let dz = arow[ti] * (datt[ti] - dot) * scale;
+                            if dz == 0.0 {
+                                continue;
+                            }
+                            let krow =
+                                &lc.k[(bi * s + ti) * d + hoff..(bi * s + ti) * d + hoff + dh];
+                            for (dqx, &kx) in dqrow.iter_mut().zip(krow) {
+                                *dqx += dz * kx;
+                            }
+                            let dkrow =
+                                &mut dk[(bi * s + ti) * d + hoff..(bi * s + ti) * d + hoff + dh];
+                            for (dkx, &qx) in dkrow.iter_mut().zip(qrow) {
+                                *dkx += dz * qx;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Re-concatenate dqkv and project back through wqkv.
+            let mut dqkv = vec![0.0f32; rows * 3 * d];
+            for r in 0..rows {
+                dqkv[r * 3 * d..r * 3 * d + d].copy_from_slice(&dq[r * d..(r + 1) * d]);
+                dqkv[r * 3 * d + d..r * 3 * d + 2 * d].copy_from_slice(&dk[r * d..(r + 1) * d]);
+                dqkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d]
+                    .copy_from_slice(&dv[r * d..(r + 1) * d]);
+            }
+            col_sums_acc(&mut grads[base + BQKV], &dqkv, rows, 3 * d);
+            matmul_at_acc(&mut grads[base + WQKV], &lc.y1, &dqkv, rows, d, 3 * d);
+            let mut dy1 = vec![0.0f32; rows * d];
+            matmul_bt_acc(&mut dy1, &dqkv, &params[base + WQKV], rows, 3 * d, d);
+
+            // LN1 backward; residual adds dx_mid to the block-input gradient.
+            let mut dx_in = dx_mid;
+            {
+                let (gs, rest) = grads.split_at_mut(base + LN1_B);
+                layer_norm_bwd(
+                    &dy1,
+                    &lc.xhat1,
+                    &lc.inv1,
+                    &params[base + LN1_S],
+                    rows,
+                    d,
+                    &mut gs[base + LN1_S],
+                    &mut rest[0],
+                    &mut dx_in,
+                );
+            }
+            dx = dx_in;
+        }
+
+        // Embedding gradients.
+        for bi in 0..b {
+            for si in 0..s {
+                let t = tokens[bi * s + si] as usize;
+                let src = &dx[(bi * s + si) * d..(bi * s + si + 1) * d];
+                {
+                    let dst = &mut grads[0][t * d..(t + 1) * d];
+                    for (o, &g) in dst.iter_mut().zip(src) {
+                        *o += g;
+                    }
+                }
+                let dst = &mut grads[1][si * d..(si + 1) * d];
+                for (o, &g) in dst.iter_mut().zip(src) {
+                    *o += g;
+                }
+            }
+        }
+        grads
+    }
+}
+
+// --- primitive kernels ------------------------------------------------------
+
+/// `out[m×n] += a[m×k] @ b[k×n]` (row-major, saxpy inner loop — vectorizes).
+fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+}
+
+/// `out[m×k] += a[m×n] @ bᵀ` for `b[k×n]` (row-dot inner loop).
+fn matmul_bt_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (kk, o) in orow.iter_mut().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o += acc;
+        }
+    }
+}
+
+/// `dw[k×n] += aᵀ @ dy` for `a[m×k]`, `dy[m×n]` (weight-gradient shape).
+fn matmul_at_acc(dw: &mut [f32], a: &[f32], dy: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(dw.len(), k * n);
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &aik) in arow.iter().enumerate() {
+            let wrow = &mut dw[kk * n..(kk + 1) * n];
+            for (w, &dv) in wrow.iter_mut().zip(dyrow) {
+                *w += aik * dv;
+            }
+        }
+    }
+}
+
+/// Set every row of `out[m×n]` to the bias vector.
+fn bias_rows(out: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        out[i * n..(i + 1) * n].copy_from_slice(bias);
+    }
+}
+
+/// Add the bias vector to every row of `out[m×n]`.
+fn bias_rows_acc(out: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(bias.len(), n);
+    for i in 0..m {
+        for (o, &bv) in out[i * n..(i + 1) * n].iter_mut().zip(bias) {
+            *o += bv;
+        }
+    }
+}
+
+/// Column sums of `dy[m×n]` accumulated into `db[n]` (bias gradients).
+fn col_sums_acc(db: &mut [f32], dy: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(db.len(), n);
+    for i in 0..m {
+        for (o, &dv) in db.iter_mut().zip(&dy[i * n..(i + 1) * n]) {
+            *o += dv;
+        }
+    }
+}
+
+/// LayerNorm statistics: `xhat = (x − μ)/σ`, `inv = 1/σ`, per row of `d`.
+fn layer_norm_fwd(x: &[f32], rows: usize, d: usize, xhat: &mut [f32], inv: &mut [f32]) {
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mean: f32 = row.iter().sum::<f32>() * inv_d;
+        let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() * inv_d;
+        let istd = 1.0 / (var + LN_EPS).sqrt();
+        inv[r] = istd;
+        for (o, &v) in xhat[r * d..(r + 1) * d].iter_mut().zip(row) {
+            *o = (v - mean) * istd;
+        }
+    }
+}
+
+/// `y = xhat * scale + bias`, per row.
+fn ln_affine(xhat: &[f32], scale: &[f32], bias: &[f32], rows: usize, d: usize, y: &mut [f32]) {
+    for r in 0..rows {
+        let xr = &xhat[r * d..(r + 1) * d];
+        let yr = &mut y[r * d..(r + 1) * d];
+        for ((o, &x), (&sc, &bi)) in yr.iter_mut().zip(xr).zip(scale.iter().zip(bias)) {
+            *o = x * sc + bi;
+        }
+    }
+}
+
+/// LayerNorm backward: accumulates `dscale`/`dbias` and **adds** the input
+/// gradient into `dx` (residual-friendly):
+/// `dx += (1/σ)(dx̂ − mean(dx̂) − x̂·mean(dx̂⊙x̂))` with `dx̂ = dy⊙scale`.
+#[allow(clippy::too_many_arguments)]
+fn layer_norm_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    inv: &[f32],
+    scale: &[f32],
+    rows: usize,
+    d: usize,
+    dscale: &mut [f32],
+    dbias: &mut [f32],
+    dx: &mut [f32],
+) {
+    let inv_d = 1.0 / d as f32;
+    let mut dxhat = vec![0.0f32; d];
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xr = &xhat[r * d..(r + 1) * d];
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for i in 0..d {
+            dscale[i] += dyr[i] * xr[i];
+            dbias[i] += dyr[i];
+            let dxh = dyr[i] * scale[i];
+            dxhat[i] = dxh;
+            m1 += dxh;
+            m2 += dxh * xr[i];
+        }
+        m1 *= inv_d;
+        m2 *= inv_d;
+        let istd = inv[r];
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for i in 0..d {
+            dxr[i] += istd * (dxhat[i] - m1 - xr[i] * m2);
+        }
+    }
+}
+
+/// GELU, tanh approximation (`jax.nn.gelu`'s default).
+fn gelu(x: f32) -> f32 {
+    const K: f32 = 0.797_884_6; // √(2/π)
+    const C: f32 = 0.044715;
+    0.5 * x * (1.0 + (K * (x + C * x * x * x)).tanh())
+}
+
+/// d/dx of the tanh-approximate GELU.
+fn gelu_grad(x: f32) -> f32 {
+    const K: f32 = 0.797_884_6;
+    const C: f32 = 0.044715;
+    let u = K * (x + C * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * K * (1.0 + 3.0 * C * x * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::HostEngine;
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// A micro config small enough for finite-difference checks.
+    fn micro() -> (HostModel, ModelConfig) {
+        let cfg = HostEngine::build_config("micro", 11, 8, 2, 1, 12, 5, 3, 2);
+        let m = HostModel::from_config(&cfg, 0.05, 0.9).unwrap();
+        (m, cfg)
+    }
+
+    fn init(cfg: &ModelConfig, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        cfg.params
+            .iter()
+            .map(|spec| {
+                let numel: usize = spec.shape.iter().product();
+                (0..numel).map(|_| (rng.next_gaussian() * 0.3) as f32).collect()
+            })
+            .collect()
+    }
+
+    fn batch(m: &HostModel, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let b = 2usize;
+        let tokens: Vec<i32> = (0..b * m.s).map(|_| rng.index(m.v) as i32).collect();
+        let targets: Vec<i32> = (0..b).map(|_| rng.index(m.c) as i32).collect();
+        (tokens, targets)
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let (m, cfg) = micro();
+        let mut params = init(&cfg, 3);
+        let (tokens, targets) = batch(&m, 7);
+        let (loss, grads) = m.loss_and_grads(&params, &tokens, &targets).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+
+        // Probe a few components of every tensor with central differences.
+        let eps = 1e-2f32;
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        for ti in 0..params.len() {
+            for _ in 0..3 {
+                let i = rng.index(params[ti].len());
+                let orig = params[ti][i];
+                params[ti][i] = orig + eps;
+                let lp = m.loss(&params, &tokens, &targets).unwrap();
+                params[ti][i] = orig - eps;
+                let lm = m.loss(&params, &tokens, &targets).unwrap();
+                params[ti][i] = orig;
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                let an = grads[ti][i] as f64;
+                let tol = 1e-3 + 0.05 * fd.abs().max(an.abs());
+                assert!(
+                    (fd - an).abs() < tol,
+                    "tensor {} ({}) idx {i}: fd {fd:.6} vs analytic {an:.6}",
+                    ti,
+                    cfg.params[ti].name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        let (m, cfg) = micro();
+        let mut params = init(&cfg, 5);
+        let mut momenta: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let (tokens, targets) = batch(&m, 9);
+        let first = m.train_step(&mut params, &mut momenta, &tokens, &targets).unwrap();
+        let mut last = first;
+        for _ in 0..40 {
+            last = m.train_step(&mut params, &mut momenta, &tokens, &targets).unwrap();
+        }
+        assert!(
+            last < first * 0.7,
+            "loss did not drop enough: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn momentum_update_matches_kernel_semantics() {
+        // One step with β=0: p' = p − lr·g exactly.
+        let cfg = HostEngine::build_config("m0", 7, 4, 1, 1, 8, 3, 2, 2);
+        let m = HostModel::from_config(&cfg, 0.1, 0.0).unwrap();
+        let mut params = init(&cfg, 1);
+        let before = params.clone();
+        let mut momenta: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let (tokens, targets) = batch(&m, 2);
+        let (_, grads) = m.loss_and_grads(&params, &tokens, &targets).unwrap();
+        m.train_step(&mut params, &mut momenta, &tokens, &targets).unwrap();
+        for ti in 0..params.len() {
+            for i in 0..params[ti].len() {
+                let want = before[ti][i] - 0.1 * grads[ti][i];
+                assert!((params[ti][i] - want).abs() < 1e-6);
+                assert!((momenta[ti][i] - grads[ti][i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_reports_loss_and_accuracy_in_range() {
+        let (m, cfg) = micro();
+        let params = init(&cfg, 13);
+        let (tokens, targets) = batch(&m, 17);
+        let (loss, acc) = m.eval(&params, &tokens, &targets).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_batches() {
+        let (m, cfg) = micro();
+        let params = init(&cfg, 1);
+        assert!(matches!(
+            m.eval(&params, &[0; 3], &[0, 0]),
+            Err(RuntimeError::Shape(_))
+        ));
+        assert!(matches!(
+            m.eval(&params, &[99; 10], &[0, 0]),
+            Err(RuntimeError::Shape(_))
+        ));
+        assert!(matches!(
+            m.eval(&params[..3], &[0; 10], &[0, 0]),
+            Err(RuntimeError::Shape(_))
+        ));
+        // Right tensor count, wrong tensor length (e.g. a checkpoint from a
+        // different config) must be a Shape error, not an OOB panic.
+        let mut bad = params.clone();
+        bad[2].pop();
+        assert!(matches!(
+            m.eval(&bad, &[0; 10], &[0, 0]),
+            Err(RuntimeError::Shape(_))
+        ));
+        // Momenta mismatching the parameter shapes are rejected up front.
+        let mut p2 = params.clone();
+        let mut short = params.clone();
+        short[0].pop();
+        assert!(matches!(
+            m.train_step(&mut p2, &mut short, &[0; 10], &[0, 0]),
+            Err(RuntimeError::Shape(_))
+        ));
+    }
+}

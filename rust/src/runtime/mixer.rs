@@ -4,6 +4,7 @@
 //! plus a pure-Rust fallback used when artifacts are absent and as the
 //! perf-baseline comparator.
 
+use super::backend::ExecBackend;
 use super::engine::PjRtEngine;
 use super::xla_stub as xla;
 use super::RuntimeError;
@@ -104,6 +105,25 @@ impl<'e> Mixer<'e> {
             w_dense,
             w_literal,
         })
+    }
+
+    /// Build the mixer appropriate for an [`ExecBackend`]: the requested PJRT
+    /// variant on the PJRT backend (falling back to the host path when no
+    /// artifact covers `n`), the pure-Rust host path on the host backend —
+    /// the one-liner `DsgdTrainer` and the benches use so mixing follows the
+    /// training backend automatically.
+    pub fn for_backend(
+        backend: &'e ExecBackend,
+        topo: &Topology,
+        requested: MixVariant,
+    ) -> Result<Mixer<'e>, RuntimeError> {
+        match backend.engine() {
+            Some(engine) if requested != MixVariant::HostFallback => {
+                Mixer::new(Some(engine), topo, requested)
+                    .or_else(|_| Mixer::new(None, topo, MixVariant::HostFallback))
+            }
+            _ => Mixer::new(None, topo, MixVariant::HostFallback),
+        }
     }
 
     /// The artifact in use (diagnostics).
@@ -250,6 +270,18 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn for_backend_on_host_backend_uses_host_fallback() {
+        // A Native request on the host backend must transparently fall back
+        // to the pure-Rust path rather than erroring on missing artifacts.
+        let backend = crate::runtime::ExecBackend::host();
+        let topo = baselines::ring(8);
+        let mixer = Mixer::for_backend(&backend, &topo, MixVariant::Native).unwrap();
+        let x = state(8, 5, 3);
+        let host = Mixer::new(None, &topo, MixVariant::HostFallback).unwrap();
+        assert_eq!(mixer.mix(&x).unwrap(), host.mix(&x).unwrap());
     }
 
     #[test]

@@ -1,17 +1,29 @@
-//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
-//! (HLO **text**; see DESIGN.md) and execute them from the coordinator's hot
-//! path. Python never runs here — the binary is self-contained after
-//! `make artifacts`.
+//! Execution runtime behind the coordinator's hot path, split across two
+//! interchangeable backends (see [`backend::ExecBackend`]):
 //!
+//! - **PJRT** — load the AOT artifacts produced by `python/compile/aot.py`
+//!   (HLO **text**; see DESIGN.md) and execute them through the PJRT CPU
+//!   client. Python never runs here — the binary is self-contained after
+//!   `make artifacts`.
+//! - **Host-native** — a pure-Rust implementation of the same train/eval
+//!   step ([`hostmodel`]), always available, which keeps the Figs. 7–10 /
+//!   Table II experiments runnable fully offline.
+//!
+//! Modules:
+//!
+//! - [`backend`] — the [`backend::ExecBackend`] seam (`auto`/`host`/`pjrt`),
 //! - [`manifest`] — the machine-readable artifact index (shapes, dtypes,
 //!   parameter specs, baked optimizer constants),
 //! - [`engine`] — PJRT CPU client + per-artifact compiled-executable cache,
+//! - [`hostmodel`] — the host-native transformer fwd/bwd + momentum-SGD,
 //! - [`mixer`] — the gossip-mixing executor (padded `W @ X` chunks over the
 //!   L1 Pallas kernel or the XLA-native variant) with a pure-Rust fallback,
-//! - [`trainer`] — the DSGD local train/eval step executor and the
-//!   manifest-driven parameter initializer.
+//! - [`trainer`] — the backend-agnostic DSGD local train/eval step executor
+//!   and the manifest-driven parameter initializer.
 
+pub mod backend;
 pub mod engine;
+pub mod hostmodel;
 pub mod manifest;
 pub mod mixer;
 pub mod trainer;
@@ -21,7 +33,9 @@ pub mod xla_stub;
 // API (see `xla_stub` docs for how to swap the real bindings back in).
 use xla_stub as xla;
 
+pub use backend::{ExecBackend, HostEngine};
 pub use engine::PjRtEngine;
+pub use hostmodel::HostModel;
 pub use manifest::Manifest;
 pub use mixer::{MixVariant, Mixer};
 pub use trainer::ModelRunner;
@@ -62,6 +76,8 @@ pub enum RuntimeError {
     Xla(String),
     /// Host tensor arity/shape/dtype mismatch against the manifest.
     Shape(String),
+    /// Simulated-time model failure (e.g. a zero-bandwidth edge).
+    Timing(String),
 }
 
 impl std::fmt::Display for RuntimeError {
@@ -74,6 +90,7 @@ impl std::fmt::Display for RuntimeError {
             RuntimeError::Manifest(m) => write!(f, "manifest: {m}"),
             RuntimeError::Xla(m) => write!(f, "xla: {m}"),
             RuntimeError::Shape(m) => write!(f, "shape mismatch: {m}"),
+            RuntimeError::Timing(m) => write!(f, "time model: {m}"),
         }
     }
 }

@@ -1,50 +1,80 @@
-//! The DSGD local-step executor: runs the AOT train/eval artifacts for one
-//! model config, and owns the manifest-driven parameter initialization
-//! (mirroring `model.init_params`: unit LayerNorm scales, zero biases,
-//! scaled-normal matrices).
+//! The DSGD local-step executor: runs the train/eval step for one model
+//! config through the active [`ExecBackend`] — the AOT artifacts on PJRT, the
+//! pure-Rust [`HostModel`] otherwise — and owns the manifest-driven parameter
+//! initialization (mirroring `model.init_params`: unit LayerNorm scales, zero
+//! biases, scaled-normal matrices). The two backends share the flat canonical
+//! parameter layout, so callers are backend-agnostic.
 
-use super::engine::{HostTensor, PjRtEngine};
+use super::backend::ExecBackend;
+use super::engine::HostTensor;
+use super::hostmodel::HostModel;
 use super::manifest::ModelConfig;
 use super::RuntimeError;
 use crate::util::rng::Xoshiro256pp;
 
-/// Executor for one model config.
+/// Executor for one model config, bound to an execution backend.
 pub struct ModelRunner<'e> {
-    engine: &'e PjRtEngine,
+    backend: &'e ExecBackend,
     cfg: ModelConfig,
+    /// PJRT train/eval artifact names (empty on the host backend).
     train_artifact: String,
     eval_artifact: String,
+    /// Host-native engine (None on the PJRT backend).
+    host: Option<HostModel>,
 }
 
 impl<'e> ModelRunner<'e> {
     /// Bind to a config; `variant` selects the optimizer lowering
-    /// ("native" or "pallas").
+    /// ("native" or "pallas"). The host backend computes both variants'
+    /// shared semantics natively and accepts either tag.
     pub fn new(
-        engine: &'e PjRtEngine,
+        backend: &'e ExecBackend,
         config: &str,
         variant: &str,
     ) -> Result<ModelRunner<'e>, RuntimeError> {
-        let cfg = engine
-            .manifest()
-            .configs
-            .get(config)
-            .ok_or_else(|| RuntimeError::UnknownArtifact(format!("config {config}")))?
-            .clone();
-        let train_artifact = format!("train_{config}_{variant}");
-        let eval_artifact = format!("eval_{config}");
-        engine.manifest().artifact(&train_artifact)?;
-        engine.manifest().artifact(&eval_artifact)?;
-        Ok(ModelRunner {
-            engine,
-            cfg,
-            train_artifact,
-            eval_artifact,
-        })
+        let cfg = backend.model_config(config)?.clone();
+        match backend {
+            ExecBackend::PjRt(engine) => {
+                let train_artifact = format!("train_{config}_{variant}");
+                let eval_artifact = format!("eval_{config}");
+                engine.manifest().artifact(&train_artifact)?;
+                engine.manifest().artifact(&eval_artifact)?;
+                Ok(ModelRunner {
+                    backend,
+                    cfg,
+                    train_artifact,
+                    eval_artifact,
+                    host: None,
+                })
+            }
+            ExecBackend::Host(_) => {
+                let host = HostModel::from_config(&cfg, backend.lr(), backend.beta())?;
+                Ok(ModelRunner {
+                    backend,
+                    cfg,
+                    train_artifact: String::new(),
+                    eval_artifact: String::new(),
+                    host: Some(host),
+                })
+            }
+        }
     }
 
     /// The model config.
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
+    }
+
+    /// The backend this runner executes on.
+    pub fn backend(&self) -> &ExecBackend {
+        self.backend
+    }
+
+    /// The host-native model when running on the host backend — the handle
+    /// the DSGD driver uses to fan local steps out across worker threads
+    /// (`HostModel` is `Sync`; the PJRT client is not).
+    pub fn host_model(&self) -> Option<&HostModel> {
+        self.host.as_ref()
     }
 
     /// Batch size the artifacts were traced at.
@@ -117,6 +147,10 @@ impl<'e> ModelRunner<'e> {
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<f64, RuntimeError> {
+        if let Some(host) = &self.host {
+            return host.train_step(params, momenta, tokens, targets);
+        }
+        let engine = self.backend.engine().ok_or(RuntimeError::ArtifactsMissing)?;
         let n_p = self.cfg.params.len();
         assert_eq!(params.len(), n_p);
         assert_eq!(momenta.len(), n_p);
@@ -125,7 +159,7 @@ impl<'e> ModelRunner<'e> {
         inputs.extend(momenta.iter().map(|m| HostTensor::F32(m.clone())));
         inputs.push(HostTensor::I32(tokens.to_vec()));
         inputs.push(HostTensor::I32(targets.to_vec()));
-        let out = self.engine.run(&self.train_artifact, &inputs)?;
+        let out = engine.run(&self.train_artifact, &inputs)?;
         debug_assert_eq!(out.len(), 2 * n_p + 1);
         for (dst, src) in params.iter_mut().zip(&out[..n_p]) {
             dst.copy_from_slice(src.as_f32());
@@ -143,11 +177,15 @@ impl<'e> ModelRunner<'e> {
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<(f64, f64), RuntimeError> {
+        if let Some(host) = &self.host {
+            return host.eval(params, tokens, targets);
+        }
+        let engine = self.backend.engine().ok_or(RuntimeError::ArtifactsMissing)?;
         let mut inputs: Vec<HostTensor> = Vec::with_capacity(params.len() + 2);
         inputs.extend(params.iter().map(|p| HostTensor::F32(p.clone())));
         inputs.push(HostTensor::I32(tokens.to_vec()));
         inputs.push(HostTensor::I32(targets.to_vec()));
-        let out = self.engine.run(&self.eval_artifact, &inputs)?;
+        let out = engine.run(&self.eval_artifact, &inputs)?;
         Ok((out[0].scalar(), out[1].scalar()))
     }
 
@@ -178,9 +216,9 @@ impl<'e> ModelRunner<'e> {
 mod tests {
     use super::*;
 
-    fn engine() -> Option<PjRtEngine> {
+    fn pjrt_backend() -> Option<ExecBackend> {
         crate::runtime::find_artifacts_dir()?;
-        PjRtEngine::from_artifacts().ok()
+        ExecBackend::pjrt().ok()
     }
 
     fn batch(runner: &ModelRunner, seed: u64) -> (Vec<i32>, Vec<i32>) {
@@ -208,9 +246,10 @@ mod tests {
     }
 
     #[test]
-    fn init_params_shapes_and_scheme() {
-        let Some(eng) = engine() else { return };
-        let runner = ModelRunner::new(&eng, "tiny", "native").unwrap();
+    fn init_params_shapes_and_scheme_on_host() {
+        // Host backend is always available, so this runs everywhere.
+        let backend = ExecBackend::host();
+        let runner = ModelRunner::new(&backend, "tiny", "native").unwrap();
         let params = runner.init_params(1);
         assert_eq!(params.len(), runner.config().params.len());
         for (p, spec) in params.iter().zip(&runner.config().params) {
@@ -228,9 +267,10 @@ mod tests {
     }
 
     #[test]
-    fn train_step_reduces_loss_on_fixed_batch() {
-        let Some(eng) = engine() else { return };
-        let runner = ModelRunner::new(&eng, "tiny", "native").unwrap();
+    fn host_train_step_reduces_loss_on_fixed_batch() {
+        let backend = ExecBackend::host();
+        let runner = ModelRunner::new(&backend, "tiny", "native").unwrap();
+        assert!(runner.host_model().is_some());
         let mut params = runner.init_params(3);
         let mut momenta = runner.zero_momenta();
         let (tokens, targets) = batch(&runner, 5);
@@ -250,29 +290,9 @@ mod tests {
     }
 
     #[test]
-    fn native_and_pallas_train_steps_agree() {
-        let Some(eng) = engine() else { return };
-        let nat = ModelRunner::new(&eng, "tiny", "native").unwrap();
-        let pal = ModelRunner::new(&eng, "tiny", "pallas").unwrap();
-        let (tokens, targets) = batch(&nat, 9);
-        let mut p1 = nat.init_params(7);
-        let mut m1 = nat.zero_momenta();
-        let mut p2 = pal.init_params(7);
-        let mut m2 = pal.zero_momenta();
-        let l1 = nat.train_step(&mut p1, &mut m1, &tokens, &targets).unwrap();
-        let l2 = pal.train_step(&mut p2, &mut m2, &tokens, &targets).unwrap();
-        assert!((l1 - l2).abs() < 1e-5, "loss {l1} vs {l2}");
-        for (a, b) in p1.iter().zip(&p2) {
-            for (x, y) in a.iter().zip(b) {
-                assert!((x - y).abs() < 1e-4);
-            }
-        }
-    }
-
-    #[test]
-    fn eval_matches_training_signal_and_flatten_roundtrip() {
-        let Some(eng) = engine() else { return };
-        let runner = ModelRunner::new(&eng, "tiny", "native").unwrap();
+    fn host_eval_and_flatten_roundtrip() {
+        let backend = ExecBackend::host();
+        let runner = ModelRunner::new(&backend, "tiny", "native").unwrap();
         let params = runner.init_params(11);
         let (tokens, targets) = batch(&runner, 13);
         let (loss, acc) = runner.eval(&params, &tokens, &targets).unwrap();
@@ -284,5 +304,48 @@ mod tests {
         let mut back = runner.zero_momenta();
         runner.unflatten_into(&flat, &mut back);
         assert_eq!(back, params);
+    }
+
+    #[test]
+    fn unknown_config_or_variant_is_rejected() {
+        let backend = ExecBackend::host();
+        assert!(ModelRunner::new(&backend, "nope", "native").is_err());
+        // Host accepts either variant tag (same native semantics).
+        assert!(ModelRunner::new(&backend, "tiny", "pallas").is_ok());
+    }
+
+    #[test]
+    fn pjrt_train_step_reduces_loss_on_fixed_batch() {
+        let Some(backend) = pjrt_backend() else { return };
+        let runner = ModelRunner::new(&backend, "tiny", "native").unwrap();
+        let mut params = runner.init_params(3);
+        let mut momenta = runner.zero_momenta();
+        let (tokens, targets) = batch(&runner, 5);
+        let mut first = None;
+        let mut last = f64::INFINITY;
+        for _ in 0..30 {
+            last = runner
+                .train_step(&mut params, &mut momenta, &tokens, &targets)
+                .unwrap();
+            first.get_or_insert(last);
+        }
+        assert!(last < first.unwrap() * 0.6);
+    }
+
+    #[test]
+    fn pjrt_and_host_share_init_and_layout() {
+        // The two backends must agree on the canonical parameter layout and
+        // the seeded initialization, so checkpoints/mixing are portable.
+        let Some(pjrt) = pjrt_backend() else { return };
+        let host = ExecBackend::host();
+        let rp = ModelRunner::new(&pjrt, "tiny", "native").unwrap();
+        let rh = ModelRunner::new(&host, "tiny", "native").unwrap();
+        assert_eq!(rp.config().num_params, rh.config().num_params);
+        let pp = rp.init_params(7);
+        let ph = rh.init_params(7);
+        assert_eq!(pp.len(), ph.len());
+        for (a, b) in pp.iter().zip(&ph) {
+            assert_eq!(a, b);
+        }
     }
 }

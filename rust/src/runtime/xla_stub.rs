@@ -5,8 +5,11 @@
 //! exact API surface they use, while reporting "PJRT unavailable" from every
 //! entry point that would need the real runtime. Everything that runs with
 //! `engine: None` (the host-fallback mixer, all consensus experiments, the
-//! optimizer, `batopo reproduce` consensus targets) is unaffected; PJRT-backed
-//! paths (`batopo train`, `table2`) fail with a clear [`Error`] instead.
+//! optimizer, `batopo reproduce` consensus targets) is unaffected, and the
+//! training paths (`batopo train`, `table2`, Figs. 7–10) transparently fall
+//! back to the [host-native backend](super::hostmodel) via
+//! [`ExecBackend::auto`](super::backend::ExecBackend::auto); forcing
+//! `--backend pjrt` surfaces a clear [`Error`].
 //!
 //! To re-enable real PJRT execution, add the `xla` crate to `Cargo.toml`,
 //! delete this module and replace the `use super::xla_stub as xla;` aliases in

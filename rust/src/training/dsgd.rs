@@ -1,12 +1,18 @@
 //! DSGD over a parameter-synchronization topology (paper §VI-B).
 //!
-//! Each round, every node takes one local momentum-SGD step on its shard
-//! (the AOT train artifact) and then gossips parameters with its neighbors:
-//! `X ← W X` over the stacked flat parameter matrix (the L1 mixing kernel).
+//! Each round, every node takes one local momentum-SGD step on its shard and
+//! then gossips parameters with its neighbors: `X ← W X` over the stacked
+//! flat parameter matrix (the L1 mixing kernel). The local step runs through
+//! the active [`ExecBackend`] — the AOT train artifact on PJRT, or the
+//! pure-Rust [`HostModel`](crate::runtime::HostModel) on the host backend,
+//! where independent node steps additionally fan out across worker threads
+//! (`DsgdConfig::threads`; results are bit-identical for any thread count).
+//!
 //! Simulated wall time advances by Eq. 35's per-iteration cost; the
 //! experiment output is test accuracy (and loss) against simulated time —
 //! exactly the axes of Figs. 7–10 — plus the time-to-target-accuracy scalar
-//! of Table II.
+//! of Table II (read off the piecewise-linear accuracy-vs-time curve, i.e.
+//! interpolated between the surrounding epoch evaluations).
 
 use crate::bandwidth::scenarios::BandwidthScenario;
 use crate::bandwidth::timing::TimeModel;
@@ -16,8 +22,9 @@ use crate::coordinator::worker::WorkerPool;
 use crate::graph::Topology;
 use crate::runtime::mixer::{MixVariant, Mixer};
 use crate::runtime::trainer::ModelRunner;
-use crate::runtime::{PjRtEngine, RuntimeError};
+use crate::runtime::{ExecBackend, RuntimeError};
 use crate::training::data::{DatasetSpec, SyntheticDataset};
+use crate::util::threadpool::parallel_map;
 
 /// DSGD run configuration.
 #[derive(Debug, Clone)]
@@ -26,7 +33,7 @@ pub struct DsgdConfig {
     pub model: String,
     /// Optimizer lowering variant ("native" / "pallas").
     pub variant: String,
-    /// Gossip executor variant.
+    /// Gossip executor variant (the host backend always mixes host-side).
     pub mix_variant: MixVariant,
     /// Max epochs.
     pub epochs: usize,
@@ -38,6 +45,9 @@ pub struct DsgdConfig {
     pub seed: u64,
     /// Override dataset spec (defaults derived from the model config).
     pub dataset: Option<DatasetSpec>,
+    /// Worker threads for the per-node local steps on the host backend
+    /// (PJRT launches stay serialized on the CPU client). Default: all CPUs.
+    pub threads: usize,
 }
 
 impl DsgdConfig {
@@ -52,6 +62,7 @@ impl DsgdConfig {
             target_accuracy: None,
             seed: 17,
             dataset: None,
+            threads: crate::util::threadpool::num_cpus(),
         }
     }
 }
@@ -78,7 +89,8 @@ pub struct DsgdRunSummary {
     pub topology: String,
     /// Per-epoch records (the Fig. 7–10 curve points).
     pub records: Vec<EpochRecord>,
-    /// First simulated time at which mean accuracy hit the target.
+    /// Simulated time at which mean accuracy first reached the target,
+    /// interpolated linearly between the surrounding epoch evaluations.
     pub time_to_target: Option<f64>,
     /// Mean eval accuracy after the final epoch.
     pub final_accuracy: f64,
@@ -88,9 +100,9 @@ pub struct DsgdRunSummary {
     pub iters_per_epoch: usize,
 }
 
-/// The DSGD driver bound to an engine + scenario + time model.
+/// The DSGD driver bound to a backend + scenario + time model.
 pub struct DsgdTrainer<'e> {
-    engine: &'e PjRtEngine,
+    backend: &'e ExecBackend,
     scenario: BandwidthScenario,
     time_model: TimeModel,
     config: DsgdConfig,
@@ -99,12 +111,12 @@ pub struct DsgdTrainer<'e> {
 impl<'e> DsgdTrainer<'e> {
     /// Create a trainer.
     pub fn new(
-        engine: &'e PjRtEngine,
+        backend: &'e ExecBackend,
         scenario: BandwidthScenario,
         config: DsgdConfig,
     ) -> DsgdTrainer<'e> {
         DsgdTrainer {
-            engine,
+            backend,
             scenario,
             time_model: TimeModel::default(),
             config,
@@ -125,7 +137,7 @@ impl<'e> DsgdTrainer<'e> {
             self.scenario.num_nodes(),
             "topology/scenario node mismatch"
         );
-        let runner = ModelRunner::new(self.engine, &self.config.model, &self.config.variant)?;
+        let runner = ModelRunner::new(self.backend, &self.config.model, &self.config.variant)?;
         let spec = self
             .config
             .dataset
@@ -133,39 +145,67 @@ impl<'e> DsgdTrainer<'e> {
             .unwrap_or_else(|| DatasetSpec::for_config(runner.config()));
         let dataset = SyntheticDataset::new(spec.clone());
         let pool = WorkerPool::spawn(n, &dataset, self.config.seed);
-        let mixer = Mixer::new(Some(self.engine), topo, self.config.mix_variant)
-            .or_else(|_| Mixer::new(None, topo, MixVariant::HostFallback))?;
+        let mixer = Mixer::for_backend(self.backend, topo, self.config.mix_variant)?;
+        let threads = self.config.threads.max(1);
 
         // Common initial model across nodes (paper setup), zero momenta.
         let init = runner.init_params(self.config.seed);
         let mut params: Vec<Vec<Vec<f32>>> = (0..n).map(|_| init.clone()).collect();
         let mut momenta: Vec<Vec<Vec<f32>>> = (0..n).map(|_| runner.zero_momenta()).collect();
 
-        let iter_time = self.time_model.train_iter_time(&self.scenario, topo);
+        let iter_time = self
+            .time_model
+            .train_iter_time(&self.scenario, topo)
+            .map_err(|e| RuntimeError::Timing(e.to_string()))?;
         let iters_per_epoch = spec.iters_per_epoch();
         let mut clock = SimClock::new();
         let mut records = Vec::with_capacity(self.config.epochs);
         let mut time_to_target = None;
         let mut final_accuracy = 0.0;
+        // The accuracy-vs-time curve starts at (t = 0, chance accuracy).
+        let mut prev_time = 0.0f64;
+        let mut prev_acc = 1.0 / spec.classes as f64;
 
         'epochs: for epoch in 0..self.config.epochs {
             let mut loss_sum = 0.0;
             for _step in 0..iters_per_epoch {
                 // Workers produce local batches concurrently.
-                let batches = pool.broadcast_collect(Command::NextBatch);
-                // Local steps (launches serialized on the CPU client; the
-                // simulated clock charges one parallel step per round).
-                for (node, reply) in batches.iter().enumerate() {
-                    let Reply::Batch { tokens, targets, .. } = reply else {
-                        unreachable!()
-                    };
-                    let loss = runner.train_step(
-                        &mut params[node],
-                        &mut momenta[node],
-                        tokens,
-                        targets,
-                    )?;
-                    loss_sum += loss;
+                let batches = collect_batches(&pool, Command::NextBatch);
+                // Local steps. On the host backend the independent node steps
+                // fan out across the thread pool; PJRT launches stay
+                // serialized on the CPU client. Either way the simulated
+                // clock charges one parallel step per round.
+                if let Some(host) = runner.host_model() {
+                    let items: Vec<(Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<i32>, Vec<i32>)> = batches
+                        .into_iter()
+                        .enumerate()
+                        .map(|(node, (tokens, targets))| {
+                            (
+                                std::mem::take(&mut params[node]),
+                                std::mem::take(&mut momenta[node]),
+                                tokens,
+                                targets,
+                            )
+                        })
+                        .collect();
+                    let stepped = parallel_map(items, threads, |(mut p, mut m, tok, tgt)| {
+                        let loss = host.train_step(&mut p, &mut m, &tok, &tgt);
+                        (p, m, loss)
+                    });
+                    for (node, (p, m, loss)) in stepped.into_iter().enumerate() {
+                        params[node] = p;
+                        momenta[node] = m;
+                        loss_sum += loss?;
+                    }
+                } else {
+                    for (node, (tokens, targets)) in batches.iter().enumerate() {
+                        loss_sum += runner.train_step(
+                            &mut params[node],
+                            &mut momenta[node],
+                            tokens,
+                            targets,
+                        )?;
+                    }
                 }
                 // Gossip mixing of the flat parameter matrix.
                 let flats: Vec<Vec<f32>> =
@@ -183,15 +223,28 @@ impl<'e> DsgdTrainer<'e> {
             let mut eval_acc = 0.0;
             let mut eval_count = 0usize;
             for _ in 0..self.config.eval_batches {
-                let batches = pool.broadcast_collect(Command::EvalBatch);
-                for (node, reply) in batches.iter().enumerate() {
-                    let Reply::Batch { tokens, targets, .. } = reply else {
-                        unreachable!()
-                    };
-                    let (l, a) = runner.eval(&params[node], tokens, targets)?;
-                    eval_loss += l;
-                    eval_acc += a;
-                    eval_count += 1;
+                let batches = collect_batches(&pool, Command::EvalBatch);
+                if let Some(host) = runner.host_model() {
+                    let items: Vec<(&Vec<Vec<f32>>, Vec<i32>, Vec<i32>)> = batches
+                        .into_iter()
+                        .enumerate()
+                        .map(|(node, (tokens, targets))| (&params[node], tokens, targets))
+                        .collect();
+                    for r in parallel_map(items, threads, |(p, tok, tgt)| {
+                        host.eval(p, &tok, &tgt)
+                    }) {
+                        let (l, a) = r?;
+                        eval_loss += l;
+                        eval_acc += a;
+                        eval_count += 1;
+                    }
+                } else {
+                    for (node, (tokens, targets)) in batches.iter().enumerate() {
+                        let (l, a) = runner.eval(&params[node], tokens, targets)?;
+                        eval_loss += l;
+                        eval_acc += a;
+                        eval_count += 1;
+                    }
                 }
             }
             eval_loss /= eval_count as f64;
@@ -208,10 +261,21 @@ impl<'e> DsgdTrainer<'e> {
 
             if let Some(target) = self.config.target_accuracy {
                 if eval_acc >= target && time_to_target.is_none() {
-                    time_to_target = Some(clock.now());
+                    // Read the crossing off the piecewise-linear curve
+                    // through (prev_time, prev_acc) and (now, eval_acc).
+                    let frac = if target <= prev_acc {
+                        0.0 // already met at the previous curve point
+                    } else if eval_acc > prev_acc {
+                        ((target - prev_acc) / (eval_acc - prev_acc)).clamp(0.0, 1.0)
+                    } else {
+                        1.0
+                    };
+                    time_to_target = Some(prev_time + frac * (clock.now() - prev_time));
                     break 'epochs;
                 }
             }
+            prev_time = clock.now();
+            prev_acc = eval_acc;
         }
         pool.shutdown();
 
@@ -226,15 +290,24 @@ impl<'e> DsgdTrainer<'e> {
     }
 }
 
+/// Broadcast a batch command and unwrap the replies into (tokens, targets)
+/// pairs indexed by node.
+fn collect_batches(pool: &WorkerPool, cmd: Command) -> Vec<(Vec<i32>, Vec<i32>)> {
+    pool.broadcast_collect(cmd)
+        .into_iter()
+        .map(|reply| {
+            let Reply::Batch { tokens, targets, .. } = reply else {
+                unreachable!("workers reply to batch commands with batches")
+            };
+            (tokens, targets)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::topo::baselines;
-
-    fn engine() -> Option<PjRtEngine> {
-        crate::runtime::find_artifacts_dir()?;
-        PjRtEngine::from_artifacts().ok()
-    }
 
     fn small_dataset(classes: usize) -> DatasetSpec {
         DatasetSpec {
@@ -249,17 +322,17 @@ mod tests {
     }
 
     #[test]
-    fn dsgd_learns_and_tracks_time() {
-        let Some(eng) = engine() else { return };
+    fn dsgd_learns_and_tracks_time_on_host() {
+        // Runs everywhere: the host backend needs no artifacts.
+        let backend = ExecBackend::host();
         let mut cfg = DsgdConfig::new("tiny");
-        cfg.epochs = 4;
+        cfg.epochs = 3;
         cfg.dataset = Some(small_dataset(10));
-        cfg.mix_variant = MixVariant::HostFallback;
         let scenario = BandwidthScenario::paper_homogeneous(8);
         let topo = baselines::ring(8);
-        let trainer = DsgdTrainer::new(&eng, scenario, cfg);
+        let trainer = DsgdTrainer::new(&backend, scenario, cfg);
         let out = trainer.run(&topo).expect("run");
-        assert_eq!(out.records.len(), 4);
+        assert_eq!(out.records.len(), 3);
         // Loss goes down across epochs.
         assert!(
             out.records.last().unwrap().train_loss < out.records[0].train_loss,
@@ -267,38 +340,64 @@ mod tests {
             out.records
         );
         // Simulated time = epochs * iters * iter_time.
-        let want = 4.0 * out.iters_per_epoch as f64 * out.iter_time;
+        let want = 3.0 * out.iters_per_epoch as f64 * out.iter_time;
         assert!((out.records.last().unwrap().sim_time - want).abs() < 1e-9);
         // Ring degree 2 at 9.76 GB/s: iter_time = 2*t_comm + t_comp.
         assert!((out.iter_time - (2.0 * 5.01e-3 + 15.21e-3)).abs() < 1e-9);
     }
 
     #[test]
-    fn target_accuracy_short_circuits() {
-        let Some(eng) = engine() else { return };
-        let mut cfg = DsgdConfig::new("tiny");
-        cfg.epochs = 50;
-        cfg.dataset = Some(small_dataset(10));
-        cfg.mix_variant = MixVariant::HostFallback;
-        cfg.target_accuracy = Some(0.0); // trivially met at first eval
+    fn host_run_is_deterministic_across_thread_counts() {
+        let backend = ExecBackend::host();
         let scenario = BandwidthScenario::paper_homogeneous(8);
-        let trainer = DsgdTrainer::new(&eng, scenario, cfg);
-        let out = trainer.run(&baselines::ring(8)).unwrap();
-        assert_eq!(out.records.len(), 1);
-        assert!(out.time_to_target.is_some());
+        let topo = baselines::ring(8);
+        let run_with = |threads: usize| {
+            let mut cfg = DsgdConfig::new("tiny");
+            cfg.epochs = 1;
+            cfg.dataset = Some(small_dataset(10));
+            cfg.threads = threads;
+            DsgdTrainer::new(&backend, scenario.clone(), cfg)
+                .run(&topo)
+                .expect("run")
+        };
+        let serial = run_with(1);
+        let parallel = run_with(4);
+        assert_eq!(serial.records.len(), parallel.records.len());
+        for (a, b) in serial.records.iter().zip(&parallel.records) {
+            assert_eq!(a.train_loss, b.train_loss, "train loss must be bitwise equal");
+            assert_eq!(a.eval_acc, b.eval_acc);
+        }
     }
 
     #[test]
-    fn better_topology_same_loss_trajectory_shape() {
-        // Smoke: torus runs end-to-end with PJRT mixing as well.
-        let Some(eng) = engine() else { return };
+    fn target_accuracy_short_circuits_and_interpolates() {
+        let backend = ExecBackend::host();
         let mut cfg = DsgdConfig::new("tiny");
-        cfg.epochs = 2;
+        cfg.epochs = 50;
         cfg.dataset = Some(small_dataset(10));
-        let scenario = BandwidthScenario::paper_homogeneous(16);
-        let trainer = DsgdTrainer::new(&eng, scenario, cfg);
-        let out = trainer.run(&baselines::torus2d(16)).unwrap();
-        assert_eq!(out.records.len(), 2);
-        assert!(out.records.iter().all(|r| r.train_loss.is_finite()));
+        cfg.target_accuracy = Some(0.0); // trivially met at first eval
+        let scenario = BandwidthScenario::paper_homogeneous(8);
+        let trainer = DsgdTrainer::new(&backend, scenario, cfg);
+        let out = trainer.run(&baselines::ring(8)).unwrap();
+        assert_eq!(out.records.len(), 1);
+        // Chance accuracy (0.1) already exceeds a 0.0 target, so the
+        // interpolated crossing is the start of the curve.
+        assert_eq!(out.time_to_target, Some(0.0));
+    }
+
+    #[test]
+    fn zero_bandwidth_scenario_is_a_clean_error() {
+        let backend = ExecBackend::host();
+        let mut bw = vec![9.76; 8];
+        bw[0] = 0.0;
+        let scenario = BandwidthScenario::NodeLevel { bw };
+        let mut cfg = DsgdConfig::new("tiny");
+        cfg.epochs = 1;
+        cfg.dataset = Some(small_dataset(10));
+        let trainer = DsgdTrainer::new(&backend, scenario, cfg);
+        assert!(matches!(
+            trainer.run(&baselines::ring(8)),
+            Err(RuntimeError::Timing(_))
+        ));
     }
 }

@@ -217,3 +217,61 @@ fn committed_baseline_parses_and_gates() {
     let rep = records::compare(&baseline, &slowed, 1.25, 0.0);
     assert_eq!(rep.regressions.len(), baseline.len());
 }
+
+// ---------------------------------------------------------------------------
+// Dense ↔ Lanczos dispatch boundary (LANCZOS_CUTOFF)
+// ---------------------------------------------------------------------------
+
+/// All three `r_asym` call sites funnel through the same dispatch:
+/// `Topology::asymptotic_convergence_factor` (the experiment drivers),
+/// `optimizer::extract::asym`, and the ADMM candidate scoring — the latter
+/// two via `spectral::r_asym_graph`. At the `LANCZOS_CUTOFF` boundary
+/// (n = 159/160 dense, n = 161 Lanczos) every entry point must agree with
+/// both underlying paths, or the optimizer would silently mis-rank
+/// candidates straddling the cutoff.
+#[test]
+fn r_asym_dispatch_agrees_across_the_lanczos_cutoff() {
+    use batopo::graph::spectral::{r_asym_graph, LANCZOS_CUTOFF};
+    use batopo::graph::Topology;
+    assert_eq!(LANCZOS_CUTOFF, 160, "boundary sizes below track the cutoff");
+    for n in [LANCZOS_CUTOFF - 1, LANCZOS_CUTOFF, LANCZOS_CUTOFF + 1] {
+        let graph = chorded_ring_graph(n);
+        let w = metropolis(&graph);
+        let wm = weight_matrix_from_edge_weights(&graph, &w);
+
+        let dense = asymptotic_convergence_factor(&wm);
+        let lanczos = asymptotic_convergence_factor_lanczos(&graph, &w, &LanczosOptions::default());
+        let dispatch = r_asym_graph(&graph, &w);
+        let topo = Topology::new(graph.clone(), wm, format!("boundary_n{n}"));
+        let via_topology = topo.asymptotic_convergence_factor();
+
+        // Both paths agree tightly on expanders…
+        assert!(
+            (dense - lanczos).abs() < 1e-6,
+            "n={n}: dense {dense} vs lanczos {lanczos}"
+        );
+        // …and each public entry point lands exactly on its dispatch side.
+        let expected = if n <= LANCZOS_CUTOFF { dense } else { lanczos };
+        assert_eq!(dispatch, expected, "r_asym_graph dispatch at n={n}");
+        assert_eq!(via_topology, expected, "Topology dispatch at n={n}");
+    }
+}
+
+/// Same boundary check for the algebraic-connectivity dispatch used by the
+/// constraint diagnostics.
+#[test]
+fn algebraic_connectivity_dispatch_agrees_across_the_cutoff() {
+    use batopo::graph::spectral::{algebraic_connectivity_graph, LANCZOS_CUTOFF};
+    for n in [LANCZOS_CUTOFF - 1, LANCZOS_CUTOFF, LANCZOS_CUTOFF + 1] {
+        let graph = chorded_ring_graph(n);
+        let w = metropolis(&graph);
+        let l = laplacian_from_weights(&graph, &w);
+        let vals = laplacian_eigenvalues(&l);
+        let dense_lam2 = vals[vals.len() - 2];
+        let auto = algebraic_connectivity_graph(&graph, &w);
+        assert!(
+            (auto - dense_lam2).abs() < 1e-6,
+            "n={n}: dispatch {auto} vs dense λ₂ {dense_lam2}"
+        );
+    }
+}
