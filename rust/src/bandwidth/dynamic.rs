@@ -217,6 +217,9 @@ fn optimize_for(
         spec.restarts = 1;
     }
     spec.seed = seed;
+    // Dynamic sims run inside already-parallel reproduce sweep cells; keep
+    // the online re-optimizations single-threaded.
+    spec.restart_threads = 1;
     BaTopoOptimizer::new(spec).run()
 }
 

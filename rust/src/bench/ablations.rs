@@ -4,7 +4,7 @@
 //! pipeline. Run with `cargo bench -- ablations`.
 
 use crate::bench::experiments::ExpOptions;
-use crate::optimizer::{BaTopoOptimizer, OptimizeSpec};
+use crate::optimizer::{BaTopoOptimizer, OptimizeSpec, XStep};
 use crate::util::csv::CsvWriter;
 
 /// One ablation row.
@@ -66,17 +66,29 @@ pub fn run_ablations(opts: &ExpOptions) {
             name: "few ADMM iters (10)",
             tweak: |s| s.max_iters = 10,
         },
+        Ablation {
+            name: "legacy bicgstab X-step (assembled KKT)",
+            tweak: |s| s.xstep = XStep::Bicgstab,
+        },
     ];
 
     let mut csv = CsvWriter::create(
         opts.out_dir.join("ablations.csv"),
-        &["ablation", "r_asym", "admm_iters", "krylov_iters", "wall_s"],
+        &[
+            "ablation",
+            "r_asym",
+            "admm_iters",
+            "krylov_iters",
+            "krylov_failures",
+            "worst_krylov_resid",
+            "wall_s",
+        ],
     )
     .expect("csv");
     println!("── ablations: BA-Topo pipeline knobs (n=16, r=32, homogeneous) ──");
     println!(
-        "{:<42} {:>8} {:>10} {:>10} {:>8}",
-        "variant", "r_asym", "admm iters", "krylov", "wall(s)"
+        "{:<42} {:>8} {:>10} {:>10} {:>9} {:>8}",
+        "variant", "r_asym", "admm iters", "krylov", "stalled", "wall(s)"
     );
     for ab in &ablations {
         let mut spec = base_spec(opts.quick);
@@ -87,28 +99,30 @@ pub fn run_ablations(opts: &ExpOptions) {
             Ok(rep) => {
                 let wall = t0.elapsed().as_secs_f64();
                 println!(
-                    "{:<42} {:>8.4} {:>10} {:>10} {:>8.1}",
-                    ab.name, rep.r_asym, rep.admm_iterations, rep.krylov_iterations, wall
+                    "{:<42} {:>8.4} {:>10} {:>10} {:>9} {:>8.1}",
+                    ab.name,
+                    rep.r_asym,
+                    rep.admm_iterations,
+                    rep.krylov_iterations,
+                    rep.krylov_failures,
+                    wall
                 );
                 csv.row(&[
                     ab.name.to_string(),
                     format!("{:.4}", rep.r_asym),
                     rep.admm_iterations.to_string(),
                     rep.krylov_iterations.to_string(),
+                    rep.krylov_failures.to_string(),
+                    format!("{:.2e}", rep.worst_krylov_residual),
                     format!("{wall:.1}"),
                 ])
                 .unwrap();
             }
             Err(e) => {
                 println!("{:<42} failed: {e}", ab.name);
-                csv.row(&[
-                    ab.name.to_string(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                ])
-                .unwrap();
+                let mut fields = vec![ab.name.to_string()];
+                fields.extend(std::iter::repeat("-".to_string()).take(6));
+                csv.row(&fields).unwrap();
             }
         }
     }

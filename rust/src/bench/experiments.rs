@@ -120,6 +120,12 @@ pub fn ba_spec(scenario: BandwidthScenario, r: usize, quick: bool) -> OptimizeSp
 }
 
 /// Optimize (or load cached) BA-Topo for a scenario + budget.
+///
+/// Every fresh optimization writes a `<out>/topos/<key>.health.json` sidecar
+/// with the run's solver diagnostics (`krylov_failures`,
+/// `worst_krylov_residual`, …) so reproduce runs can distinguish a clean
+/// solve from a silently-stalled one. Sidecars are per-key files, so the
+/// parallel sweep cells never contend on a shared writer.
 pub fn ba_topo_cached(
     scenario: &BandwidthScenario,
     r: usize,
@@ -132,11 +138,28 @@ pub fn ba_topo_cached(
     }
     let mut spec = ba_spec(scenario.clone(), r, opts.quick);
     spec.seed = opts.seed;
-    let topo = BaTopoOptimizer::new(spec)
-        .run()
+    // The sweep cells calling this already fan out across the pool (capped
+    // by --threads); run the restarts serially so the nesting never
+    // oversubscribes the machine.
+    spec.restart_threads = 1;
+    let rep = BaTopoOptimizer::new(spec)
+        .run_detailed()
         .unwrap_or_else(|e| panic!("BA-Topo optimization failed for {key}: {e}"));
-    config::save_topology(&topo, &path).expect("cache topology");
-    topo
+    config::save_topology(&rep.topology, &path).expect("cache topology");
+    let health = Json::obj(vec![
+        ("key", Json::Str(key.to_string())),
+        ("r_asym", Json::Num(rep.r_asym)),
+        ("admm_iterations", Json::Num(rep.admm_iterations as f64)),
+        ("admm_converged", Json::Bool(rep.admm_converged)),
+        ("krylov_iterations", Json::Num(rep.krylov_iterations as f64)),
+        ("krylov_failures", Json::Num(rep.krylov_failures as f64)),
+        ("worst_krylov_residual", Json::Num(rep.worst_krylov_residual)),
+        ("krylov_restarts", Json::Num(rep.krylov_restarts as f64)),
+    ]);
+    let health_path = opts.out_dir.join("topos").join(format!("{key}.health.json"));
+    // Best-effort: the sidecar is diagnostics, not an experiment artifact.
+    let _ = std::fs::write(&health_path, format!("{health}\n"));
+    rep.topology
 }
 
 // ---------------------------------------------------------------------------

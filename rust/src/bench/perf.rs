@@ -9,10 +9,15 @@
 //!   gossip mixing at n∈{16,128}, D=80k (model-sized state),
 //! - `solver` — §V-C ablation: Bi-CGSTAB on the ADMM KKT system (assembled
 //!   CSC vs matrix-free operator, ± ILU(0), ± warm starts),
-//! - `admm`  — per-iteration ADMM cost vs n,
+//! - `admm`  — per-iteration ADMM cost vs n, plus the X-step backend
+//!   head-to-head on the real heterogeneous operator (`admm_xstep_cg`:
+//!   matrix-free Schur-complement CG vs `admm_xstep_kkt`: assembled KKT +
+//!   ILU(0) + Bi-CGSTAB, with the assembly/factorization cost recorded
+//!   separately as `admm_xstep_kkt_setup`) at n∈{64,160(,256)},
 //! - `scale` — the large-`n` regime: matrix-free Lanczos λ₂/λ_max and
-//!   parallel CSR SpMV at n up to 2048 — sizes where the dense
-//!   eigendecomposition path cannot run,
+//!   parallel CSR SpMV at n up to 2048, plus the CG X-step at n=512 —
+//!   sizes where the dense eigendecomposition path cannot run and the
+//!   assembled-KKT ILU path would hit the memory wall,
 //! - `train` — end-to-end DSGD steps/second: always benches the host-native
 //!   backend (`host_train_step`, `dsgd_round_host` — the `BENCH_baseline.json`
 //!   entries the CI gate compares), plus the PJRT round when artifacts are
@@ -26,7 +31,8 @@ use crate::graph::spectral::{
     laplacian_extremes_lanczos,
 };
 use crate::linalg::bicgstab::{bicgstab_ws, BicgstabOptions, BicgstabWorkspace};
-use crate::linalg::{CsrMatrix, Ilu0, LanczosOptions, Preconditioner};
+use crate::linalg::cg::{cg_ws, CgOptions, CgWorkspace};
+use crate::linalg::{CsrMatrix, Ilu0, JacobiPrecond, LanczosOptions, Preconditioner};
 use crate::optimizer::operators;
 use crate::runtime::mixer::{MixVariant, Mixer};
 use crate::runtime::trainer::ModelRunner;
@@ -129,7 +135,11 @@ pub fn perf_solver(opts: &PerfOptions) -> Vec<BenchRecord> {
     let default_sizes: &[usize] = if opts.quick { &[16, 32] } else { &[16, 32, 64] };
     for n in opts.sizes_or(default_sizes) {
         let ops = operators::build_homogeneous(n, 2.0, 1e-8);
-        let dim = ops.kkt.rows();
+        // The legacy path's explicit saddle-point matrix (built on demand
+        // since the CG X-step refactor — only this bench and the
+        // `--xstep bicgstab` A/B path still assemble it).
+        let kkt = ops.assemble_kkt();
+        let dim = kkt.rows();
         let mut rng = Xoshiro256pp::seed_from_u64(5);
         let b: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
         let opts_k = BicgstabOptions {
@@ -141,11 +151,11 @@ pub fn perf_solver(opts: &PerfOptions) -> Vec<BenchRecord> {
         // the CI perf gate compares mean times, and a 1-sample mean on a
         // shared runner is all scheduler jitter.
         let s = time_fn(&format!("ILU(0) factor          n={n} dim={dim}"), 1, 3, || {
-            std::hint::black_box(Ilu0::factor(&ops.kkt, 1e-6));
+            std::hint::black_box(Ilu0::factor(&kkt, 1e-6));
         });
         out.push(record(&s, "ilu_factor", n, &rev));
 
-        let ilu = Ilu0::factor(&ops.kkt, 1e-6);
+        let ilu = Ilu0::factor(&kkt, 1e-6);
         let kkt_op = ops.kkt_operator();
         let reps = if opts.quick { 3 } else { 4 };
         let mut report = |label: &str,
@@ -163,7 +173,7 @@ pub fn perf_solver(opts: &PerfOptions) -> Vec<BenchRecord> {
                 let outcome = if matrix_free {
                     bicgstab_ws(&kkt_op, &b, &mut x, pre, &opts_k, &mut ws)
                 } else {
-                    bicgstab_ws(&ops.kkt, &b, &mut x, pre, &opts_k, &mut ws)
+                    bicgstab_ws(&kkt, &b, &mut x, pre, &opts_k, &mut ws)
                 };
                 samples.push(t0.elapsed().as_secs_f64());
                 iters_used = outcome.iterations;
@@ -178,6 +188,136 @@ pub fn perf_solver(opts: &PerfOptions) -> Vec<BenchRecord> {
         report("bicgstab + ILU matrixfree", "bicgstab_ilu_matfree", true, Some(&ilu), false);
     }
     out
+}
+
+/// Heterogeneous node-level operator stack for the `admm_xstep_*` benches:
+/// the `config::scenario_by_name("node-level")` preset (half the nodes at
+/// 9.76 GB/s, half at 3.25 — the paper's 3:1 ratio, same vector the CLI
+/// builds) with the usual `r = n·⌈log₂n⌉/2` edge budget. Sizes are clamped
+/// to even `n ≥ 2` (the node-level split needs two halves).
+fn xstep_operators(n: usize) -> operators::AdmmOperators {
+    let n = (n & !1).max(2);
+    let d = (n as f64).log2().ceil() as usize;
+    let r = (n * d / 2).max(n - 1);
+    let cs = crate::config::scenario_by_name("node-level", n)
+        .expect("even n")
+        .constraints(r)
+        .expect("node-level constraints");
+    operators::build_heterogeneous(&cs, 2.0, 1e-8)
+}
+
+/// A representative X-step target `v` (seeded, O(0.1) entries) and the two
+/// right-hand sides derived from it: the Schur rhs `A v − b` for CG and the
+/// stacked `[v; b]` for the KKT solve.
+fn xstep_rhs(ops: &operators::AdmmOperators) -> (Vec<f64>, Vec<f64>) {
+    let lay = &ops.layout;
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let v: Vec<f64> = (0..lay.total).map(|_| rng.next_gaussian() * 0.1).collect();
+    let mut schur = vec![0.0; lay.rows];
+    ops.a.matvec_into(&v, &mut schur);
+    for (ri, bi) in schur.iter_mut().zip(&ops.b) {
+        *ri -= bi;
+    }
+    let mut stacked = vec![0.0; lay.total + lay.rows];
+    stacked[..lay.total].copy_from_slice(&v);
+    stacked[lay.total..].copy_from_slice(&ops.b);
+    (schur, stacked)
+}
+
+/// One cold X-step solve through the matrix-free Schur-complement CG
+/// (Jacobi preconditioner from the squared row norms of `A`; nothing
+/// assembled, nothing factored). `rec_name` keys the emitted record:
+/// `admm_xstep_cg` for the `bench admm` head-to-head cells and
+/// `admm_xstep_cg_scale` for the looser-tolerance `bench scale` ceiling
+/// cell — distinct names, so a shared `--sizes` override can never emit two
+/// records under one `(name, n)` compare key.
+fn bench_xstep_cg(
+    ops: &operators::AdmmOperators,
+    n: usize,
+    reps: usize,
+    copts: &CgOptions,
+    rec_name: &str,
+    rev: &str,
+) -> BenchRecord {
+    let lay = &ops.layout;
+    let (schur_rhs, _) = xstep_rhs(ops);
+    let normal = ops.normal_operator();
+    let jacobi = JacobiPrecond::new(&ops.schur_diag());
+    let mut samples = Vec::with_capacity(reps);
+    let mut iters = 0usize;
+    let mut converged = true;
+    for _ in 0..reps {
+        let mut lam = vec![0.0; lay.rows];
+        let mut ws = CgWorkspace::new(lay.rows);
+        let t0 = std::time::Instant::now();
+        let out = cg_ws(&normal, &schur_rhs, &mut lam, Some(&jacobi), copts, &mut ws);
+        samples.push(t0.elapsed().as_secs_f64());
+        iters = out.iterations;
+        converged = out.converged;
+    }
+    let s = stats_from(
+        &format!(
+            "xstep cg (schur, matrix-free) n={n} (krylov {iters}{})",
+            if converged { "" } else { ", NOT converged" }
+        ),
+        samples,
+    );
+    record(&s, rec_name, n, rev)
+}
+
+/// `admm_xstep_kkt` + `admm_xstep_kkt_setup`: the legacy backend. The setup
+/// record times what the CG path never pays (assembling the
+/// `(total+rows)²`-pattern saddle-point matrix and factoring ILU(0)); the
+/// solve record times one cold Bi-CGSTAB X-step with the factorization
+/// already in hand.
+fn bench_xstep_kkt(
+    ops: &operators::AdmmOperators,
+    n: usize,
+    reps: usize,
+    bopts: &BicgstabOptions,
+    rev: &str,
+) -> (BenchRecord, BenchRecord) {
+    let lay = &ops.layout;
+    let kdim = lay.total + lay.rows;
+    let (_, kkt_rhs) = xstep_rhs(ops);
+    // Multi-sample like every other gated record (a 1-sample mean on a
+    // shared runner is all scheduler jitter); the last factorization is the
+    // one the solve record reuses.
+    let mut setup_samples = Vec::with_capacity(reps);
+    let mut ilu = None;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let kkt = ops.assemble_kkt();
+        ilu = Some(Ilu0::factor(&kkt, 1e-6));
+        setup_samples.push(t0.elapsed().as_secs_f64());
+        // `kkt` drops here — the hot loop's matvecs are matrix-free; only
+        // the ILU factorization keeps state.
+    }
+    let ilu = ilu.expect("reps >= 1");
+    let s_setup = stats_from(&format!("xstep kkt setup (assemble+ILU) n={n}"), setup_samples);
+    let setup_rec = record(&s_setup, "admm_xstep_kkt_setup", n, rev);
+
+    let op = ops.kkt_operator();
+    let mut samples = Vec::with_capacity(reps);
+    let mut iters = 0usize;
+    let mut converged = true;
+    for _ in 0..reps {
+        let mut sol = vec![0.0; kdim];
+        let mut ws = BicgstabWorkspace::new(kdim);
+        let t0 = std::time::Instant::now();
+        let out = bicgstab_ws(&op, &kkt_rhs, &mut sol, Some(&ilu), bopts, &mut ws);
+        samples.push(t0.elapsed().as_secs_f64());
+        iters = out.iterations;
+        converged = out.converged;
+    }
+    let s = stats_from(
+        &format!(
+            "xstep kkt (bicgstab + ILU)    n={n} (krylov {iters}{})",
+            if converged { "" } else { ", NOT converged" }
+        ),
+        samples,
+    );
+    (record(&s, "admm_xstep_kkt", n, rev), setup_rec)
 }
 
 /// ADMM per-iteration cost vs n.
@@ -221,6 +361,31 @@ pub fn perf_admm(opts: &PerfOptions) -> Vec<BenchRecord> {
             throughput_per_s: if per_iter > 0.0 { 1.0 / per_iter } else { 0.0 },
             git_rev: rev.clone(),
         });
+    }
+
+    // X-step backend head-to-head on the real heterogeneous operator: the
+    // paper's matrix-free Schur-complement CG vs the legacy assembled-KKT +
+    // ILU(0) + Bi-CGSTAB path, one cold solve each at matched tolerance.
+    println!("── bench admm: X-step backends (heterogeneous node-level) ──");
+    let xstep_default: &[usize] = if opts.quick { &[64, 160] } else { &[64, 160, 256] };
+    let reps = if opts.quick { 2 } else { 3 };
+    let copts = CgOptions {
+        rtol: 1e-8,
+        atol: 1e-12,
+        max_iter: 4000,
+    };
+    let bopts = BicgstabOptions {
+        rtol: 1e-8,
+        atol: 1e-12,
+        max_iter: 4000,
+    };
+    for n in opts.sizes_or(xstep_default) {
+        let ops = xstep_operators(n);
+        let n = ops.layout.n; // odd sizes rounded down to even
+        out.push(bench_xstep_cg(&ops, n, reps, &copts, "admm_xstep_cg", &rev));
+        let (solve_rec, setup_rec) = bench_xstep_kkt(&ops, n, reps, &bopts, &rev);
+        out.push(solve_rec);
+        out.push(setup_rec);
     }
     out
 }
@@ -302,6 +467,35 @@ pub fn perf_scale(opts: &PerfOptions) -> Vec<BenchRecord> {
             },
         );
         out.push(record(&s, "spmv_par", n, &rev));
+    }
+
+    // The new solver ceiling: a CG X-step at n=512 on the heterogeneous
+    // operator (~0.9M primal variables, ~0.66M constraint rows). The legacy
+    // path is deliberately absent here — assembling the saddle-point pattern
+    // and factoring ILU(0) at this size is the memory/time wall the
+    // Schur-complement refactor removed. Bench-grade tolerance keeps the
+    // cell's wall time bounded on CI runners.
+    println!("── bench scale: CG X-step at the n=512 ceiling ──");
+    let copts = CgOptions {
+        rtol: 1e-6,
+        atol: 1e-12,
+        max_iter: 1500,
+    };
+    for n in opts.sizes.clone().unwrap_or_else(|| vec![512]) {
+        // The scale target's --sizes list is shared with the Lanczos/SpMV
+        // cells, which are happy at n=2048; the heterogeneous X-step
+        // operator is not (its two n² blocks put ~8.4M primal variables at
+        // n=2048). Clamp rather than silently burning hours.
+        if n > 512 {
+            println!("  (xstep cell skipped at n={n} — capped at 512; Lanczos cells above cover it)");
+            continue;
+        }
+        let ops = xstep_operators(n);
+        let n = ops.layout.n;
+        // One rep: this cell exists to prove the size runs at all, and its
+        // committed baseline mean is generous enough (see BENCH_baseline.json)
+        // that scheduler jitter cannot trip the 25% gate.
+        out.push(bench_xstep_cg(&ops, n, 1, &copts, "admm_xstep_cg_scale", &rev));
     }
     out
 }

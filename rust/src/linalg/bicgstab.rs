@@ -46,6 +46,11 @@ pub struct BicgstabOutcome {
     pub iterations: usize,
     /// Final residual norm ‖b − Ax‖.
     pub residual: f64,
+    /// Breakdown restarts taken (`ρ` or `r₀ᵀv` vanished and the shadow
+    /// vector was reset to the current residual). A nonzero count with
+    /// `converged: true` is a healthy recovery; a climbing count signals an
+    /// operator the method struggles with.
+    pub restarts: usize,
 }
 
 /// Workspace for repeated solves against one matrix (hot path: the ADMM loop
@@ -108,6 +113,17 @@ pub fn bicgstab_ws<A: LinearOperator + ?Sized>(
             converged: true,
             iterations: 0,
             residual: rnorm,
+            restarts: 0,
+        };
+    }
+    if !rnorm.is_finite() {
+        // NaN/Inf warm start or operator output: iterating would never
+        // recover (every recurrence is polluted) — bail honestly.
+        return BicgstabOutcome {
+            converged: false,
+            iterations: 0,
+            residual: rnorm,
+            restarts: 0,
         };
     }
 
@@ -117,6 +133,7 @@ pub fn bicgstab_ws<A: LinearOperator + ?Sized>(
     let mut rho = 1.0f64;
     let mut alpha = 1.0f64;
     let mut omega = 1.0f64;
+    let mut restarts = 0usize;
 
     let apply_m = |src: &[f64], dst: &mut [f64]| match precond {
         Some(m) => m.precondition(src, dst),
@@ -127,6 +144,7 @@ pub fn bicgstab_ws<A: LinearOperator + ?Sized>(
         let rho_new = dot(&ws.r0, &ws.r);
         if rho_new.abs() < 1e-300 {
             // Breakdown: restart with current residual as shadow vector.
+            restarts += 1;
             ws.r0.copy_from_slice(&ws.r);
             rho = dot(&ws.r0, &ws.r);
             ws.p.copy_from_slice(&ws.r);
@@ -141,13 +159,29 @@ pub fn bicgstab_ws<A: LinearOperator + ?Sized>(
 
         apply_m(&ws.p, &mut ws.phat);
         a.apply(&ws.phat, &mut ws.v);
-        let r0v = dot(&ws.r0, &ws.v);
+        let mut r0v = dot(&ws.r0, &ws.v);
         if r0v.abs() < 1e-300 {
-            return BicgstabOutcome {
-                converged: rnorm <= target,
-                iterations: it,
-                residual: rnorm,
-            };
+            // `r₀ᵀv` breakdown: instead of bailing out with the *previous*
+            // iteration's residual (discarding the pending update), restart
+            // with the current residual as the shadow vector — the same
+            // recovery the `ρ` path uses — and carry the iteration through.
+            restarts += 1;
+            ws.r0.copy_from_slice(&ws.r);
+            rho = dot(&ws.r0, &ws.r);
+            ws.p.copy_from_slice(&ws.r);
+            apply_m(&ws.p, &mut ws.phat);
+            a.apply(&ws.phat, &mut ws.v);
+            r0v = dot(&ws.r0, &ws.v);
+            if r0v.abs() < 1e-300 {
+                // Genuine breakdown even against a fresh shadow vector
+                // (r ⟂ A M⁻¹ r): no Krylov progress is possible.
+                return BicgstabOutcome {
+                    converged: rnorm <= target,
+                    iterations: it,
+                    residual: rnorm,
+                    restarts,
+                };
+            }
         }
         alpha = rho / r0v;
 
@@ -164,6 +198,7 @@ pub fn bicgstab_ws<A: LinearOperator + ?Sized>(
                 converged: true,
                 iterations: it,
                 residual: snorm,
+                restarts,
             };
         }
 
@@ -185,14 +220,16 @@ pub fn bicgstab_ws<A: LinearOperator + ?Sized>(
                 converged: true,
                 iterations: it,
                 residual: rnorm,
+                restarts,
             };
         }
-        if omega.abs() < 1e-300 {
-            // Stagnation — cannot continue.
+        if !rnorm.is_finite() || omega.abs() < 1e-300 {
+            // NaN/Inf residual or stagnation — cannot continue.
             return BicgstabOutcome {
                 converged: false,
                 iterations: it,
                 residual: rnorm,
+                restarts,
             };
         }
     }
@@ -201,6 +238,7 @@ pub fn bicgstab_ws<A: LinearOperator + ?Sized>(
         converged: false,
         iterations: opts.max_iter,
         residual: rnorm,
+        restarts,
     }
 }
 
@@ -344,6 +382,39 @@ mod tests {
             pre.iterations,
             plain.iterations
         );
+    }
+
+    #[test]
+    fn restart_counter_zero_on_clean_solves() {
+        let a = CscMatrix::eye(6);
+        let b = vec![1.0; 6];
+        let (_, out) = bicgstab(&a, &b, None, &BicgstabOptions::default());
+        assert!(out.converged);
+        assert_eq!(out.restarts, 0);
+    }
+
+    #[test]
+    fn r0v_breakdown_restarts_then_bails_honestly() {
+        // A 90° rotation is exactly skew: r ⟂ A r, so the very first
+        // iteration hits the `r₀ᵀv` breakdown, retries against a fresh
+        // shadow vector (counted), finds the same orthogonality and bails
+        // with `converged: false` instead of looping or lying.
+        let a = CscMatrix::from_triplets(2, 2, vec![(0, 1, -1.0), (1, 0, 1.0)]);
+        let b = vec![1.0, 0.0];
+        let (_, out) = bicgstab(&a, &b, None, &BicgstabOptions::default());
+        assert!(!out.converged);
+        assert_eq!(out.restarts, 1);
+        assert!(out.iterations >= 1);
+        assert!((out.residual - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_rhs_bails_cleanly() {
+        let a = CscMatrix::eye(4);
+        let b = vec![1.0, f64::NAN, 0.0, 0.0];
+        let (_, out) = bicgstab(&a, &b, None, &BicgstabOptions::default());
+        assert!(!out.converged);
+        assert_eq!(out.iterations, 0);
     }
 
     #[test]

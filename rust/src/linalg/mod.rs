@@ -1,11 +1,12 @@
 //! Numerical substrates: dense matrices, a symmetric eigensolver, CSC/CSR
-//! sparse matrices, ILU(0) preconditioning, the Bi-CGSTAB Krylov solver and a
-//! deflated Lanczos eigensolver — the toolbox the paper's §V-C prescribes for
-//! solving the ADMM KKT systems at scale, generalized over the
-//! [`LinearOperator`] trait so dense, sparse and matrix-free operators share
-//! one solver stack.
+//! sparse matrices, ILU(0) and Jacobi preconditioning, the CG and Bi-CGSTAB
+//! Krylov solvers and a deflated Lanczos eigensolver — the toolbox the
+//! paper's §V-C prescribes for solving the ADMM systems at scale,
+//! generalized over the [`LinearOperator`] trait so dense, sparse and
+//! matrix-free operators share one solver stack.
 
 pub mod bicgstab;
+pub mod cg;
 pub mod csc;
 pub mod csr;
 pub mod dense;
@@ -15,6 +16,7 @@ pub mod lanczos;
 pub mod operator;
 
 pub use bicgstab::{bicgstab, BicgstabOptions, BicgstabOutcome};
+pub use cg::{cg, CgOptions, CgOutcome};
 pub use csc::CscMatrix;
 pub use csr::CsrMatrix;
 pub use dense::DenseMatrix;
@@ -22,7 +24,8 @@ pub use eigen::SymEigen;
 pub use ilu::Ilu0;
 pub use lanczos::{lanczos_extremal, LanczosOptions, LanczosResult};
 pub use operator::{
-    GossipOperator, IdentityPrecond, LaplacianOperator, LinearOperator, Preconditioner,
+    GossipOperator, IdentityPrecond, JacobiPrecond, LaplacianOperator, LinearOperator,
+    Preconditioner,
 };
 
 /// Euclidean norm of a slice.

@@ -50,6 +50,40 @@ impl Preconditioner for IdentityPrecond {
     }
 }
 
+/// Diagonal (Jacobi) preconditioner `z = D⁻¹ r`, built once from a diagonal
+/// estimate of the operator. The CG Schur-complement X-step uses it with the
+/// squared row norms of `A` (the exact diagonal of `A Aᵀ + δI`); unlike
+/// ILU(0) it needs no assembled matrix and no factorization — `O(n)` build,
+/// `O(n)` apply.
+#[derive(Debug, Clone)]
+pub struct JacobiPrecond {
+    inv_diag: Vec<f64>,
+}
+
+impl JacobiPrecond {
+    /// Build from the operator's diagonal. Non-finite or non-positive entries
+    /// (a zero row, or a NaN that leaked into the diagonal estimate) fall
+    /// back to the identity scale 1.0 so the preconditioner stays SPD.
+    pub fn new(diag: &[f64]) -> JacobiPrecond {
+        JacobiPrecond {
+            inv_diag: diag
+                .iter()
+                .map(|&d| if d.is_finite() && d > 1e-300 { 1.0 / d } else { 1.0 })
+                .collect(),
+        }
+    }
+}
+
+impl Preconditioner for JacobiPrecond {
+    fn precondition(&self, r: &[f64], z: &mut [f64]) {
+        assert_eq!(r.len(), self.inv_diag.len());
+        assert_eq!(z.len(), self.inv_diag.len());
+        for i in 0..r.len() {
+            z[i] = self.inv_diag[i] * r[i];
+        }
+    }
+}
+
 impl Preconditioner for super::Ilu0 {
     fn precondition(&self, r: &[f64], z: &mut [f64]) {
         self.solve_into(r, z);

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! batopo optimize  --n 16 --r 32 [--scenario homogeneous] [--out topo.json]
+//!                  [--xstep cg|bicgstab] [--max-iters N] [--json report.json]
 //! batopo consensus --topology ring|...|<topo.json> --n 16 [--scenario …]
 //! batopo allocate  --bw 9.76,9.76,3.25,3.25 --r 4
 //! batopo train     --topology torus --n 16 --model tiny --epochs 10
@@ -23,11 +24,12 @@ use batopo::bench::{experiments, perf};
 use batopo::config;
 use batopo::consensus::{run_consensus, ConsensusConfig};
 use batopo::graph::Topology;
-use batopo::optimizer::BaTopoOptimizer;
+use batopo::optimizer::{BaTopoOptimizer, XStep};
 use batopo::runtime::mixer::MixVariant;
 use batopo::runtime::{ExecBackend, PjRtEngine};
 use batopo::training::{DsgdConfig, DsgdTrainer};
 use batopo::util::cli::Args;
+use batopo::util::json::Json;
 use std::path::Path;
 
 fn main() {
@@ -46,6 +48,7 @@ fn main() {
                 "usage: batopo <optimize|consensus|allocate|train|reproduce|bench|info> [options]\n\
                  \n\
                  optimize  --n N --r R [--scenario S] [--seed X] [--quick] [--out file.json]\n\
+                 \u{20}          [--xstep cg|bicgstab] [--max-iters N] [--json report.json]\n\
                  consensus --topology NAME|file.json --n N [--scenario S] [--eps 1e-4]\n\
                  allocate  --bw b1,b2,... --r R [--caps c1,c2,...]\n\
                  train     --topology NAME|file.json --n N [--scenario S] [--model tiny]\n\
@@ -86,19 +89,63 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
     let scenario = config::scenario_by_name(&args.str_or("scenario", "homogeneous"), n)?;
     let mut spec = experiments::ba_spec(scenario, r, args.flag("quick"));
     spec.seed = args.parse_or("seed", 42u64).map_err(|e| e.to_string())?;
+    spec.xstep = XStep::by_name(&args.str_or("xstep", "cg"))?;
+    if let Some(mi) = args.get("max-iters") {
+        spec.max_iters = mi.parse().map_err(|_| "bad --max-iters")?;
+    }
     let t0 = std::time::Instant::now();
-    let report = BaTopoOptimizer::new(spec).run_detailed().map_err(|e| e.to_string())?;
-    println!("BA-Topo(n={n}, r={r}):");
+    let report = BaTopoOptimizer::new(spec.clone()).run_detailed().map_err(|e| e.to_string())?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("BA-Topo(n={n}, r={r}, xstep={}):", spec.xstep.name());
     println!("  r_asym           = {:.4} (warm start {:.4})", report.r_asym, report.warm_start_r_asym);
     println!("  admm iterations  = {} (converged={}, residual {:.2e})",
         report.admm_iterations, report.admm_converged, report.final_residual);
-    println!("  krylov iterations= {}", report.krylov_iterations);
+    println!("  krylov iterations= {} ({} non-converged solve(s), worst residual {:.2e}, {} restart(s))",
+        report.krylov_iterations, report.krylov_failures, report.worst_krylov_residual,
+        report.krylov_restarts);
     println!("  constraint check = {:?}", report.constraint_check);
     println!("  edges            = {:?}", report.topology.graph.edges());
-    println!("  wall time        = {:.2}s", t0.elapsed().as_secs_f64());
+    println!("  wall time        = {wall:.2}s");
     if let Some(out) = args.get("out") {
         config::save_topology(&report.topology, Path::new(out)).map_err(|e| e.to_string())?;
         println!("  saved to {out}");
+    }
+    if let Some(json_path) = args.get("json") {
+        // Machine-readable run report: a clean solve is distinguishable from
+        // a silently-stalled one (krylov_failures > 0 / worst residual).
+        let doc = Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("r", Json::Num(r as f64)),
+            ("xstep", Json::Str(spec.xstep.name().to_string())),
+            ("r_asym", Json::Num(report.r_asym)),
+            ("warm_start_r_asym", Json::Num(report.warm_start_r_asym)),
+            ("admm_iterations", Json::Num(report.admm_iterations as f64)),
+            ("admm_converged", Json::Bool(report.admm_converged)),
+            ("final_residual", Json::Num(report.final_residual)),
+            ("krylov_iterations", Json::Num(report.krylov_iterations as f64)),
+            ("krylov_failures", Json::Num(report.krylov_failures as f64)),
+            (
+                "worst_krylov_residual",
+                Json::Num(report.worst_krylov_residual),
+            ),
+            ("krylov_restarts", Json::Num(report.krylov_restarts as f64)),
+            (
+                "constraint_check",
+                Json::Str(match &report.constraint_check {
+                    Ok(()) => "ok".to_string(),
+                    Err(e) => e.clone(),
+                }),
+            ),
+            ("edges", Json::Num(report.topology.num_edges() as f64)),
+            ("wall_s", Json::Num(wall)),
+        ]);
+        if let Some(dir) = Path::new(json_path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            }
+        }
+        std::fs::write(json_path, format!("{doc}\n")).map_err(|e| e.to_string())?;
+        println!("  report json      → {json_path}");
     }
     Ok(())
 }

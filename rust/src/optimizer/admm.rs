@@ -3,9 +3,13 @@
 //!
 //! Per iteration:
 //! 1. `Y ← Proj_{C_Y}(X + D/ρ)` — segment-wise projections (Eq. 24/30),
-//! 2. `X ← KKT⁻¹ [Y − (D + C)/ρ; b]` — one ILU(0)-preconditioned Bi-CGSTAB
-//!    solve of the *constant* saddle-point system (Eq. 27/31), warm-started
-//!    from the previous iterate,
+//! 2. `X`-step: the equality-constrained projection `min ‖X − V‖²` s.t.
+//!    `A X = b` with `V = Y − (D + C)/ρ`, solved by the paper's conjugate
+//!    gradients on the SPD Schur complement `(A Aᵀ + δI) λ = A V − b` with
+//!    `X = V − Aᵀ λ` — matrix-free, Jacobi-preconditioned, `λ` warm-started
+//!    across iterations (the coefficient matrix is constant). The legacy
+//!    ILU(0)+Bi-CGSTAB solve of the assembled saddle-point system (Eq. 27/31)
+//!    remains selectable via [`XStep::Bicgstab`],
 //! 3. `D ← D + ρ (X − Y)` (Eq. 22/33),
 //!
 //! stopping when the summed squared primal residual `‖X − Y‖²` drops below
@@ -14,14 +18,16 @@
 use super::extract;
 use super::operators::{self, AdmmOperators};
 use super::projections as proj;
-use super::{OptimizeError, OptimizeReport, OptimizeSpec};
+use super::{OptimizeError, OptimizeReport, OptimizeSpec, XStep};
 use crate::bandwidth::ConstraintSet;
 use crate::graph::laplacian::laplacian_from_edge_space;
 use crate::graph::{incidence, Graph};
 use crate::linalg::bicgstab::{bicgstab_ws, BicgstabOptions, BicgstabWorkspace};
-use crate::linalg::{Ilu0, SymEigen};
+use crate::linalg::cg::{cg_ws, CgOptions, CgWorkspace};
+use crate::linalg::{Ilu0, JacobiPrecond, SymEigen};
 use crate::topo::annealing::{anneal_aspl, AnnealOptions};
 use crate::topo::weights::metropolis;
+use crate::util::threadpool::{num_cpus, parallel_map};
 
 /// Raw ADMM solution (projected `Y` iterate + relaxed `X` iterate).
 pub struct AdmmSolution {
@@ -42,20 +48,42 @@ pub struct AdmmSolution {
     pub residual: f64,
     /// Whether the residual criterion was met before the iteration cap.
     pub converged: bool,
-    /// Total Bi-CGSTAB iterations across all `X`-steps.
+    /// Total Krylov (CG or Bi-CGSTAB) iterations across all `X`-steps.
     pub krylov_iterations: usize,
+    /// `X`-step solves whose Krylov iteration missed its residual target.
+    pub krylov_failures: usize,
+    /// Worst final Krylov residual norm across all `X`-step solves (0.0 when
+    /// none ran; ∞ when a solve produced a non-finite residual).
+    pub worst_krylov_residual: f64,
+    /// Bi-CGSTAB breakdown restarts across all `X`-steps (0 for CG).
+    pub krylov_restarts: usize,
 }
 
 /// Solve the full BA-Topo pipeline for `spec`, keeping the best of
-/// `spec.restarts` independently-seeded runs.
+/// `spec.restarts` independently-seeded runs. The restarts are embarrassingly
+/// parallel (each owns its operators, workspaces and RNG stream), so they fan
+/// out over [`parallel_map`]; results come back in input order, keeping the
+/// winner selection deterministic (strict `<`, earliest seed wins ties) —
+/// identical to the old sequential loop.
 pub fn solve(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
     let restarts = spec.restarts.max(1);
+    let seeds: Vec<u64> = (0..restarts)
+        .map(|k| spec.seed.wrapping_add(k as u64 * 1009))
+        .collect();
+    let threads = match spec.restart_threads {
+        0 => num_cpus(),
+        t => t,
+    }
+    .min(restarts);
+    let results = parallel_map(seeds, threads, |seed| {
+        let mut s = spec.clone();
+        s.seed = seed;
+        solve_once(&s)
+    });
     let mut best: Option<OptimizeReport> = None;
     let mut last_err = None;
-    for k in 0..restarts {
-        let mut s = spec.clone();
-        s.seed = spec.seed.wrapping_add(k as u64 * 1009);
-        match solve_once(&s) {
+    for res in results {
+        match res {
             Ok(rep) => {
                 if best.as_ref().map(|b| rep.r_asym < b.r_asym).unwrap_or(true) {
                     best = Some(rep);
@@ -162,6 +190,9 @@ fn solve_once(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
         warm_start_r_asym: warm_r_asym,
         r_asym,
         krylov_iterations: sol.krylov_iterations,
+        krylov_failures: sol.krylov_failures,
+        worst_krylov_residual: sol.worst_krylov_residual,
+        krylov_restarts: sol.krylov_restarts,
         constraint_check,
     })
 }
@@ -208,6 +239,155 @@ fn node_caps(cs: &ConstraintSet) -> Option<Vec<usize>> {
         caps[i] = row.cap;
     }
     Some(caps)
+}
+
+/// One X-step solve's outcome, backend-agnostic.
+struct XStepStats {
+    iterations: usize,
+    converged: bool,
+    residual: f64,
+    restarts: usize,
+}
+
+/// Per-run X-step solver state: workspaces, warm starts and the
+/// preconditioner, built once before the ADMM loop (§V-C: the coefficient
+/// matrix is constant across iterations).
+enum XSolver<'a> {
+    /// The paper's CG on the SPD Schur complement `(A Aᵀ + δI) λ = A v − b`,
+    /// fully matrix-free ([`operators::NormalOperator`]), with a diagonal
+    /// Jacobi preconditioner from the squared row norms of `A` and the dual
+    /// `λ` warm-started across ADMM iterations.
+    Cg {
+        normal: operators::NormalOperator<'a>,
+        jacobi: JacobiPrecond,
+        lam: Vec<f64>,
+        rhs: Vec<f64>,
+        v: Vec<f64>,
+        ws: CgWorkspace,
+        opts: CgOptions,
+    },
+    /// Legacy A/B path: ILU(0)-preconditioned Bi-CGSTAB over the assembled
+    /// `(total+rows)²`-pattern saddle-point system, warm-started on `[X; λ]`.
+    Kkt {
+        ilu: Ilu0,
+        op: operators::KktOperator<'a>,
+        sol: Vec<f64>,
+        rhs: Vec<f64>,
+        ws: BicgstabWorkspace,
+        opts: BicgstabOptions,
+    },
+}
+
+impl<'a> XSolver<'a> {
+    fn new(spec: &OptimizeSpec, ops: &'a AdmmOperators, x0: &[f64]) -> XSolver<'a> {
+        let lay = &ops.layout;
+        match spec.xstep {
+            XStep::Cg => XSolver::Cg {
+                normal: ops.normal_operator(),
+                jacobi: JacobiPrecond::new(&ops.schur_diag()),
+                lam: vec![0.0; lay.rows],
+                rhs: vec![0.0; lay.rows],
+                v: vec![0.0; lay.total],
+                ws: CgWorkspace::new(lay.rows),
+                // Same tolerance as the legacy path; the cap is generous
+                // because only the first, cold solve ever gets near it —
+                // warm-started λ makes later solves cheap.
+                opts: CgOptions {
+                    rtol: 1e-9,
+                    atol: 1e-12,
+                    max_iter: 6000,
+                },
+            },
+            XStep::Bicgstab => {
+                // The only place that still assembles the KKT matrix: the
+                // ILU(0) preconditioner factors an explicit pattern. The
+                // assembled matrix itself is dropped right after factoring —
+                // the Krylov matvecs run through the matrix-free operator.
+                let ilu = Ilu0::factor(&ops.assemble_kkt(), 1e-6);
+                let kdim = lay.total + lay.rows;
+                let mut sol = vec![0.0; kdim];
+                sol[..lay.total].copy_from_slice(x0);
+                XSolver::Kkt {
+                    ilu,
+                    op: ops.kkt_operator(),
+                    sol,
+                    rhs: vec![0.0; kdim],
+                    ws: BicgstabWorkspace::new(kdim),
+                    opts: BicgstabOptions {
+                        rtol: 1e-9,
+                        atol: 1e-12,
+                        max_iter: 4000,
+                    },
+                }
+            }
+        }
+    }
+
+    /// Solve the X-step `min ‖x − v‖²` s.t. `A x = b` for
+    /// `v = y − (du + c)/ρ`, writing the minimizer into `x`.
+    fn solve(
+        &mut self,
+        ops: &AdmmOperators,
+        rho: f64,
+        y: &[f64],
+        du: &[f64],
+        x: &mut [f64],
+    ) -> XStepStats {
+        let lay = &ops.layout;
+        match self {
+            XSolver::Cg {
+                normal,
+                jacobi,
+                lam,
+                rhs,
+                v,
+                ws,
+                opts,
+            } => {
+                for i in 0..lay.total {
+                    v[i] = y[i] - (du[i] + ops.c[i]) / rho;
+                }
+                // Schur right-hand side: rhs = A v − b.
+                ops.a.matvec_into(v, rhs);
+                for (ri, bi) in rhs.iter_mut().zip(&ops.b) {
+                    *ri -= bi;
+                }
+                let out = cg_ws(&*normal, rhs, lam, Some(&*jacobi), opts, ws);
+                // Primal recovery: x = v − Aᵀ λ.
+                ops.a.matvec_transpose_into(lam, x);
+                for (xi, vi) in x.iter_mut().zip(v.iter()) {
+                    *xi = vi - *xi;
+                }
+                XStepStats {
+                    iterations: out.iterations,
+                    converged: out.converged,
+                    residual: out.residual,
+                    restarts: 0,
+                }
+            }
+            XSolver::Kkt {
+                ilu,
+                op,
+                sol,
+                rhs,
+                ws,
+                opts,
+            } => {
+                for i in 0..lay.total {
+                    rhs[i] = y[i] - (du[i] + ops.c[i]) / rho;
+                }
+                rhs[lay.total..].copy_from_slice(&ops.b);
+                let out = bicgstab_ws(&*op, rhs, sol, Some(&*ilu), opts, ws);
+                x.copy_from_slice(&sol[..lay.total]);
+                XStepStats {
+                    iterations: out.iterations,
+                    converged: out.converged,
+                    residual: out.residual,
+                    restarts: out.restarts,
+                }
+            }
+        }
+    }
 }
 
 /// The ADMM loop proper.
@@ -265,25 +445,14 @@ pub fn run_admm(
     let mut y = x.clone();
     let mut du = vec![0.0; lay.total];
 
-    // ---- Constant-matrix preconditioner (§V-C). ----
-    // ILU(0) factors the assembled CSC pattern; the Krylov matvecs themselves
-    // run through the matrix-free KKT operator (parity locked by tests in
-    // `operators`).
-    let ilu = Ilu0::factor(&ops.kkt, 1e-6);
-    let kkt_op = ops.kkt_operator();
-    let kdim = lay.total + lay.rows;
-    let mut kkt_x = vec![0.0; kdim]; // warm-started [X; λ]
-    kkt_x[..lay.total].copy_from_slice(&x);
-    let mut kkt_rhs = vec![0.0; kdim];
-    let mut ws = BicgstabWorkspace::new(kdim);
-    let opts = BicgstabOptions {
-        rtol: 1e-9,
-        atol: 1e-12,
-        max_iter: 4000,
-    };
+    // ---- X-step solver state (built once; §V-C constant matrix). ----
+    let mut xsolver = XSolver::new(spec, ops, &x);
 
     let mut residual = f64::INFINITY;
     let mut krylov_total = 0usize;
+    let mut krylov_failures = 0usize;
+    let mut worst_krylov_residual = 0.0f64;
+    let mut krylov_restarts = 0usize;
     let mut iterations = 0usize;
     let mut converged = false;
 
@@ -312,14 +481,21 @@ pub fn run_admm(
             proj::project_nonneg(&mut y[lay.u..lay.u + lay.q_ineq]);
         }
 
-        // ---- X-step: KKT solve (Eq. 27/31). ----
-        for i in 0..lay.total {
-            kkt_rhs[i] = y[i] - (du[i] + ops.c[i]) / rho;
+        // ---- X-step: equality-constrained projection (Eq. 27/31). ----
+        let st = xsolver.solve(ops, rho, &y, &du, &mut x);
+        krylov_total += st.iterations;
+        krylov_restarts += st.restarts;
+        if !st.converged {
+            krylov_failures += 1;
         }
-        kkt_rhs[lay.total..].copy_from_slice(&ops.b);
-        let out = bicgstab_ws(&kkt_op, &kkt_rhs, &mut kkt_x, Some(&ilu), &opts, &mut ws);
-        krylov_total += out.iterations;
-        x.copy_from_slice(&kkt_x[..lay.total]);
+        let solve_resid = if st.residual.is_finite() {
+            st.residual
+        } else {
+            f64::INFINITY
+        };
+        if solve_resid > worst_krylov_residual {
+            worst_krylov_residual = solve_resid;
+        }
 
         // ---- Dual step + residual. ----
         let mut res = 0.0;
@@ -329,6 +505,12 @@ pub fn run_admm(
             res += d * d;
         }
         residual = res;
+        if !res.is_finite() {
+            // A NaN/Inf iterate can only poison every later step (and the
+            // candidate scoring); stop and let the caller see the best
+            // tracked candidate plus a `converged: false` verdict.
+            break;
+        }
 
         // ---- Candidate tracking. ----
         if it % EVAL_EVERY == 0 || res < spec.eps {
@@ -354,6 +536,9 @@ pub fn run_admm(
         residual,
         converged,
         krylov_iterations: krylov_total,
+        krylov_failures,
+        worst_krylov_residual,
+        krylov_restarts,
     }
 }
 
@@ -438,6 +623,31 @@ mod tests {
             solve(&small_spec(4, 7)),
             Err(OptimizeError::Infeasible(_))
         ));
+    }
+
+    #[test]
+    fn xstep_backends_agree_on_iterates() {
+        // Both X-step backends solve the *same* δ-regularized system (the
+        // Schur complement is the KKT system with the primal block
+        // eliminated), so over a dozen ADMM iterations the iterates must
+        // agree to Krylov tolerance.
+        let mut spec = small_spec(10, 15);
+        spec.max_iters = 12;
+        let cs = spec.scenario.constraints(spec.r).unwrap();
+        let ops = operators::build_homogeneous(10, spec.alpha, 1e-8);
+        let warm = warm_start_graph(&spec, &cs);
+        let mut s_cg = spec.clone();
+        s_cg.xstep = XStep::Cg;
+        let mut s_kkt = spec;
+        s_kkt.xstep = XStep::Bicgstab;
+        let a = run_admm(&s_cg, &cs, &ops, &warm);
+        let b = run_admm(&s_kkt, &cs, &ops, &warm);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.krylov_failures, 0, "cg failures");
+        assert_eq!(b.krylov_failures, 0, "kkt failures");
+        for (i, (p, q)) in a.x.iter().zip(&b.x).enumerate() {
+            assert!((p - q).abs() < 1e-4, "x[{i}]: cg {p} vs kkt {q}");
+        }
     }
 
     #[test]

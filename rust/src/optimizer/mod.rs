@@ -6,9 +6,12 @@
 //! a Mixed-Integer SDP (Eq. 20 / Eq. 28) and solved with a customized ADMM
 //! (Algorithm 2): the `Y`-step is a set of cheap projections (non-negativity,
 //! top-r cardinality, PSD/NSD eigenvalue clamping, binary rounding), the
-//! `X`-step is one large *constant-matrix* KKT solve handled by ILU(0)-
-//! preconditioned Bi-CGSTAB over CSC storage (§V-C), and the dual step is a
-//! scaled gradient ascent.
+//! `X`-step is one large *constant-matrix* equality-constrained projection
+//! solved by conjugate gradients on the SPD Schur complement `A Aᵀ + δI`
+//! (§V-C — fully matrix-free, Jacobi-preconditioned, warm-started; the
+//! legacy ILU(0)+Bi-CGSTAB solve of the assembled KKT system remains
+//! available as [`XStep::Bicgstab`]), and the dual step is a scaled gradient
+//! ascent.
 //!
 //! Pipeline: simulated-annealing ASPL warm start (§VI) → ADMM → support
 //! extraction + connectivity/capacity repair → projected-subgradient weight
@@ -21,6 +24,40 @@ pub mod projections;
 
 use crate::bandwidth::scenarios::BandwidthScenario;
 use crate::graph::Topology;
+
+/// Which Krylov backend solves the ADMM X-step (Eq. 27/31).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum XStep {
+    /// The paper's method (§V-C): CG on the SPD Schur complement
+    /// `(A Aᵀ + δI) λ = A v − b`, fully matrix-free with a Jacobi
+    /// preconditioner and `λ` warm-started across ADMM iterations; the
+    /// primal iterate is recovered as `x = v − Aᵀ λ`. No assembled KKT
+    /// matrix, no ILU(0) factorization — the default.
+    #[default]
+    Cg,
+    /// Legacy backend kept for A/B parity: ILU(0)-preconditioned Bi-CGSTAB
+    /// on the assembled `(total+rows)²`-pattern saddle-point KKT system.
+    Bicgstab,
+}
+
+impl XStep {
+    /// Parse a CLI spelling (`cg` | `bicgstab`).
+    pub fn by_name(name: &str) -> Result<XStep, String> {
+        match name {
+            "cg" => Ok(XStep::Cg),
+            "bicgstab" | "kkt" => Ok(XStep::Bicgstab),
+            other => Err(format!("unknown x-step backend {other:?} (cg|bicgstab)")),
+        }
+    }
+
+    /// Canonical name (the `--xstep` spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            XStep::Cg => "cg",
+            XStep::Bicgstab => "bicgstab",
+        }
+    }
+}
 
 /// Full specification of one optimization run.
 #[derive(Debug, Clone)]
@@ -48,10 +85,19 @@ pub struct OptimizeSpec {
     /// Local-search swaps polishing the extracted support (0 disables; see
     /// `optimizer::extract::polish_support`).
     pub polish_swaps: usize,
-    /// Independent restarts (different warm-start seeds); the best result
-    /// wins. Tightly-capped constraint systems (e.g. BCube exact packings)
-    /// fragment the swap neighborhood, so restarts recover global diversity.
+    /// Independent restarts (different warm-start seeds), run in parallel
+    /// over the thread pool; the best result wins. Tightly-capped constraint
+    /// systems (e.g. BCube exact packings) fragment the swap neighborhood,
+    /// so restarts recover global diversity.
     pub restarts: usize,
+    /// Krylov backend for the X-step (default: the paper's CG on the Schur
+    /// complement; `Bicgstab` keeps the legacy assembled-KKT path for A/B).
+    pub xstep: XStep,
+    /// Worker threads for the parallel independent restarts (0 = one per
+    /// available CPU, always capped at `restarts`). Callers that already
+    /// fan out across a thread pool — e.g. the reproduce sweep cells — set
+    /// this to 1 so nested restarts don't oversubscribe the machine.
+    pub restart_threads: usize,
 }
 
 impl OptimizeSpec {
@@ -76,6 +122,8 @@ impl OptimizeSpec {
             refine_iters: 300,
             polish_swaps: 60,
             restarts: 1,
+            xstep: XStep::default(),
+            restart_threads: 0,
         }
     }
 }
@@ -95,8 +143,19 @@ pub struct OptimizeReport {
     pub warm_start_r_asym: f64,
     /// r_asym after ADMM + extraction + refinement.
     pub r_asym: f64,
-    /// Total Bi-CGSTAB iterations across the run.
+    /// Total Krylov (CG or Bi-CGSTAB) iterations across the run.
     pub krylov_iterations: usize,
+    /// X-step solves whose Krylov iteration did **not** meet its residual
+    /// target (0 for a clean run). A silently-stalled solve no longer hides:
+    /// `batopo optimize --json`, the ablations CSV and the per-topology
+    /// `*.health.json` sidecars written by `batopo reproduce` carry this
+    /// count.
+    pub krylov_failures: usize,
+    /// Worst final Krylov residual norm `‖rhs − A·sol‖` across all X-step
+    /// solves of the winning restart (0.0 when no solve ran).
+    pub worst_krylov_residual: f64,
+    /// Bi-CGSTAB breakdown restarts across the run (always 0 for CG).
+    pub krylov_restarts: usize,
     /// Constraint check of the final edge set ("ok" or violation text).
     pub constraint_check: Result<(), String>,
 }

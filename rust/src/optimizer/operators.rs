@@ -20,13 +20,18 @@
 //! R5 (m):  g − z + ν                           = 0        (heterogeneous)
 //! ```
 //!
-//! The KKT matrix `[[I, Aᵀ],[A, −δI]]` is assembled **once** per run in CSC
-//! (the tiny `−δ` regularization keeps ILU(0) defined on the saddle-point
-//! zero block; see `linalg::ilu`).
+//! Only the constraint matrix `A` is assembled. The default CG X-step solves
+//! the SPD Schur complement `(A Aᵀ + δI) λ = A v − b` through the matrix-free
+//! [`NormalOperator`] — no assembled KKT matrix, no factorization. The legacy
+//! Bi-CGSTAB X-step still needs the explicit saddle-point pattern
+//! `[[I, Aᵀ],[A, −δI]]` for its ILU(0) preconditioner; it is built on demand
+//! by [`AdmmOperators::assemble_kkt`] (the tiny `−δ` regularization keeps
+//! ILU(0) defined on the saddle-point zero block; see `linalg::ilu`).
 
 use crate::bandwidth::ConstraintSet;
 use crate::graph::incidence::{edge_pair, num_possible_edges};
 use crate::linalg::{CscMatrix, LinearOperator};
+use std::cell::RefCell;
 
 /// Segment offsets into the stacked primal vector `X`.
 #[derive(Debug, Clone)]
@@ -118,25 +123,101 @@ pub struct AdmmOperators {
     pub b: Vec<f64>,
     /// Objective vector `c` (length `total`).
     pub c: Vec<f64>,
-    /// KKT matrix `[[I, Aᵀ],[A, −δI]]` of dimension `total + rows`, assembled
-    /// in CSC. Needed by the ILU(0) preconditioner (which factors an explicit
-    /// sparsity pattern); the Krylov matvecs themselves go through the
-    /// matrix-free [`KktOperator`] from [`Self::kkt_operator`].
-    pub kkt: CscMatrix,
-    /// δ regularization of the KKT zero block.
+    /// δ regularization of the Schur complement / KKT zero block.
     pub delta: f64,
 }
 
 impl AdmmOperators {
     /// Matrix-free view of the KKT system `[[I, Aᵀ],[A, −δI]]`: applies the
     /// blocks straight from `A` (one CSC matvec + one CSC transpose-matvec
-    /// per product) without touching the assembled KKT matrix.
+    /// per product) without touching any assembled KKT matrix.
     pub fn kkt_operator(&self) -> KktOperator<'_> {
         KktOperator {
             a: &self.a,
             delta: self.delta,
             nt: self.layout.total,
             nr: self.layout.rows,
+        }
+    }
+
+    /// Matrix-free SPD Schur-complement operator `A Aᵀ + δI` over the dual
+    /// space — the system the paper's CG X-step solves. One product costs one
+    /// CSC transpose-matvec plus one CSC matvec; nothing is assembled.
+    pub fn normal_operator(&self) -> NormalOperator<'_> {
+        NormalOperator {
+            a: &self.a,
+            delta: self.delta,
+            scratch: RefCell::new(vec![0.0; self.layout.total]),
+        }
+    }
+
+    /// Exact diagonal of the Schur complement `A Aᵀ + δI`: the squared row
+    /// norms of `A` plus `δ`. Feeds the Jacobi preconditioner
+    /// ([`crate::linalg::JacobiPrecond`]) built once per ADMM run — the
+    /// matrix-free replacement for the ILU(0) factorization.
+    pub fn schur_diag(&self) -> Vec<f64> {
+        let mut d = vec![self.delta; self.layout.rows];
+        for (r, _c, v) in self.a.triplets() {
+            d[r] += v * v;
+        }
+        d
+    }
+
+    /// Assemble the explicit saddle-point matrix `[[I, Aᵀ],[A, −δI]]` of
+    /// dimension `total + rows` in CSC — built **on demand**, only by the
+    /// legacy Bi-CGSTAB X-step whose ILU(0) preconditioner factors an
+    /// explicit sparsity pattern. The default CG path never calls this (the
+    /// memory wall the Schur-complement refactor removed).
+    pub fn assemble_kkt(&self) -> CscMatrix {
+        let nt = self.layout.total;
+        let nr = self.layout.rows;
+        let mut kt: Vec<(usize, usize, f64)> = Vec::with_capacity(nt + 2 * self.a.nnz() + nr);
+        for i in 0..nt {
+            kt.push((i, i, 1.0));
+        }
+        for (r, cidx, v) in self.a.triplets() {
+            kt.push((nt + r, cidx, v)); // A block
+            kt.push((cidx, nt + r, v)); // Aᵀ block
+        }
+        for r in 0..nr {
+            kt.push((nt + r, nt + r, -self.delta));
+        }
+        CscMatrix::from_triplets(nt + nr, nt + nr, kt)
+    }
+}
+
+/// Matrix-free normal-equations operator `A Aᵀ + δI` (SPD for any `A` when
+/// `δ > 0`) over a borrowed constraint matrix. This is the Schur complement
+/// of the X-step saddle-point system after eliminating the primal block:
+/// solving `(A Aᵀ + δI) λ = A v − b` and recovering `x = v − Aᵀ λ` is exactly
+/// the regularized KKT solve, but through CG on an SPD system instead of
+/// Bi-CGSTAB on an indefinite one. Parity with the explicit product is locked
+/// by a test below.
+pub struct NormalOperator<'a> {
+    a: &'a CscMatrix,
+    delta: f64,
+    /// Intermediate `Aᵀx` buffer (length `total`), reused across products so
+    /// the hot CG loop performs no allocation. `RefCell` because
+    /// [`LinearOperator::apply`] takes `&self`, and each solver owns its
+    /// operator instance (no sharing across threads).
+    scratch: RefCell<Vec<f64>>,
+}
+
+impl LinearOperator for NormalOperator<'_> {
+    fn nrows(&self) -> usize {
+        self.a.rows()
+    }
+    fn ncols(&self) -> usize {
+        self.a.rows()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.a.rows());
+        assert_eq!(y.len(), self.a.rows());
+        let mut t = self.scratch.borrow_mut();
+        self.a.matvec_transpose_into(x, &mut t);
+        self.a.matvec_into(&t, y);
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += self.delta * xi;
         }
     }
 }
@@ -287,28 +368,11 @@ fn finish(
     let mut c = vec![0.0; layout.total];
     c[layout.lam] = -1.0; // minimize −λ̃ ⇔ maximize λ̃
 
-    // KKT = [[I, Aᵀ], [A, −δI]].
-    let nt = layout.total;
-    let nr = layout.rows;
-    let mut kt: Vec<(usize, usize, f64)> = Vec::with_capacity(nt + 2 * a.nnz() + nr);
-    for i in 0..nt {
-        kt.push((i, i, 1.0));
-    }
-    for (r, cidx, v) in a.triplets() {
-        kt.push((nt + r, cidx, v)); // A block
-        kt.push((cidx, nt + r, v)); // Aᵀ block
-    }
-    for r in 0..nr {
-        kt.push((nt + r, nt + r, -delta));
-    }
-    let kkt = CscMatrix::from_triplets(nt + nr, nt + nr, kt);
-
     AdmmOperators {
         layout,
         a,
         b,
         c,
-        kkt,
         delta,
     }
 }
@@ -383,10 +447,11 @@ mod tests {
                 4u64,
             ),
         ] {
-            let dim = ops.kkt.rows();
+            let kkt = ops.assemble_kkt();
+            let dim = kkt.rows();
             let mut rng = Xoshiro256pp::seed_from_u64(seed);
             let x: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
-            let assembled = ops.kkt.matvec(&x);
+            let assembled = kkt.matvec(&x);
             let free = ops.kkt_operator().apply_vec(&x);
             for (i, (p, q)) in assembled.iter().zip(&free).enumerate() {
                 assert!((p - q).abs() < 1e-12, "row {i}: {p} vs {q}");
@@ -397,13 +462,75 @@ mod tests {
     #[test]
     fn kkt_is_symmetric_with_reg() {
         let ops = build_homogeneous(4, 2.0, 1e-8);
-        let d = ops.kkt.to_dense();
+        let kkt = ops.assemble_kkt();
+        let d = kkt.to_dense();
         assert!(d.is_symmetric(0.0));
-        assert_eq!(ops.kkt.rows(), ops.layout.total + ops.layout.rows);
+        assert_eq!(kkt.rows(), ops.layout.total + ops.layout.rows);
         // Identity block.
         assert_eq!(d[(0, 0)], 1.0);
         // Regularized zero block.
         assert_eq!(d[(ops.layout.total, ops.layout.total)], -1e-8);
+    }
+
+    #[test]
+    fn normal_operator_matches_explicit_product() {
+        // `NormalOperator` (A·Aᵀx + δx computed matrix-free) must agree with
+        // the explicitly chained CSC products on both problem forms.
+        for (ops, seed) in [
+            (build_homogeneous(6, 2.0, 1e-8), 11u64),
+            (
+                build_heterogeneous(
+                    &BandwidthScenario::paper_node_level().constraints(16).unwrap(),
+                    2.0,
+                    1e-8,
+                ),
+                12u64,
+            ),
+        ] {
+            let nr = ops.layout.rows;
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let x: Vec<f64> = (0..nr).map(|_| rng.next_gaussian()).collect();
+            let at_x = ops.a.matvec_transpose(&x);
+            let mut explicit = ops.a.matvec(&at_x);
+            for (e, xi) in explicit.iter_mut().zip(&x) {
+                *e += ops.delta * xi;
+            }
+            let normal = ops.normal_operator();
+            assert_eq!(normal.nrows(), nr);
+            assert_eq!(normal.ncols(), nr);
+            let free = normal.apply_vec(&x);
+            // Two applications through the same operator (the scratch buffer
+            // is reused) must stay consistent.
+            let free2 = normal.apply_vec(&x);
+            for i in 0..nr {
+                assert!(
+                    (explicit[i] - free[i]).abs() < 1e-12,
+                    "row {i}: {} vs {}",
+                    explicit[i],
+                    free[i]
+                );
+                assert_eq!(free[i], free2[i], "scratch reuse changed the product at row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn schur_diag_matches_row_norms() {
+        let ops = build_homogeneous(5, 2.0, 1e-8);
+        let diag = ops.schur_diag();
+        assert_eq!(diag.len(), ops.layout.rows);
+        // Squared row norms computed the slow way from the dense form.
+        let d = ops.a.to_dense();
+        for r in 0..ops.layout.rows {
+            let mut want = ops.delta;
+            for c in 0..ops.layout.total {
+                want += d[(r, c)] * d[(r, c)];
+            }
+            assert!((diag[r] - want).abs() < 1e-12, "row {r}: {} vs {want}", diag[r]);
+        }
+        // Every row of A is nonempty (slack identities), so the diagonal is
+        // bounded well away from zero — the Jacobi preconditioner is safe.
+        assert!(diag.iter().all(|&v| v >= 1.0 - 1e-12));
     }
 
     #[test]

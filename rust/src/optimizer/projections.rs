@@ -23,10 +23,16 @@ pub fn project_nonneg(xs: &mut [f64]) {
 
 /// Projection onto `{x ≥ 0, Card(x) ≤ r, x_l = 0 for ineligible l}`:
 /// clamp, then zero everything but the `r` largest entries.
+///
+/// Non-finite entries (a NaN/Inf that leaked out of a diverging X-step) are
+/// zeroed alongside the negatives before ranking — the same policy
+/// `bench::stats_from` applies to timing samples — and the ranking itself
+/// uses [`f64::total_cmp`], so a stray NaN can never panic the sort
+/// mid-solve.
 pub fn project_nonneg_top_r(xs: &mut [f64], r: usize, eligible: &[bool]) {
     debug_assert_eq!(xs.len(), eligible.len());
     for (v, &ok) in xs.iter_mut().zip(eligible) {
-        if *v < 0.0 || !ok {
+        if !v.is_finite() || *v < 0.0 || !ok {
             *v = 0.0;
         }
     }
@@ -35,7 +41,7 @@ pub fn project_nonneg_top_r(xs: &mut [f64], r: usize, eligible: &[bool]) {
         return;
     }
     let mut idx: Vec<usize> = (0..xs.len()).filter(|&i| xs[i] > 0.0).collect();
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.sort_by(|&a, &b| xs[b].total_cmp(&xs[a]));
     for &i in &idx[r..] {
         xs[i] = 0.0;
     }
@@ -77,6 +83,14 @@ fn project_spectral<F: Fn(f64) -> f64>(xs: &mut [f64], n: usize, f: F) {
 pub fn project_binary_top_r(xs: &mut [f64], cs: &ConstraintSet) {
     let m = xs.len();
     debug_assert_eq!(m, cs.eligible.len());
+    // NaN/Inf scores are zeroed before ranking (same policy as
+    // `project_nonneg_top_r`): a single NaN in an ADMM iterate must demote
+    // that edge to "no preference", not panic the sort.
+    for v in xs.iter_mut() {
+        if !v.is_finite() {
+            *v = 0.0;
+        }
+    }
     // Row membership lookup.
     let mut rows_of_edge: Vec<Vec<usize>> = vec![Vec::new(); m];
     for (ri, row) in cs.rows.iter().enumerate() {
@@ -85,15 +99,15 @@ pub fn project_binary_top_r(xs: &mut [f64], cs: &ConstraintSet) {
         }
     }
     let mut order: Vec<usize> = (0..m).filter(|&l| cs.eligible[l]).collect();
-    order.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    order.sort_by(|&a, &b| xs[b].total_cmp(&xs[a]));
     let mut used = vec![0usize; cs.rows.len()];
     let mut taken = 0usize;
     let mut selected = vec![false; m];
+    // Greedy fill walks the whole eligible ranking until the budget is met:
+    // zero- or negative-score edges are still taken when the budget demands
+    // it (locked by `binary_projection_fills_budget_with_zero_scores`).
     for &l in &order {
         if taken == cs.r {
-            break;
-        }
-        if xs[l] <= 0.0 && taken >= cs.r.min(m) {
             break;
         }
         let fits = rows_of_edge[l].iter().all(|&ri| used[ri] < cs.rows[ri].cap);
@@ -183,6 +197,53 @@ mod tests {
         assert_eq!(z.iter().filter(|&&v| v == 1.0).count(), 3);
         assert!(z[0] == 1.0 && z[1] == 0.0, "{z:?}");
         assert!(z.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn top_r_survives_nan_iterates() {
+        // A NaN mid-iterate used to panic partial_cmp().unwrap(); now it is
+        // zeroed before ranking and the finite entries are ranked normally.
+        let mut v = vec![0.3, f64::NAN, 0.9, f64::INFINITY, 0.5, f64::NEG_INFINITY];
+        let elig = vec![true; 6];
+        project_nonneg_top_r(&mut v, 2, &elig);
+        assert_eq!(v, vec![0.0, 0.0, 0.9, 0.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn top_r_all_nan_is_all_zero() {
+        let mut v = vec![f64::NAN; 4];
+        let elig = vec![true; 4];
+        project_nonneg_top_r(&mut v, 2, &elig);
+        assert_eq!(v, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn binary_projection_survives_nan_iterates() {
+        let mut cs = ConstraintSet::cardinality_only(4, 2);
+        cs.rows.push(ConstraintRow {
+            name: "cap01".into(),
+            edges: vec![0, 1],
+            cap: 1,
+            equality: false,
+        });
+        let mut z = vec![f64::NAN, 0.8, 0.5, f64::NAN, 0.3, 0.1];
+        project_binary_top_r(&mut z, &cs);
+        // NaNs rank as zeros; the two best finite scores win (cap permits).
+        assert_eq!(z.iter().filter(|&&v| v == 1.0).count(), 2);
+        assert!(z[1] == 1.0 && z[2] == 1.0, "{z:?}");
+    }
+
+    #[test]
+    fn binary_projection_fills_budget_with_zero_scores() {
+        // Intended behavior of the (previously unreachable) second break
+        // guard, now locked explicitly: the greedy fill keeps taking
+        // zero/negative-score eligible edges until the budget is met.
+        let cs = ConstraintSet::cardinality_only(4, 5);
+        let mut z = vec![0.9, 0.0, -0.2, 0.0, -1.5, 0.0];
+        project_binary_top_r(&mut z, &cs);
+        assert_eq!(z.iter().filter(|&&v| v == 1.0).count(), 5);
+        // The positive score is certainly in; exactly one edge is left out.
+        assert_eq!(z[0], 1.0);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! - `bench --quick --json` round-trip: emitted `BenchRecord` JSON parses
 //!   back and satisfies the schema the CI perf gate consumes.
 
+use batopo::bandwidth::scenarios::BandwidthScenario;
 use batopo::bench::perf::{perf_scale, PerfOptions};
 use batopo::bench::records::{self, BenchRecord};
 use batopo::graph::laplacian::{
@@ -19,9 +20,10 @@ use batopo::graph::spectral::{
 };
 use batopo::graph::Graph;
 use batopo::linalg::{
-    bicgstab, BicgstabOptions, CscMatrix, CsrMatrix, GossipOperator, LanczosOptions,
-    LaplacianOperator, LinearOperator,
+    bicgstab, cg, BicgstabOptions, CgOptions, CscMatrix, CsrMatrix, DenseMatrix, GossipOperator,
+    LanczosOptions, LaplacianOperator, LinearOperator, SymEigen,
 };
+use batopo::optimizer::{operators, BaTopoOptimizer, OptimizeSpec, XStep};
 use batopo::topo::baselines::chorded_ring_graph;
 use batopo::topo::weights::metropolis;
 use batopo::util::prop::Runner;
@@ -216,6 +218,154 @@ fn committed_baseline_parses_and_gates() {
         .collect();
     let rep = records::compare(&baseline, &slowed, 1.25, 0.0);
     assert_eq!(rep.regressions.len(), baseline.len());
+}
+
+// ---------------------------------------------------------------------------
+// The CG Schur-complement X-step (paper §V-C)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cg_matches_dense_direct_solve_on_random_spd() {
+    // CG against an eigendecomposition-based direct solve on random SPD
+    // systems `B·Bᵀ + I`.
+    Runner::new("CG agrees with the dense direct solve on SPD systems", 12).run(|g| {
+        let n = g.usize_in(4..32);
+        let mut b = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = g.gaussian() * 0.4;
+            }
+        }
+        let mut spd = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    acc += b[(i, k)] * b[(j, k)];
+                }
+                spd[(i, j)] = acc;
+            }
+        }
+        let rhs: Vec<f64> = (0..n).map(|_| g.gaussian()).collect();
+        let eig = SymEigen::new(&spd);
+        let mut direct = vec![0.0; n];
+        for (k, lam) in eig.values.iter().enumerate() {
+            let mut coef = 0.0;
+            for i in 0..n {
+                coef += eig.vectors[(i, k)] * rhs[i];
+            }
+            coef /= lam;
+            for i in 0..n {
+                direct[i] += coef * eig.vectors[(i, k)];
+            }
+        }
+        let (x, out) = cg(
+            &spd,
+            &rhs,
+            None,
+            &CgOptions {
+                rtol: 1e-12,
+                ..Default::default()
+            },
+        );
+        assert!(out.converged, "{out:?}");
+        for i in 0..n {
+            assert!(
+                (x[i] - direct[i]).abs() < 1e-7,
+                "row {i}: cg {} vs direct {}",
+                x[i],
+                direct[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn normal_operator_matches_explicit_schur_matrix() {
+    // The matrix-free `A Aᵀ + δI` apply must equal the explicitly assembled
+    // Schur complement on both problem forms.
+    let delta = 1e-8;
+    let het_cs = BandwidthScenario::NodeLevel {
+        bw: vec![9.76, 9.76, 9.76, 9.76, 3.25, 3.25, 3.25, 3.25],
+    }
+    .constraints(10)
+    .unwrap();
+    for (ops, tag) in [
+        (operators::build_homogeneous(8, 2.0, delta), "homogeneous"),
+        (
+            operators::build_heterogeneous(&het_cs, 2.0, delta),
+            "heterogeneous",
+        ),
+    ] {
+        let nr = ops.layout.rows;
+        let a_dense = ops.a.to_dense();
+        // Explicit Schur complement (dense; test sizes only).
+        let mut schur = DenseMatrix::zeros(nr, nr);
+        for i in 0..nr {
+            for j in 0..nr {
+                let mut acc = if i == j { delta } else { 0.0 };
+                for k in 0..ops.layout.total {
+                    acc += a_dense[(i, k)] * a_dense[(j, k)];
+                }
+                schur[(i, j)] = acc;
+            }
+        }
+        let normal = ops.normal_operator();
+        let x: Vec<f64> = (0..nr).map(|i| ((i * 37 % 19) as f64 - 9.0) * 0.1).collect();
+        let want = schur.apply_vec(&x);
+        let got = normal.apply_vec(&x);
+        for i in 0..nr {
+            assert!(
+                (want[i] - got[i]).abs() < 1e-9,
+                "{tag} row {i}: explicit {} vs matrix-free {}",
+                want[i],
+                got[i]
+            );
+        }
+    }
+}
+
+/// End-to-end X-step backend equivalence: both backends solve the same
+/// δ-regularized linear system, so the full pipeline (warm start → ADMM →
+/// extraction → polish, all seeded) must land on the same edge support with
+/// matching `r_asym`. The n=16 node-level cell is the paper scenario the
+/// acceptance criteria lock.
+#[test]
+fn xstep_backends_reach_equivalent_topologies() {
+    let node_level_32 = batopo::config::scenario_by_name("node-level", 32).unwrap();
+    let cells: Vec<(BandwidthScenario, usize, &str)> = vec![
+        (BandwidthScenario::paper_homogeneous(16), 32, "hom n=16"),
+        (BandwidthScenario::paper_homogeneous(32), 80, "hom n=32"),
+        (BandwidthScenario::paper_node_level(), 32, "node-level n=16"),
+        (node_level_32, 80, "node-level n=32"),
+    ];
+    for (scenario, r, tag) in cells {
+        let mut spec = OptimizeSpec::with_scenario(scenario, r);
+        spec.max_iters = 60;
+        spec.anneal_steps = 300;
+        spec.refine_iters = 100;
+        spec.polish_swaps = 8;
+        spec.restarts = 1;
+        let mut s_cg = spec.clone();
+        s_cg.xstep = XStep::Cg;
+        let mut s_kkt = spec;
+        s_kkt.xstep = XStep::Bicgstab;
+        let rep_cg = BaTopoOptimizer::new(s_cg).run_detailed().expect("cg solve");
+        let rep_kkt = BaTopoOptimizer::new(s_kkt).run_detailed().expect("kkt solve");
+        assert_eq!(
+            rep_cg.topology.graph.edge_indices(),
+            rep_kkt.topology.graph.edge_indices(),
+            "{tag}: extracted supports differ"
+        );
+        assert!(
+            (rep_cg.r_asym - rep_kkt.r_asym).abs() < 1e-6,
+            "{tag}: r_asym cg {} vs kkt {}",
+            rep_cg.r_asym,
+            rep_kkt.r_asym
+        );
+        assert_eq!(rep_cg.krylov_failures, 0, "{tag}: cg had stalled solves");
+        assert_eq!(rep_kkt.krylov_failures, 0, "{tag}: kkt had stalled solves");
+    }
 }
 
 // ---------------------------------------------------------------------------
