@@ -1,0 +1,913 @@
+//! The adversarial scenario corpus: named, seeded [`ScenarioBuilder`]
+//! programs covering the failure modes ROADMAP item 3 asks for — heavy-tailed
+//! (Pareto / log-normal) and correlated bandwidth draws, partitions that
+//! heal, coordinated stragglers, zonal outages and diurnal load curves — plus
+//! [`ScenarioProgram`], the *replayable* value form of a DSL program that the
+//! scenario fuzzer ([`crate::bandwidth::fuzz`]) generates, shrinks and dumps
+//! to disk.
+//!
+//! A [`ScenarioProgram`] is to a [`ScenarioBuilder`] what an AST is to a
+//! builder call chain: a plain data value that can be compared, mutated
+//! (shrunk move-by-move), serialized with [`ScenarioProgram::dump`] and read
+//! back with [`ScenarioProgram::parse`]. `reproduce dynamic` sweeps
+//! [`corpus`] and renders one markdown analysis report per entry; `batopo
+//! fuzz scenarios` minimizes invariant-violating random programs into
+//! `*.scenario` dumps replayable with `batopo fuzz replay`.
+
+use crate::bandwidth::scenario_dsl::{
+    CompiledScenario, ScenarioBuilder, ScenarioEvent, ScheduledEvent, TailDist,
+};
+use crate::util::rng::Xoshiro256pp;
+use std::fmt::Write as _;
+
+/// A scenario DSL program as a plain (comparable, serializable) value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioProgram {
+    /// Per-node initial bandwidths (GB/s).
+    pub initial: Vec<f64>,
+    /// Scenario horizon in phases.
+    pub phases: usize,
+    /// Simulated seconds per phase.
+    pub phase_seconds: f64,
+    /// Bandwidth clamp `[lo, hi]` applied to every update.
+    pub clamp: (f64, f64),
+    /// Bandwidth of departed/partitioned nodes (GB/s).
+    pub churn_floor: f64,
+    /// Seed for the stochastic events (drift, heavy-tailed draws) *and* the
+    /// consensus simulation replaying this program.
+    pub seed: u64,
+    /// The event schedule.
+    pub events: Vec<ScheduledEvent>,
+}
+
+impl ScenarioProgram {
+    /// Materialize the program as a validated [`ScenarioBuilder`].
+    pub fn builder(&self) -> ScenarioBuilder {
+        let mut b = ScenarioBuilder::new(self.initial.clone())
+            .phases(self.phases)
+            .phase_seconds(self.phase_seconds)
+            .clamp(self.clamp.0, self.clamp.1)
+            .churn_floor(self.churn_floor);
+        for ev in &self.events {
+            b = b.event(ev.phase, ev.event.clone());
+        }
+        b
+    }
+
+    /// Compile with the program's own seed.
+    pub fn compile(&self) -> CompiledScenario {
+        self.builder().compile(self.seed)
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.initial.len()
+    }
+
+    /// Serialize to the line-oriented `*.scenario` dump format (see
+    /// `docs/SCENARIOS.md`). `parse(dump())` round-trips exactly: floats are
+    /// written with Rust's shortest round-trip representation.
+    pub fn dump(&self) -> String {
+        let mut s = String::from("# batopo scenario dump v1\n");
+        let _ = writeln!(s, "phases {}", self.phases);
+        let _ = writeln!(s, "phase_seconds {}", self.phase_seconds);
+        let _ = writeln!(s, "clamp {} {}", self.clamp.0, self.clamp.1);
+        let _ = writeln!(s, "churn_floor {}", self.churn_floor);
+        let _ = writeln!(s, "seed {}", self.seed);
+        let init: Vec<String> = self.initial.iter().map(|b| b.to_string()).collect();
+        let _ = writeln!(s, "init {}", init.join(" "));
+        for ev in &self.events {
+            let _ = writeln!(s, "event {} {}", ev.phase, event_words(&ev.event));
+        }
+        s
+    }
+
+    /// Parse a `*.scenario` dump (inverse of [`dump`]; `#` lines and blank
+    /// lines are ignored, so dumps may carry commentary).
+    ///
+    /// [`dump`]: ScenarioProgram::dump
+    pub fn parse(text: &str) -> Result<ScenarioProgram, String> {
+        let mut initial: Option<Vec<f64>> = None;
+        let mut phases: Option<usize> = None;
+        let mut phase_seconds = 1.0f64;
+        let mut clamp = (1e-3, f64::INFINITY);
+        let mut churn_floor = 0.05f64;
+        let mut seed = 0u64;
+        let mut events = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let at = |m: String| format!("line {}: {m}", idx + 1);
+            let mut toks = line.split_whitespace();
+            let key = toks.next().unwrap_or_default();
+            match key {
+                "phases" => phases = Some(parse_num(toks.next(), "phases").map_err(at)?),
+                "phase_seconds" => {
+                    phase_seconds = parse_num(toks.next(), "phase_seconds").map_err(at)?;
+                }
+                "clamp" => {
+                    clamp = (
+                        parse_num(toks.next(), "clamp lo").map_err(&at)?,
+                        parse_num(toks.next(), "clamp hi").map_err(&at)?,
+                    );
+                }
+                "churn_floor" => {
+                    churn_floor = parse_num(toks.next(), "churn_floor").map_err(at)?;
+                }
+                "seed" => seed = parse_num(toks.next(), "seed").map_err(at)?,
+                "init" => {
+                    let bw: Result<Vec<f64>, String> =
+                        toks.map(|t| parse_num(Some(t), "init value")).collect();
+                    initial = Some(bw.map_err(at)?);
+                }
+                "event" => {
+                    // Keep the raw remainder so report labels retain spaces.
+                    let mut parts = line.splitn(4, char::is_whitespace);
+                    parts.next(); // "event"
+                    let phase: usize = parse_num(parts.next(), "event phase").map_err(&at)?;
+                    let Some(kind) = parts.next() else {
+                        return Err(at("event needs a kind".to_string()));
+                    };
+                    let rest = parts.next().unwrap_or("");
+                    let event = parse_event(kind, rest).map_err(at)?;
+                    events.push(ScheduledEvent { phase, event });
+                }
+                other => return Err(at(format!("unknown directive {other:?}"))),
+            }
+        }
+        let initial = initial.ok_or("missing `init` line")?;
+        if initial.is_empty() {
+            return Err("`init` needs at least one node".to_string());
+        }
+        let phases = phases.ok_or("missing `phases` line")?;
+        Ok(ScenarioProgram {
+            initial,
+            phases,
+            phase_seconds,
+            clamp,
+            churn_floor,
+            seed,
+            events,
+        })
+    }
+
+    /// Generate a random program (the fuzzer's case generator): 4–8 nodes,
+    /// a handful of random adversarial events, plus one `report_stats`
+    /// checkpoint per phase so the per-phase invariants have something to
+    /// bite on.
+    pub fn random(rng: &mut Xoshiro256pp, quick: bool) -> ScenarioProgram {
+        let n = 4 + rng.index(5);
+        let phases = if quick { 3 + rng.index(3) } else { 4 + rng.index(5) };
+        let initial: Vec<f64> = (0..n).map(|_| 2.0 + 10.0 * rng.next_f64()).collect();
+        let mut events = Vec::new();
+        let n_events = 1 + rng.index(5);
+        for _ in 0..n_events {
+            let phase = rng.index(phases);
+            let event = random_event(rng, n);
+            // Half of the partition/straggle episodes get a matching heal at
+            // a later phase, so healed and unhealed episodes both occur.
+            let heal_nodes = match &event {
+                ScenarioEvent::Partition { nodes } | ScenarioEvent::Straggle { nodes, .. } => {
+                    Some(nodes.clone())
+                }
+                _ => None,
+            };
+            events.push(ScheduledEvent { phase, event });
+            if let Some(nodes) = heal_nodes {
+                if phase + 1 < phases && rng.next_f64() < 0.5 {
+                    let heal_phase = phase + 1 + rng.index(phases - phase - 1);
+                    events.push(ScheduledEvent {
+                        phase: heal_phase,
+                        event: ScenarioEvent::Heal { nodes },
+                    });
+                }
+            }
+        }
+        for k in 0..phases {
+            events.push(ScheduledEvent {
+                phase: k,
+                event: ScenarioEvent::ReportStats {
+                    label: format!("phase {k}"),
+                },
+            });
+        }
+        ScenarioProgram {
+            initial,
+            phases,
+            phase_seconds: 1.5,
+            clamp: (1e-3, 1e4),
+            churn_floor: 0.05,
+            seed: rng.next_u64(),
+            events,
+        }
+    }
+
+    /// Shrinking size measure: event count dominates, then horizon length,
+    /// then event magnitudes — so the greedy shrinker prefers deleting
+    /// events, then shortening the scenario, then softening what remains.
+    pub fn size(&self) -> f64 {
+        let mut s = 1000.0 * self.events.len() as f64 + 10.0 * self.phases as f64;
+        for ev in &self.events {
+            s += match &ev.event {
+                ScenarioEvent::Drift { sigma } => *sigma,
+                ScenarioEvent::CorrelatedDrift { sigma, .. } => *sigma,
+                ScenarioEvent::LinkDegrade { nodes, factor }
+                | ScenarioEvent::Straggle { nodes, factor } => {
+                    (1.0 - factor).abs() + 0.1 * nodes.len() as f64
+                }
+                ScenarioEvent::Partition { nodes } | ScenarioEvent::Heal { nodes } => {
+                    0.1 * nodes.len() as f64
+                }
+                ScenarioEvent::Diurnal { amplitude, .. } => *amplitude,
+                _ => 0.0,
+            };
+        }
+        s
+    }
+
+    /// One greedy-shrinking step: every candidate reduction of this program
+    /// (shorten the horizon, delete an event, soften an event's magnitude or
+    /// halve its node set). Feed to [`crate::util::prop::shrink_greedy`] with
+    /// [`size`] as the measure.
+    ///
+    /// [`size`]: ScenarioProgram::size
+    pub fn shrink_moves(&self) -> Vec<ScenarioProgram> {
+        let mut out = Vec::new();
+        // Shorten the horizon (halve, then minus one), dropping orphans.
+        for np in [self.phases / 2, self.phases.saturating_sub(1)] {
+            if np >= 1 && np < self.phases {
+                let mut p = self.clone();
+                p.phases = np;
+                p.events.retain(|e| e.phase < np);
+                out.push(p);
+            }
+        }
+        // Delete each event.
+        for i in 0..self.events.len() {
+            let mut p = self.clone();
+            p.events.remove(i);
+            out.push(p);
+        }
+        // Soften each event (halve magnitudes / node sets).
+        for i in 0..self.events.len() {
+            for softer in soften(&self.events[i].event) {
+                let mut p = self.clone();
+                p.events[i].event = softer;
+                out.push(p);
+            }
+        }
+        out
+    }
+}
+
+/// Random adversarial event over `n` nodes (no `ReportStats` — checkpoints
+/// are scheduled systematically by [`ScenarioProgram::random`]).
+fn random_event(rng: &mut Xoshiro256pp, n: usize) -> ScenarioEvent {
+    match rng.index(10) {
+        0 => ScenarioEvent::Drift {
+            sigma: 0.05 + 0.4 * rng.next_f64(),
+        },
+        1 => ScenarioEvent::SetBandwidth {
+            node: rng.index(n),
+            bw: 0.5 + 10.0 * rng.next_f64(),
+        },
+        2 => ScenarioEvent::LinkDegrade {
+            nodes: random_nodes(rng, n),
+            factor: 0.05 + 0.9 * rng.next_f64(),
+        },
+        3 => ScenarioEvent::NodeChurn {
+            node: rng.index(n),
+            rejoin_bw: if rng.next_f64() < 0.5 {
+                None
+            } else {
+                Some(1.0 + 9.0 * rng.next_f64())
+            },
+        },
+        4 => ScenarioEvent::HeavyTailDraw {
+            dist: TailDist::Pareto {
+                alpha: 1.1 + rng.next_f64(),
+                xm: 1.0 + 3.0 * rng.next_f64(),
+            },
+        },
+        5 => ScenarioEvent::HeavyTailDraw {
+            dist: TailDist::LogNormal {
+                mu: 1.0 + rng.next_f64(),
+                sigma: 0.3 + 0.7 * rng.next_f64(),
+            },
+        },
+        6 => ScenarioEvent::CorrelatedDrift {
+            sigma: 0.05 + 0.3 * rng.next_f64(),
+            rho: rng.next_f64(),
+        },
+        7 => ScenarioEvent::Partition {
+            nodes: random_nodes(rng, n),
+        },
+        8 => ScenarioEvent::Straggle {
+            nodes: random_nodes(rng, n),
+            factor: 0.02 + 0.3 * rng.next_f64(),
+        },
+        _ => ScenarioEvent::Diurnal {
+            amplitude: 0.2 + 0.7 * rng.next_f64(),
+            period: 2 + rng.index(5),
+        },
+    }
+}
+
+fn random_nodes(rng: &mut Xoshiro256pp, n: usize) -> Vec<usize> {
+    let k = 1 + rng.index(n);
+    let mut v = rng.sample_indices(n, k);
+    v.sort_unstable();
+    v
+}
+
+/// Magnitude-halving / node-set-halving reductions of one event.
+fn soften(event: &ScenarioEvent) -> Vec<ScenarioEvent> {
+    let mut out = Vec::new();
+    let half_nodes = |nodes: &Vec<usize>| -> Option<Vec<usize>> {
+        (nodes.len() >= 2).then(|| nodes[..nodes.len() / 2].to_vec())
+    };
+    match event {
+        ScenarioEvent::Drift { sigma } => {
+            if *sigma > 1e-3 {
+                out.push(ScenarioEvent::Drift { sigma: sigma / 2.0 });
+            }
+        }
+        ScenarioEvent::CorrelatedDrift { sigma, rho } => {
+            if *sigma > 1e-3 {
+                out.push(ScenarioEvent::CorrelatedDrift {
+                    sigma: sigma / 2.0,
+                    rho: *rho,
+                });
+            }
+        }
+        ScenarioEvent::LinkDegrade { nodes, factor } => {
+            if (factor - 1.0).abs() > 1e-3 {
+                out.push(ScenarioEvent::LinkDegrade {
+                    nodes: nodes.clone(),
+                    factor: (1.0 + factor) / 2.0,
+                });
+            }
+            if let Some(h) = half_nodes(nodes) {
+                out.push(ScenarioEvent::LinkDegrade {
+                    nodes: h,
+                    factor: *factor,
+                });
+            }
+        }
+        ScenarioEvent::Straggle { nodes, factor } => {
+            if (factor - 1.0).abs() > 1e-3 {
+                out.push(ScenarioEvent::Straggle {
+                    nodes: nodes.clone(),
+                    factor: (1.0 + factor) / 2.0,
+                });
+            }
+            if let Some(h) = half_nodes(nodes) {
+                out.push(ScenarioEvent::Straggle {
+                    nodes: h,
+                    factor: *factor,
+                });
+            }
+        }
+        ScenarioEvent::Partition { nodes } => {
+            if let Some(h) = half_nodes(nodes) {
+                out.push(ScenarioEvent::Partition { nodes: h });
+            }
+        }
+        ScenarioEvent::Heal { nodes } => {
+            if let Some(h) = half_nodes(nodes) {
+                out.push(ScenarioEvent::Heal { nodes: h });
+            }
+        }
+        ScenarioEvent::Diurnal { amplitude, period } => {
+            if *amplitude > 1e-3 {
+                out.push(ScenarioEvent::Diurnal {
+                    amplitude: amplitude / 2.0,
+                    period: *period,
+                });
+            }
+        }
+        _ => {}
+    }
+    out
+}
+
+fn event_words(event: &ScenarioEvent) -> String {
+    let join = |nodes: &[usize]| {
+        let words: Vec<String> = nodes.iter().map(|i| i.to_string()).collect();
+        words.join(" ")
+    };
+    match event {
+        ScenarioEvent::Drift { sigma } => format!("drift {sigma}"),
+        ScenarioEvent::SetBandwidth { node, bw } => format!("set_bandwidth {node} {bw}"),
+        ScenarioEvent::LinkDegrade { nodes, factor } => {
+            format!("link_degrade {factor} {}", join(nodes))
+        }
+        ScenarioEvent::NodeChurn { node, rejoin_bw } => match rejoin_bw {
+            Some(bw) => format!("node_churn {node} rejoin {bw}"),
+            None => format!("node_churn {node} leave"),
+        },
+        ScenarioEvent::ReportStats { label } => format!("report_stats {label}"),
+        ScenarioEvent::HeavyTailDraw { dist } => match dist {
+            TailDist::Pareto { alpha, xm } => format!("pareto_draw {alpha} {xm}"),
+            TailDist::LogNormal { mu, sigma } => format!("lognormal_draw {mu} {sigma}"),
+        },
+        ScenarioEvent::CorrelatedDrift { sigma, rho } => format!("correlated_drift {sigma} {rho}"),
+        ScenarioEvent::Partition { nodes } => format!("partition {}", join(nodes)),
+        ScenarioEvent::Straggle { nodes, factor } => format!("straggle {factor} {}", join(nodes)),
+        ScenarioEvent::Heal { nodes } => format!("heal {}", join(nodes)),
+        ScenarioEvent::Diurnal { amplitude, period } => format!("diurnal {amplitude} {period}"),
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(tok: Option<&str>, what: &str) -> Result<T, String> {
+    let t = tok.ok_or_else(|| format!("missing {what}"))?;
+    t.parse::<T>().map_err(|_| format!("bad {what}: {t:?}"))
+}
+
+fn parse_node_list(toks: &[&str], what: &str) -> Result<Vec<usize>, String> {
+    if toks.is_empty() {
+        return Err(format!("{what} needs at least one node"));
+    }
+    toks.iter().map(|t| parse_num(Some(t), "node index")).collect()
+}
+
+fn parse_event(kind: &str, rest: &str) -> Result<ScenarioEvent, String> {
+    let toks: Vec<&str> = rest.split_whitespace().collect();
+    let ev = match kind {
+        "drift" => ScenarioEvent::Drift {
+            sigma: parse_num(toks.first().copied(), "drift sigma")?,
+        },
+        "set_bandwidth" => ScenarioEvent::SetBandwidth {
+            node: parse_num(toks.first().copied(), "node")?,
+            bw: parse_num(toks.get(1).copied(), "bandwidth")?,
+        },
+        "link_degrade" => ScenarioEvent::LinkDegrade {
+            factor: parse_num(toks.first().copied(), "factor")?,
+            nodes: parse_node_list(toks.get(1..).unwrap_or(&[]), "link_degrade")?,
+        },
+        "node_churn" => {
+            let node = parse_num(toks.first().copied(), "node")?;
+            match toks.get(1).copied() {
+                Some("leave") => ScenarioEvent::NodeChurn {
+                    node,
+                    rejoin_bw: None,
+                },
+                Some("rejoin") => ScenarioEvent::NodeChurn {
+                    node,
+                    rejoin_bw: Some(parse_num(toks.get(2).copied(), "rejoin bandwidth")?),
+                },
+                other => return Err(format!("node_churn needs leave|rejoin, got {other:?}")),
+            }
+        }
+        "report_stats" => ScenarioEvent::ReportStats {
+            label: rest.trim().to_string(),
+        },
+        "pareto_draw" => ScenarioEvent::HeavyTailDraw {
+            dist: TailDist::Pareto {
+                alpha: parse_num(toks.first().copied(), "alpha")?,
+                xm: parse_num(toks.get(1).copied(), "xm")?,
+            },
+        },
+        "lognormal_draw" => ScenarioEvent::HeavyTailDraw {
+            dist: TailDist::LogNormal {
+                mu: parse_num(toks.first().copied(), "mu")?,
+                sigma: parse_num(toks.get(1).copied(), "sigma")?,
+            },
+        },
+        "correlated_drift" => ScenarioEvent::CorrelatedDrift {
+            sigma: parse_num(toks.first().copied(), "sigma")?,
+            rho: parse_num(toks.get(1).copied(), "rho")?,
+        },
+        "partition" => ScenarioEvent::Partition {
+            nodes: parse_node_list(&toks, "partition")?,
+        },
+        "straggle" => ScenarioEvent::Straggle {
+            factor: parse_num(toks.first().copied(), "factor")?,
+            nodes: parse_node_list(toks.get(1..).unwrap_or(&[]), "straggle")?,
+        },
+        "heal" => ScenarioEvent::Heal {
+            nodes: parse_node_list(&toks, "heal")?,
+        },
+        "diurnal" => ScenarioEvent::Diurnal {
+            amplitude: parse_num(toks.first().copied(), "amplitude")?,
+            period: parse_num(toks.get(1).copied(), "period")?,
+        },
+        other => return Err(format!("unknown event kind {other:?}")),
+    };
+    Ok(ev)
+}
+
+/// One corpus entry: a named program plus the hypothesis its analysis report
+/// sets out to test.
+#[derive(Debug, Clone)]
+pub struct NamedScenario {
+    /// Corpus name (stable identifier; used in artifact file names).
+    pub name: String,
+    /// What the scenario is expected to show (the report's `## Hypothesis`).
+    pub hypothesis: String,
+    /// The scenario program itself.
+    pub program: ScenarioProgram,
+}
+
+/// The named adversarial corpus over `n` nodes: the four legacy scenarios
+/// (drift / degrade / churn / flash-crowd) plus heavy-tailed (Pareto and
+/// log-normal), correlated drift, partition-heal, coordinated stragglers,
+/// zonal outage and diurnal load — 11 scenarios total. `quick` halves the
+/// horizon; `seed` drives every stochastic event.
+pub fn corpus(n: usize, quick: bool, seed: u64) -> Vec<NamedScenario> {
+    assert!(n >= 4, "corpus scenarios need at least 4 nodes");
+    let phases = if quick { 4 } else { 8 };
+    let mid = phases / 2;
+    let last = phases - 1;
+    let fast = 9.76;
+    let half: Vec<usize> = (n / 2..n).collect();
+    let all: Vec<usize> = (0..n).collect();
+    let zone: Vec<usize> = (0..(n / 4).max(2)).collect();
+    let ev = |phase: usize, event: ScenarioEvent| ScheduledEvent { phase, event };
+    let report = |phase: usize, label: &str| {
+        ev(
+            phase,
+            ScenarioEvent::ReportStats {
+                label: label.to_string(),
+            },
+        )
+    };
+    let base = |events: Vec<ScheduledEvent>| ScenarioProgram {
+        initial: vec![fast; n],
+        phases,
+        phase_seconds: 1.5,
+        clamp: (1e-3, f64::INFINITY),
+        churn_floor: 0.05,
+        seed,
+        events,
+    };
+    let named = |name: &str, hypothesis: &str, program: ScenarioProgram| NamedScenario {
+        name: name.to_string(),
+        hypothesis: hypothesis.to_string(),
+        program,
+    };
+
+    vec![
+        named(
+            "drift",
+            "Background i.i.d. log-normal drift slowly decorrelates link quality from the \
+             initial optimum; the adaptive controller should track it with occasional switches \
+             and match or beat the static topology's time-to-target.",
+            base(vec![
+                ev(0, ScenarioEvent::Drift { sigma: 0.25 }),
+                report(mid, "mid drift"),
+                report(last, "end of drift"),
+            ]),
+        ),
+        named(
+            "degrade",
+            "Half the fleet permanently loses 90% of its bandwidth mid-run (co-tenant \
+             interference); re-optimizing should rebalance edges onto the still-fast half \
+             and recover most of the lost round rate.",
+            base(vec![
+                ev(
+                    1,
+                    ScenarioEvent::LinkDegrade {
+                        nodes: half.clone(),
+                        factor: 0.1,
+                    },
+                ),
+                report(1, "after degradation"),
+                report(last, "end"),
+            ]),
+        ),
+        named(
+            "churn",
+            "One node departs (bandwidth at the churn floor) and rejoins at the end; the \
+             adaptive controller should route around the departed node instead of letting it \
+             throttle b_min for the whole episode.",
+            base(vec![
+                ev(
+                    1,
+                    ScenarioEvent::NodeChurn {
+                        node: n - 1,
+                        rejoin_bw: None,
+                    },
+                ),
+                report(1, "after leave"),
+                ev(
+                    last,
+                    ScenarioEvent::NodeChurn {
+                        node: n - 1,
+                        rejoin_bw: Some(fast),
+                    },
+                ),
+                report(last, "after rejoin"),
+            ]),
+        ),
+        named(
+            "flash-crowd",
+            "A fleet-wide 2x slowdown under drift, recovering at the end: uniform scaling \
+             leaves the *relative* bandwidth profile unchanged, so adaptation should see \
+             little to gain and hysteresis should suppress thrashing.",
+            base(vec![
+                ev(0, ScenarioEvent::Drift { sigma: 0.05 }),
+                ev(
+                    1,
+                    ScenarioEvent::LinkDegrade {
+                        nodes: all.clone(),
+                        factor: 0.5,
+                    },
+                ),
+                report(1, "under load"),
+                ev(
+                    last,
+                    ScenarioEvent::LinkDegrade {
+                        nodes: all,
+                        factor: 2.0,
+                    },
+                ),
+                report(last, "recovered"),
+            ]),
+        ),
+        named(
+            "heavy-tailed",
+            "Pareto(1.3) bandwidth redraws put most nodes far below the scale while a few are \
+             extremely fast; a bandwidth-aware re-optimization should concentrate degree on \
+             the fast tail, beating the static topology's time-to-target.",
+            {
+                let mut p = base(vec![
+                    ev(
+                        1,
+                        ScenarioEvent::HeavyTailDraw {
+                            dist: TailDist::Pareto {
+                                alpha: 1.3,
+                                xm: 2.0,
+                            },
+                        },
+                    ),
+                    report(1, "after first draw"),
+                    ev(
+                        mid,
+                        ScenarioEvent::HeavyTailDraw {
+                            dist: TailDist::Pareto {
+                                alpha: 1.3,
+                                xm: 2.0,
+                            },
+                        },
+                    ),
+                    report(mid, "after second draw"),
+                    report(last, "end"),
+                ]);
+                p.clamp = (0.5, 40.0);
+                p
+            },
+        ),
+        named(
+            "heavy-tailed-lognormal",
+            "Log-normal redraws (sigma 0.9) give a right-skewed but lighter-than-Pareto \
+             profile; adaptation gains should sit between the homogeneous and Pareto \
+             extremes.",
+            {
+                let mut p = base(vec![
+                    ev(
+                        1,
+                        ScenarioEvent::HeavyTailDraw {
+                            dist: TailDist::LogNormal {
+                                mu: 2.0,
+                                sigma: 0.9,
+                            },
+                        },
+                    ),
+                    report(1, "after first draw"),
+                    ev(
+                        mid,
+                        ScenarioEvent::HeavyTailDraw {
+                            dist: TailDist::LogNormal {
+                                mu: 2.0,
+                                sigma: 0.9,
+                            },
+                        },
+                    ),
+                    report(mid, "after second draw"),
+                    report(last, "end"),
+                ]);
+                p.clamp = (0.5, 40.0);
+                p
+            },
+        ),
+        named(
+            "correlated",
+            "Strongly correlated drift (rho 0.9) moves the fleet mostly in lockstep, like \
+             shared-backbone congestion: the bandwidth *profile* barely changes, so the \
+             adaptive controller should switch rarely — per Vogels et al. (2301.02151), \
+             time-to-target rather than the spectral gap is the metric that shows this.",
+            base(vec![
+                ev(
+                    0,
+                    ScenarioEvent::CorrelatedDrift {
+                        sigma: 0.25,
+                        rho: 0.9,
+                    },
+                ),
+                report(mid, "mid drift"),
+                report(last, "end"),
+            ]),
+        ),
+        named(
+            "partition-heal",
+            "Half the fleet is partitioned off (churn-floor bandwidth) and heals mid-run; \
+             during the partition the optimizer should concentrate edges inside the healthy \
+             half, and after the heal both arms should converge again.",
+            base(vec![
+                ev(
+                    1,
+                    ScenarioEvent::Partition {
+                        nodes: half.clone(),
+                    },
+                ),
+                report(1, "under partition"),
+                ev(mid, ScenarioEvent::Heal { nodes: half }),
+                report(mid, "after heal"),
+                report(last, "end"),
+            ]),
+        ),
+        named(
+            "stragglers",
+            "Two coordinated stragglers at 8% bandwidth gate b_min for every topology that \
+             keeps them connected; the adaptive controller should shed their degree to 1 \
+             and restore most of the round rate until they heal.",
+            base(vec![
+                ev(
+                    1,
+                    ScenarioEvent::Straggle {
+                        nodes: vec![0, 1],
+                        factor: 0.08,
+                    },
+                ),
+                report(1, "stragglers active"),
+                ev(mid, ScenarioEvent::Heal { nodes: vec![0, 1] }),
+                report(mid, "after heal"),
+                report(last, "end"),
+            ]),
+        ),
+        named(
+            "zonal-outage",
+            "A whole zone (quarter of the fleet) drops to the churn floor until the end of \
+             the run: an unhealed partition. The static topology's b_min collapses for the \
+             duration; the adaptive one should pay one switch and isolate the zone.",
+            base(vec![
+                ev(
+                    1,
+                    ScenarioEvent::Partition {
+                        nodes: zone.clone(),
+                    },
+                ),
+                report(1, "zone down"),
+                report(mid, "mid outage"),
+                ev(last, ScenarioEvent::Heal { nodes: zone }),
+                report(last, "zone restored"),
+            ]),
+        ),
+        named(
+            "diurnal",
+            "A diurnal load curve modulates the whole fleet sinusoidally (amplitude 0.6): \
+             like flash-crowd, the relative profile is constant, so the adaptive arm should \
+             hold its topology and both arms should show time-to-target set by the trough \
+             phases.",
+            base(vec![
+                ev(
+                    0,
+                    ScenarioEvent::Diurnal {
+                        amplitude: 0.6,
+                        period: (phases / 2).max(2),
+                    },
+                ),
+                report(mid, "mid cycle"),
+                report(last, "end"),
+            ]),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_program() -> ScenarioProgram {
+        ScenarioProgram {
+            initial: vec![9.76, 3.25, 5.5],
+            phases: 5,
+            phase_seconds: 1.5,
+            clamp: (0.5, f64::INFINITY),
+            churn_floor: 0.05,
+            seed: 77,
+            events: vec![
+                ScheduledEvent {
+                    phase: 0,
+                    event: ScenarioEvent::CorrelatedDrift {
+                        sigma: 0.2,
+                        rho: 0.7,
+                    },
+                },
+                ScheduledEvent {
+                    phase: 1,
+                    event: ScenarioEvent::Partition { nodes: vec![1, 2] },
+                },
+                ScheduledEvent {
+                    phase: 2,
+                    event: ScenarioEvent::ReportStats {
+                        label: "under partition".to_string(),
+                    },
+                },
+                ScheduledEvent {
+                    phase: 3,
+                    event: ScenarioEvent::Heal { nodes: vec![1, 2] },
+                },
+                ScheduledEvent {
+                    phase: 4,
+                    event: ScenarioEvent::NodeChurn {
+                        node: 0,
+                        rejoin_bw: Some(4.0),
+                    },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn dump_parse_roundtrips_exactly() {
+        let p = sample_program();
+        let q = ScenarioProgram::parse(&p.dump()).expect("parse");
+        assert_eq!(p, q);
+        assert_eq!(p.compile().trace.phases, q.compile().trace.phases);
+    }
+
+    #[test]
+    fn random_programs_roundtrip_and_compile() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        for _ in 0..20 {
+            let p = ScenarioProgram::random(&mut rng, true);
+            let q = ScenarioProgram::parse(&p.dump()).expect("parse");
+            assert_eq!(p, q);
+            let c = p.compile();
+            assert_eq!(c.num_phases(), p.phases);
+            assert!(c.trace.phases.iter().flatten().all(|b| b.is_finite()));
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ScenarioProgram::parse("nonsense 3").is_err());
+        assert!(ScenarioProgram::parse("init 1 2\n").is_err(), "missing phases");
+        assert!(ScenarioProgram::parse("phases 3\n").is_err(), "missing init");
+        assert!(
+            ScenarioProgram::parse("phases 3\ninit 1 2\nevent 0 warp 9").is_err(),
+            "unknown event kind"
+        );
+    }
+
+    #[test]
+    fn shrink_moves_strictly_reduce_size() {
+        let p = sample_program();
+        let moves = p.shrink_moves();
+        assert!(!moves.is_empty());
+        for m in &moves {
+            assert!(
+                m.size() < p.size(),
+                "move did not shrink: {} vs {}",
+                m.size(),
+                p.size()
+            );
+        }
+    }
+
+    #[test]
+    fn corpus_is_complete_and_compiles() {
+        let c = corpus(8, true, 42);
+        assert!(c.len() >= 10, "corpus shrank to {}", c.len());
+        for want in [
+            "drift",
+            "degrade",
+            "churn",
+            "flash-crowd",
+            "heavy-tailed",
+            "heavy-tailed-lognormal",
+            "correlated",
+            "partition-heal",
+            "stragglers",
+            "zonal-outage",
+            "diurnal",
+        ] {
+            let entry = c
+                .iter()
+                .find(|s| s.name == want)
+                .unwrap_or_else(|| panic!("corpus is missing scenario {want}"));
+            assert!(!entry.hypothesis.is_empty());
+            let compiled = entry.program.compile();
+            assert!(compiled.num_phases() >= 2);
+            assert!(
+                !compiled.reports.is_empty(),
+                "{want} has no report checkpoints"
+            );
+            assert!(compiled.trace.phases.iter().flatten().all(|&b| b > 0.0));
+        }
+    }
+}

@@ -1,0 +1,377 @@
+//! Scenario fuzzer: generates random [`ScenarioProgram`]s, runs them through
+//! [`simulate_scripted_consensus`] (both the static and the adaptive
+//! [`DynamicTopologyController`] arm), checks simulation invariants, and on a
+//! violation greedily *shrinks* the program with
+//! [`crate::util::prop::shrink_greedy`] before dumping it as a replayable
+//! `*.scenario` file.
+//!
+//! Driven by `batopo fuzz scenarios` (see `docs/SCENARIOS.md`); a dump can be
+//! re-checked with `batopo fuzz replay <file>`.
+//!
+//! [`simulate_scripted_consensus`]: crate::bandwidth::dynamic::simulate_scripted_consensus
+//! [`DynamicTopologyController`]: crate::bandwidth::dynamic::DynamicTopologyController
+
+use crate::bandwidth::corpus::ScenarioProgram;
+use crate::bandwidth::dynamic::{simulate_scripted_consensus, DynamicPolicy, ScriptedRun};
+use crate::util::prop::{panic_message, shrink_greedy};
+use crate::util::rng::Xoshiro256pp;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Which invariant suite to check on every fuzzed program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Invariant {
+    /// The invariants every legal scenario must satisfy: no panic anywhere in
+    /// compile → optimize → simulate, finite times and errors, non-increasing
+    /// consensus error across checkpoints, and monotone counters
+    /// (rounds/switches/reopt-failures/sim-time). This is the suite CI runs
+    /// and it is expected to pass.
+    Core,
+    /// [`Invariant::Core`] **plus** "every checkpointed phase executes at
+    /// least one gossip round". This is deliberately *false* for outage-style
+    /// scenarios (a partitioned fleet at the churn floor has a round time
+    /// longer than the phase), so it serves as the seeded known-bad invariant
+    /// exercising the shrink-and-dump path end to end.
+    EveryPhaseGossips,
+}
+
+impl Invariant {
+    /// CLI name of the invariant suite.
+    pub fn name(self) -> &'static str {
+        match self {
+            Invariant::Core => "core",
+            Invariant::EveryPhaseGossips => "every-phase-gossips",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn by_name(name: &str) -> Option<Invariant> {
+        match name {
+            "core" => Some(Invariant::Core),
+            "every-phase-gossips" => Some(Invariant::EveryPhaseGossips),
+            _ => None,
+        }
+    }
+}
+
+/// Fuzzer configuration (the `batopo fuzz scenarios` flags).
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    /// Number of random programs to generate and check.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+    /// Invariant suite to check.
+    pub invariant: Invariant,
+    /// Quick mode: shorter scenario horizons.
+    pub quick: bool,
+    /// Directory for `fuzz_case*.scenario` dumps of shrunk failures.
+    pub out_dir: PathBuf,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        FuzzConfig {
+            cases: 64,
+            seed: 0xF022,
+            invariant: Invariant::Core,
+            quick: false,
+            out_dir: PathBuf::from("fuzz-out"),
+        }
+    }
+}
+
+/// One invariant violation, minimized and dumped.
+#[derive(Debug, Clone)]
+pub struct FuzzFailure {
+    /// Fuzz case index (seed = config seed + case).
+    pub case: usize,
+    /// The violation message from the *shrunk* program.
+    pub violation: String,
+    /// Event count of the original failing program.
+    pub original_events: usize,
+    /// Event count after shrinking (≤ original).
+    pub shrunk_events: usize,
+    /// Where the replayable dump was written.
+    pub dump_path: PathBuf,
+    /// The shrunk program itself.
+    pub program: ScenarioProgram,
+}
+
+/// Aggregate fuzzing outcome.
+#[derive(Debug)]
+pub struct FuzzOutcome {
+    /// Cases executed.
+    pub cases: usize,
+    /// Violations found (empty = all invariants held).
+    pub failures: Vec<FuzzFailure>,
+}
+
+/// Simulation policy used for fuzzed programs: generous edge budget so the
+/// optimizer is feasible for any fuzzed fleet size, tight hysteresis so the
+/// adaptive arm actually adapts, quick optimizer budgets.
+fn fuzz_policy(program: &ScenarioProgram) -> DynamicPolicy {
+    let n = program.num_nodes();
+    DynamicPolicy {
+        r: (3 * n / 2).max(n),
+        hysteresis: 1.05,
+        quick: true,
+        switch_cost: 0.05,
+        seed: program.seed,
+    }
+}
+
+/// Check one program against an invariant suite. `Err` carries a one-line
+/// violation message; panics anywhere in compile/optimize/simulate are caught
+/// and reported as `panic: <message>` violations.
+pub fn check_program(program: &ScenarioProgram, invariant: Invariant) -> Result<(), String> {
+    let p = program.clone();
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        check_inner(&p, invariant)
+    }))
+    .unwrap_or_else(|payload| Err(format!("panic: {}", panic_message(payload.as_ref()))))
+}
+
+fn check_inner(program: &ScenarioProgram, invariant: Invariant) -> Result<(), String> {
+    let scenario = program.compile();
+    let policy = fuzz_policy(program);
+    for adapt in [false, true] {
+        let arm = if adapt { "adaptive" } else { "static" };
+        let run = simulate_scripted_consensus(&scenario, policy.clone(), adapt, program.seed);
+        check_run(&run, invariant).map_err(|e| format!("{arm} arm: {e}"))?;
+    }
+    Ok(())
+}
+
+fn check_run(run: &ScriptedRun, invariant: Invariant) -> Result<(), String> {
+    let out = &run.outcome;
+    if !out.final_log_error.is_finite() {
+        return Err(format!("final_log_error is {}", out.final_log_error));
+    }
+    if out.final_log_error > 1e-6 {
+        return Err(format!(
+            "consensus error grew: final log10 error {} > 0",
+            out.final_log_error
+        ));
+    }
+    if let Some(t) = out.time_to_target {
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("time_to_target {t} is not a finite non-negative time"));
+        }
+    }
+    for r in &run.reports {
+        if !r.log_error.is_finite() {
+            return Err(format!("phase {} log_error is {}", r.phase, r.log_error));
+        }
+        if !r.sim_time.is_finite() || r.sim_time <= 0.0 {
+            return Err(format!("phase {} sim_time is {}", r.phase, r.sim_time));
+        }
+        if r.b_min.is_nan() || r.b_min < 0.0 {
+            return Err(format!("phase {} b_min is {}", r.phase, r.b_min));
+        }
+    }
+    for w in run.reports.windows(2) {
+        let (a, b) = (&w[0], &w[1]);
+        if b.log_error > a.log_error + 1e-6 {
+            return Err(format!(
+                "consensus error not monotone: phase {} log10 error {} > phase {} log10 error {}",
+                b.phase, b.log_error, a.phase, a.log_error
+            ));
+        }
+        for (what, x, y) in [
+            ("rounds", a.rounds, b.rounds),
+            ("switches", a.switches, b.switches),
+            ("reopt_failures", a.reopt_failures, b.reopt_failures),
+        ] {
+            if y < x {
+                return Err(format!(
+                    "{what} decreased between phases {} and {}: {x} -> {y}",
+                    a.phase, b.phase
+                ));
+            }
+        }
+        if b.sim_time < a.sim_time {
+            return Err(format!(
+                "sim_time decreased between phases {} and {}",
+                a.phase, b.phase
+            ));
+        }
+    }
+    if invariant == Invariant::EveryPhaseGossips {
+        if let Some(first) = run.reports.first() {
+            if first.rounds == 0 {
+                return Err(format!(
+                    "phase {} checkpoint saw zero gossip rounds",
+                    first.phase
+                ));
+            }
+        }
+        for w in run.reports.windows(2) {
+            // Same-phase checkpoints share a round count; across phases the
+            // count must strictly grow.
+            if w[1].phase > w[0].phase && w[1].rounds == w[0].rounds {
+                return Err(format!(
+                    "no gossip rounds between phase {} and phase {} checkpoints",
+                    w[0].phase, w[1].phase
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Minimize a failing program: greedy shrinking over
+/// [`ScenarioProgram::shrink_moves`] with [`ScenarioProgram::size`] as the
+/// measure, accepting only candidates that still violate `invariant`.
+pub fn shrink_failing(program: &ScenarioProgram, invariant: Invariant) -> ScenarioProgram {
+    shrink_greedy(
+        program.clone(),
+        &|p: &ScenarioProgram| p.size(),
+        &|p: &ScenarioProgram| p.shrink_moves(),
+        &|p: &ScenarioProgram| check_program(p, invariant).is_err(),
+        400,
+    )
+}
+
+/// Run the fuzzer: `cfg.cases` random programs, each checked against
+/// `cfg.invariant`; every violation is shrunk and dumped to
+/// `cfg.out_dir/fuzz_case<i>.scenario`.
+pub fn fuzz_scenarios(cfg: &FuzzConfig) -> std::io::Result<FuzzOutcome> {
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let mut failures = Vec::new();
+    for case in 0..cfg.cases {
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(case as u64));
+        let program = ScenarioProgram::random(&mut rng, cfg.quick);
+        let Err(original_violation) = check_program(&program, cfg.invariant) else {
+            continue;
+        };
+        let shrunk = shrink_failing(&program, cfg.invariant);
+        let violation = check_program(&shrunk, cfg.invariant).err();
+        let violation = violation.unwrap_or(original_violation);
+        let dump_path = cfg.out_dir.join(format!("fuzz_case{case}.scenario"));
+        let mut file = std::fs::File::create(&dump_path)?;
+        writeln!(file, "# fuzz case {case} (base seed {})", cfg.seed)?;
+        writeln!(file, "# invariant: {}", cfg.invariant.name())?;
+        writeln!(file, "# violation: {}", violation.replace('\n', " "))?;
+        writeln!(
+            file,
+            "# shrunk from {} events to {}",
+            program.events.len(),
+            shrunk.events.len()
+        )?;
+        file.write_all(shrunk.dump().as_bytes())?;
+        failures.push(FuzzFailure {
+            case,
+            violation,
+            original_events: program.events.len(),
+            shrunk_events: shrunk.events.len(),
+            dump_path,
+            program: shrunk,
+        });
+    }
+    Ok(FuzzOutcome {
+        cases: cfg.cases,
+        failures,
+    })
+}
+
+/// Replay a `*.scenario` dump: parse it and re-check `invariant`. Returns the
+/// parsed program plus `Some(violation)` when the invariant still fails,
+/// `None` when it now holds.
+pub fn replay(
+    path: &Path,
+    invariant: Invariant,
+) -> Result<(ScenarioProgram, Option<String>), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    let program = ScenarioProgram::parse(&text)
+        .map_err(|e| format!("cannot parse {}: {e}", path.display()))?;
+    let violation = check_program(&program, invariant).err();
+    Ok((program, violation))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::scenario_dsl::{ScenarioEvent, ScheduledEvent};
+
+    /// A known-bad program for `EveryPhaseGossips`: a full-fleet partition at
+    /// the churn floor makes the round time (~2.9 s at 0.05 GB/s) exceed the
+    /// 1.5 s phase, so checkpoints during the partition see no new rounds.
+    fn known_bad_program() -> ScenarioProgram {
+        let n = 6;
+        ScenarioProgram {
+            initial: vec![9.76; n],
+            phases: 3,
+            phase_seconds: 1.5,
+            clamp: (1e-3, f64::INFINITY),
+            churn_floor: 0.05,
+            seed: 13,
+            events: vec![
+                ScheduledEvent {
+                    phase: 1,
+                    event: ScenarioEvent::Partition {
+                        nodes: (0..n).collect(),
+                    },
+                },
+                ScheduledEvent {
+                    phase: 0,
+                    event: ScenarioEvent::ReportStats {
+                        label: "phase 0".to_string(),
+                    },
+                },
+                ScheduledEvent {
+                    phase: 1,
+                    event: ScenarioEvent::ReportStats {
+                        label: "phase 1".to_string(),
+                    },
+                },
+                ScheduledEvent {
+                    phase: 2,
+                    event: ScenarioEvent::ReportStats {
+                        label: "phase 2".to_string(),
+                    },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn core_invariant_holds_on_the_known_bad_program() {
+        // The outage is legal behavior: core invariants must pass…
+        check_program(&known_bad_program(), Invariant::Core).expect("core should hold");
+        // …while the stricter gossip invariant correctly fails.
+        let err = check_program(&known_bad_program(), Invariant::EveryPhaseGossips)
+            .expect_err("every-phase-gossips should fail");
+        assert!(err.contains("gossip"), "unexpected violation: {err}");
+    }
+
+    #[test]
+    fn shrinking_the_known_bad_program_keeps_it_failing_and_smaller() {
+        let original = known_bad_program();
+        let shrunk = shrink_failing(&original, Invariant::EveryPhaseGossips);
+        assert!(
+            shrunk.events.len() < original.events.len(),
+            "shrunk {} events vs original {}",
+            shrunk.events.len(),
+            original.events.len()
+        );
+        assert!(shrunk.size() < original.size());
+        assert!(
+            check_program(&shrunk, Invariant::EveryPhaseGossips).is_err(),
+            "shrunk program no longer fails"
+        );
+        // The dump of the shrunk program round-trips and still fails.
+        let reparsed = ScenarioProgram::parse(&shrunk.dump()).expect("dump parses");
+        assert_eq!(reparsed, shrunk);
+        assert!(check_program(&reparsed, Invariant::EveryPhaseGossips).is_err());
+    }
+
+    #[test]
+    fn invariant_names_roundtrip() {
+        for inv in [Invariant::Core, Invariant::EveryPhaseGossips] {
+            assert_eq!(Invariant::by_name(inv.name()), Some(inv));
+        }
+        assert_eq!(Invariant::by_name("bogus"), None);
+    }
+}

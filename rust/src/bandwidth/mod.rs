@@ -5,7 +5,9 @@
 //! the per-iteration / per-epoch time model (Eqs. 34–35).
 
 pub mod allocation;
+pub mod corpus;
 pub mod dynamic;
+pub mod fuzz;
 pub mod scenario_dsl;
 pub mod scenarios;
 pub mod timing;

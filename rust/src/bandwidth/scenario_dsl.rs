@@ -37,6 +37,43 @@
 
 use crate::bandwidth::dynamic::BandwidthTrace;
 use crate::util::rng::Xoshiro256pp;
+use std::collections::BTreeMap;
+
+/// Heavy-tailed bandwidth distribution used by
+/// [`ScenarioEvent::HeavyTailDraw`] to redraw the whole fleet i.i.d.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TailDist {
+    /// Pareto(α, x_m): inverse-CDF sample `x_m · u^(-1/α)`, `u ~ U(0,1)`.
+    /// Small α (≤ 2) gives the occasional extremely fast node and a heavy
+    /// mass of slow ones — the classic long-tail WAN profile.
+    Pareto {
+        /// Tail index α > 0 (smaller = heavier tail).
+        alpha: f64,
+        /// Scale / minimum value x_m > 0 (GB/s).
+        xm: f64,
+    },
+    /// Log-normal: `exp(μ + σ·ξ)`, `ξ ~ N(0,1)` — right-skewed but with all
+    /// moments finite, the standard datacenter-bandwidth fit.
+    LogNormal {
+        /// Location μ of the underlying normal (log GB/s).
+        mu: f64,
+        /// Scale σ > 0 of the underlying normal.
+        sigma: f64,
+    },
+}
+
+impl TailDist {
+    /// Draw one sample.
+    fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        match self {
+            TailDist::Pareto { alpha, xm } => {
+                let u = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
+                xm * u.powf(-1.0 / alpha)
+            }
+            TailDist::LogNormal { mu, sigma } => (mu + sigma * rng.next_gaussian()).exp(),
+        }
+    }
+}
 
 /// One scripted event. Events fire at the **start** of their phase, after the
 /// background drift step (so an explicit `set_bandwidth` wins over drift
@@ -81,6 +118,58 @@ pub enum ScenarioEvent {
     ReportStats {
         /// Checkpoint label for reports/CSV.
         label: String,
+    },
+    /// Redraw **every** node's bandwidth i.i.d. from a heavy-tailed
+    /// distribution (clamped like all other updates).
+    HeavyTailDraw {
+        /// The distribution to draw from.
+        dist: TailDist,
+    },
+    /// Switch the background drift to a *correlated* random walk from this
+    /// phase on: each transition scales node i by
+    /// `exp(σ·(√ρ·z + √(1−ρ)·ξᵢ))` with a shared factor `z ~ N(0,1)` and
+    /// per-node noise `ξᵢ ~ N(0,1)`. `ρ = 1` moves the whole fleet in
+    /// lockstep (a shared-backbone congestion event); `ρ = 0` recovers
+    /// independent drift. `sigma = 0` turns correlated drift off again.
+    CorrelatedDrift {
+        /// Per-phase log-scale drift rate σ ≥ 0.
+        sigma: f64,
+        /// Cross-node correlation ρ ∈ \[0, 1].
+        rho: f64,
+    },
+    /// Network partition: the listed nodes' bandwidths collapse to the churn
+    /// floor (effectively unreachable). Their pre-partition bandwidths are
+    /// remembered so a later [`ScenarioEvent::Heal`] can restore them.
+    Partition {
+        /// Nodes cut off by the partition.
+        nodes: Vec<usize>,
+    },
+    /// Coordinated stragglers: scale the listed nodes by `factor` (< 1),
+    /// remembering their pre-straggle bandwidths for [`ScenarioEvent::Heal`].
+    /// Unlike [`ScenarioEvent::LinkDegrade`] this is a *reversible* episode.
+    Straggle {
+        /// The straggling nodes.
+        nodes: Vec<usize>,
+        /// Multiplicative slowdown factor (0 < factor).
+        factor: f64,
+    },
+    /// Heal listed nodes: restore the bandwidth remembered by the most recent
+    /// unhealed [`ScenarioEvent::Partition`] / [`ScenarioEvent::Straggle`]
+    /// covering them. Nodes with nothing to heal are left untouched.
+    Heal {
+        /// Nodes to restore.
+        nodes: Vec<usize>,
+    },
+    /// Diurnal load curve from this phase on: every node's bandwidth is
+    /// modulated by `m(k) = 1 + a·sin(2π(k−k₀)/T)` (k₀ = this phase), applied
+    /// incrementally as `bw ← bw · m(k)/m(k−1)` at each transition so it
+    /// composes with drift and scripted events. `amplitude = 0` turns the
+    /// modulation off.
+    Diurnal {
+        /// Peak-to-mean amplitude a ∈ \[0, 1).
+        amplitude: f64,
+        /// Period in phases (≥ 2).
+        period: usize,
     },
 }
 
@@ -169,6 +258,7 @@ impl ScenarioBuilder {
     }
 
     fn push(mut self, event: ScenarioEvent) -> Self {
+        self.validate(&event);
         self.events.push(ScheduledEvent {
             phase: self.cursor,
             event,
@@ -176,11 +266,14 @@ impl ScenarioBuilder {
         self
     }
 
-    /// Enable random-walk drift with rate `sigma` from the cursor phase on
-    /// (see [`ScenarioEvent::Drift`]).
-    pub fn drift(self, sigma: f64) -> Self {
-        assert!(sigma >= 0.0, "drift sigma must be non-negative");
-        self.push(ScenarioEvent::Drift { sigma })
+    /// Schedule an arbitrary [`ScenarioEvent`] at an explicit phase (the
+    /// programmatic entry point used by replayed/fuzzed scenario programs —
+    /// see [`crate::bandwidth::corpus::ScenarioProgram`]). Applies the same
+    /// validation as the typed builder methods; does not move the cursor.
+    pub fn event(mut self, phase: usize, event: ScenarioEvent) -> Self {
+        self.validate(&event);
+        self.events.push(ScheduledEvent { phase, event });
+        self
     }
 
     fn check_node(&self, node: usize) {
@@ -191,19 +284,81 @@ impl ScenarioBuilder {
         );
     }
 
+    /// Validation shared by the typed builder methods and [`event`].
+    ///
+    /// [`event`]: ScenarioBuilder::event
+    fn validate(&self, event: &ScenarioEvent) {
+        match event {
+            ScenarioEvent::Drift { sigma } => {
+                assert!(*sigma >= 0.0, "drift sigma must be non-negative");
+            }
+            ScenarioEvent::SetBandwidth { node, bw } => {
+                self.check_node(*node);
+                assert!(*bw > 0.0, "bandwidth must be positive");
+            }
+            ScenarioEvent::LinkDegrade { nodes, factor } => {
+                for &i in nodes {
+                    self.check_node(i);
+                }
+                assert!(*factor > 0.0, "degradation factor must be positive");
+            }
+            ScenarioEvent::NodeChurn { node, rejoin_bw } => {
+                self.check_node(*node);
+                if let Some(bw) = rejoin_bw {
+                    assert!(*bw > 0.0, "rejoin bandwidth must be positive");
+                }
+            }
+            ScenarioEvent::ReportStats { .. } => {}
+            ScenarioEvent::HeavyTailDraw { dist } => match dist {
+                TailDist::Pareto { alpha, xm } => {
+                    assert!(*alpha > 0.0, "pareto alpha must be positive");
+                    assert!(*xm > 0.0, "pareto scale must be positive");
+                }
+                TailDist::LogNormal { mu, sigma } => {
+                    assert!(mu.is_finite(), "lognormal mu must be finite");
+                    assert!(*sigma > 0.0, "lognormal sigma must be positive");
+                }
+            },
+            ScenarioEvent::CorrelatedDrift { sigma, rho } => {
+                assert!(*sigma >= 0.0, "correlated drift sigma must be non-negative");
+                assert!((0.0..=1.0).contains(rho), "correlation rho must be in [0,1]");
+            }
+            ScenarioEvent::Partition { nodes } | ScenarioEvent::Heal { nodes } => {
+                assert!(!nodes.is_empty(), "partition/heal needs at least one node");
+                for &i in nodes {
+                    self.check_node(i);
+                }
+            }
+            ScenarioEvent::Straggle { nodes, factor } => {
+                assert!(!nodes.is_empty(), "straggle needs at least one node");
+                for &i in nodes {
+                    self.check_node(i);
+                }
+                assert!(*factor > 0.0, "straggle factor must be positive");
+            }
+            ScenarioEvent::Diurnal { amplitude, period } => {
+                assert!(
+                    (0.0..1.0).contains(amplitude),
+                    "diurnal amplitude must be in [0,1) so the modulator stays positive"
+                );
+                assert!(*period >= 2, "diurnal period must be at least 2 phases");
+            }
+        }
+    }
+
+    /// Enable random-walk drift with rate `sigma` from the cursor phase on
+    /// (see [`ScenarioEvent::Drift`]).
+    pub fn drift(self, sigma: f64) -> Self {
+        self.push(ScenarioEvent::Drift { sigma })
+    }
+
     /// Pin `node`'s bandwidth to `bw` GB/s at the cursor phase.
     pub fn set_bandwidth(self, node: usize, bw: f64) -> Self {
-        self.check_node(node);
-        assert!(bw > 0.0, "bandwidth must be positive");
         self.push(ScenarioEvent::SetBandwidth { node, bw })
     }
 
     /// Scale `nodes`' bandwidths by `factor` at the cursor phase.
     pub fn link_degrade(self, nodes: &[usize], factor: f64) -> Self {
-        for &i in nodes {
-            self.check_node(i);
-        }
-        assert!(factor > 0.0, "degradation factor must be positive");
         self.push(ScenarioEvent::LinkDegrade {
             nodes: nodes.to_vec(),
             factor,
@@ -211,12 +366,9 @@ impl ScenarioBuilder {
     }
 
     /// Node churn at the cursor phase: `None` = node leaves (bandwidth drops
-    /// to the churn floor), `Some(bw)` = node rejoins at `bw` GB/s.
+    /// to the churn floor), `Some(bw)` = node rejoins at `bw` GB/s (never
+    /// below the churn floor).
     pub fn node_churn(self, node: usize, rejoin_bw: Option<f64>) -> Self {
-        self.check_node(node);
-        if let Some(bw) = rejoin_bw {
-            assert!(bw > 0.0, "rejoin bandwidth must be positive");
-        }
         self.push(ScenarioEvent::NodeChurn { node, rejoin_bw })
     }
 
@@ -227,14 +379,70 @@ impl ScenarioBuilder {
         })
     }
 
+    /// Redraw every node's bandwidth from Pareto(α, x_m) at the cursor phase.
+    pub fn pareto_draw(self, alpha: f64, xm: f64) -> Self {
+        self.push(ScenarioEvent::HeavyTailDraw {
+            dist: TailDist::Pareto { alpha, xm },
+        })
+    }
+
+    /// Redraw every node's bandwidth from LogNormal(μ, σ) at the cursor phase.
+    pub fn lognormal_draw(self, mu: f64, sigma: f64) -> Self {
+        self.push(ScenarioEvent::HeavyTailDraw {
+            dist: TailDist::LogNormal { mu, sigma },
+        })
+    }
+
+    /// Enable correlated drift (rate `sigma`, correlation `rho`) from the
+    /// cursor phase on (see [`ScenarioEvent::CorrelatedDrift`]).
+    pub fn correlated_drift(self, sigma: f64, rho: f64) -> Self {
+        self.push(ScenarioEvent::CorrelatedDrift { sigma, rho })
+    }
+
+    /// Partition `nodes` off the network at the cursor phase (bandwidths drop
+    /// to the churn floor; [`heal`] restores them).
+    ///
+    /// [`heal`]: ScenarioBuilder::heal
+    pub fn partition(self, nodes: &[usize]) -> Self {
+        self.push(ScenarioEvent::Partition {
+            nodes: nodes.to_vec(),
+        })
+    }
+
+    /// Turn `nodes` into coordinated stragglers (×`factor`) at the cursor
+    /// phase; [`heal`] restores their pre-straggle bandwidths.
+    ///
+    /// [`heal`]: ScenarioBuilder::heal
+    pub fn straggle(self, nodes: &[usize], factor: f64) -> Self {
+        self.push(ScenarioEvent::Straggle {
+            nodes: nodes.to_vec(),
+            factor,
+        })
+    }
+
+    /// Heal `nodes` at the cursor phase (restore partition/straggle state).
+    pub fn heal(self, nodes: &[usize]) -> Self {
+        self.push(ScenarioEvent::Heal {
+            nodes: nodes.to_vec(),
+        })
+    }
+
+    /// Enable a diurnal load curve (amplitude `a`, period `T` phases) from
+    /// the cursor phase on (see [`ScenarioEvent::Diurnal`]).
+    pub fn diurnal(self, amplitude: f64, period: usize) -> Self {
+        self.push(ScenarioEvent::Diurnal { amplitude, period })
+    }
+
     /// Events scheduled so far (insertion order).
     pub fn events(&self) -> &[ScheduledEvent] {
         &self.events
     }
 
     /// Compile with a fixed drift seed. Walks phases in order carrying the
-    /// current bandwidth vector: each transition applies the active drift
-    /// (if any), then the phase's scripted events in schedule order.
+    /// current bandwidth vector: each transition applies the active i.i.d.
+    /// drift, then the active correlated drift, then the active diurnal
+    /// modulation (in that fixed order), then the phase's scripted events in
+    /// schedule order.
     pub fn compile(self, seed: u64) -> CompiledScenario {
         let min_horizon = self
             .events
@@ -250,12 +458,41 @@ impl ScenarioBuilder {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
         let mut bw = self.initial;
         let mut sigma = 0.0f64;
+        // Correlated drift state: (σ, ρ); σ = 0 ⇒ inactive.
+        let mut corr = (0.0f64, 0.0f64);
+        // Diurnal state: (amplitude, period, anchor phase); a = 0 ⇒ inactive.
+        let mut diurnal = (0.0f64, 2usize, 0usize);
+        // Pre-partition/straggle bandwidths, restored by Heal. `or_insert`
+        // keeps the *first* saved value when episodes overlap, so a heal
+        // always restores the pre-episode state.
+        let mut saved: BTreeMap<usize, f64> = BTreeMap::new();
         let mut phases = Vec::with_capacity(horizon);
         let mut reports = Vec::new();
         for k in 0..horizon {
             if k > 0 && sigma > 0.0 {
                 for b in bw.iter_mut() {
                     *b = (*b * (sigma * rng.next_gaussian()).exp()).clamp(self.lo, self.hi);
+                }
+            }
+            if k > 0 && corr.0 > 0.0 {
+                let (s, rho) = corr;
+                let z = rng.next_gaussian();
+                for b in bw.iter_mut() {
+                    let xi = rng.next_gaussian();
+                    let step = s * (rho.sqrt() * z + (1.0 - rho).sqrt() * xi);
+                    *b = (*b * step.exp()).clamp(self.lo, self.hi);
+                }
+            }
+            if k > 0 && diurnal.0 > 0.0 {
+                let (a, period, k0) = diurnal;
+                let m = |phase: usize| -> f64 {
+                    let t = (phase - k0) as f64 / period as f64;
+                    1.0 + a * (2.0 * std::f64::consts::PI * t).sin()
+                };
+                // k ≥ k0 + 1 here: the modulator anchors at its event phase.
+                let ratio = m(k) / m(k - 1);
+                for b in bw.iter_mut() {
+                    *b = (*b * ratio).clamp(self.lo, self.hi);
                 }
             }
             for ev in events.iter().filter(|e| e.phase == k) {
@@ -271,12 +508,43 @@ impl ScenarioBuilder {
                     }
                     ScenarioEvent::NodeChurn { node, rejoin_bw } => {
                         bw[*node] = match rejoin_bw {
-                            Some(v) => v.clamp(self.lo, self.hi),
+                            // The churn floor is honored on rejoin too: a
+                            // node cannot come back weaker than a departed
+                            // one, or the time model's b_min goes degenerate.
+                            Some(v) => v.max(self.churn_floor).clamp(self.lo, self.hi),
                             None => self.churn_floor,
                         };
                     }
                     ScenarioEvent::ReportStats { label } => {
                         reports.push((k, label.clone()));
+                    }
+                    ScenarioEvent::HeavyTailDraw { dist } => {
+                        for b in bw.iter_mut() {
+                            *b = dist.sample(&mut rng).clamp(self.lo, self.hi);
+                        }
+                    }
+                    ScenarioEvent::CorrelatedDrift { sigma: s, rho } => corr = (*s, *rho),
+                    ScenarioEvent::Partition { nodes } => {
+                        for &i in nodes {
+                            saved.entry(i).or_insert(bw[i]);
+                            bw[i] = self.churn_floor;
+                        }
+                    }
+                    ScenarioEvent::Straggle { nodes, factor } => {
+                        for &i in nodes {
+                            saved.entry(i).or_insert(bw[i]);
+                            bw[i] = (bw[i] * factor).clamp(self.lo, self.hi);
+                        }
+                    }
+                    ScenarioEvent::Heal { nodes } => {
+                        for &i in nodes {
+                            if let Some(v) = saved.remove(&i) {
+                                bw[i] = v.clamp(self.lo, self.hi);
+                            }
+                        }
+                    }
+                    ScenarioEvent::Diurnal { amplitude, period } => {
+                        diurnal = (*amplitude, *period, k);
                     }
                 }
             }
@@ -423,6 +691,138 @@ mod tests {
         assert_eq!(
             s.reports,
             vec![(1, "early".to_string()), (4, "late".to_string())]
+        );
+    }
+
+    #[test]
+    fn heavy_tail_draws_are_seeded_and_clamped() {
+        let mk = |seed| {
+            ScenarioBuilder::new(vec![5.0; 16])
+                .phases(3)
+                .clamp(0.5, 40.0)
+                .at_phase(1)
+                .pareto_draw(1.5, 2.0)
+                .compile(seed)
+        };
+        let (a, b, c) = (mk(3), mk(3), mk(4));
+        assert_eq!(a.trace.phases, b.trace.phases, "same seed, same draw");
+        assert_ne!(a.trace.phases[1], c.trace.phases[1], "seed matters");
+        assert_eq!(a.trace.phases[0], vec![5.0; 16], "draw fires at its phase");
+        assert!(a.trace.phases[1].iter().all(|&x| (0.5..=40.0).contains(&x)));
+        // Pareto(1.5, 2.0) redraw actually moves the fleet off 5.0.
+        assert!(a.trace.phases[1].iter().any(|&x| (x - 5.0).abs() > 1e-9));
+
+        let ln = ScenarioBuilder::new(vec![5.0; 8])
+            .phases(2)
+            .at_phase(1)
+            .lognormal_draw(2.0, 0.5)
+            .compile(7);
+        assert!(ln.trace.phases[1].iter().all(|&x| x > 0.0));
+        assert_ne!(ln.trace.phases[0], ln.trace.phases[1]);
+    }
+
+    #[test]
+    fn correlated_drift_moves_nodes_together() {
+        // At ρ = 1 every node shares the same multiplicative step, so the
+        // ratios bw_i(k)/bw_i(0) are identical across nodes.
+        let s = ScenarioBuilder::new(vec![4.0; 6])
+            .phases(5)
+            .correlated_drift(0.3, 1.0)
+            .compile(11);
+        for k in 1..5 {
+            let r0 = s.trace.phases[k][0] / s.trace.phases[0][0];
+            for i in 1..6 {
+                let ri = s.trace.phases[k][i] / s.trace.phases[0][i];
+                assert!((ri - r0).abs() < 1e-12, "phase {k} node {i}: {ri} vs {r0}");
+            }
+        }
+        // ρ = 0 decorrelates: some node must deviate from node 0's ratio.
+        let s0 = ScenarioBuilder::new(vec![4.0; 6])
+            .phases(5)
+            .correlated_drift(0.3, 0.0)
+            .compile(11);
+        let r0 = s0.trace.phases[4][0] / s0.trace.phases[0][0];
+        assert!((1..6).any(|i| {
+            let ri = s0.trace.phases[4][i] / s0.trace.phases[0][i];
+            (ri - r0).abs() > 1e-9
+        }));
+    }
+
+    #[test]
+    fn partition_heals_back_to_pre_partition_state() {
+        let s = ScenarioBuilder::new(vec![9.76, 9.76, 3.25, 3.25])
+            .phases(5)
+            .at_phase(1)
+            .partition(&[2, 3])
+            .at_phase(3)
+            .heal(&[2, 3])
+            .build();
+        assert_eq!(s.trace.phases[1][2], 0.05, "partitioned at churn floor");
+        assert_eq!(s.trace.phases[1][3], 0.05);
+        assert_eq!(s.trace.phases[1][0], 9.76, "unpartitioned side untouched");
+        assert_eq!(s.trace.phases[3][2], 3.25, "heal restores saved bandwidth");
+        assert_eq!(s.trace.phases[4][3], 3.25);
+    }
+
+    #[test]
+    fn straggle_is_reversible_and_heal_is_idempotent() {
+        let s = ScenarioBuilder::new(vec![8.0; 3])
+            .phases(6)
+            .at_phase(1)
+            .straggle(&[0, 1], 0.1)
+            .at_phase(2)
+            .straggle(&[0], 0.5) // stacked episode keeps the first saved value
+            .at_phase(4)
+            .heal(&[0, 1, 2]) // node 2 has nothing to heal: no-op
+            .at_phase(5)
+            .heal(&[0]) // already healed: no-op
+            .build();
+        assert!((s.trace.phases[1][0] - 0.8).abs() < 1e-12);
+        assert!((s.trace.phases[2][0] - 0.4).abs() < 1e-12);
+        assert_eq!(s.trace.phases[4][0], 8.0);
+        assert_eq!(s.trace.phases[4][1], 8.0);
+        assert_eq!(s.trace.phases[4][2], 8.0);
+        assert_eq!(s.trace.phases[5][0], 8.0);
+    }
+
+    #[test]
+    fn diurnal_modulation_is_periodic_and_positive() {
+        let s = ScenarioBuilder::new(vec![10.0; 2])
+            .phases(9)
+            .diurnal(0.5, 4)
+            .build();
+        assert!(s.trace.phases.iter().flatten().all(|&b| b > 0.0));
+        // One full period returns to the anchor value (no drift on top).
+        assert!((s.trace.phases[4][0] - 10.0).abs() < 1e-9);
+        assert!((s.trace.phases[8][0] - 10.0).abs() < 1e-9);
+        // ...but mid-period the load curve visibly moves the bandwidth.
+        assert!((s.trace.phases[1][0] - 10.0).abs() > 1.0);
+        // Deterministic: no RNG draws are consumed by the modulator.
+        let t = ScenarioBuilder::new(vec![10.0; 2])
+            .phases(9)
+            .diurnal(0.5, 4)
+            .compile(99);
+        assert_eq!(s.trace.phases, t.trace.phases);
+    }
+
+    #[test]
+    fn rejoin_below_churn_floor_is_lifted_to_the_floor() {
+        let s = ScenarioBuilder::new(vec![9.76; 2])
+            .phases(3)
+            .at_phase(1)
+            .node_churn(1, None)
+            .at_phase(2)
+            .node_churn(1, Some(0.01)) // below the 0.05 default floor
+            .build();
+        assert_eq!(s.trace.phases[2][1], 0.05);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn event_entry_point_validates_like_the_typed_methods() {
+        let _ = ScenarioBuilder::new(vec![1.0; 2]).event(
+            0,
+            ScenarioEvent::Partition { nodes: vec![7] },
         );
     }
 }

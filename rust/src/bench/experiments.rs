@@ -21,9 +21,11 @@
 //! Optimized topologies are cached as JSON under `results/topos/` — delete
 //! the cache to force re-optimization.
 
-use crate::bandwidth::dynamic::{simulate_scripted_consensus, DynamicPolicy};
-use crate::bandwidth::scenario_dsl::{CompiledScenario, ScenarioBuilder};
+use crate::bandwidth::corpus::corpus;
+use crate::bandwidth::dynamic::{simulate_scripted_consensus, DynamicPolicy, ScriptedRun};
+use crate::bandwidth::scenario_dsl::CompiledScenario;
 use crate::bandwidth::scenarios::BandwidthScenario;
+use crate::bench::scenario_report::{render_report, ScenarioRunSet};
 use crate::bandwidth::timing::TimeModel;
 use crate::config;
 use crate::consensus::{run_consensus, ConsensusConfig};
@@ -83,6 +85,13 @@ impl ExpOptions {
     fn artifact_csv(&self, name: &str, header: &[&str]) -> CsvWriter {
         self.artifacts.lock().unwrap().push(name.to_string());
         CsvWriter::create(self.out_dir.join(name), header).expect("csv")
+    }
+
+    /// Record a non-CSV artifact named `name` (markdown report, JSON, …) in
+    /// the run's artifact log and return the path to write it to.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifacts.lock().unwrap().push(name.to_string());
+        self.out_dir.join(name)
     }
 
     /// The artifact names recorded so far (sorted, deduplicated).
@@ -614,74 +623,19 @@ fn single_fig(fig: &str, opts: &ExpOptions) {
 }
 
 // ---------------------------------------------------------------------------
-// Dynamic-bandwidth extension (§VII) — scripted scenario sweep
+// Dynamic-bandwidth extension (§VII) — adversarial scenario corpus sweep
 // ---------------------------------------------------------------------------
 
-/// The scripted scenario suite: one [`CompiledScenario`] per failure mode the
-/// DSL models (background drift, mid-run link degradation, node churn, and a
-/// compound flash-crowd), each with `report_stats` checkpoints.
-fn dynamic_scenarios(n: usize, opts: &ExpOptions) -> Vec<(String, CompiledScenario)> {
-    let phases = if opts.quick { 3 } else { 6 };
-    let fast = 9.76;
-    let half: Vec<usize> = (n / 2..n).collect();
-    let last = phases - 1;
-    vec![
-        (
-            "drift".into(),
-            ScenarioBuilder::new(vec![fast; n])
-                .phases(phases)
-                .phase_seconds(1.5)
-                .drift(0.25)
-                .at_phase(last)
-                .report_stats("end of drift")
-                .compile(opts.seed),
-        ),
-        (
-            "degrade".into(),
-            ScenarioBuilder::new(vec![fast; n])
-                .phases(phases)
-                .phase_seconds(1.5)
-                .at_phase(1)
-                .link_degrade(&half, 0.1)
-                .report_stats("after degradation")
-                .at_phase(last)
-                .report_stats("end")
-                .compile(opts.seed),
-        ),
-        (
-            "churn".into(),
-            ScenarioBuilder::new(vec![fast; n])
-                .phases(phases)
-                .phase_seconds(1.5)
-                .at_phase(1)
-                .node_churn(n - 1, None)
-                .report_stats("after leave")
-                .at_phase(last)
-                .node_churn(n - 1, Some(fast))
-                .report_stats("after rejoin")
-                .compile(opts.seed),
-        ),
-        (
-            "flash-crowd".into(),
-            ScenarioBuilder::new(vec![fast; n])
-                .phases(phases)
-                .phase_seconds(1.5)
-                .drift(0.05)
-                .at_phase(1)
-                .link_degrade(&(0..n).collect::<Vec<_>>(), 0.5)
-                .report_stats("under load")
-                .at_phase(last)
-                .link_degrade(&(0..n).collect::<Vec<_>>(), 2.0)
-                .report_stats("recovered")
-                .compile(opts.seed),
-        ),
-    ]
-}
-
-/// Dynamic-bandwidth extension: sweep the scripted scenario suite over
-/// (scenario × {static, adaptive} × seed) cells in parallel, writing the
-/// aggregate outcomes to `dynamic.csv` and every `report_stats` checkpoint to
-/// `dynamic_reports.csv`.
+/// Dynamic-bandwidth extension: sweep the named adversarial corpus
+/// ([`crate::bandwidth::corpus::corpus`] — drift, degradation, churn,
+/// flash-crowd, heavy-tailed draws, correlated drift, partition-heal,
+/// stragglers, zonal outage, diurnal load) over
+/// (scenario × {static, adaptive} × seed) cells in parallel. Writes the
+/// aggregate outcomes (including time-to-target) to `dynamic.csv`, every
+/// `report_stats` checkpoint to `dynamic_reports.csv`, and one
+/// `scenario_<name>.md` analysis report per corpus entry (hypothesis →
+/// configuration → checkpoints → finding), all listed in
+/// `run_manifest.json`.
 pub fn dynamic(opts: &ExpOptions) {
     let n = 8usize;
     let policy = DynamicPolicy {
@@ -695,26 +649,27 @@ pub fn dynamic(opts: &ExpOptions) {
     } else {
         (0..3).map(|k| opts.seed + k).collect()
     };
-    let scenarios = dynamic_scenarios(n, opts);
+    let suite = corpus(n, opts.quick, opts.seed);
+    let compiled: Vec<CompiledScenario> = suite.iter().map(|s| s.program.compile()).collect();
 
-    let mut cells: Vec<(&str, &CompiledScenario, bool, u64)> = Vec::new();
-    for (name, sc) in &scenarios {
+    let mut cells: Vec<(usize, bool, u64)> = Vec::new();
+    for si in 0..suite.len() {
         for adapt in [false, true] {
             for &seed in &seeds {
-                cells.push((name.as_str(), sc, adapt, seed));
+                cells.push((si, adapt, seed));
             }
         }
     }
-    let results = parallel_map(cells, opts.threads, |(name, sc, adapt, seed)| {
-        let run = simulate_scripted_consensus(sc, policy.clone(), adapt, seed);
-        (name, sc, adapt, seed, run)
+    let results = parallel_map(cells, opts.threads, |(si, adapt, seed)| {
+        let run = simulate_scripted_consensus(&compiled[si], policy.clone(), adapt, seed);
+        (si, adapt, seed, run)
     });
 
     let mut csv = opts.artifact_csv(
         "dynamic.csv",
         &[
             "scenario", "n", "phases", "adapt", "seed", "rounds", "switches",
-            "final_log10_error",
+            "final_log10_error", "time_to_target_s",
         ],
     );
     let mut reports = opts.artifact_csv(
@@ -725,12 +680,19 @@ pub fn dynamic(opts: &ExpOptions) {
         ],
     );
 
-    println!("── dynamic: scripted bandwidth scenarios (n={n}, r={}) ──", policy.r);
     println!(
-        "{:<14} {:>8} {:>6} {:>8} {:>10} {:>16}",
-        "scenario", "adapt", "seed", "rounds", "switches", "final log10 err"
+        "── dynamic: adversarial scenario corpus ({} scenarios, n={n}, r={}) ──",
+        suite.len(),
+        policy.r
     );
-    for (name, sc, adapt, seed, run) in results {
+    println!(
+        "{:<24} {:>8} {:>6} {:>8} {:>10} {:>16} {:>14}",
+        "scenario", "adapt", "seed", "rounds", "switches", "final log10 err", "t_target (s)"
+    );
+    for (si, adapt, seed, run) in &results {
+        let name = suite[*si].name.as_str();
+        let sc = &compiled[*si];
+        let ttt = run.outcome.time_to_target;
         csv.row(&[
             name.to_string(),
             n.to_string(),
@@ -740,6 +702,7 @@ pub fn dynamic(opts: &ExpOptions) {
             run.outcome.rounds.to_string(),
             run.outcome.switches.to_string(),
             format!("{:.3}", run.outcome.final_log_error),
+            ttt.map(|t| format!("{t:.3}")).unwrap_or("-".into()),
         ])
         .unwrap();
         for r in &run.reports {
@@ -760,13 +723,40 @@ pub fn dynamic(opts: &ExpOptions) {
                 .unwrap();
         }
         println!(
-            "{:<14} {:>8} {:>6} {:>8} {:>10} {:>16.3}",
-            name, adapt, seed, run.outcome.rounds, run.outcome.switches,
+            "{:<24} {:>8} {:>6} {:>8} {:>10} {:>16.3} {:>14}",
+            name,
+            adapt,
+            seed,
+            run.outcome.rounds,
+            run.outcome.switches,
             run.outcome.final_log_error,
+            ttt.map(|t| format!("{t:.2}")).unwrap_or("-".into()),
         );
     }
     csv.flush().unwrap();
     reports.flush().unwrap();
+
+    // One markdown analysis report per corpus entry. `results` is in input
+    // order: for scenario si, the static runs (adapt=false) precede the
+    // adaptive ones, each in seed order.
+    for (si, entry) in suite.into_iter().enumerate() {
+        let arm_runs = |adapt: bool| -> Vec<ScriptedRun> {
+            results
+                .iter()
+                .filter(|(i, a, _, _)| *i == si && *a == adapt)
+                .map(|(_, _, _, run)| run.clone())
+                .collect()
+        };
+        let set = ScenarioRunSet {
+            scenario: entry,
+            policy: policy.clone(),
+            seeds: seeds.clone(),
+            static_runs: arm_runs(false),
+            adaptive_runs: arm_runs(true),
+        };
+        let path = opts.artifact_path(&format!("scenario_{}.md", set.scenario.name));
+        std::fs::write(&path, render_report(&set)).expect("scenario report");
+    }
 }
 
 // ---------------------------------------------------------------------------

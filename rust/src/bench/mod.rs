@@ -7,6 +7,7 @@ pub mod ablations;
 pub mod experiments;
 pub mod perf;
 pub mod records;
+pub mod scenario_report;
 
 use std::time::Instant;
 

@@ -12,12 +12,16 @@
 //!                  [--json out/BENCH_pr.json] [--out out/]
 //! batopo bench     compare BENCH_baseline.json out/BENCH_pr.json
 //!                  [--threshold 1.25] [--min-ns 50000]
+//! batopo fuzz      scenarios [--cases 64] [--seed S] [--quick]
+//!                  [--invariant core|every-phase-gossips] [--out fuzz-out/]
+//! batopo fuzz      replay <dump.scenario> [--invariant …]
 //! batopo info
 //! ```
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use batopo::bandwidth::allocation::allocate_edge_capacity;
+use batopo::bandwidth::fuzz::{fuzz_scenarios, replay, FuzzConfig, Invariant};
 use batopo::bandwidth::timing::TimeModel;
 use batopo::bench::records::{self, BenchRecord};
 use batopo::bench::{experiments, perf};
@@ -42,10 +46,11 @@ fn main() {
         "train" => cmd_train(&args),
         "reproduce" => cmd_reproduce(&args),
         "bench" => cmd_bench(&args),
+        "fuzz" => cmd_fuzz(&args),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: batopo <optimize|consensus|allocate|train|reproduce|bench|info> [options]\n\
+                "usage: batopo <optimize|consensus|allocate|train|reproduce|bench|fuzz|info> [options]\n\
                  \n\
                  optimize  --n N --r R [--scenario S] [--seed X] [--quick] [--out file.json]\n\
                  \u{20}          [--xstep cg|bicgstab] [--max-iters N] [--json report.json]\n\
@@ -60,6 +65,9 @@ fn main() {
                  \u{20}          [--quick] [--threads T] [--json FILE] [--out out/]\n\
                  bench     compare BASELINE.json CANDIDATE.json\n\
                  \u{20}          [--threshold 1.25] [--min-ns 50000]\n\
+                 fuzz      scenarios [--cases 64] [--seed X] [--quick]\n\
+                 \u{20}          [--invariant core|every-phase-gossips] [--out fuzz-out/]\n\
+                 fuzz      replay <dump.scenario> [--invariant ...]\n\
                  info\n\
                  \n\
                  scenarios: homogeneous (any n) | node-level (even n) |\n\
@@ -440,6 +448,100 @@ fn cmd_bench_compare(args: &Args) -> Result<(), String> {
         rep.regressions.len(),
         (threshold - 1.0) * 100.0
     ))
+}
+
+/// `batopo fuzz scenarios` — generate random scenario DSL programs, check
+/// simulation invariants, and shrink + dump any violation as a replayable
+/// `*.scenario` file; `batopo fuzz replay <dump>` — re-check a dump.
+fn cmd_fuzz(args: &Args) -> Result<(), String> {
+    let mut modes: Vec<String> = args.positional()[1..].to_vec();
+    let mut quick = args.flag("quick");
+    // The tiny CLI parser greedily binds the next token to a bare flag, so
+    // `fuzz --quick scenarios` captures "scenarios" as --quick's value;
+    // reclaim the mode tokens (mirrors `reproduce`/`bench`).
+    if let Some(v) = args.get("quick") {
+        if v == "scenarios" || v == "replay" {
+            modes.insert(0, v.to_string());
+            quick = true;
+        } else if !(v == "1" || v.eq_ignore_ascii_case("true")) {
+            return Err(format!(
+                "unknown fuzz mode {v:?} (captured as --quick's value; expected scenarios|replay)"
+            ));
+        }
+    }
+    let mode = modes
+        .first()
+        .cloned()
+        .ok_or("fuzz needs a mode: scenarios | replay <dump.scenario>")?;
+    let invariant_name = args.str_or("invariant", "core");
+    let invariant = Invariant::by_name(&invariant_name).ok_or_else(|| {
+        format!("unknown invariant {invariant_name:?} (expected core|every-phase-gossips)")
+    })?;
+    match mode.as_str() {
+        "scenarios" => {
+            let cfg = FuzzConfig {
+                cases: args.parse_or("cases", 64usize).map_err(|e| e.to_string())?,
+                seed: args.parse_or("seed", 0xF022u64).map_err(|e| e.to_string())?,
+                invariant,
+                quick,
+                out_dir: args.str_or("out", "fuzz-out").into(),
+            };
+            println!(
+                "fuzz scenarios: {} case(s), invariant `{}`, seed {} (quick={}) → {}",
+                cfg.cases,
+                invariant.name(),
+                cfg.seed,
+                cfg.quick,
+                cfg.out_dir.display()
+            );
+            let t0 = std::time::Instant::now();
+            let outcome = fuzz_scenarios(&cfg).map_err(|e| e.to_string())?;
+            println!(
+                "checked {} scenario program(s) in {:.1}s",
+                outcome.cases,
+                t0.elapsed().as_secs_f64()
+            );
+            if outcome.failures.is_empty() {
+                println!("  OK — invariant `{}` held on every case", invariant.name());
+                return Ok(());
+            }
+            for f in &outcome.failures {
+                println!("  VIOLATION case {}: {}", f.case, f.violation);
+                println!(
+                    "    shrunk {} -> {} event(s); replay dump: {}",
+                    f.original_events,
+                    f.shrunk_events,
+                    f.dump_path.display()
+                );
+            }
+            Err(format!(
+                "{} invariant violation(s) — replay with `batopo fuzz replay <dump> --invariant {}`",
+                outcome.failures.len(),
+                invariant.name()
+            ))
+        }
+        "replay" => {
+            let path = modes.get(1).cloned().ok_or(
+                "fuzz replay needs a dump file: batopo fuzz replay <dump.scenario>",
+            )?;
+            let (program, violation) = replay(Path::new(&path), invariant)?;
+            println!(
+                "replayed {path}: {} node(s), {} phase(s), {} event(s), seed {}",
+                program.num_nodes(),
+                program.phases,
+                program.events.len(),
+                program.seed
+            );
+            match violation {
+                None => {
+                    println!("  OK — invariant `{}` holds", invariant.name());
+                    Ok(())
+                }
+                Some(v) => Err(format!("invariant `{}` still fails: {v}", invariant.name())),
+            }
+        }
+        other => Err(format!("unknown fuzz mode {other:?} (expected scenarios|replay)")),
+    }
 }
 
 fn cmd_info() -> Result<(), String> {

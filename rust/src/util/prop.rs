@@ -1,9 +1,13 @@
 //! Mini property-testing framework (no `proptest` in the offline crate set).
 //!
 //! Provides seeded random-input generation with automatic case replay info
-//! and greedy input shrinking for a couple of common shapes (vectors,
-//! integers). Used by the coordinator/optimizer invariant tests, mirroring
-//! what `proptest` would give us.
+//! ([`Runner::run`], replay via `BATOPO_PROP_SEED`) and **greedy input
+//! shrinking**: [`shrink_greedy`] minimizes any failing input against a
+//! caller-supplied move set (delete an element, halve a magnitude, shorten a
+//! schedule, …), and [`Runner::run_shrunk`] wires that into the case loop so
+//! a failure is reported as both the original and the minimized input. Used
+//! by the coordinator/optimizer invariant tests and the scenario fuzzer
+//! ([`crate::bandwidth::fuzz`]), mirroring what `proptest` would give us.
 //!
 //! ```no_run
 //! use batopo::util::prop::{Runner, Gen};
@@ -21,6 +25,7 @@
 //! ```
 
 use crate::util::rng::Xoshiro256pp;
+use std::collections::HashSet;
 use std::ops::Range;
 
 /// Random input generator handed to each property case.
@@ -90,15 +95,20 @@ impl Gen {
             let (a, b) = (perm[k].min(perm[j]), perm[k].max(perm[j]));
             edges.push((a, b));
         }
+        // Tree edges are pairwise distinct (each attaches a fresh node), so a
+        // set over them suffices to keep the extra edges duplicate-free. The
+        // old `edges.contains` scan here was O(E) per candidate pair — O(n⁴)
+        // overall at the densities the property tests use.
+        let mut have: HashSet<(usize, usize)> = edges.iter().copied().collect();
         for i in 0..n {
             for j in (i + 1)..n {
-                if !edges.contains(&(i, j)) && self.bool_with(extra_p) {
+                if !have.contains(&(i, j)) && self.bool_with(extra_p) {
+                    have.insert((i, j));
                     edges.push((i, j));
                 }
             }
         }
         edges.sort_unstable();
-        edges.dedup();
         edges
     }
 
@@ -106,6 +116,66 @@ impl Gen {
     pub fn rng(&mut self) -> &mut Xoshiro256pp {
         &mut self.rng
     }
+}
+
+/// Greedily shrink a failing input.
+///
+/// Starting from `failing`, repeatedly asks `moves` for candidate reductions
+/// and accepts the first candidate that is strictly smaller under `size` and
+/// for which `still_fails` returns true, until no move makes progress or
+/// `max_evals` failure checks have been spent. The result is *locally*
+/// minimal: no single move from it both shrinks it and still fails.
+///
+/// `size` must be a non-negative measure; ties (within 1e-9) are treated as
+/// "not smaller" so cyclic move sets terminate.
+pub fn shrink_greedy<T, S, M, P>(
+    failing: T,
+    size: &S,
+    moves: &M,
+    still_fails: &P,
+    max_evals: usize,
+) -> T
+where
+    T: Clone,
+    S: Fn(&T) -> f64,
+    M: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut best = failing;
+    let mut best_size = size(&best);
+    let mut evals = 0usize;
+    loop {
+        let mut improved = false;
+        for cand in moves(&best) {
+            if evals >= max_evals {
+                return best;
+            }
+            let s = size(&cand);
+            if s + 1e-9 >= best_size {
+                continue;
+            }
+            evals += 1;
+            if still_fails(&cand) {
+                best = cand;
+                best_size = s;
+                improved = true;
+                break; // restart the move scan from the smaller input
+            }
+        }
+        if !improved {
+            return best;
+        }
+    }
+}
+
+/// Render a caught panic payload (from `std::panic::catch_unwind`) as a
+/// message string; non-string payloads become `"<non-string panic>"`.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".to_string())
 }
 
 /// Property runner: executes a property over many seeded cases and reports
@@ -143,14 +213,57 @@ impl Runner {
                 prop(&mut g);
             });
             if let Err(payload) = result {
-                let msg = payload
-                    .downcast_ref::<String>()
-                    .cloned()
-                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
-                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                let msg = panic_message(payload.as_ref());
                 panic!(
                     "property '{}' failed at case {} (replay with BATOPO_PROP_SEED={}): {}",
                     self.name, case, seed, msg
+                );
+            }
+        }
+    }
+
+    /// Run a property with greedy shrinking: `gen` builds the case input,
+    /// `prop` checks it (panic = failure), and on failure the input is
+    /// minimized with [`shrink_greedy`] over `moves`/`size` before the panic
+    /// is re-raised with both the original and the shrunk input.
+    pub fn run_shrunk<T, G, S, M, F>(&mut self, gen: G, size: S, moves: M, prop: F)
+    where
+        T: Clone + std::fmt::Debug,
+        G: Fn(&mut Gen) -> T,
+        S: Fn(&T) -> f64,
+        M: Fn(&T) -> Vec<T>,
+        F: Fn(&T),
+    {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let mut g = Gen {
+                rng: Xoshiro256pp::seed_from_u64(seed),
+                case,
+            };
+            let input = gen(&mut g);
+            let check = |t: &T| -> Option<String> {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(t)))
+                    .err()
+                    .map(|p| panic_message(p.as_ref()))
+            };
+            if let Some(msg) = check(&input) {
+                let shrunk =
+                    shrink_greedy(input.clone(), &size, &moves, &|t| check(t).is_some(), 10_000);
+                let shrunk_msg = check(&shrunk).unwrap_or_else(|| msg.clone());
+                panic!(
+                    "property '{}' failed at case {} (replay with BATOPO_PROP_SEED={}): {}\n  \
+                     original failing input: size {} — {:?}\n  \
+                     shrunk minimal input: size {} — {:?}\n  \
+                     shrunk failure: {}",
+                    self.name,
+                    case,
+                    seed,
+                    msg,
+                    size(&input),
+                    input,
+                    size(&shrunk),
+                    shrunk,
+                    shrunk_msg
                 );
             }
         }
@@ -202,6 +315,79 @@ mod tests {
                 assert_eq!(find(&mut parent, i), root, "node {i} disconnected");
             }
         });
+    }
+
+    #[test]
+    fn connected_edges_are_duplicate_free_up_to_n200() {
+        Runner::new("connected_edges duplicate-free", 10).run(|g| {
+            let n = g.usize_in(2..201);
+            let edges = g.connected_edges(n, 0.05);
+            let set: HashSet<(usize, usize)> = edges.iter().copied().collect();
+            assert_eq!(set.len(), edges.len(), "duplicate edges at n={n}");
+            assert!(edges.iter().all(|&(a, b)| a < b && b < n));
+        });
+    }
+
+    /// Delete-one-element move set for shrinking vectors.
+    fn delete_one(v: &[f64]) -> Vec<Vec<f64>> {
+        (0..v.len())
+            .map(|i| {
+                let mut w = v.to_vec();
+                w.remove(i);
+                w
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shrink_greedy_minimizes_to_a_local_minimum() {
+        // "Fails" whenever len ≥ 3: the greedy deleter must land on exactly 3.
+        let failing = vec![1.0; 12];
+        let shrunk = shrink_greedy(
+            failing.clone(),
+            &|v: &Vec<f64>| v.len() as f64,
+            &|v: &Vec<f64>| delete_one(v),
+            &|v: &Vec<f64>| v.len() >= 3,
+            10_000,
+        );
+        assert_eq!(shrunk.len(), 3);
+        assert!(shrunk.len() < failing.len(), "shrunk case not smaller");
+    }
+
+    #[test]
+    fn shrink_greedy_respects_the_eval_budget() {
+        let shrunk = shrink_greedy(
+            vec![1.0; 12],
+            &|v: &Vec<f64>| v.len() as f64,
+            &|v: &Vec<f64>| delete_one(v),
+            &|v: &Vec<f64>| v.len() >= 3,
+            2, // only two failure checks allowed
+        );
+        assert_eq!(shrunk.len(), 10, "budget of 2 evals = 2 deletions");
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk minimal input: size 3")]
+    fn run_shrunk_reports_the_minimal_case() {
+        // Generated inputs always have ≥ 6 elements, so the property fails at
+        // case 0 and the report must show the input minimized down to size 3
+        // — strictly smaller than any generated original.
+        Runner::new("vectors stay short", 5).run_shrunk(
+            |g| g.vec_f64(6..12, 0.0..1.0),
+            |v| v.len() as f64,
+            |v| delete_one(v),
+            |v| assert!(v.len() < 3, "vector of len {} is too long", v.len()),
+        );
+    }
+
+    #[test]
+    fn run_shrunk_passes_clean_properties() {
+        Runner::new("abs non-negative (shrunk runner)", 20).run_shrunk(
+            |g| g.vec_f64(0..8, -10.0..10.0),
+            |v| v.len() as f64,
+            |v| delete_one(v),
+            |v| assert!(v.iter().all(|x| x.abs() >= 0.0)),
+        );
     }
 
     #[test]

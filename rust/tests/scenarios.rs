@@ -1,0 +1,289 @@
+//! Integration tests for the adversarial scenario corpus, the scripted-event
+//! semantics of `simulate_scripted_consensus`, the scenario fuzzer's
+//! shrink-and-dump path, and the `reproduce dynamic` per-scenario markdown
+//! analysis reports.
+
+use batopo::bandwidth::corpus::{corpus, ScenarioProgram};
+use batopo::bandwidth::dynamic::{simulate_scripted_consensus, BandwidthTrace, DynamicPolicy};
+use batopo::bandwidth::fuzz::{
+    check_program, fuzz_scenarios, replay, shrink_failing, FuzzConfig, Invariant,
+};
+use batopo::bandwidth::scenario_dsl::{
+    CompiledScenario, ScenarioBuilder, ScenarioEvent, ScheduledEvent,
+};
+use batopo::bench::experiments::{self, ExpOptions};
+
+// ---------------------------------------------------------------------------
+// Corpus catalogue
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corpus_covers_the_required_scenarios_and_roundtrips() {
+    let suite = corpus(8, true, 42);
+    assert!(suite.len() >= 10, "corpus has only {} scenarios", suite.len());
+    for want in [
+        "heavy-tailed",
+        "correlated",
+        "partition-heal",
+        "stragglers",
+        "zonal-outage",
+        "diurnal",
+    ] {
+        let entry = suite
+            .iter()
+            .find(|s| s.name == want)
+            .unwrap_or_else(|| panic!("corpus is missing scenario {want}"));
+        assert!(!entry.hypothesis.is_empty(), "{want} has no hypothesis");
+        // Every entry is a replayable program: dump → parse is the identity,
+        // and the reparsed program compiles to the identical trace.
+        let reparsed = ScenarioProgram::parse(&entry.program.dump())
+            .unwrap_or_else(|e| panic!("{want} dump does not parse: {e}"));
+        assert_eq!(reparsed, entry.program, "{want} does not round-trip");
+        let a = entry.program.compile();
+        let b = reparsed.compile();
+        assert_eq!(a.trace.phases, b.trace.phases, "{want} traces differ");
+        assert!(!a.reports.is_empty(), "{want} has no checkpoints");
+        assert!(a.trace.phases.iter().flatten().all(|&bw| bw > 0.0));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scripted event semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn clamp_is_applied_after_drift_and_after_scripted_events() {
+    // σ = 3.0 steps move bandwidths by e^±3 per phase: without the clamp the
+    // values would leave [4, 6] almost surely, so staying inside proves the
+    // clamp runs after every drift step.
+    let s = ScenarioBuilder::new(vec![5.0; 4]).phases(8).clamp(4.0, 6.0).drift(3.0).compile(11);
+    assert!(s
+        .trace
+        .phases
+        .iter()
+        .flatten()
+        .all(|&b| (4.0..=6.0).contains(&b)));
+    // Scripted values are clamped too: a set_bandwidth above the ceiling
+    // lands exactly on it.
+    let s = ScenarioBuilder::new(vec![5.0; 2])
+        .phases(3)
+        .clamp(4.0, 6.0)
+        .at_phase(1)
+        .set_bandwidth(0, 100.0)
+        .build();
+    assert_eq!(s.trace.phases[1][0], 6.0);
+    assert_eq!(s.trace.phases[2][0], 6.0);
+}
+
+#[test]
+fn churn_floor_is_honored_on_leave_and_rejoin() {
+    let s = ScenarioBuilder::new(vec![9.76; 3])
+        .phases(4)
+        .churn_floor(0.5)
+        .at_phase(1)
+        .node_churn(2, None)
+        .at_phase(2)
+        .node_churn(2, Some(0.2)) // below the floor: lifted
+        .at_phase(3)
+        .node_churn(2, Some(2.0)) // above the floor: exact
+        .build();
+    assert_eq!(s.trace.phases[1][2], 0.5, "leave lands on the floor");
+    assert_eq!(s.trace.phases[2][2], 0.5, "rejoin below the floor is lifted");
+    assert_eq!(s.trace.phases[3][2], 2.0, "rejoin above the floor is exact");
+}
+
+#[test]
+fn at_phase_events_are_applied_exactly_once() {
+    // A ×0.5 degrade at phase 1 must not compound in later phases.
+    let s = ScenarioBuilder::new(vec![9.76; 2])
+        .phases(5)
+        .at_phase(1)
+        .link_degrade(&[0], 0.5)
+        .build();
+    assert_eq!(s.trace.phases[0][0], 9.76);
+    assert_eq!(s.trace.phases[1][0], 4.88);
+    assert_eq!(s.trace.phases[2][0], 4.88, "event re-applied at phase 2");
+    assert_eq!(s.trace.phases[4][0], 4.88, "event re-applied later");
+    assert_eq!(s.trace.phases[4][1], 9.76, "unlisted node touched");
+}
+
+#[test]
+fn zero_bandwidth_outage_phase_pauses_gossip_without_panicking() {
+    // Regression against TimeModel's TimingError: a phase with an exactly-zero
+    // bandwidth (an outage) must elapse with no gossip rounds — not panic,
+    // not produce non-finite report rows.
+    let n = 6;
+    let healthy = vec![9.76; n];
+    let mut outage = healthy.clone();
+    outage[0] = 0.0;
+    let scenario = CompiledScenario {
+        trace: BandwidthTrace {
+            phases: vec![healthy.clone(), outage, healthy],
+            phase_seconds: 0.5,
+        },
+        reports: vec![
+            (0, "before".to_string()),
+            (1, "during outage".to_string()),
+            (2, "after".to_string()),
+        ],
+        events: Vec::new(),
+    };
+    let policy = DynamicPolicy {
+        r: 8,
+        quick: true,
+        ..Default::default()
+    };
+    let run = simulate_scripted_consensus(&scenario, policy, false, 3);
+    assert_eq!(run.reports.len(), 3);
+    let (before, during, after) = (&run.reports[0], &run.reports[1], &run.reports[2]);
+    assert!(before.rounds > 0, "healthy phase must gossip");
+    assert_eq!(during.rounds, before.rounds, "outage phase executed rounds");
+    assert!(after.rounds > during.rounds, "recovery phase must gossip");
+    assert_eq!(during.b_min, 0.0, "outage b_min must be zero");
+    assert!(run.reports.iter().all(|r| r.log_error.is_finite()));
+    assert!(run.outcome.final_log_error.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// Fuzzer: seeded known-bad invariant → shrunk, replayable dump
+// ---------------------------------------------------------------------------
+
+/// Fleet-wide partition at the churn floor: the round time (~2.9 s at
+/// 0.05 GB/s) exceeds the 1.5 s phase, so partition-phase checkpoints see no
+/// new gossip rounds — legal behavior (Core holds), but a violation of the
+/// deliberately-too-strict `every-phase-gossips` invariant.
+fn known_bad_program() -> ScenarioProgram {
+    let n = 6;
+    let mut events = vec![ScheduledEvent {
+        phase: 1,
+        event: ScenarioEvent::Partition {
+            nodes: (0..n).collect(),
+        },
+    }];
+    for k in 0..3 {
+        events.push(ScheduledEvent {
+            phase: k,
+            event: ScenarioEvent::ReportStats {
+                label: format!("phase {k}"),
+            },
+        });
+    }
+    ScenarioProgram {
+        initial: vec![9.76; n],
+        phases: 3,
+        phase_seconds: 1.5,
+        clamp: (1e-3, f64::INFINITY),
+        churn_floor: 0.05,
+        seed: 13,
+        events,
+    }
+}
+
+#[test]
+fn known_bad_invariant_produces_a_smaller_replayable_dump() {
+    let original = known_bad_program();
+    assert!(check_program(&original, Invariant::Core).is_ok(), "core must hold on outages");
+    assert!(
+        check_program(&original, Invariant::EveryPhaseGossips).is_err(),
+        "the known-bad invariant must fail"
+    );
+
+    let shrunk = shrink_failing(&original, Invariant::EveryPhaseGossips);
+    assert!(
+        shrunk.events.len() < original.events.len(),
+        "shrunk dump must have fewer events: {} vs {}",
+        shrunk.events.len(),
+        original.events.len()
+    );
+
+    // The dump is replayable: written to disk, parsed back, still failing the
+    // bad invariant while passing core.
+    let dir = std::env::temp_dir().join("batopo_fuzz_dump_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("known_bad.scenario");
+    std::fs::write(&path, shrunk.dump()).unwrap();
+    let (reparsed, violation) = replay(&path, Invariant::EveryPhaseGossips).expect("replay");
+    assert_eq!(reparsed, shrunk);
+    assert!(violation.is_some(), "replayed dump no longer fails");
+    let (_, core_violation) = replay(&path, Invariant::Core).expect("replay");
+    assert!(core_violation.is_none(), "core must still hold on the dump");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fuzz_core_invariant_holds_on_random_programs() {
+    let dir = std::env::temp_dir().join("batopo_fuzz_core_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = FuzzConfig {
+        cases: 4,
+        quick: true,
+        out_dir: dir.clone(),
+        ..Default::default()
+    };
+    let outcome = fuzz_scenarios(&cfg).expect("fuzz run");
+    assert_eq!(outcome.cases, 4);
+    assert!(
+        outcome.failures.is_empty(),
+        "core invariant violated: {:?}",
+        outcome.failures.iter().map(|f| &f.violation).collect::<Vec<_>>()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// `reproduce dynamic --quick` — per-scenario analysis reports
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reproduce_dynamic_quick_writes_per_scenario_reports() {
+    let dir = std::env::temp_dir().join("batopo_reproduce_dynamic_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let opts = ExpOptions {
+        quick: true,
+        out_dir: dir.clone(),
+        seed: 42,
+        ..Default::default()
+    };
+    experiments::run(&["dynamic".to_string()], &opts);
+
+    let csv = std::fs::read_to_string(dir.join("dynamic.csv")).expect("dynamic.csv");
+    let header = csv.lines().next().expect("header");
+    assert!(
+        header.ends_with("final_log10_error,time_to_target_s"),
+        "dynamic.csv lacks the time-to-target column: {header}"
+    );
+    assert!(csv.lines().count() > 1, "dynamic.csv has no data rows");
+
+    let manifest =
+        std::fs::read_to_string(dir.join("run_manifest.json")).expect("run_manifest.json");
+    let required = [
+        "scenario_heavy-tailed.md",
+        "scenario_correlated.md",
+        "scenario_partition-heal.md",
+        "scenario_stragglers.md",
+        "scenario_zonal-outage.md",
+        "scenario_diurnal.md",
+    ];
+    for name in required {
+        let md = std::fs::read_to_string(dir.join(name))
+            .unwrap_or_else(|e| panic!("{name} not written: {e}"));
+        for section in ["## Hypothesis", "## Configuration", "## Checkpoints"] {
+            assert!(md.contains(section), "{name} missing {section}");
+        }
+        assert!(md.contains("## Finding"), "{name} missing the finding");
+        assert!(
+            manifest.contains(&format!("\"{name}\"")),
+            "run_manifest.json does not reference {name}"
+        );
+    }
+    let md_count = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let n = e.file_name().to_string_lossy().to_string();
+            n.starts_with("scenario_") && n.ends_with(".md")
+        })
+        .count();
+    assert!(md_count >= 6, "only {md_count} scenario reports written");
+    std::fs::remove_dir_all(&dir).ok();
+}
