@@ -91,6 +91,50 @@ impl ConstraintSet {
     pub fn num_eligible(&self) -> usize {
         self.eligible.iter().filter(|&&e| e).count()
     }
+
+    /// Re-index this constraint system from the canonical edge space onto a
+    /// candidate support: edge index `l` in every row/mask becomes the
+    /// *position* of its pair in `cand`, and edges outside the support are
+    /// dropped (they can never be selected on the sparse path). Rows left
+    /// with no in-support edges are removed — except equality rows with a
+    /// nonzero requirement, which become unsatisfiable and are kept so
+    /// [`ConstraintSet::check`] reports the conflict instead of silently
+    /// passing.
+    pub fn restricted_to(&self, cand: &crate::topo::candidates::CandidateSet) -> ConstraintSet {
+        use crate::graph::incidence::edge_pair;
+        let mut rows = Vec::with_capacity(self.rows.len());
+        for row in &self.rows {
+            let edges: Vec<usize> = row
+                .edges
+                .iter()
+                .filter_map(|&l| {
+                    let (i, j) = edge_pair(self.n, l);
+                    cand.position(i, j)
+                })
+                .collect();
+            if edges.is_empty() && !(row.equality && row.cap > 0) {
+                continue;
+            }
+            rows.push(ConstraintRow {
+                name: row.name.clone(),
+                edges,
+                cap: row.cap,
+                equality: row.equality,
+            });
+        }
+        let eligible: Vec<bool> = (0..cand.len())
+            .map(|e| {
+                let (i, j) = cand.pair(e);
+                self.eligible[crate::graph::incidence::edge_index(self.n, i, j)]
+            })
+            .collect();
+        ConstraintSet {
+            n: self.n,
+            r: self.r,
+            rows,
+            eligible,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +163,37 @@ mod tests {
         cs.rows[0].equality = true;
         assert!(cs.check(&[3, 4]).is_err()); // equality needs exactly 1 of {0,1,2}
         assert!(cs.check(&[2, 3]).is_ok());
+    }
+
+    #[test]
+    fn restricted_to_maps_rows_onto_support_positions() {
+        use crate::graph::incidence::edge_index;
+        use crate::topo::candidates::CandidateSet;
+        let mut cs = ConstraintSet::cardinality_only(5, 4);
+        cs.rows.push(ConstraintRow {
+            name: "node 0".into(),
+            edges: vec![edge_index(5, 0, 1), edge_index(5, 0, 4), edge_index(5, 0, 2)],
+            cap: 1,
+            equality: false,
+        });
+        cs.rows.push(ConstraintRow {
+            name: "off-support".into(),
+            edges: vec![edge_index(5, 1, 3)],
+            cap: 1,
+            equality: false,
+        });
+        cs.eligible[edge_index(5, 1, 2)] = false;
+        let ring = vec![(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)];
+        let cand = CandidateSet::from_edges(5, ring, "ring").unwrap();
+        let r = cs.restricted_to(&cand);
+        assert_eq!(r.eligible.len(), cand.len());
+        assert!(!r.eligible[cand.position(1, 2).unwrap()]);
+        // The inequality row with no in-support edges is dropped; the node
+        // row keeps only its in-support edges, re-indexed to positions.
+        assert_eq!(r.rows.len(), 1);
+        let want = vec![cand.position(0, 1).unwrap(), cand.position(0, 4).unwrap()];
+        assert_eq!(r.rows[0].edges, want);
+        assert_eq!(r.r, cs.r);
     }
 
     #[test]

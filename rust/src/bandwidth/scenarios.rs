@@ -381,12 +381,90 @@ impl BandwidthScenario {
             }
         }
     }
+
+    /// [`BandwidthScenario::constraints`] re-indexed onto a candidate
+    /// support: every edge index in the rows and the eligibility mask is a
+    /// candidate *position*, not a canonical edge-space index.
+    ///
+    /// The node-degree scenarios (homogeneous, node-level) build their rows
+    /// directly over the support — `O(|E_cand|)` instead of the `O(n²)`
+    /// node-row materialization of the full builder, which is what lets the
+    /// sparse optimizer assemble constraints at n=16384. The fixed-size
+    /// hardware scenarios (intra-server, inter-server) are tiny, so they go
+    /// through the full builder and [`ConstraintSet::restricted_to`].
+    pub fn constraints_on(
+        &self,
+        r: usize,
+        cand: &crate::topo::candidates::CandidateSet,
+    ) -> Result<ConstraintSet, AllocationError> {
+        let n = self.num_nodes();
+        assert_eq!(cand.n(), n, "candidate support node count mismatch");
+        let node_bw: Option<Vec<f64>> = match self {
+            BandwidthScenario::Homogeneous { node_bw, .. } => Some(vec![*node_bw; n]),
+            BandwidthScenario::NodeLevel { bw } => Some(bw.clone()),
+            _ => None,
+        };
+        let Some(bw) = node_bw else {
+            return Ok(self.constraints(r)?.restricted_to(cand));
+        };
+        let caps = vec![n - 1; n];
+        let alloc = allocate_edge_capacity(&bw, r, &caps)?;
+        let mut rows: Vec<ConstraintRow> = (0..n)
+            .map(|i| ConstraintRow {
+                name: format!("node {i}"),
+                edges: Vec::new(),
+                cap: alloc.edges_per_node[i],
+                equality: true,
+            })
+            .collect();
+        for (e, &(a, b)) in cand.edges().iter().enumerate() {
+            rows[a].edges.push(e);
+            rows[b].edges.push(e);
+        }
+        Ok(ConstraintSet {
+            n,
+            r,
+            rows,
+            eligible: vec![true; cand.len()],
+        })
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::topo::baselines;
+    use crate::topo::candidates::CandidateSet;
+
+    #[test]
+    fn constraints_on_matches_restricted_full_build() {
+        let sc = BandwidthScenario::paper_node_level();
+        let cand = CandidateSet::generate("union", &sc, 3).unwrap();
+        let direct = sc.constraints_on(16, &cand).unwrap();
+        let restricted = sc.constraints(16).unwrap().restricted_to(&cand);
+        assert_eq!(direct.eligible, restricted.eligible);
+        assert_eq!(direct.rows.len(), restricted.rows.len());
+        for (a, b) in direct.rows.iter().zip(&restricted.rows) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.cap, b.cap);
+            assert_eq!(a.equality, b.equality);
+            let (mut ea, mut eb) = (a.edges.clone(), b.edges.clone());
+            ea.sort_unstable();
+            eb.sort_unstable();
+            assert_eq!(ea, eb, "row {}", a.name);
+        }
+    }
+
+    #[test]
+    fn constraints_on_intra_server_restricts() {
+        let sc = BandwidthScenario::paper_intra_server();
+        let cand = CandidateSet::generate("geometric:2", &sc, 1).unwrap();
+        let cs = sc.constraints_on(8, &cand).unwrap();
+        assert_eq!(cs.eligible.len(), cand.len());
+        // Every candidate edge still maps onto exactly one LCA link row.
+        let total: usize = cs.rows.iter().map(|r| r.edges.len()).sum();
+        assert_eq!(total, cand.len());
+    }
 
     #[test]
     fn homogeneous_edge_bandwidths_ring() {

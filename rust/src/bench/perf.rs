@@ -15,9 +15,11 @@
 //!   ILU(0) + Bi-CGSTAB, with the assembly/factorization cost recorded
 //!   separately as `admm_xstep_kkt_setup`) at n∈{64,160(,256)},
 //! - `scale` — the large-`n` regime: matrix-free Lanczos λ₂/λ_max and
-//!   parallel CSR SpMV at n up to 2048, plus the CG X-step at n=512 —
-//!   sizes where the dense eigendecomposition path cannot run and the
-//!   assembled-KKT ILU path would hit the memory wall,
+//!   parallel CSR SpMV at n up to 2048, the dense-formulation CG X-step at
+//!   its n=512 ceiling, and the candidate-support CG X-step
+//!   (`admm_xstep_cg_sparse`, knn:8) at n up to 16384 — sizes where the
+//!   dense eigendecomposition path cannot run and the assembled-KKT ILU
+//!   path would hit the memory wall,
 //! - `train` — end-to-end DSGD steps/second: always benches the host-native
 //!   backend (`host_train_step`, `dsgd_round_host` — the `BENCH_baseline.json`
 //!   entries the CI gate compares), plus the PJRT round when artifacts are
@@ -204,6 +206,21 @@ fn xstep_operators(n: usize) -> operators::AdmmOperators {
         .constraints(r)
         .expect("node-level constraints");
     operators::build_heterogeneous(&cs, 2.0, 1e-8)
+}
+
+/// The candidate-support counterpart of [`xstep_operators`]: the same
+/// node-level scenario, but every edge variable indexed by its position in a
+/// `knn:8` candidate set (r = 2n, the sparse headline configuration). Slacks
+/// live on the `n + m` pattern instead of `n²`, so this builds at sizes the
+/// dense formulation cannot even allocate.
+fn xstep_operators_sparse(n: usize) -> operators::AdmmOperators {
+    let n = (n & !1).max(4);
+    let r = 2 * n;
+    let sc = crate::config::scenario_by_name("node-level", n).expect("even n");
+    let cand = crate::topo::candidates::CandidateSet::generate("knn:8", &sc, 17)
+        .expect("knn support");
+    let cs = sc.constraints_on(r, &cand).expect("node-level constraints");
+    operators::build_heterogeneous_on(&cs, &cand, 2.0, 1e-8)
 }
 
 /// A representative X-step target `v` (seeded, O(0.1) entries) and the two
@@ -496,6 +513,25 @@ pub fn perf_scale(opts: &PerfOptions) -> Vec<BenchRecord> {
         // committed baseline mean is generous enough (see BENCH_baseline.json)
         // that scheduler jitter cannot trip the 25% gate.
         out.push(bench_xstep_cg(&ops, n, 1, &copts, "admm_xstep_cg_scale", &rev));
+    }
+
+    // The candidate-support headline: the same heterogeneous X-step, but
+    // support-indexed on a knn:8 candidate set. Slack blocks shrink from n²
+    // entries to the n + m pattern, so the per-iteration cost is O(|E_cand|)
+    // and the n=512 dense ceiling above stops being a ceiling at all.
+    println!("── bench scale: sparse CG X-step (knn:8 candidate support) ──");
+    let sparse_default: &[usize] = if opts.quick { &[1024] } else { &[1024, 4096, 16384] };
+    for n in opts.sizes_or(sparse_default) {
+        let ops = xstep_operators_sparse(n);
+        let n = ops.layout.n;
+        println!(
+            "  support: m={} of {} possible edges, {} primal vars, {} constraint rows",
+            ops.layout.m,
+            crate::graph::num_possible_edges(n),
+            ops.layout.total,
+            ops.layout.rows
+        );
+        out.push(bench_xstep_cg(&ops, n, 1, &copts, "admm_xstep_cg_sparse", &rev));
     }
     out
 }

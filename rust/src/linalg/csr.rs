@@ -23,9 +23,14 @@ pub struct CsrMatrix {
     threads: usize,
 }
 
-/// Row count below which the parallel path falls back to serial: thread
-/// spawn/join overhead (~10µs) dwarfs the SpMV itself on small operators.
-const PAR_MIN_ROWS: usize = 512;
+/// Stored-entry count below which the parallel path falls back to serial.
+/// The fan-out pays per *entry*, not per row: spawning + joining scoped
+/// threads costs ~10–50µs, and a serial SpMV sweeps roughly 100–500 entries
+/// per µs, so below ~200k nnz the serial sweep finishes before the workers
+/// are even running (the `bench scale` spmv cells at n ≤ 1024, ~18k nnz,
+/// measured the old row-count gate *slower* than serial — see
+/// docs/BENCHMARKS.md).
+const PAR_MIN_NNZ: usize = 200_000;
 
 impl CsrMatrix {
     /// Convert from CSC storage (serial apply by default).
@@ -86,15 +91,24 @@ impl CsrMatrix {
         }
     }
 
+    /// Would [`CsrMatrix::par_matvec_into`] actually fan out at this thread
+    /// count, or fall back to the serial sweep? Exposed so benches and tests
+    /// can assert which path a given operator takes.
+    pub fn parallel_cutover(&self, threads: usize) -> bool {
+        threads.max(1).min(self.rows.max(1)) > 1 && self.nnz() >= PAR_MIN_NNZ
+    }
+
     /// Parallel `y = A x` over `threads` scoped worker threads. Rows are
     /// split into contiguous chunks; each thread owns a disjoint slice of
     /// `y`, so no synchronization is needed. Falls back to the serial path
-    /// for small matrices or `threads == 1`.
+    /// below [`PAR_MIN_NNZ`] stored entries or at `threads == 1` — the
+    /// cutover is by nnz (work), not rows: a 1024-row Laplacian with ~18k
+    /// entries is serial territory no matter how many rows it has.
     pub fn par_matvec_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
         assert_eq!(x.len(), self.cols, "matvec dim mismatch");
         assert_eq!(y.len(), self.rows);
         let threads = threads.max(1).min(self.rows.max(1));
-        if threads == 1 || self.rows < PAR_MIN_ROWS {
+        if threads == 1 || self.nnz() < PAR_MIN_NNZ {
             return self.matvec_into(x, y);
         }
         let chunk = (self.rows + threads - 1) / threads;
@@ -133,11 +147,11 @@ mod tests {
     use super::*;
     use crate::util::rng::Xoshiro256pp;
 
-    fn random_csc(rows: usize, cols: usize, seed: u64) -> CscMatrix {
+    fn random_csc(rows: usize, cols: usize, per_row: usize, seed: u64) -> CscMatrix {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
         let mut trips = Vec::new();
         for i in 0..rows {
-            for _ in 0..4 {
+            for _ in 0..per_row {
                 trips.push((i, rng.index(cols), rng.next_gaussian()));
             }
         }
@@ -146,7 +160,7 @@ mod tests {
 
     #[test]
     fn csr_matches_csc() {
-        let a = random_csc(30, 20, 1);
+        let a = random_csc(30, 20, 4, 1);
         let csr = CsrMatrix::from_csc(&a);
         assert_eq!(csr.nnz(), a.nnz());
         let mut rng = Xoshiro256pp::seed_from_u64(2);
@@ -161,10 +175,12 @@ mod tests {
 
     #[test]
     fn parallel_matches_serial() {
-        // Big enough to take the parallel path.
+        // Dense enough (2048 rows × 128/row ≈ 262k nnz) to clear the nnz
+        // cutover and genuinely exercise the threaded path.
         let rows = 2048;
-        let a = random_csc(rows, rows, 7);
+        let a = random_csc(rows, rows, 128, 7);
         let csr = CsrMatrix::from_csc(&a);
+        assert!(csr.parallel_cutover(8), "nnz={} must fan out", csr.nnz());
         let mut rng = Xoshiro256pp::seed_from_u64(8);
         let x: Vec<f64> = (0..rows).map(|_| rng.next_gaussian()).collect();
         let mut y_ser = vec![0.0; rows];
@@ -179,8 +195,46 @@ mod tests {
     }
 
     #[test]
+    fn cutover_is_by_nnz_not_rows() {
+        // A 1024-row Laplacian-sized operator (~4 entries/row) stays serial
+        // regardless of thread count; the old row-count gate (≥512 rows →
+        // parallel) made exactly this shape slower than serial in
+        // `bench scale`.
+        let sparse = CsrMatrix::from_csc(&random_csc(1024, 1024, 4, 9));
+        assert!(!sparse.parallel_cutover(8), "nnz={}", sparse.nnz());
+        let dense = CsrMatrix::from_csc(&random_csc(1024, 1024, 256, 10));
+        assert!(dense.parallel_cutover(8), "nnz={}", dense.nnz());
+        assert!(!dense.parallel_cutover(1), "threads=1 is always serial");
+    }
+
+    #[test]
+    fn small_nnz_parallel_not_slower_than_serial() {
+        // Regression guard for the cutover itself: on a small-nnz operator
+        // the "parallel" call must take the serial path, so many repeated
+        // calls cannot be drastically slower than the serial loop. Without
+        // the nnz gate, 200 spawns × 8 threads × ~10µs of thread overhead
+        // would blow the (generous) 3× + 10ms envelope.
+        let csr = CsrMatrix::from_csc(&random_csc(1024, 1024, 4, 11));
+        let x = vec![1.0; 1024];
+        let mut y = vec![0.0; 1024];
+        let reps = 200;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            csr.matvec_into(&x, &mut y);
+        }
+        let serial = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            csr.par_matvec_into(&x, &mut y, 8);
+        }
+        let par = t0.elapsed();
+        let envelope = serial * 3 + std::time::Duration::from_millis(10);
+        assert!(par <= envelope, "par {par:?} vs serial {serial:?}");
+    }
+
+    #[test]
     fn operator_apply_respects_thread_setting() {
-        let a = random_csc(600, 600, 3);
+        let a = random_csc(600, 600, 4, 3);
         let csr_ser = CsrMatrix::from_csc(&a);
         let csr_par = CsrMatrix::from_csc(&a).with_threads(4);
         let mut rng = Xoshiro256pp::seed_from_u64(4);
@@ -194,7 +248,7 @@ mod tests {
 
     #[test]
     fn small_matrices_fall_back_to_serial() {
-        let a = random_csc(10, 10, 5);
+        let a = random_csc(10, 10, 4, 5);
         let csr = CsrMatrix::from_csc(&a).with_threads(16);
         let x = vec![1.0; 10];
         // Must not panic chunking 10 rows across 16 threads.

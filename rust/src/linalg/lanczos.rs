@@ -20,7 +20,7 @@
 //! few iterations instead of paying a dense solve per check.
 
 use super::operator::LinearOperator;
-use super::{dot, norm2};
+use super::{dot, norm2, DenseMatrix, SymEigen};
 use crate::util::rng::Xoshiro256pp;
 
 /// Options for [`lanczos_extremal`].
@@ -256,6 +256,166 @@ pub fn tridiag_extremes(alphas: &[f64], betas: &[f64]) -> (f64, f64) {
     (bisect(false), bisect(true))
 }
 
+/// Which end of the spectrum an eigenpair query targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpectralEnd {
+    /// The smallest eigenvalue.
+    Min,
+    /// The largest eigenvalue.
+    Max,
+}
+
+/// An (eigenvalue, unit eigenvector) pair returned by
+/// [`lanczos_extreme_eigenpair`].
+#[derive(Debug, Clone)]
+pub struct EigenPair {
+    /// Ritz value approximating the requested extreme eigenvalue.
+    pub value: f64,
+    /// Corresponding unit Ritz vector (deflated directions projected out).
+    pub vector: Vec<f64>,
+}
+
+/// Extreme (eigenvalue, eigenvector) pair of the symmetric operator `op`
+/// restricted to the orthogonal complement of `deflate`.
+///
+/// Same recurrence as [`lanczos_extremal`], but the Krylov basis is combined
+/// with the extreme eigenvector of the k×k tridiagonal (computed by the dense
+/// [`SymEigen`] solver — k ≤ `opts.max_iter`, so this stays cheap) to return
+/// the Ritz *vector* as well. This is what the pattern-restricted spectral
+/// projections need: they clip one offending extreme eigenpair at a time
+/// instead of eigendecomposing an `n × n` slack matrix.
+///
+/// Returns `None` when the deflated space is empty or the Ritz vector
+/// degenerates to (numerical) zero.
+pub fn lanczos_extreme_eigenpair<A: LinearOperator + ?Sized>(
+    op: &A,
+    end: SpectralEnd,
+    deflate: &[Vec<f64>],
+    opts: &LanczosOptions,
+) -> Option<EigenPair> {
+    let n = op.nrows();
+    assert_eq!(n, op.ncols(), "Lanczos needs a square operator");
+    for d in deflate {
+        assert_eq!(d.len(), n, "deflation vector dimension mismatch");
+    }
+    let nd = n.saturating_sub(deflate.len());
+    if nd == 0 {
+        return None;
+    }
+    let kmax = opts.max_iter.max(2).min(nd);
+
+    let mut rng = Xoshiro256pp::seed_from_u64(opts.seed);
+    let mut v = vec![0.0; n];
+    loop {
+        rng.fill_gaussian(&mut v);
+        project_out(&mut v, deflate);
+        let nv = norm2(&v);
+        if nv > 1e-12 {
+            for x in v.iter_mut() {
+                *x /= nv;
+            }
+            break;
+        }
+    }
+
+    let mut basis: Vec<Vec<f64>> = vec![v];
+    let mut alphas: Vec<f64> = Vec::with_capacity(kmax);
+    let mut betas: Vec<f64> = Vec::with_capacity(kmax);
+    let mut w = vec![0.0; n];
+    let mut prev: Option<f64> = None;
+
+    for j in 0..kmax {
+        op.apply(&basis[j], &mut w);
+        let alpha = dot(&basis[j], &w);
+        alphas.push(alpha);
+        for (wi, qi) in w.iter_mut().zip(&basis[j]) {
+            *wi -= alpha * qi;
+        }
+        if j > 0 {
+            let beta_prev = betas[j - 1];
+            for (wi, qi) in w.iter_mut().zip(&basis[j - 1]) {
+                *wi -= beta_prev * qi;
+            }
+        }
+        project_out(&mut w, deflate);
+        for q in &basis {
+            let c = dot(q, &w);
+            for (wi, qi) in w.iter_mut().zip(q) {
+                *wi -= c * qi;
+            }
+        }
+
+        let beta = norm2(&w);
+        let scale = alphas
+            .iter()
+            .chain(betas.iter())
+            .fold(0.0f64, |m, &x| m.max(x.abs()));
+        if beta <= 1e-12 * (1.0 + scale) {
+            break;
+        }
+
+        // Probe only the requested end of the tridiagonal spectrum.
+        if (j + 1) % CHECK_EVERY == 0 || j + 1 == kmax {
+            let (tmin, tmax) = tridiag_extremes(&alphas, &betas);
+            let t = if end == SpectralEnd::Min { tmin } else { tmax };
+            if let Some(p) = prev {
+                if (t - p).abs() <= opts.tol * (1.0 + t.abs()) {
+                    break;
+                }
+            }
+            prev = Some(t);
+        }
+
+        if j + 1 == kmax {
+            break;
+        }
+        betas.push(beta);
+        let mut q_next = w.clone();
+        for x in q_next.iter_mut() {
+            *x /= beta;
+        }
+        basis.push(q_next);
+    }
+
+    let k = alphas.len();
+    betas.truncate(k.saturating_sub(1));
+
+    // Extreme Ritz pair of the k×k tridiagonal via the dense solver — robust
+    // eigenvectors without hand-rolled inverse iteration, and cheap at k ≤ a
+    // few hundred.
+    let mut t = DenseMatrix::zeros(k, k);
+    for (i, &a) in alphas.iter().enumerate() {
+        t[(i, i)] = a;
+        if i + 1 < k {
+            t[(i, i + 1)] = betas[i];
+            t[(i + 1, i)] = betas[i];
+        }
+    }
+    let eig = SymEigen::new(&t);
+    // SymEigen sorts descending: column 0 is the max pair, column k−1 the min.
+    let col = match end {
+        SpectralEnd::Max => 0,
+        SpectralEnd::Min => k - 1,
+    };
+    let value = eig.values[col];
+    let mut vector = vec![0.0; n];
+    for (j, q) in basis.iter().enumerate().take(k) {
+        let yj = eig.vectors[(j, col)];
+        for (vi, qi) in vector.iter_mut().zip(q) {
+            *vi += yj * qi;
+        }
+    }
+    project_out(&mut vector, deflate);
+    let nv = norm2(&vector);
+    if nv <= 1e-12 {
+        return None;
+    }
+    for x in vector.iter_mut() {
+        *x /= nv;
+    }
+    Some(EigenPair { value, vector })
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{DenseMatrix, SymEigen};
@@ -328,6 +488,52 @@ mod tests {
         let lam2 = 2.0 - 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos();
         assert!((res.min - lam2).abs() < 1e-8, "λ₂ {} vs {lam2}", res.min);
         assert!((res.max - 4.0).abs() < 1e-8, "λ_max {}", res.max);
+    }
+
+    #[test]
+    fn eigenpair_matches_dense_solver() {
+        for n in [8usize, 24] {
+            let a = random_sym(n, 500 + n as u64);
+            let eig = SymEigen::new(&a);
+            for (end, col) in [(SpectralEnd::Max, 0usize), (SpectralEnd::Min, n - 1)] {
+                let p = lanczos_extreme_eigenpair(&a, end, &[], &LanczosOptions::default())
+                    .expect("eigenpair");
+                assert!(
+                    (p.value - eig.values[col]).abs() < 1e-7 * (1.0 + eig.values[col].abs()),
+                    "n={n} {end:?}: {} vs {}",
+                    p.value,
+                    eig.values[col]
+                );
+                // Residual ‖Av − λv‖ small ⇒ genuine eigenpair, not just value.
+                let mut av = vec![0.0; n];
+                a.apply(&p.vector, &mut av);
+                let res: f64 = av
+                    .iter()
+                    .zip(&p.vector)
+                    .map(|(x, v)| (x - p.value * v).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(res < 1e-6 * (1.0 + p.value.abs()), "n={n} {end:?}: res {res}");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenpair_respects_deflation() {
+        // Ring Laplacian with the consensus mode deflated: the min pair is
+        // the Fiedler pair, orthogonal to 1.
+        let n = 12usize;
+        let edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        let w = vec![1.0; n];
+        let op = LaplacianOperator::new(n, &edges, &w);
+        let ones: Vec<f64> = vec![1.0 / (n as f64).sqrt(); n];
+        let opts = LanczosOptions::default();
+        let p = lanczos_extreme_eigenpair(&op, SpectralEnd::Min, &[ones.clone()], &opts)
+            .expect("eigenpair");
+        let lam2 = 2.0 - 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos();
+        assert!((p.value - lam2).abs() < 1e-8, "λ₂ {} vs {lam2}", p.value);
+        let overlap: f64 = p.vector.iter().zip(&ones).map(|(a, b)| a * b).sum();
+        assert!(overlap.abs() < 1e-9, "not deflated: {overlap}");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! batopo optimize  --n 16 --r 32 [--scenario homogeneous] [--out topo.json]
 //!                  [--xstep cg|bicgstab] [--max-iters N] [--json report.json]
+//!                  [--candidates full|union|knn:K|geometric:K]
 //! batopo consensus --topology ring|...|<topo.json> --n 16 [--scenario …]
 //! batopo allocate  --bw 9.76,9.76,3.25,3.25 --r 4
 //! batopo train     --topology torus --n 16 --model tiny --epochs 10
@@ -11,7 +12,9 @@
 //! batopo bench     mixing|solver|admm|scale|train|all [--quick] [--threads 8]
 //!                  [--json out/BENCH_pr.json] [--out out/]
 //! batopo bench     compare BENCH_baseline.json out/BENCH_pr.json
-//!                  [--threshold 1.25] [--min-ns 50000]
+//!                  [--threshold 1.25] [--min-ns 50000] [--require-baseline]
+//! batopo bench     calibrate [targets…] [--quick] [--headroom 1.5]
+//!                  [--json BENCH_baseline.json]
 //! batopo fuzz      scenarios [--cases 64] [--seed S] [--quick]
 //!                  [--invariant core|every-phase-gossips] [--out fuzz-out/]
 //! batopo fuzz      replay <dump.scenario> [--invariant …]
@@ -54,6 +57,7 @@ fn main() {
                  \n\
                  optimize  --n N --r R [--scenario S] [--seed X] [--quick] [--out file.json]\n\
                  \u{20}          [--xstep cg|bicgstab] [--max-iters N] [--json report.json]\n\
+                 \u{20}          [--candidates full|union|knn:K|geometric:K]\n\
                  consensus --topology NAME|file.json --n N [--scenario S] [--eps 1e-4]\n\
                  allocate  --bw b1,b2,... --r R [--caps c1,c2,...]\n\
                  train     --topology NAME|file.json --n N [--scenario S] [--model tiny]\n\
@@ -64,7 +68,8 @@ fn main() {
                  bench     <mixing|solver|admm|scale|train|all>...\n\
                  \u{20}          [--quick] [--threads T] [--json FILE] [--out out/]\n\
                  bench     compare BASELINE.json CANDIDATE.json\n\
-                 \u{20}          [--threshold 1.25] [--min-ns 50000]\n\
+                 \u{20}          [--threshold 1.25] [--min-ns 50000] [--require-baseline]\n\
+                 bench     calibrate [targets...] [--quick] [--headroom 1.5] [--json FILE]\n\
                  fuzz      scenarios [--cases 64] [--seed X] [--quick]\n\
                  \u{20}          [--invariant core|every-phase-gossips] [--out fuzz-out/]\n\
                  fuzz      replay <dump.scenario> [--invariant ...]\n\
@@ -101,10 +106,23 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
     if let Some(mi) = args.get("max-iters") {
         spec.max_iters = mi.parse().map_err(|_| "bad --max-iters")?;
     }
+    if let Some(c) = args.get("candidates") {
+        // Validate the spec up front so a typo fails before the solve, not
+        // inside a restart worker. `full` is skipped: materializing all
+        // n(n−1)/2 pairs just to validate would defeat the point at large n.
+        if c != "full" {
+            batopo::topo::candidates::CandidateSet::generate(c, &spec.scenario, spec.seed)?;
+        }
+        spec.candidates = Some(c.to_string());
+    }
+    let cand_name = spec.candidates.clone().unwrap_or_else(|| "full".into());
     let t0 = std::time::Instant::now();
     let report = BaTopoOptimizer::new(spec.clone()).run_detailed().map_err(|e| e.to_string())?;
     let wall = t0.elapsed().as_secs_f64();
-    println!("BA-Topo(n={n}, r={r}, xstep={}):", spec.xstep.name());
+    println!(
+        "BA-Topo(n={n}, r={r}, xstep={}, candidates={cand_name}):",
+        spec.xstep.name()
+    );
     println!("  r_asym           = {:.4} (warm start {:.4})", report.r_asym, report.warm_start_r_asym);
     println!("  admm iterations  = {} (converged={}, residual {:.2e})",
         report.admm_iterations, report.admm_converged, report.final_residual);
@@ -121,10 +139,11 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
     if let Some(json_path) = args.get("json") {
         // Machine-readable run report: a clean solve is distinguishable from
         // a silently-stalled one (krylov_failures > 0 / worst residual).
-        let doc = Json::obj(vec![
+        let mut fields = vec![
             ("n", Json::Num(n as f64)),
             ("r", Json::Num(r as f64)),
             ("xstep", Json::Str(spec.xstep.name().to_string())),
+            ("candidates", Json::Str(cand_name.clone())),
             ("r_asym", Json::Num(report.r_asym)),
             ("warm_start_r_asym", Json::Num(report.warm_start_r_asym)),
             ("admm_iterations", Json::Num(report.admm_iterations as f64)),
@@ -146,7 +165,20 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
             ),
             ("edges", Json::Num(report.topology.num_edges() as f64)),
             ("wall_s", Json::Num(wall)),
-        ]);
+        ];
+        if cand_name != "full" {
+            // Dump the support so the run is reproducible/auditable offline
+            // (reload with `CandidateSet::from_json`). Generators are
+            // deterministic in (spec, scenario, seed); this is the base-seed
+            // support — restarts k>0 derive theirs from seed + k·1009.
+            let cand = batopo::topo::candidates::CandidateSet::generate(
+                &cand_name,
+                &spec.scenario,
+                spec.seed,
+            )?;
+            fields.push(("candidate_support", cand.to_json()));
+        }
+        let doc = Json::obj(fields);
         if let Some(dir) = Path::new(json_path).parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
@@ -303,6 +335,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     if positional.first().map(|s| s.as_str()) == Some("compare") {
         return cmd_bench_compare(args);
     }
+    if positional.first().map(|s| s.as_str()) == Some("calibrate") {
+        return cmd_bench_calibrate(args);
+    }
 
     let mut targets: Vec<String> = positional.to_vec();
     let mut quick = args.flag("quick");
@@ -393,8 +428,67 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `batopo bench calibrate [targets…]` — refresh the committed perf
+/// baseline: run the targets (default: all of them) on this machine and
+/// write the records to `BENCH_baseline.json` (override with `--json`).
+/// Every recorded time is scaled by `--headroom` (default 1.5×) so
+/// shared-runner jitter on the very next PR cannot trip the 25% gate; a
+/// calibration is a *ceiling*, not a race result. The refresh flow is
+/// documented in docs/BENCHMARKS.md.
+fn cmd_bench_calibrate(args: &Args) -> Result<(), String> {
+    let mut targets: Vec<String> = args.positional()[2..].to_vec();
+    if targets.is_empty() {
+        targets = perf::ALL_TARGETS.iter().map(|s| s.to_string()).collect();
+    }
+    for t in &targets {
+        if !perf::BENCH_TARGETS.contains(&t.as_str()) {
+            return Err(format!(
+                "unknown bench target {t} (expected one of {})",
+                perf::BENCH_TARGETS.join("|")
+            ));
+        }
+    }
+    let quick = args.flag("quick");
+    let mut opts = perf::PerfOptions {
+        quick,
+        ..Default::default()
+    };
+    let threads: usize = args.parse_or("threads", 0usize).map_err(|e| e.to_string())?;
+    if threads > 0 {
+        opts.threads = threads;
+    }
+    let headroom: f64 = args.parse_or("headroom", 1.5).map_err(|e| e.to_string())?;
+    if headroom < 1.0 {
+        return Err(format!("--headroom must be ≥ 1.0 (got {headroom})"));
+    }
+    println!(
+        "bench calibrate {:?} (quick={quick}, threads={}, headroom ×{headroom})",
+        targets, opts.threads
+    );
+    let mut all: Vec<BenchRecord> = Vec::new();
+    for t in &targets {
+        all.extend(perf::run_target(t, &opts)?);
+    }
+    for r in &mut all {
+        r.mean_ns *= headroom;
+        r.p50_ns *= headroom;
+        r.p95_ns *= headroom;
+        r.throughput_per_s /= headroom;
+    }
+    let path = args.str_or("json", "BENCH_baseline.json");
+    records::write_records(Path::new(&path), "baseline", quick, &all).map_err(|e| e.to_string())?;
+    println!(
+        "calibrated {} baseline record(s) → {path} (commit the refreshed file)",
+        all.len()
+    );
+    Ok(())
+}
+
 /// The CI perf gate: fail (exit 1) on any >threshold mean-time regression of
-/// a candidate record against its committed baseline counterpart.
+/// a candidate record against its committed baseline counterpart. With
+/// `--require-baseline`, a candidate record with **no** committed baseline
+/// counterpart is itself a failure — newly added bench cells must land with a
+/// seeded baseline, or the gate would silently never cover them.
 fn cmd_bench_compare(args: &Args) -> Result<(), String> {
     let pos = &args.positional()[2..];
     if pos.len() != 2 {
@@ -412,6 +506,13 @@ fn cmd_bench_compare(args: &Args) -> Result<(), String> {
         min_ns
     );
     if rep.missing_baseline > 0 {
+        if args.flag("require-baseline") {
+            return Err(format!(
+                "{} candidate record(s) have no committed baseline — run \
+                 `batopo bench calibrate` and commit the refreshed BENCH_baseline.json",
+                rep.missing_baseline
+            ));
+        }
         println!(
             "  note: {} candidate record(s) have no baseline — refresh BENCH_baseline.json",
             rep.missing_baseline

@@ -21,11 +21,13 @@ use super::projections as proj;
 use super::{OptimizeError, OptimizeReport, OptimizeSpec, XStep};
 use crate::bandwidth::ConstraintSet;
 use crate::graph::laplacian::laplacian_from_edge_space;
+use crate::graph::spectral::algebraic_connectivity_graph;
 use crate::graph::{incidence, Graph};
 use crate::linalg::bicgstab::{bicgstab_ws, BicgstabOptions, BicgstabWorkspace};
 use crate::linalg::cg::{cg_ws, CgOptions, CgWorkspace};
 use crate::linalg::{Ilu0, JacobiPrecond, SymEigen};
 use crate::topo::annealing::{anneal_aspl, AnnealOptions};
+use crate::topo::candidates::CandidateSet;
 use crate::topo::weights::metropolis;
 use crate::util::threadpool::{num_cpus, parallel_map};
 
@@ -104,14 +106,30 @@ fn solve_once(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
             spec.r
         )));
     }
-    if spec.r > incidence::num_possible_edges(n) {
+    // Resolve the candidate edge support. `full` (or an unset spec) keeps
+    // the legacy dense formulation — every pair is an edge variable and the
+    // iterates are bit-for-bit those of the pre-support code path.
+    let cand: Option<CandidateSet> = match spec.candidates.as_deref() {
+        None | Some("full") => None,
+        Some(s) => Some(
+            CandidateSet::generate(s, &spec.scenario, spec.seed)
+                .map_err(OptimizeError::Infeasible)?,
+        ),
+    };
+    let edge_space = match &cand {
+        Some(c) => c.len(),
+        None => incidence::num_possible_edges(n),
+    };
+    if spec.r > edge_space {
         return Err(OptimizeError::Infeasible(format!(
-            "edge budget r={} exceeds |E|={}",
-            spec.r,
-            incidence::num_possible_edges(n)
+            "edge budget r={} exceeds |E|={edge_space}",
+            spec.r
         )));
     }
-    let cs = spec.scenario.constraints(spec.r)?;
+    let cs = match &cand {
+        Some(c) => spec.scenario.constraints_on(spec.r, c)?,
+        None => spec.scenario.constraints(spec.r)?,
+    };
     if cs.num_eligible() < spec.r {
         return Err(OptimizeError::Infeasible(format!(
             "only {} eligible edges for budget r={}",
@@ -121,7 +139,7 @@ fn solve_once(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
     }
 
     // ---- Warm start (§VI: SA-minimized ASPL initial topology). ----
-    let warm = warm_start_graph(spec, &cs);
+    let warm = warm_start_graph(spec, &cs, cand.as_ref());
     let warm_topo = crate::graph::Topology::new(
         warm.clone(),
         crate::graph::laplacian::weight_matrix_from_edge_weights(&warm, &metropolis(&warm)),
@@ -137,20 +155,30 @@ fn solve_once(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
         spec.scenario,
         crate::bandwidth::scenarios::BandwidthScenario::Homogeneous { .. }
     );
-    let ops = if heterogeneous {
-        operators::build_heterogeneous(&cs, spec.alpha, 1e-8)
-    } else {
-        operators::build_homogeneous(n, spec.alpha, 1e-8)
+    let ops = match &cand {
+        Some(c) if heterogeneous => operators::build_heterogeneous_on(&cs, c, spec.alpha, 1e-8),
+        Some(c) => operators::build_homogeneous_on(c, spec.alpha, 1e-8),
+        None if heterogeneous => operators::build_heterogeneous(&cs, spec.alpha, 1e-8),
+        None => operators::build_homogeneous(n, spec.alpha, 1e-8),
     };
 
     // ---- Run ADMM. ----
-    let sol = run_admm(spec, &cs, &ops, &warm);
+    let sol = run_admm(spec, &cs, &ops, &warm, cand.as_ref());
 
     // ---- Extraction + refinement from the best tracked iterate. ----
-    let mut topo = extract::extract_topology(spec, &cs, &ops.layout, &sol.best_y, &sol.best_y)?;
+    let mut topo =
+        extract::extract_topology(spec, &cs, &ops.layout, &sol.best_y, &sol.best_y, cand.as_ref())?;
     // Guard: never return something worse than the (refined) warm start when
-    // the warm start is itself feasible.
-    if extract::check_relaxed(&cs, &warm.edge_indices()).is_ok() {
+    // the warm start is itself feasible. The selection must live in the same
+    // index space as `cs` (support positions on the sparse path).
+    let warm_sel = match &cand {
+        Some(c) => c.graph_positions(&warm).ok(),
+        None => Some(warm.edge_indices()),
+    };
+    let warm_feasible = warm_sel
+        .map(|sel| extract::check_relaxed(&cs, &sel).is_ok())
+        .unwrap_or(false);
+    if warm_feasible {
         let warm_weights =
             crate::topo::weights::optimize_weights(&warm, None, spec.refine_iters);
         let warm_refined = crate::graph::Topology::new(
@@ -166,8 +194,14 @@ fn solve_once(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
     // ---- Local-search polish of the support (extraction final mile). ----
     if spec.polish_swaps > 0 {
         let init_w = topo.edge_weights();
-        let (polished, pw) =
-            extract::polish_support(&topo.graph, &init_w, &cs, spec.polish_swaps, spec.seed);
+        let (polished, pw) = extract::polish_support(
+            &topo.graph,
+            &init_w,
+            &cs,
+            spec.polish_swaps,
+            spec.seed,
+            cand.as_ref(),
+        );
         let final_w = crate::topo::weights::optimize_weights(&polished, Some(&pw), spec.refine_iters);
         let cand = crate::graph::Topology::new(
             polished.clone(),
@@ -179,8 +213,12 @@ fn solve_once(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
         }
     }
     let r_asym = topo.asymptotic_convergence_factor();
-    let selected = topo.graph.edge_indices();
-    let constraint_check = extract::check_relaxed(&cs, &selected);
+    let constraint_check = match &cand {
+        Some(c) => c
+            .graph_positions(&topo.graph)
+            .and_then(|sel| extract::check_relaxed(&cs, &sel)),
+        None => extract::check_relaxed(&cs, &topo.graph.edge_indices()),
+    };
 
     Ok(OptimizeReport {
         topology: topo,
@@ -199,8 +237,12 @@ fn solve_once(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
 
 /// Construct the warm-start graph: annealed ASPL under per-node caps where
 /// the scenario provides them; greedy eligible selection for masked edge
-/// spaces (BCube).
-fn warm_start_graph(spec: &OptimizeSpec, cs: &ConstraintSet) -> Graph {
+/// spaces (BCube) and for candidate supports (the annealer explores the full
+/// edge space, so its output is almost never on-support).
+fn warm_start_graph(spec: &OptimizeSpec, cs: &ConstraintSet, cand: Option<&CandidateSet>) -> Graph {
+    if cand.is_some() {
+        return extract::greedy_constrained_graph(cs, spec.seed, cand);
+    }
     let n = cs.n;
     let all_eligible = cs.eligible.iter().all(|&e| e);
     if all_eligible {
@@ -217,10 +259,10 @@ fn warm_start_graph(spec: &OptimizeSpec, cs: &ConstraintSet) -> Graph {
         if extract::check_relaxed(cs, &annealed.edge_indices()).is_ok() {
             annealed
         } else {
-            extract::greedy_constrained_graph(cs, spec.seed)
+            extract::greedy_constrained_graph(cs, spec.seed, None)
         }
     } else {
-        extract::greedy_constrained_graph(cs, spec.seed)
+        extract::greedy_constrained_graph(cs, spec.seed, None)
     }
 }
 
@@ -390,42 +432,81 @@ impl<'a> XSolver<'a> {
     }
 }
 
-/// The ADMM loop proper.
+/// The ADMM loop proper. With `cand` set, the operators are support-indexed
+/// (`lay.m == cand.len()`, slack pattern `n + m`) and the spectral slack
+/// projections run on the pattern instead of the dense `n×n` blocks; with
+/// `cand == None` every step is bit-for-bit the legacy dense path.
 pub fn run_admm(
     spec: &OptimizeSpec,
     cs: &ConstraintSet,
     ops: &AdmmOperators,
     warm: &Graph,
+    cand: Option<&CandidateSet>,
 ) -> AdmmSolution {
     let lay = &ops.layout;
     let n = lay.n;
     let rho = spec.rho;
+    let b0 = spec.alpha / n as f64;
 
     // ---- Initial point: feasible w.r.t. the equality rows. ----
     let mut x = vec![0.0; lay.total];
     {
         let w0 = metropolis(warm);
+        let eidx = |i: usize, j: usize| match cand {
+            Some(c) => c.position(i, j),
+            None => Some(incidence::edge_index(n, i, j)),
+        };
         for (&(i, j), &w) in warm.edges().iter().zip(&w0) {
-            x[lay.g + incidence::edge_index(n, i, j)] = w;
-        }
-        let l0 = laplacian_from_edge_space(n, &x[lay.g..lay.g + lay.m]);
-        let eig = SymEigen::new(&l0);
-        // λ̃ between the spectrum bounds; conservative positive start.
-        let lam0 = (eig.values[eig.values.len() - 2]).clamp(0.05, 1.0);
-        x[lay.lam] = lam0;
-        // S = −(L + B0 − λ̃ I), T = 2I − L − λ̃ I, y = 1 − diag(L).
-        for i in 0..n {
-            for j in 0..n {
-                let b0 = spec.alpha / n as f64;
-                let lam_t = if i == j { lam0 } else { 0.0 };
-                x[lay.s + i * n + j] = -(l0[(i, j)] + b0 - lam_t);
-                x[lay.t + i * n + j] = (if i == j { 2.0 } else { 0.0 }) - l0[(i, j)] - lam_t;
+            if let Some(l) = eidx(i, j) {
+                x[lay.g + l] = w;
             }
-            x[lay.y + i] = 1.0 - l0[(i, i)];
+        }
+        match cand {
+            None => {
+                let l0 = laplacian_from_edge_space(n, &x[lay.g..lay.g + lay.m]);
+                let eig = SymEigen::new(&l0);
+                // λ̃ between the spectrum bounds; conservative positive start.
+                let lam0 = (eig.values[eig.values.len() - 2]).clamp(0.05, 1.0);
+                x[lay.lam] = lam0;
+                // S = −(L + B0 − λ̃ I), T = 2I − L − λ̃ I, y = 1 − diag(L).
+                for i in 0..n {
+                    for j in 0..n {
+                        let lam_t = if i == j { lam0 } else { 0.0 };
+                        x[lay.s + i * n + j] = -(l0[(i, j)] + b0 - lam_t);
+                        x[lay.t + i * n + j] = (if i == j { 2.0 } else { 0.0 }) - l0[(i, j)] - lam_t;
+                    }
+                    x[lay.y + i] = 1.0 - l0[(i, i)];
+                }
+            }
+            Some(c) => {
+                // Same formulas restricted to the pattern (n diagonal entries
+                // + m candidate edges); off-pattern entries of S/T are the
+                // implied constants −α/n and 0. λ₂ comes from the dispatching
+                // graph-level evaluator, so no dense Laplacian is assembled.
+                let lam0 = algebraic_connectivity_graph(warm, &w0).clamp(0.05, 1.0);
+                x[lay.lam] = lam0;
+                let mut deg = vec![0.0; n];
+                for (&(i, j), &w) in warm.edges().iter().zip(&w0) {
+                    deg[i] += w;
+                    deg[j] += w;
+                }
+                for i in 0..n {
+                    x[lay.s + i] = -(deg[i] + b0 - lam0);
+                    x[lay.t + i] = 2.0 - deg[i] - lam0;
+                    x[lay.y + i] = 1.0 - deg[i];
+                }
+                // Edge entries: L_ij = −g_ij, so S_ij = g − α/n, T_ij = g.
+                for e in 0..c.len() {
+                    x[lay.s + n + e] = x[lay.g + e] - b0;
+                    x[lay.t + n + e] = x[lay.g + e];
+                }
+            }
         }
         if lay.heterogeneous {
             for &(i, j) in warm.edges() {
-                x[lay.z + incidence::edge_index(n, i, j)] = 1.0;
+                if let Some(l) = eidx(i, j) {
+                    x[lay.z + l] = 1.0;
+                }
             }
             for l in 0..lay.m {
                 x[lay.nu + l] = x[lay.z + l] - x[lay.g + l];
@@ -458,7 +539,7 @@ pub fn run_admm(
 
     // Best-candidate tracking: start from the warm-start iterate.
     let mut best_y = x.clone();
-    let mut best_r_est = candidate_r_asym(n, &x[lay.g..lay.g + lay.m]);
+    let mut best_r_est = candidate_r_asym(n, &x[lay.g..lay.g + lay.m], cand);
     const EVAL_EVERY: usize = 5;
 
     for it in 0..spec.max_iters {
@@ -472,9 +553,17 @@ pub fn run_admm(
         if y[lay.lam] < 0.0 {
             y[lay.lam] = 0.0;
         }
-        proj::project_nsd_inplace(&mut y[lay.s..lay.s + n * n], n);
+        match cand {
+            Some(c) => {
+                proj::project_nsd_pattern(&mut y[lay.s..lay.s + lay.slack], c, -b0);
+                proj::project_psd_pattern(&mut y[lay.t..lay.t + lay.slack], c, 0.0);
+            }
+            None => {
+                proj::project_nsd_inplace(&mut y[lay.s..lay.s + n * n], n);
+                proj::project_psd_inplace(&mut y[lay.t..lay.t + n * n], n);
+            }
+        }
         proj::project_nonneg(&mut y[lay.y..lay.y + n]);
-        proj::project_psd_inplace(&mut y[lay.t..lay.t + n * n], n);
         if lay.heterogeneous {
             proj::project_binary_top_r(&mut y[lay.z..lay.z + lay.m], cs);
             proj::project_nonneg(&mut y[lay.nu..lay.nu + lay.m]);
@@ -514,7 +603,7 @@ pub fn run_admm(
 
         // ---- Candidate tracking. ----
         if it % EVAL_EVERY == 0 || res < spec.eps {
-            let r_est = candidate_r_asym(n, &y[lay.g..lay.g + lay.m]);
+            let r_est = candidate_r_asym(n, &y[lay.g..lay.g + lay.m], cand);
             if r_est < best_r_est {
                 best_r_est = r_est;
                 best_y.copy_from_slice(&y);
@@ -548,15 +637,19 @@ pub fn run_admm(
 /// and useless as a discriminator). The spectral evaluation goes through
 /// [`crate::graph::spectral::r_asym_graph`], so large-`n` candidates use the
 /// matrix-free Lanczos path instead of a dense eigendecomposition.
-fn candidate_r_asym(n: usize, g: &[f64]) -> f64 {
-    // Canonical edge-space indices are lexicographic, so the filtered support
-    // comes out in `Graph::new`'s sorted order and the weight vector stays
-    // aligned with `graph.edges()`.
+fn candidate_r_asym(n: usize, g: &[f64], cand: Option<&CandidateSet>) -> f64 {
+    // Canonical edge-space indices are lexicographic — and candidate supports
+    // keep their edge list sorted — so the filtered support comes out in
+    // `Graph::new`'s sorted order and the weight vector stays aligned with
+    // `graph.edges()`.
     let mut support: Vec<(usize, usize)> = Vec::new();
     let mut weights: Vec<f64> = Vec::new();
     for (l, &v) in g.iter().enumerate() {
         if v > 1e-9 {
-            support.push(incidence::edge_pair(n, l));
+            support.push(match cand {
+                Some(c) => c.pair(l),
+                None => incidence::edge_pair(n, l),
+            });
             weights.push(v);
         }
     }
@@ -635,19 +728,83 @@ mod tests {
         spec.max_iters = 12;
         let cs = spec.scenario.constraints(spec.r).unwrap();
         let ops = operators::build_homogeneous(10, spec.alpha, 1e-8);
-        let warm = warm_start_graph(&spec, &cs);
+        let warm = warm_start_graph(&spec, &cs, None);
         let mut s_cg = spec.clone();
         s_cg.xstep = XStep::Cg;
         let mut s_kkt = spec;
         s_kkt.xstep = XStep::Bicgstab;
-        let a = run_admm(&s_cg, &cs, &ops, &warm);
-        let b = run_admm(&s_kkt, &cs, &ops, &warm);
+        let a = run_admm(&s_cg, &cs, &ops, &warm, None);
+        let b = run_admm(&s_kkt, &cs, &ops, &warm, None);
         assert_eq!(a.iterations, b.iterations);
         assert_eq!(a.krylov_failures, 0, "cg failures");
         assert_eq!(b.krylov_failures, 0, "kkt failures");
         for (i, (p, q)) in a.x.iter().zip(&b.x).enumerate() {
             assert!((p - q).abs() < 1e-4, "x[{i}]: cg {p} vs kkt {q}");
         }
+    }
+
+    #[test]
+    fn full_candidate_spec_matches_legacy_exactly() {
+        // `--candidates full` must dispatch to the untouched dense path:
+        // identical topology, identical r_asym bits, identical iterate count.
+        let mut legacy = small_spec(8, 12);
+        legacy.max_iters = 40;
+        let mut full = legacy.clone();
+        full.candidates = Some("full".into());
+        let a = solve(&legacy).expect("legacy");
+        let b = solve(&full).expect("full");
+        assert_eq!(a.topology.graph.edges(), b.topology.graph.edges());
+        assert_eq!(a.r_asym.to_bits(), b.r_asym.to_bits());
+        assert_eq!(a.admm_iterations, b.admm_iterations);
+        assert_eq!(a.final_residual.to_bits(), b.final_residual.to_bits());
+    }
+
+    #[test]
+    fn union_support_run_stays_on_support() {
+        // Sparse homogeneous run over the union-of-baselines support: the
+        // solve must succeed, satisfy the constraint system and only ever use
+        // support edges.
+        let mut spec = small_spec(12, 18);
+        spec.max_iters = 60;
+        spec.restarts = 1;
+        spec.candidates = Some("union".into());
+        let rep = solve(&spec).expect("sparse solve");
+        assert_eq!(rep.topology.num_edges(), 18);
+        assert!(rep.constraint_check.is_ok(), "{:?}", rep.constraint_check);
+        assert!(rep.r_asym < 1.0);
+        let cand =
+            crate::topo::candidates::CandidateSet::generate("union", &spec.scenario, spec.seed)
+                .unwrap();
+        for &(a, b) in rep.topology.graph.edges() {
+            assert!(cand.position(a, b).is_some(), "off-support edge ({a},{b})");
+        }
+    }
+
+    #[test]
+    fn knn_support_heterogeneous_run() {
+        // Node-level heterogeneity on a k-NN support (the sparse headline
+        // configuration, shrunk to test size).
+        let mut bw = vec![9.76; 4];
+        bw.extend(vec![3.25; 4]);
+        let mut spec = OptimizeSpec::with_scenario(BandwidthScenario::NodeLevel { bw }, 10);
+        spec.max_iters = 80;
+        spec.anneal_steps = 200;
+        spec.refine_iters = 80;
+        spec.candidates = Some("knn:4".into());
+        let rep = solve(&spec).expect("knn solve");
+        assert_eq!(rep.topology.num_edges(), 10);
+        assert!(rep.constraint_check.is_ok(), "{:?}", rep.constraint_check);
+        assert!(rep.r_asym > 0.0 && rep.r_asym < 1.0);
+    }
+
+    #[test]
+    fn disconnected_support_budget_errors_cleanly() {
+        // r larger than the support can hold is an Infeasible error, not a
+        // panic.
+        let mut spec = small_spec(8, 20);
+        spec.candidates = Some("geometric:1".into());
+        // geometric:1 is the ring: 8 edges < r=20.
+        assert!(matches!(solve(&spec), Err(OptimizeError::Infeasible(_))));
     }
 
     #[test]

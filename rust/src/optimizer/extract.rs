@@ -15,12 +15,39 @@
 use super::operators::VarLayout;
 use super::{OptimizeError, OptimizeSpec};
 use crate::bandwidth::ConstraintSet;
-use crate::graph::incidence::{edge_pair, num_possible_edges};
+use crate::graph::incidence::{edge_index, edge_pair, num_possible_edges};
 use crate::graph::laplacian::weight_matrix_from_edge_weights;
 use crate::graph::metrics::is_connected;
 use crate::graph::{Graph, Topology};
+use crate::topo::candidates::CandidateSet;
 use crate::topo::weights::optimize_weights;
 use crate::util::rng::Xoshiro256pp;
+
+/// Node pair of edge index `l` in the index space the constraint system uses:
+/// canonical edge space when `cand` is `None`, support position otherwise.
+fn pair_of(n: usize, cand: Option<&CandidateSet>, l: usize) -> (usize, usize) {
+    match cand {
+        Some(c) => c.pair(l),
+        None => edge_pair(n, l),
+    }
+}
+
+/// Edge index of a node pair in the active index space; `None` when the pair
+/// is outside a candidate support.
+fn index_of(n: usize, cand: Option<&CandidateSet>, i: usize, j: usize) -> Option<usize> {
+    match cand {
+        Some(c) => c.position(i, j),
+        None => Some(edge_index(n, i, j)),
+    }
+}
+
+/// Size of the active edge index space.
+fn edge_count(n: usize, cand: Option<&CandidateSet>) -> usize {
+    match cand {
+        Some(c) => c.len(),
+        None => num_possible_edges(n),
+    }
+}
 
 /// Relaxed constraint check for a final edge set: equality rows are treated
 /// as upper bounds (the optimizer steers counts toward them; the physical
@@ -36,13 +63,18 @@ pub fn check_relaxed(cs: &ConstraintSet, selected: &[usize]) -> Result<(), Strin
 /// Greedy random constrained graph for warm starts on masked edge spaces
 /// (e.g. BCube): sample eligible edges in random order, respect capacity
 /// rows, aim for connectivity first (spanning-forest bias), then fill to `r`.
-pub fn greedy_constrained_graph(cs: &ConstraintSet, seed: u64) -> Graph {
+/// `cand` names the index space `cs` is expressed in (`None` = canonical).
+pub fn greedy_constrained_graph(
+    cs: &ConstraintSet,
+    seed: u64,
+    cand: Option<&CandidateSet>,
+) -> Graph {
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
     let m = cs.eligible.len();
     let scores: Vec<f64> = (0..m).map(|_| rng.next_f64()).collect();
-    let sel = select_edges_exact(cs, &scores, cs.r, seed);
+    let sel = select_edges_exact(cs, &scores, cs.r, seed, cand);
     let n = cs.n;
-    Graph::new(n, sel.iter().map(|&l| edge_pair(n, l)))
+    Graph::new(n, sel.iter().map(|&l| pair_of(n, cand, l)))
 }
 
 /// [`select_edges`] with jittered restarts: greedy packing can dead-end when
@@ -55,8 +87,9 @@ pub fn select_edges_exact(
     scores: &[f64],
     r: usize,
     seed: u64,
+    cand: Option<&CandidateSet>,
 ) -> Vec<usize> {
-    let base = select_edges(cs, scores, r);
+    let base = select_edges(cs, scores, r, cand);
     if base.len() >= r {
         return base;
     }
@@ -68,7 +101,7 @@ pub fn select_edges_exact(
             .iter()
             .map(|&s| s + 0.15 * scale * rng.next_f64())
             .collect();
-        let sel = select_edges(cs, &jittered, r);
+        let sel = select_edges(cs, &jittered, r, cand);
         if sel.len() > best.len() {
             best = sel;
         }
@@ -82,10 +115,15 @@ pub fn select_edges_exact(
 /// Greedy score-ordered selection under the constraint rows. Two passes:
 /// a spanning pass that prefers component-merging edges (connectivity), then
 /// a fill pass by raw score.
-pub fn select_edges(cs: &ConstraintSet, scores: &[f64], r: usize) -> Vec<usize> {
+pub fn select_edges(
+    cs: &ConstraintSet,
+    scores: &[f64],
+    r: usize,
+    cand: Option<&CandidateSet>,
+) -> Vec<usize> {
     let n = cs.n;
     let m = scores.len();
-    debug_assert_eq!(m, num_possible_edges(n));
+    debug_assert_eq!(m, edge_count(n, cand));
     let mut rows_of_edge: Vec<Vec<usize>> = vec![Vec::new(); m];
     for (ri, row) in cs.rows.iter().enumerate() {
         for &l in &row.edges {
@@ -107,7 +145,7 @@ pub fn select_edges(cs: &ConstraintSet, scores: &[f64], r: usize) -> Vec<usize> 
         if selected.len() == r {
             break;
         }
-        let (i, j) = edge_pair(n, l);
+        let (i, j) = pair_of(n, cand, l);
         if uf.find(i) != uf.find(j) && fits(l, &used) {
             uf.union(i, j);
             for &ri in &rows_of_edge[l] {
@@ -188,16 +226,20 @@ pub fn select_edges(cs: &ConstraintSet, scores: &[f64], r: usize) -> Vec<usize> 
     selected
 }
 
-/// Extract the final topology from ADMM iterates.
+/// Extract the final topology from ADMM iterates. On the sparse path
+/// (`cand = Some`) the iterates, scores and constraint rows are all indexed
+/// by support position; nothing here touches the `O(n²)` edge space.
 pub fn extract_topology(
     spec: &OptimizeSpec,
     cs: &ConstraintSet,
     lay: &VarLayout,
     x: &[f64],
     y: &[f64],
+    cand: Option<&CandidateSet>,
 ) -> Result<Topology, OptimizeError> {
     let n = lay.n;
     let m = lay.m;
+    debug_assert_eq!(m, edge_count(n, cand));
 
     // Scores: relaxed-weight mass plus a strong bonus for z₁-selected edges.
     let mut scores = vec![0.0f64; m];
@@ -208,7 +250,7 @@ pub fn extract_topology(
         }
     }
 
-    let selected = select_edges_exact(cs, &scores, spec.r, spec.seed);
+    let selected = select_edges_exact(cs, &scores, spec.r, spec.seed, cand);
     if selected.len() < spec.r {
         return Err(OptimizeError::Infeasible(format!(
             "constraints admit only {} of r={} edges",
@@ -216,7 +258,7 @@ pub fn extract_topology(
             spec.r
         )));
     }
-    let graph = Graph::new(n, selected.iter().map(|&l| edge_pair(n, l)));
+    let graph = Graph::new(n, selected.iter().map(|&l| pair_of(n, cand, l)));
     if !is_connected(&graph) {
         return Err(OptimizeError::Infeasible(
             "extracted support is disconnected (increase r or relax capacities)".into(),
@@ -228,8 +270,9 @@ pub fn extract_topology(
         .edges()
         .iter()
         .map(|&(i, j)| {
-            let l = crate::graph::incidence::edge_index(n, i, j);
-            let v = y[lay.g + l].max(x[lay.g + l]).max(0.0);
+            let v = index_of(n, cand, i, j)
+                .map(|l| y[lay.g + l].max(x[lay.g + l]).max(0.0))
+                .unwrap_or(0.0);
             if v > 1e-9 {
                 v
             } else {
@@ -256,9 +299,10 @@ pub fn polish_support(
     cs: &ConstraintSet,
     swaps: usize,
     seed: u64,
+    cand: Option<&CandidateSet>,
 ) -> (Graph, Vec<f64>) {
     let n = graph.num_nodes();
-    let m = num_possible_edges(n);
+    let m = edge_count(n, cand);
     let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x9E37);
     let mut cur = graph.clone();
     let mut w = optimize_weights(&cur, Some(init_w), 150);
@@ -278,13 +322,17 @@ pub fn polish_support(
     // homogeneous Algorithm-1 rows).
     type Move = (Vec<(usize, usize)>, Vec<usize>);
 
-    let eidx = |e: (usize, usize)| crate::graph::incidence::edge_index(n, e.0, e.1);
+    // On the sparse path off-support pairs have no index: moves that would
+    // add one are skipped (the support is the search space by contract).
+    let eidx = |e: (usize, usize)| index_of(n, cand, e.0, e.1);
 
     for _round in 0..swaps {
         let mut used = vec![0usize; cs.rows.len()];
-        for &l in &cur.edge_indices() {
-            for &ri in &rows_of_edge[l] {
-                used[ri] += 1;
+        for &(a, b) in cur.edges() {
+            if let Some(l) = eidx((a, b)) {
+                for &ri in &rows_of_edge[l] {
+                    used[ri] += 1;
+                }
             }
         }
         let mean_w = (w.iter().sum::<f64>() / w.len() as f64).max(1e-3);
@@ -293,8 +341,10 @@ pub fn polish_support(
             let mut delta: std::collections::HashMap<usize, isize> =
                 std::collections::HashMap::new();
             for &e in &mv.0 {
-                for &ri in &rows_of_edge[eidx(e)] {
-                    *delta.entry(ri).or_insert(0) -= 1;
+                if let Some(l) = eidx(e) {
+                    for &ri in &rows_of_edge[l] {
+                        *delta.entry(ri).or_insert(0) -= 1;
+                    }
                 }
             }
             for &l in &mv.1 {
@@ -331,7 +381,7 @@ pub fn polish_support(
                 (0..32).map(|_| rng.index(m)).collect()
             };
             for add_l in adds {
-                let (a, b) = edge_pair(n, add_l);
+                let (a, b) = pair_of(n, cand, add_l);
                 if cur.has_edge(a, b) {
                     continue;
                 }
@@ -355,7 +405,10 @@ pub fn polish_support(
                 if cur.has_edge(p.0, p.1) || cur.has_edge(q.0, q.1) {
                     continue;
                 }
-                let mv: Move = (vec![e1, e2], vec![eidx(p), eidx(q)]);
+                let (Some(lp), Some(lq)) = (eidx(p), eidx(q)) else {
+                    continue; // off-support pair on the sparse path
+                };
+                let mv: Move = (vec![e1, e2], vec![lp, lq]);
                 if move_fits(&mv, &used) {
                     candidates.push(mv);
                 }
@@ -374,7 +427,7 @@ pub fn polish_support(
                 .map(|(&e, &wv)| (e, wv))
                 .collect();
             for &l in &mv.1 {
-                wmap.insert(edge_pair(n, l), mean_w);
+                wmap.insert(pair_of(n, cand, l), mean_w);
             }
             let g2 = Graph::new(n, wmap.keys().copied().collect::<Vec<_>>());
             let w2: Vec<f64> = g2.edges().iter().map(|e| wmap[e]).collect();
@@ -454,7 +507,7 @@ mod tests {
         scores[0] = 0.9; // (0,1)
         scores[3] = 0.8; // (1,2)
         scores[5] = 0.7; // (2,3)
-        let sel = select_edges(&cs, &scores, 3);
+        let sel = select_edges(&cs, &scores, 3, None);
         assert_eq!(sel, vec![0, 3, 5]);
     }
 
@@ -471,7 +524,7 @@ mod tests {
         scores[3] = 0.8;
         // node 3's edges score low but must appear for connectivity
         scores[2] = 0.1; // (0,3)
-        let sel = select_edges(&cs, &scores, 3);
+        let sel = select_edges(&cs, &scores, 3, None);
         let g = Graph::new(n, sel.iter().map(|&l| edge_pair(n, l)));
         assert!(is_connected(&g), "{sel:?}");
     }
@@ -489,7 +542,7 @@ mod tests {
         scores[0] = 1.0; // (0,1)
         scores[1] = 0.9; // (0,2)
         scores[2] = 0.8; // (0,3)
-        let sel = select_edges(&cs, &scores, 4);
+        let sel = select_edges(&cs, &scores, 4, None);
         let node0_edges = sel.iter().filter(|&&l| l < 4).count();
         assert_eq!(node0_edges, 1, "{sel:?}");
     }
@@ -498,10 +551,45 @@ mod tests {
     fn greedy_constrained_graph_bcube_is_connected_and_capped() {
         let sc = BandwidthScenario::paper_inter_server();
         let cs = sc.constraints(24).unwrap();
-        let g = greedy_constrained_graph(&cs, 9);
+        let g = greedy_constrained_graph(&cs, 9, None);
         assert_eq!(g.num_edges(), 24);
         assert!(is_connected(&g));
         assert!(check_relaxed(&cs, &g.edge_indices()).is_ok());
+    }
+
+    #[test]
+    fn select_edges_on_support_positions() {
+        // Support-indexed constraint system: selection happens entirely in
+        // candidate-position space and still packs the tight node-level
+        // equality caps (sum of caps = 2r exactly).
+        let sc = BandwidthScenario::paper_node_level();
+        let cand = CandidateSet::generate("union", &sc, 2).unwrap();
+        let cs = sc.constraints_on(16, &cand).unwrap();
+        let mut scores = vec![0.5; cand.len()];
+        for i in 0..16 {
+            scores[cand.position(i, (i + 1) % 16).unwrap()] = 1.0;
+        }
+        let sel = select_edges_exact(&cs, &scores, 16, 1, Some(&cand));
+        assert_eq!(sel.len(), 16, "{sel:?}");
+        assert!(check_relaxed(&cs, &sel).is_ok());
+        let g = Graph::new(16, sel.iter().map(|&e| cand.pair(e)));
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn polish_stays_on_support() {
+        // Polishing a support-indexed problem must never add an off-support
+        // edge.
+        let sc = BandwidthScenario::paper_homogeneous(10);
+        let cand = CandidateSet::generate("geometric:2", &sc, 1).unwrap();
+        let cs = sc.constraints_on(10, &cand).unwrap();
+        let ring: Vec<(usize, usize)> = (0..10).map(|i| (i, (i + 1) % 10)).collect();
+        let g = Graph::new(10, ring);
+        let w = vec![0.4; 10];
+        let (polished, _pw) = polish_support(&g, &w, &cs, 6, 3, Some(&cand));
+        for &(a, b) in polished.edges() {
+            assert!(cand.position(a, b).is_some(), "off-support edge ({a},{b})");
+        }
     }
 
     #[test]

@@ -98,6 +98,13 @@ pub struct OptimizeSpec {
     /// fan out across a thread pool — e.g. the reproduce sweep cells — set
     /// this to 1 so nested restarts don't oversubscribe the machine.
     pub restart_threads: usize,
+    /// Candidate edge-support spec (`--candidates`): `None` or `Some("full")`
+    /// keeps the legacy dense formulation over all n(n−1)/2 pairs; any other
+    /// spec (`knn:K`, `geometric:K`, `union`) restricts every edge variable —
+    /// incidence operators, slack patterns, projections, extraction — to the
+    /// generated support, making the per-iteration cost O(|E_cand|) instead
+    /// of O(n²). See [`crate::topo::candidates::CandidateSet::generate`].
+    pub candidates: Option<String>,
 }
 
 impl OptimizeSpec {
@@ -124,6 +131,7 @@ impl OptimizeSpec {
             restarts: 1,
             xstep: XStep::default(),
             restart_threads: 0,
+            candidates: None,
         }
     }
 }

@@ -31,6 +31,7 @@
 use crate::bandwidth::ConstraintSet;
 use crate::graph::incidence::{edge_pair, num_possible_edges};
 use crate::linalg::{CscMatrix, LinearOperator};
+use crate::topo::candidates::CandidateSet;
 use std::cell::RefCell;
 
 /// Segment offsets into the stacked primal vector `X`.
@@ -38,18 +39,23 @@ use std::cell::RefCell;
 pub struct VarLayout {
     /// Number of nodes.
     pub n: usize,
-    /// Number of logical edges m = n(n−1)/2.
+    /// Number of edge variables: `n(n−1)/2` on the dense layouts,
+    /// `|E_cand|` on the candidate-support layouts.
     pub m: usize,
     /// Offset of the edge-weight segment `g` (length m).
     pub g: usize,
     /// Offset of the λ̃ scalar.
     pub lam: usize,
-    /// Offset of the PSD slack matrix `S` (length n²).
+    /// Offset of the NSD slack segment `S` (length [`VarLayout::slack`]).
     pub s: usize,
     /// Offset of the per-node segment `y` (length n).
     pub y: usize,
-    /// Offset of the NSD slack matrix `T` (length n²).
+    /// Offset of the PSD slack segment `T` (length [`VarLayout::slack`]).
     pub t: usize,
+    /// Length of each spectral slack segment: `n²` (full row-major matrix)
+    /// on the dense layouts, `n + m` (diagonal + candidate-edge pattern) on
+    /// the candidate-support layouts.
+    pub slack: usize,
     /// Heterogeneous only: offset of the binary edge-selection segment `z`
     /// (length m; `usize::MAX` when absent).
     pub z: usize,
@@ -87,6 +93,7 @@ impl VarLayout {
             s,
             y,
             t,
+            slack: n * n,
             z: usize::MAX,
             nu: usize::MAX,
             u: usize::MAX,
@@ -107,6 +114,51 @@ impl VarLayout {
         l.q_ineq = q_ineq;
         l.total = l.u + q_ineq;
         l.rows = 2 * n * n + n + q + l.m;
+        l.heterogeneous = true;
+        l
+    }
+
+    /// Homogeneous layout restricted to a candidate support of `m` edges:
+    /// `g` has one entry per candidate edge and the spectral slacks shrink
+    /// from `n²` to the pattern length `p = n + m` (diagonal first, then the
+    /// candidate edges in support order).
+    pub fn homogeneous_on(n: usize, m: usize) -> VarLayout {
+        let p = n + m;
+        let g = 0;
+        let lam = m;
+        let s = m + 1;
+        let y = s + p;
+        let t = y + n;
+        let total = t + p;
+        VarLayout {
+            n,
+            m,
+            g,
+            lam,
+            s,
+            y,
+            t,
+            slack: p,
+            z: usize::MAX,
+            nu: usize::MAX,
+            u: usize::MAX,
+            q_ineq: 0,
+            total,
+            rows: 2 * p + n,
+            heterogeneous: false,
+        }
+    }
+
+    /// Heterogeneous layout restricted to a candidate support of `m` edges
+    /// (`q` constraint rows, `q_ineq` of them inequalities).
+    pub fn heterogeneous_on(n: usize, m: usize, q: usize, q_ineq: usize) -> VarLayout {
+        let mut l = VarLayout::homogeneous_on(n, m);
+        l.z = l.total;
+        l.nu = l.z + m;
+        l.u = l.nu + m;
+        l.q_ineq = q_ineq;
+        l.total = l.u + q_ineq;
+        l.rows = 2 * (n + m) + n + q + m;
         l.heterogeneous = true;
         l
     }
@@ -306,6 +358,121 @@ pub fn build_heterogeneous(cs: &ConstraintSet, alpha: f64, delta: f64) -> AdmmOp
     }
 
     finish(layout, trips, b, delta)
+}
+
+/// Assemble operators for the homogeneous problem restricted to a candidate
+/// support: the pattern-restricted Eq. 26. Rows exist only for pattern
+/// entries — `p = n + m` R1 rows, `p` R2 rows, `n` R3 rows — and the
+/// off-pattern entries of `S`/`T` are held at their implied constants
+/// (`S_off = −α/n`, `T_off = 0`), at which the dropped rows are identically
+/// satisfied. One row per candidate edge replaces the dense builder's
+/// duplicated `(i,j)`/`(j,i)` pair.
+pub fn build_homogeneous_on(cand: &CandidateSet, alpha: f64, delta: f64) -> AdmmOperators {
+    let layout = VarLayout::homogeneous_on(cand.n(), cand.len());
+    let (trips, b) = base_blocks_on(&layout, cand, alpha);
+    finish(layout, trips, b, delta)
+}
+
+/// Assemble operators for the heterogeneous problem restricted to a
+/// candidate support. `cs` must already be support-indexed (row/mask edge
+/// indices are candidate positions — build it with
+/// [`crate::bandwidth::scenarios::BandwidthScenario::constraints_on`]).
+pub fn build_heterogeneous_on(
+    cs: &ConstraintSet,
+    cand: &CandidateSet,
+    alpha: f64,
+    delta: f64,
+) -> AdmmOperators {
+    let n = cand.n();
+    let m = cand.len();
+    debug_assert_eq!(cs.n, n);
+    debug_assert_eq!(cs.eligible.len(), m, "constraint set is not support-indexed");
+    let q = cs.rows.len();
+    let q_ineq = cs.rows.iter().filter(|r| !r.equality).count();
+    let layout = VarLayout::heterogeneous_on(n, m, q, q_ineq);
+    let (mut trips, mut b) = base_blocks_on(&layout, cand, alpha);
+
+    let p = n + m;
+    let r4 = 2 * p + n; // first R4 row
+    let r5 = r4 + q; // first R5 row
+
+    // R4: M z (+u) = e, over candidate positions.
+    let mut slack = 0usize;
+    for (qi, row) in cs.rows.iter().enumerate() {
+        for &e in &row.edges {
+            trips.push((r4 + qi, layout.z + e, 1.0));
+        }
+        if !row.equality {
+            trips.push((r4 + qi, layout.u + slack, 1.0));
+            slack += 1;
+        }
+        b.push(row.cap as f64);
+    }
+    debug_assert_eq!(slack, q_ineq);
+
+    // R5: g − z + ν = 0.
+    for e in 0..m {
+        trips.push((r5 + e, layout.g + e, 1.0));
+        trips.push((r5 + e, layout.z + e, -1.0));
+        trips.push((r5 + e, layout.nu + e, 1.0));
+        b.push(0.0);
+    }
+
+    finish(layout, trips, b, delta)
+}
+
+/// Pattern-restricted R1–R3 blocks. Row order inside R1/R2: the `n` diagonal
+/// entries first, then the `m` candidate edges in support order (matching the
+/// slack-segment layout `[diag | edges]`).
+fn base_blocks_on(
+    layout: &VarLayout,
+    cand: &CandidateSet,
+    alpha: f64,
+) -> (Vec<(usize, usize, f64)>, Vec<f64>) {
+    let n = layout.n;
+    let m = layout.m;
+    let p = n + m;
+    let r1 = 0usize; // p rows
+    let r2 = p; // p rows
+    let r3 = 2 * p; // n rows
+    let mut trips: Vec<(usize, usize, f64)> = Vec::with_capacity(10 * m + 6 * n);
+
+    for (e, &(i, j)) in cand.edges().iter().enumerate() {
+        // L(g) on the pattern: edge e adds +g_e at (i,i) and (j,j), −g_e at
+        // the single edge row (one row per support edge — the dense builder's
+        // (i,j)/(j,i) rows are identical and merged here).
+        trips.push((r1 + i, layout.g + e, 1.0));
+        trips.push((r1 + j, layout.g + e, 1.0));
+        trips.push((r1 + n + e, layout.g + e, -1.0));
+        trips.push((r2 + i, layout.g + e, 1.0));
+        trips.push((r2 + j, layout.g + e, 1.0));
+        trips.push((r2 + n + e, layout.g + e, -1.0));
+        // R3: diag(L) rows i and j get g_e.
+        trips.push((r3 + i, layout.g + e, 1.0));
+        trips.push((r3 + j, layout.g + e, 1.0));
+    }
+    // λ̃ columns: −I in R1, +I in R2 (diagonal rows only).
+    for k in 0..n {
+        trips.push((r1 + k, layout.lam, -1.0));
+        trips.push((r2 + k, layout.lam, 1.0));
+    }
+    // Slack identities over the pattern: S in R1, T in R2, y in R3.
+    for e in 0..p {
+        trips.push((r1 + e, layout.s + e, 1.0));
+        trips.push((r2 + e, layout.t + e, 1.0));
+    }
+    for k in 0..n {
+        trips.push((r3 + k, layout.y + k, 1.0));
+    }
+
+    // b: R1 = −α/n on every pattern entry of −α·11ᵀ/n; R2 = 2 on the
+    // diagonal, 0 on edges; R3 = 1.
+    let mut b = Vec::with_capacity(layout.rows);
+    b.extend(std::iter::repeat(-alpha / n as f64).take(p));
+    b.extend(std::iter::repeat(2.0).take(n));
+    b.extend(std::iter::repeat(0.0).take(m));
+    b.extend(std::iter::repeat(1.0).take(n));
+    (trips, b)
 }
 
 /// R1–R3 blocks shared by both problems.
@@ -560,6 +727,90 @@ mod tests {
         // b for R4 = caps from Algorithm 1.
         assert_eq!(ops.b[r4], 3.0);
         assert_eq!(ops.b[r4 + 15], 1.0);
+    }
+
+    #[test]
+    fn sparse_blocks_match_direct_formulas() {
+        let sc = BandwidthScenario::paper_node_level();
+        let cand = CandidateSet::generate("union", &sc, 1).unwrap();
+        let cs = sc.constraints_on(16, &cand).unwrap();
+        let ops = build_heterogeneous_on(&cs, &cand, 2.0, 1e-8);
+        let lay = &ops.layout;
+        let (n, m) = (16usize, cand.len());
+        let p = n + m;
+        assert_eq!(lay.slack, p);
+        assert_eq!(lay.rows, 2 * p + n + cs.rows.len() + m);
+        assert_eq!(lay.total, m + 1 + p + n + p + m + m + lay.q_ineq);
+
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let mut x = vec![0.0; lay.total];
+        for e in 0..m {
+            x[lay.g + e] = rng.next_f64();
+        }
+        x[lay.lam] = 0.31;
+        let ax = ops.a.matvec(&x);
+        // Weighted degrees over the support.
+        let mut deg = vec![0.0; n];
+        for (e, &(i, j)) in cand.edges().iter().enumerate() {
+            deg[i] += x[lay.g + e];
+            deg[j] += x[lay.g + e];
+        }
+        for i in 0..n {
+            assert!((ax[i] - (deg[i] - 0.31)).abs() < 1e-12, "R1 diag {i}");
+            assert!((ax[p + i] - (deg[i] + 0.31)).abs() < 1e-12, "R2 diag {i}");
+            assert!((ax[2 * p + i] - deg[i]).abs() < 1e-12, "R3 {i}");
+        }
+        for e in 0..m {
+            // Edge rows carry L_ij = −g_e (single row per support edge).
+            assert!((ax[n + e] + x[lay.g + e]).abs() < 1e-12, "R1 edge {e}");
+            assert!((ax[p + n + e] + x[lay.g + e]).abs() < 1e-12, "R2 edge {e}");
+        }
+        // b layout: −α/n over R1, 2 on the R2 diagonal, 0 on R2 edges, 1 in R3.
+        assert!((ops.b[0] + 2.0 / 16.0).abs() < 1e-15);
+        assert!((ops.b[n] + 2.0 / 16.0).abs() < 1e-15);
+        assert!((ops.b[p] - 2.0).abs() < 1e-15);
+        assert!((ops.b[p + n]).abs() < 1e-15);
+        assert!((ops.b[2 * p] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sparse_r4_r5_blocks() {
+        let sc = BandwidthScenario::paper_node_level();
+        let cand = CandidateSet::generate("knn:4", &sc, 1).unwrap();
+        let cs = sc.constraints_on(16, &cand).unwrap();
+        let ops = build_heterogeneous_on(&cs, &cand, 2.0, 1e-8);
+        let lay = &ops.layout;
+        let p = 16 + cand.len();
+        let r4 = 2 * p + 16;
+        let r5 = r4 + cs.rows.len();
+        // R5: g_e − z_e + ν_e = 0.
+        let mut x = vec![0.0; lay.total];
+        x[lay.g] = 0.4;
+        x[lay.z] = 1.0;
+        x[lay.nu] = 0.6;
+        let ax = ops.a.matvec(&x);
+        assert!((ax[r5]).abs() < 1e-15);
+        // R4: candidate edge 0 = (0, j) is incident to node 0's row.
+        let (a, _bnode) = cand.pair(0);
+        assert!((ax[r4 + a] - 1.0).abs() < 1e-15);
+        // caps match the full builder's Algorithm-1 allocation.
+        assert_eq!(ops.b[r4], 3.0);
+        assert_eq!(ops.b[r4 + 15], 1.0);
+    }
+
+    #[test]
+    fn sparse_homogeneous_build() {
+        let sc = BandwidthScenario::paper_homogeneous(12);
+        let cand = CandidateSet::generate("geometric:2", &sc, 1).unwrap();
+        let ops = build_homogeneous_on(&cand, 2.0, 1e-8);
+        let lay = &ops.layout;
+        assert!(!lay.heterogeneous);
+        assert_eq!(lay.m, cand.len());
+        assert_eq!(lay.slack, 12 + cand.len());
+        assert_eq!(lay.rows, 2 * lay.slack + 12);
+        assert_eq!(ops.c[lay.lam], -1.0);
+        // No O(n²) state: total primal dim is linear in n + m.
+        assert_eq!(lay.total, lay.m + 1 + lay.slack + 12 + lay.slack);
     }
 
     #[test]

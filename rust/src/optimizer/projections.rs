@@ -10,7 +10,10 @@
 //!   capacity-aware so iterates don't fight the `M z = e` rows).
 
 use crate::bandwidth::ConstraintSet;
+use crate::linalg::lanczos::{lanczos_extreme_eigenpair, LanczosOptions, SpectralEnd};
+use crate::linalg::operator::LinearOperator;
 use crate::linalg::{DenseMatrix, SymEigen};
+use crate::topo::candidates::CandidateSet;
 
 /// Entrywise clamp to the non-negative orthant.
 pub fn project_nonneg(xs: &mut [f64]) {
@@ -72,6 +75,137 @@ fn project_spectral<F: Fn(f64) -> f64>(xs: &mut [f64], n: usize, f: F) {
     for i in 0..n {
         for j in 0..n {
             xs[i * n + j] = out[(i, j)];
+        }
+    }
+}
+
+/// Dense-reconstruction cutoff for the pattern projections (matches the
+/// dense↔Lanczos dispatch size used by `graph::spectral`).
+const PATTERN_DENSE_CUTOFF: usize = 160;
+/// Eigenvalues within this band of the admissible cone are not clipped.
+const PATTERN_EIG_TOL: f64 = 1e-7;
+/// Cap on extreme eigenpairs clipped per projection on the Lanczos path.
+const PATTERN_KMAX: usize = 8;
+
+/// The implied full slack matrix of a pattern-restricted segment:
+/// `M = off·11ᵀ + C`, where `C` is sparse on the candidate pattern
+/// (`C_ii = xs[i] − off`, `C_ij = xs[n+e] − off` on candidate edges, zero
+/// elsewhere). Matvecs are `O(n + |E_cand|)`.
+struct PatternMatrix<'a> {
+    n: usize,
+    edges: &'a [(usize, usize)],
+    xs: &'a [f64],
+    off: f64,
+}
+
+impl LinearOperator for PatternMatrix<'_> {
+    fn nrows(&self) -> usize {
+        self.n
+    }
+    fn ncols(&self) -> usize {
+        self.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let s: f64 = x.iter().sum();
+        for ((yi, &xi), &di) in y.iter_mut().zip(x).zip(&self.xs[..self.n]) {
+            *yi = self.off * s + (di - self.off) * xi;
+        }
+        for (e, &(a, b)) in self.edges.iter().enumerate() {
+            let c = self.xs[self.n + e] - self.off;
+            y[a] += c * x[b];
+            y[b] += c * x[a];
+        }
+    }
+}
+
+/// Pattern-restricted Eq. 25: project the slack segment `xs = [diag(0..n) |
+/// candidate edges(n..n+m)]` onto the NSD cone, holding the off-pattern
+/// entries at the implied constant `off`.
+///
+/// Below [`PATTERN_DENSE_CUTOFF`] the full matrix is reconstructed, projected
+/// exactly, and restricted back to the pattern. Above it, up to
+/// [`PATTERN_KMAX`] offending extreme eigenpairs are clipped one at a time
+/// via [`lanczos_extreme_eigenpair`] — an inexact projection, which ADMM
+/// tolerates the same way it tolerates an inexact X-step (the dual update
+/// keeps pulling iterates back toward the cone).
+pub fn project_nsd_pattern(xs: &mut [f64], cand: &CandidateSet, off: f64) {
+    project_spectral_pattern(xs, cand, off, true);
+}
+
+/// Pattern-restricted projection onto the PSD cone (`T₁ ⪰ 0`); see
+/// [`project_nsd_pattern`].
+pub fn project_psd_pattern(xs: &mut [f64], cand: &CandidateSet, off: f64) {
+    project_spectral_pattern(xs, cand, off, false);
+}
+
+fn project_spectral_pattern(xs: &mut [f64], cand: &CandidateSet, off: f64, nsd: bool) {
+    let n = cand.n();
+    debug_assert_eq!(xs.len(), n + cand.len());
+    if n <= PATTERN_DENSE_CUTOFF {
+        // Exact: reconstruct → project → restrict.
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                m[(i, j)] = off;
+            }
+        }
+        for (i, &d) in xs[..n].iter().enumerate() {
+            m[(i, i)] = d;
+        }
+        for (e, &(a, b)) in cand.edges().iter().enumerate() {
+            m[(a, b)] = xs[n + e];
+            m[(b, a)] = xs[n + e];
+        }
+        let clamp: fn(f64) -> f64 = if nsd { |l| l.min(0.0) } else { |l| l.max(0.0) };
+        let out = SymEigen::new(&m).apply_spectral(clamp);
+        for (i, d) in xs[..n].iter_mut().enumerate() {
+            *d = out[(i, i)];
+        }
+        for (e, &(a, b)) in cand.edges().iter().enumerate() {
+            xs[n + e] = 0.5 * (out[(a, b)] + out[(b, a)]);
+        }
+        return;
+    }
+
+    // Lanczos path: clip the worst offending extreme eigenpair, re-probe the
+    // updated operator, repeat up to PATTERN_KMAX times.
+    let end = if nsd {
+        SpectralEnd::Max
+    } else {
+        SpectralEnd::Min
+    };
+    for k in 0..PATTERN_KMAX {
+        let opts = LanczosOptions {
+            max_iter: 200,
+            tol: 1e-8,
+            seed: 11 + k as u64,
+        };
+        let pair = {
+            let op = PatternMatrix {
+                n,
+                edges: cand.edges(),
+                xs: &*xs,
+                off,
+            };
+            lanczos_extreme_eigenpair(&op, end, &[], &opts)
+        };
+        let Some(p) = pair else {
+            return;
+        };
+        let offending = if nsd {
+            p.value > PATTERN_EIG_TOL
+        } else {
+            p.value < -PATTERN_EIG_TOL
+        };
+        if !offending {
+            return;
+        }
+        // Subtract the pattern restriction of λ·vvᵀ.
+        for (xi, vi) in xs.iter_mut().zip(&p.vector) {
+            *xi -= p.value * vi * vi;
+        }
+        for (e, &(a, b)) in cand.edges().iter().enumerate() {
+            xs[n + e] -= p.value * p.vector[a] * p.vector[b];
         }
     }
 }
@@ -244,6 +378,75 @@ mod tests {
         assert_eq!(z.iter().filter(|&&v| v == 1.0).count(), 5);
         // The positive score is certainly in; exactly one edge is left out.
         assert_eq!(z[0], 1.0);
+    }
+
+    #[test]
+    fn pattern_projection_matches_dense_restrict() {
+        // Below the cutoff the pattern projection must equal
+        // project-then-restrict of the implied full matrix exactly.
+        let n = 8;
+        let cand = CandidateSet::generate(
+            "geometric:2",
+            &crate::bandwidth::scenarios::BandwidthScenario::paper_homogeneous(n),
+            1,
+        )
+        .unwrap();
+        let off = -0.25;
+        let mut xs: Vec<f64> = (0..n + cand.len())
+            .map(|i| ((i * 13 % 7) as f64) * 0.3 - 1.0)
+            .collect();
+        // Reference: reconstruct, dense-project, restrict.
+        let mut full = vec![off; n * n];
+        for i in 0..n {
+            full[i * n + i] = xs[i];
+        }
+        for (e, &(a, b)) in cand.edges().iter().enumerate() {
+            full[a * n + b] = xs[n + e];
+            full[b * n + a] = xs[n + e];
+        }
+        project_nsd_inplace(&mut full, n);
+        project_nsd_pattern(&mut xs, &cand, off);
+        for i in 0..n {
+            assert!((xs[i] - full[i * n + i]).abs() < 1e-12, "diag {i}");
+        }
+        for (e, &(a, b)) in cand.edges().iter().enumerate() {
+            assert!((xs[n + e] - full[a * n + b]).abs() < 1e-12, "edge {e}");
+        }
+    }
+
+    #[test]
+    fn pattern_projection_lanczos_clips_offenders() {
+        // Above the cutoff: a nearly-PSD pattern matrix with two strongly
+        // negative diagonal directions must come back (numerically) PSD.
+        let n = 200;
+        let cand = CandidateSet::generate(
+            "geometric:1",
+            &crate::bandwidth::scenarios::BandwidthScenario::paper_homogeneous(n),
+            1,
+        )
+        .unwrap();
+        let mut xs = vec![0.0; n + cand.len()];
+        for d in xs[..n].iter_mut() {
+            *d = 1.0;
+        }
+        xs[3] = -5.0;
+        xs[117] = -4.0;
+        for e in xs[n..].iter_mut() {
+            *e = 0.05;
+        }
+        project_psd_pattern(&mut xs, &cand, 0.0);
+        let op = PatternMatrix {
+            n,
+            edges: cand.edges(),
+            xs: &xs,
+            off: 0.0,
+        };
+        let res = crate::linalg::lanczos::lanczos_extremal(
+            &op,
+            &[],
+            &crate::linalg::lanczos::LanczosOptions::default(),
+        );
+        assert!(res.min > -1e-5, "min eig after PSD clip: {}", res.min);
     }
 
     #[test]

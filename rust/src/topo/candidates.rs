@@ -1,0 +1,468 @@
+//! Candidate edge sets: explicit supports for the sparse optimizer path.
+//!
+//! The ADMM formulation (Eq. 20/28) enumerates all `n(n−1)/2` logical edges,
+//! which caps `batopo optimize` near n=512 even with the matrix-free CG
+//! X-step. Sparse, structured graphs are known to be sufficient for fast
+//! consensus (EquiTopo reaches an O(1) consensus rate, base-(k+1) exponential
+//! graphs achieve finite-time consensus — see PAPERS.md), so restricting the
+//! optimization *support* to a good candidate edge set preserves topology
+//! quality while shrinking the edge-variable count from `O(n²)` to `O(n·k)`.
+//!
+//! A [`CandidateSet`] is a sorted, deduplicated list of node pairs; the
+//! sparse optimizer indexes every edge variable (`g`, `z`, `ν`) and the
+//! pattern-restricted slack blocks by **position in this list** instead of by
+//! canonical edge-space index. Generators:
+//!
+//! - `knn:K` — per-node k-nearest-neighbor on a bandwidth/latency affinity
+//!   (`min(bw_i, bw_j) / (1 + ring_distance)`; uniform bandwidth degrades to
+//!   ring-distance locality),
+//! - `geometric:K` — the K-hop ring neighborhood (1-D geometric graph),
+//! - `union` — union of strong baselines: ring ∪ chorded-ring exponential ∪
+//!   a U-EquiStatic circulant,
+//! - `full` — every pair; the optimizer routes this through the legacy dense
+//!   path, reproducing its iterates bit-for-bit.
+//!
+//! Connectivity contract: a disconnected support makes every selected
+//! topology disconnected (`r_asym = 1`), so generator outputs are
+//! auto-augmented with a spanning ring, while *user-supplied* supports
+//! ([`CandidateSet::from_edges`], [`CandidateSet::from_json`]) are rejected
+//! with a clean error.
+
+use crate::bandwidth::scenarios::BandwidthScenario;
+use crate::graph::incidence::num_possible_edges;
+use crate::graph::Graph;
+use crate::topo::baselines;
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// An explicit edge support for the sparse optimizer: a sorted list of node
+/// pairs `(i, j)` with `i < j`, plus the reverse position lookup.
+#[derive(Debug, Clone)]
+pub struct CandidateSet {
+    n: usize,
+    edges: Vec<(usize, usize)>,
+    pos: HashMap<(usize, usize), usize>,
+    spec: String,
+}
+
+/// Ring distance between two nodes laid out on a cycle of length `n` — the
+/// latency proxy used by the affinity generators.
+fn ring_distance(i: usize, j: usize, n: usize) -> usize {
+    let d = i.abs_diff(j);
+    d.min(n - d)
+}
+
+/// Union-find connectivity over a normalized edge list.
+fn is_connected_edges(n: usize, edges: &[(usize, usize)]) -> bool {
+    if n <= 1 {
+        return true;
+    }
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut [usize], x: usize) -> usize {
+        let mut r = x;
+        while parent[r] != r {
+            r = parent[r];
+        }
+        let mut c = x;
+        while parent[c] != r {
+            let next = parent[c];
+            parent[c] = r;
+            c = next;
+        }
+        r
+    }
+    let mut components = n;
+    for &(a, b) in edges {
+        let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+        if ra != rb {
+            parent[ra] = rb;
+            components -= 1;
+        }
+    }
+    components == 1
+}
+
+impl CandidateSet {
+    /// Build a support from an explicit edge list. Edges are normalized to
+    /// `i < j`, sorted and deduplicated. Fails with a clean error on
+    /// self-loops, out-of-range endpoints, or a **disconnected** support —
+    /// this is the strict constructor used for user-supplied/reloaded
+    /// supports; generators go through [`CandidateSet::from_edges_augmented`].
+    pub fn from_edges(
+        n: usize,
+        edges: impl IntoIterator<Item = (usize, usize)>,
+        spec: &str,
+    ) -> Result<CandidateSet, String> {
+        if n < 2 {
+            return Err(format!("candidate support needs n ≥ 2 (got n={n})"));
+        }
+        let mut es: Vec<(usize, usize)> = Vec::new();
+        for (a, b) in edges {
+            if a == b {
+                return Err(format!("candidate edge ({a},{b}) is a self-loop"));
+            }
+            if a >= n || b >= n {
+                return Err(format!("candidate edge ({a},{b}) out of bounds for n={n}"));
+            }
+            es.push((a.min(b), a.max(b)));
+        }
+        es.sort_unstable();
+        es.dedup();
+        if !is_connected_edges(n, &es) {
+            return Err(format!(
+                "candidate support ({} edges) does not connect all {n} nodes — every \
+                 topology inside it would have r_asym = 1; add edges or use a generator \
+                 (generators auto-augment with a spanning ring)",
+                es.len()
+            ));
+        }
+        let pos = es.iter().enumerate().map(|(k, &e)| (e, k)).collect();
+        Ok(CandidateSet {
+            n,
+            edges: es,
+            pos,
+            spec: spec.to_string(),
+        })
+    }
+
+    /// [`CandidateSet::from_edges`] with the connectivity contract satisfied
+    /// by construction: the spanning ring `(i, i+1 mod n)` is unioned in
+    /// before validation, so the result is always connected.
+    pub fn from_edges_augmented(
+        n: usize,
+        edges: impl IntoIterator<Item = (usize, usize)>,
+        spec: &str,
+    ) -> Result<CandidateSet, String> {
+        let mut es: Vec<(usize, usize)> = edges.into_iter().collect();
+        es.extend((0..n).map(|i| (i, (i + 1) % n)));
+        CandidateSet::from_edges(n, es, spec)
+    }
+
+    /// The full support: every pair. The optimizer dispatches this spec to
+    /// the legacy dense path (bit-for-bit identical iterates); the set itself
+    /// exists for report dumps and parity tests.
+    pub fn full(n: usize) -> CandidateSet {
+        let edges = (0..n).flat_map(|i| (i + 1..n).map(move |j| (i, j)));
+        CandidateSet::from_edges(n, edges, "full").expect("full support is connected")
+    }
+
+    /// Parse and build a support from a CLI spec string
+    /// (`knn:K | geometric:K | union | full`) for `scenario`. `seed` feeds
+    /// the randomized generators (U-EquiStatic offsets), keeping the support
+    /// deterministic per run.
+    pub fn generate(
+        spec: &str,
+        scenario: &BandwidthScenario,
+        seed: u64,
+    ) -> Result<CandidateSet, String> {
+        let n = scenario.num_nodes();
+        if n < 2 {
+            return Err(format!("candidate generators need n ≥ 2 (got n={n})"));
+        }
+        if spec == "full" {
+            return Ok(CandidateSet::full(n));
+        }
+        if spec == "union" {
+            return CandidateSet::union_of_baselines(n, seed);
+        }
+        if let Some(k) = spec.strip_prefix("knn:") {
+            let k: usize = k
+                .parse()
+                .map_err(|_| format!("bad k in candidate spec {spec:?}"))?;
+            if k == 0 {
+                return Err("knn candidate spec needs k ≥ 1".into());
+            }
+            return CandidateSet::knn(scenario, k);
+        }
+        if let Some(k) = spec.strip_prefix("geometric:") {
+            let k: usize = k
+                .parse()
+                .map_err(|_| format!("bad k in candidate spec {spec:?}"))?;
+            if k == 0 {
+                return Err("geometric candidate spec needs k ≥ 1".into());
+            }
+            let edges = (0..n).flat_map(|i| (1..=k.min(n - 1)).map(move |d| (i, (i + d) % n)));
+            return CandidateSet::from_edges_augmented(n, edges, spec);
+        }
+        Err(format!(
+            "unknown candidate spec {spec:?} (expected knn:K | geometric:K | union | full)"
+        ))
+    }
+
+    /// Per-node k-nearest-neighbor support on the bandwidth/latency affinity
+    /// `min(bw_i, bw_j) / (1 + ring_distance(i, j))`. Scenarios without
+    /// per-node bandwidths use a uniform affinity, which degrades to pure
+    /// ring-distance locality. Auto-augmented with the spanning ring.
+    pub fn knn(scenario: &BandwidthScenario, k: usize) -> Result<CandidateSet, String> {
+        let n = scenario.num_nodes();
+        let bw: Option<&[f64]> = match scenario {
+            BandwidthScenario::NodeLevel { bw } => Some(bw),
+            _ => None,
+        };
+        let affinity = |i: usize, j: usize| -> f64 {
+            let b = bw.map_or(1.0, |b| b[i].min(b[j]));
+            b / (1.0 + ring_distance(i, j, n) as f64)
+        };
+        let mut edges: Vec<(usize, usize)> = Vec::with_capacity(n * k);
+        let k = k.min(n - 1);
+        for i in 0..n {
+            // Rank by affinity (desc), tie-broken by ring distance (asc) then
+            // index — deterministic. `select_nth` keeps the per-node cost
+            // O(n) instead of O(n log n), which matters at n=16384.
+            let mut cand: Vec<usize> = (0..n).filter(|&j| j != i).collect();
+            let ord = |a: &usize, b: &usize| {
+                affinity(i, *b)
+                    .total_cmp(&affinity(i, *a))
+                    .then(ring_distance(i, *a, n).cmp(&ring_distance(i, *b, n)))
+                    .then(a.cmp(b))
+            };
+            if cand.len() > k {
+                cand.select_nth_unstable_by(k - 1, ord);
+                cand.truncate(k);
+            }
+            edges.extend(cand.into_iter().map(|j| (i, j)));
+        }
+        CandidateSet::from_edges_augmented(n, edges, &format!("knn:{k}"))
+    }
+
+    /// Union-of-baselines support: spanning ring ∪ the chorded-ring
+    /// projection of the exponential graph [16] ∪ a U-EquiStatic circulant
+    /// [19] with `⌈log₂ n⌉` offsets (skipped below n=6 where it would
+    /// duplicate the ring). Covers the designs the paper benchmarks against,
+    /// so the optimum over this support is at least as good as every one of
+    /// them (before weight refinement even starts).
+    pub fn union_of_baselines(n: usize, seed: u64) -> Result<CandidateSet, String> {
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        edges.extend(baselines::chorded_ring_graph(n).edges().iter().copied());
+        if n >= 6 {
+            let m = ((n as f64).log2().ceil() as usize).clamp(1, n / 2);
+            let eq = baselines::u_equistatic(n, m, seed);
+            edges.extend(eq.graph.edges().iter().copied());
+        }
+        CandidateSet::from_edges_augmented(n, edges, "union")
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of candidate edges `|E_cand|` — the sparse edge-variable count.
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// True when the support is empty (only possible for n ≤ 1 inputs, which
+    /// the constructors reject; present for API completeness).
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// The generator spec this set was built from (`knn:8`, `union`, …).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// The sorted candidate edges.
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    /// Node pair at support position `e`.
+    pub fn pair(&self, e: usize) -> (usize, usize) {
+        self.edges[e]
+    }
+
+    /// Support position of the pair `(a, b)` (order-insensitive), or `None`
+    /// when the pair is outside the support.
+    pub fn position(&self, a: usize, b: usize) -> Option<usize> {
+        self.pos.get(&(a.min(b), a.max(b))).copied()
+    }
+
+    /// Does this set cover the full edge space?
+    pub fn covers_all(&self) -> bool {
+        self.edges.len() == num_possible_edges(self.n)
+    }
+
+    /// Support positions of every edge of `graph`, or an error naming the
+    /// first edge that falls outside the support.
+    pub fn graph_positions(&self, graph: &Graph) -> Result<Vec<usize>, String> {
+        graph
+            .edges()
+            .iter()
+            .map(|&(a, b)| {
+                self.position(a, b)
+                    .ok_or_else(|| format!("edge ({a},{b}) is outside the candidate support"))
+            })
+            .collect()
+    }
+
+    /// Serialize for `optimize --json` reports (and reload round-trips).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spec", Json::Str(self.spec.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("m", Json::Num(self.edges.len() as f64)),
+            (
+                "edges",
+                Json::Arr(
+                    self.edges
+                        .iter()
+                        .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Reload a support dumped by [`CandidateSet::to_json`]. Disconnected
+    /// supports are rejected (strict [`CandidateSet::from_edges`] contract).
+    pub fn from_json(j: &Json) -> Result<CandidateSet, String> {
+        let n = j
+            .get("n")
+            .and_then(Json::as_usize)
+            .ok_or("candidate json: missing/bad \"n\"")?;
+        let spec = j
+            .get("spec")
+            .and_then(Json::as_str)
+            .unwrap_or("edges")
+            .to_string();
+        let arr = j
+            .get("edges")
+            .and_then(Json::as_arr)
+            .ok_or("candidate json: missing/bad \"edges\"")?;
+        let mut edges = Vec::with_capacity(arr.len());
+        for e in arr {
+            let pair = e.as_arr().ok_or("candidate json: edge is not an array")?;
+            if pair.len() != 2 {
+                return Err("candidate json: edge is not a pair".into());
+            }
+            let a = pair[0]
+                .as_usize()
+                .ok_or("candidate json: bad edge endpoint")?;
+            let b = pair[1]
+                .as_usize()
+                .ok_or("candidate json: bad edge endpoint")?;
+            edges.push((a, b));
+        }
+        CandidateSet::from_edges(n, edges, &spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::metrics::is_connected;
+
+    #[test]
+    fn full_covers_edge_space() {
+        let c = CandidateSet::full(7);
+        assert_eq!(c.len(), num_possible_edges(7));
+        assert!(c.covers_all());
+        for e in 0..c.len() {
+            let (a, b) = c.pair(e);
+            assert_eq!(c.position(a, b), Some(e));
+            assert_eq!(c.position(b, a), Some(e));
+        }
+    }
+
+    #[test]
+    fn disconnected_support_rejected_with_clean_error() {
+        // Two 3-cliques, no bridge.
+        let edges = vec![(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)];
+        let err = CandidateSet::from_edges(6, edges.clone(), "edges").unwrap_err();
+        assert!(err.contains("disconnected") || err.contains("does not connect"), "{err}");
+        // The augmented constructor rings it together instead.
+        let c = CandidateSet::from_edges_augmented(6, edges, "edges").unwrap();
+        let g = Graph::new(6, c.edges().iter().copied());
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn self_loops_and_bounds_rejected() {
+        assert!(CandidateSet::from_edges(4, vec![(1, 1)], "e").is_err());
+        assert!(CandidateSet::from_edges(4, vec![(0, 9)], "e").is_err());
+    }
+
+    #[test]
+    fn knn_connected_and_sparse() {
+        let sc = BandwidthScenario::paper_homogeneous(32);
+        let c = CandidateSet::knn(&sc, 4).unwrap();
+        let g = Graph::new(32, c.edges().iter().copied());
+        assert!(is_connected(&g));
+        // O(n·k), nowhere near the full n(n−1)/2 = 496.
+        assert!(c.len() <= 32 * 5, "{}", c.len());
+        assert!(c.len() >= 32, "{}", c.len());
+    }
+
+    #[test]
+    fn knn_prefers_high_bandwidth_pairs() {
+        // Nodes 0 and 1 have 10× the bandwidth of the rest: the min-bandwidth
+        // affinity must keep their direct edge in every node-0 neighborhood.
+        let mut bw = vec![1.0; 12];
+        bw[0] = 10.0;
+        bw[1] = 10.0;
+        let sc = BandwidthScenario::NodeLevel { bw };
+        let c = CandidateSet::knn(&sc, 2).unwrap();
+        assert!(c.position(0, 1).is_some());
+    }
+
+    #[test]
+    fn union_contains_ring_and_chords() {
+        let c = CandidateSet::union_of_baselines(16, 1).unwrap();
+        for i in 0..16 {
+            assert!(c.position(i, (i + 1) % 16).is_some(), "ring edge {i}");
+        }
+        // Chorded-ring power-of-two chords.
+        assert!(c.position(0, 4).is_some());
+        assert!(c.len() < num_possible_edges(16));
+    }
+
+    #[test]
+    fn generate_parses_specs() {
+        let sc = BandwidthScenario::paper_homogeneous(10);
+        assert!(CandidateSet::generate("knn:3", &sc, 1).is_ok());
+        assert!(CandidateSet::generate("geometric:2", &sc, 1).is_ok());
+        assert!(CandidateSet::generate("union", &sc, 1).is_ok());
+        assert!(CandidateSet::generate("full", &sc, 1).unwrap().covers_all());
+        assert!(CandidateSet::generate("knn:0", &sc, 1).is_err());
+        assert!(CandidateSet::generate("nope", &sc, 1).is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let sc = BandwidthScenario::paper_homogeneous(24);
+        let c = CandidateSet::generate("knn:4", &sc, 7).unwrap();
+        let j = c.to_json();
+        let back = CandidateSet::from_json(&j).unwrap();
+        assert_eq!(back.n(), c.n());
+        assert_eq!(back.edges(), c.edges());
+        assert_eq!(back.spec(), c.spec());
+    }
+
+    #[test]
+    fn json_reload_rejects_disconnected() {
+        let j = Json::obj(vec![
+            ("spec", Json::Str("edges".into())),
+            ("n", Json::Num(4.0)),
+            ("m", Json::Num(1.0)),
+            (
+                "edges",
+                Json::Arr(vec![Json::Arr(vec![Json::Num(0.0), Json::Num(1.0)])]),
+            ),
+        ]);
+        assert!(CandidateSet::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn graph_positions_maps_and_rejects() {
+        let c = CandidateSet::generate("geometric:2", &BandwidthScenario::paper_homogeneous(8), 1)
+            .unwrap();
+        let g = Graph::new(8, vec![(0, 1), (2, 4)]);
+        let pos = c.graph_positions(&g).unwrap();
+        assert_eq!(pos.len(), 2);
+        assert_eq!(c.pair(pos[0]), (0, 1));
+        let off = Graph::new(8, vec![(0, 4)]); // distance 4 > 2: off-support
+        assert!(c.graph_positions(&off).is_err());
+    }
+}

@@ -5,4 +5,5 @@
 
 pub mod annealing;
 pub mod baselines;
+pub mod candidates;
 pub mod weights;
