@@ -393,7 +393,11 @@ fn soften(event: &ScenarioEvent) -> Vec<ScenarioEvent> {
     out
 }
 
-fn event_words(event: &ScenarioEvent) -> String {
+/// Serialize one event into its `.scenario` word form (the inverse of
+/// [`parse_event`]): `drift 0.1`, `link_degrade 0.1 4 5 6 7`, …. Shared with
+/// the `batopo serve` wire protocol, whose `event` command carries exactly
+/// these words.
+pub fn event_words(event: &ScenarioEvent) -> String {
     let join = |nodes: &[usize]| {
         let words: Vec<String> = nodes.iter().map(|i| i.to_string()).collect();
         words.join(" ")
@@ -433,7 +437,11 @@ fn parse_node_list(toks: &[&str], what: &str) -> Result<Vec<usize>, String> {
     toks.iter().map(|t| parse_num(Some(t), "node index")).collect()
 }
 
-fn parse_event(kind: &str, rest: &str) -> Result<ScenarioEvent, String> {
+/// Parse one event from its `.scenario` word form: `kind` is the first word
+/// (`drift`, `set_bandwidth`, …) and `rest` the raw remainder of the line
+/// (`report_stats` keeps it verbatim as the label). The inverse of
+/// [`event_words`]; shared with the `batopo serve` wire protocol.
+pub fn parse_event(kind: &str, rest: &str) -> Result<ScenarioEvent, String> {
     let toks: Vec<&str> = rest.split_whitespace().collect();
     let ev = match kind {
         "drift" => ScenarioEvent::Drift {

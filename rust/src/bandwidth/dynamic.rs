@@ -23,7 +23,7 @@ use crate::bandwidth::scenario_dsl::{CompiledScenario, ScenarioBuilder};
 use crate::bandwidth::scenarios::BandwidthScenario;
 use crate::bandwidth::timing::TimeModel;
 use crate::graph::Topology;
-use crate::optimizer::{BaTopoOptimizer, OptimizeSpec};
+use crate::optimizer::{BaTopoOptimizer, OptimizeReport, OptimizeSpec};
 use crate::util::rng::Xoshiro256pp;
 
 /// Piecewise-constant per-node bandwidth process. Arbitrary scripted traces
@@ -106,6 +106,10 @@ pub struct DynamicPolicy {
     pub switch_cost: f64,
     /// Base RNG seed for the per-phase re-optimizations.
     pub seed: u64,
+    /// Candidate edge-support spec forwarded to the optimizer (`knn:K`,
+    /// `geometric:K`, `union`; `None` keeps the dense formulation). The
+    /// online service sets a sparse spec so re-solves stay `O(|E_cand|)`.
+    pub candidates: Option<String>,
 }
 
 impl Default for DynamicPolicy {
@@ -116,14 +120,149 @@ impl Default for DynamicPolicy {
             quick: true,
             switch_cost: 0.05,
             seed: 42,
+            candidates: None,
         }
     }
 }
 
-/// Controller state over a trace.
-pub struct DynamicTopologyController {
+/// Outcome of one [`ReoptCore::reoptimize`] decision.
+#[derive(Debug, Clone)]
+pub struct ReoptOutcome {
+    /// A fresh topology was installed as the new incumbent.
+    pub switched: bool,
+    /// The fresh solve failed (the incumbent was kept).
+    pub failed: bool,
+    /// τ estimate of the (pre-decision) incumbent under the observed
+    /// bandwidths: simulated seconds per e-fold of consensus error
+    /// (∞ during an outage, when no finite round time exists).
+    pub incumbent_tau: f64,
+    /// τ estimate of the fresh optimum (∞ when the solve failed).
+    pub fresh_tau: f64,
+    /// Solver diagnostics of the fresh solve (`None` when it failed).
+    pub report: Option<OptimizeReport>,
+}
+
+/// The incumbent-maintenance / re-optimization core shared by the offline
+/// [`DynamicTopologyController`] and the online `batopo serve` daemon
+/// ([`crate::serve`]): it owns the incumbent topology and one decision
+/// procedure — solve fresh (warm-started from the incumbent's edges via
+/// [`OptimizeSpec::warm_edges`], on the sparse candidate path when
+/// [`DynamicPolicy::candidates`] is set), compare τ estimates under the
+/// hysteresis factor, install or keep — and never aborts on solver failure:
+/// the incumbent is kept and the failure counted.
+pub struct ReoptCore {
     policy: DynamicPolicy,
-    current: Topology,
+    incumbent: Topology,
+    /// Fresh topologies installed by [`ReoptCore::reoptimize`].
+    pub installs: usize,
+    /// Re-optimizations that failed (incumbent kept; includes a failed
+    /// initial solve, which falls back to a ring).
+    pub failures: usize,
+    /// Diagnostics of the most recent *successful* solve (`None` until one
+    /// succeeds — e.g. after a ring fallback). The serve daemon publishes
+    /// these solver-health fields alongside each topology update.
+    pub last_report: Option<OptimizeReport>,
+}
+
+impl ReoptCore {
+    /// Initialize by optimizing for the initial bandwidths. If that
+    /// optimization is infeasible, fall back to a ring over the fleet
+    /// (logged and counted in [`Self::failures`]) rather than aborting.
+    pub fn new(bw0: &[f64], policy: DynamicPolicy) -> ReoptCore {
+        let n = bw0.len();
+        let mut failures = 0;
+        let mut last_report = None;
+        let incumbent = match optimize_for(bw0, &policy, policy.seed, None) {
+            Ok(rep) => {
+                let topo = rep.topology.clone();
+                last_report = Some(rep);
+                topo
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: initial dynamic optimization failed ({e}); \
+                     falling back to a ring over {n} nodes"
+                );
+                failures += 1;
+                crate::topo::baselines::ring(n)
+            }
+        };
+        ReoptCore {
+            policy,
+            incumbent,
+            installs: 0,
+            failures,
+            last_report,
+        }
+    }
+
+    /// Current incumbent topology.
+    pub fn incumbent(&self) -> &Topology {
+        &self.incumbent
+    }
+
+    /// The policy this core runs under.
+    pub fn policy(&self) -> &DynamicPolicy {
+        &self.policy
+    }
+
+    /// Observe new bandwidths at `step` (a phase index or service epoch —
+    /// it perturbs the solve seed) and decide: re-optimize fresh, then
+    /// install the fresh topology iff the incumbent's τ estimate exceeds the
+    /// fresh one by more than the hysteresis factor. An incumbent with no
+    /// finite round time under the new bandwidths (scripted outage) forces a
+    /// switch whenever the fresh optimum has one; a failed solve keeps the
+    /// incumbent.
+    pub fn reoptimize(&mut self, step: u64, bw: &[f64], tm: &TimeModel) -> ReoptOutcome {
+        let sc = BandwidthScenario::NodeLevel { bw: bw.to_vec() };
+        // τ ≈ t_iter / −ln(r_asym): simulated seconds per e-fold of error.
+        let tau = |topo: &Topology| -> f64 {
+            match tm.consensus_iter_time(&sc, topo) {
+                Ok(t) => t / -topo.asymptotic_convergence_factor().max(1e-9).ln(),
+                Err(_) => f64::INFINITY, // outage: no finite round time
+            }
+        };
+        let incumbent_tau = tau(&self.incumbent);
+        let seed = self.policy.seed + step;
+        let warm = Some(self.incumbent.graph.edges().to_vec());
+        let report = match optimize_for(bw, &self.policy, seed, warm) {
+            Ok(rep) => rep,
+            Err(e) => {
+                eprintln!(
+                    "warning: dynamic re-optimization failed at step {step} ({e}); \
+                     keeping the incumbent topology"
+                );
+                self.failures += 1;
+                return ReoptOutcome {
+                    switched: false,
+                    failed: true,
+                    incumbent_tau,
+                    fresh_tau: f64::INFINITY,
+                    report: None,
+                };
+            }
+        };
+        let fresh_tau = tau(&report.topology);
+        let switched = incumbent_tau > self.policy.hysteresis * fresh_tau;
+        if switched {
+            self.incumbent = report.topology.clone();
+            self.installs += 1;
+        }
+        self.last_report = Some(report.clone());
+        ReoptOutcome {
+            switched,
+            failed: false,
+            incumbent_tau,
+            fresh_tau,
+            report: Some(report),
+        }
+    }
+}
+
+/// Controller state over a trace: a thin phase-indexed wrapper around
+/// [`ReoptCore`] used by the scripted/dynamic consensus simulations.
+pub struct DynamicTopologyController {
+    core: ReoptCore,
     /// Phases at which a re-optimization was installed.
     pub switches: Vec<usize>,
     /// Online re-optimizations that failed (the incumbent topology was kept
@@ -136,22 +275,10 @@ impl DynamicTopologyController {
     /// infeasible, fall back to a ring over the trace's nodes (logged and
     /// counted in [`Self::reopt_failures`]) rather than aborting.
     pub fn new(trace: &BandwidthTrace, policy: DynamicPolicy) -> DynamicTopologyController {
-        let n = trace.num_nodes();
-        let mut reopt_failures = 0;
-        let topo = match optimize_for(&trace.phases[0], policy.r, policy.quick, policy.seed) {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!(
-                    "warning: initial dynamic optimization failed ({e}); \
-                     falling back to a ring over {n} nodes"
-                );
-                reopt_failures += 1;
-                crate::topo::baselines::ring(n)
-            }
-        };
+        let core = ReoptCore::new(&trace.phases[0], policy);
+        let reopt_failures = core.failures;
         DynamicTopologyController {
-            policy,
-            current: topo,
+            core,
             switches: Vec::new(),
             reopt_failures,
         }
@@ -160,56 +287,31 @@ impl DynamicTopologyController {
     /// Observe phase `k`'s bandwidths; maybe re-optimize. Returns true when a
     /// new topology was installed. A failed online re-optimization keeps the
     /// incumbent (counted in [`Self::reopt_failures`], surfaced per phase in
-    /// [`PhaseReport::reopt_failures`]); an incumbent with no finite round
-    /// time under the new bandwidths (scripted outage) forces a switch
-    /// whenever the fresh optimum has one.
+    /// [`PhaseReport::reopt_failures`]).
     pub fn observe(&mut self, k: usize, bw: &[f64], tm: &TimeModel) -> bool {
-        let sc = BandwidthScenario::NodeLevel { bw: bw.to_vec() };
-        // τ ≈ t_iter / −ln(r_asym): simulated seconds per e-fold of error.
-        let tau = |topo: &Topology| -> f64 {
-            match tm.consensus_iter_time(&sc, topo) {
-                Ok(t) => t / -topo.asymptotic_convergence_factor().max(1e-9).ln(),
-                Err(_) => f64::INFINITY, // outage: no finite round time
-            }
-        };
-        let incumbent_t = tau(&self.current);
-        let seed = self.policy.seed + k as u64;
-        let fresh = match optimize_for(bw, self.policy.r, self.policy.quick, seed) {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!(
-                    "warning: dynamic re-optimization failed at phase {k} ({e}); \
-                     keeping the incumbent topology"
-                );
-                self.reopt_failures += 1;
-                return false;
-            }
-        };
-        let fresh_t = tau(&fresh);
-        if incumbent_t > self.policy.hysteresis * fresh_t {
-            self.current = fresh;
+        let outcome = self.core.reoptimize(k as u64, bw, tm);
+        self.reopt_failures = self.core.failures;
+        if outcome.switched {
             self.switches.push(k);
-            true
-        } else {
-            false
         }
+        outcome.switched
     }
 
     /// Current topology.
     pub fn topology(&self) -> &Topology {
-        &self.current
+        self.core.incumbent()
     }
 }
 
 fn optimize_for(
     bw: &[f64],
-    r: usize,
-    quick: bool,
+    policy: &DynamicPolicy,
     seed: u64,
-) -> Result<Topology, crate::optimizer::OptimizeError> {
+    warm_edges: Option<Vec<(usize, usize)>>,
+) -> Result<OptimizeReport, crate::optimizer::OptimizeError> {
     let sc = BandwidthScenario::NodeLevel { bw: bw.to_vec() };
-    let mut spec = OptimizeSpec::with_scenario(sc, r);
-    if quick {
+    let mut spec = OptimizeSpec::with_scenario(sc, policy.r);
+    if policy.quick {
         spec.max_iters = 40;
         spec.anneal_steps = 300;
         spec.polish_swaps = 8;
@@ -217,10 +319,12 @@ fn optimize_for(
         spec.restarts = 1;
     }
     spec.seed = seed;
+    spec.candidates = policy.candidates.clone();
+    spec.warm_edges = warm_edges;
     // Dynamic sims run inside already-parallel reproduce sweep cells; keep
     // the online re-optimizations single-threaded.
     spec.restart_threads = 1;
-    BaTopoOptimizer::new(spec).run()
+    BaTopoOptimizer::new(spec).run_detailed()
 }
 
 /// Error target for [`DynamicRun::time_to_target`]: the simulated time at

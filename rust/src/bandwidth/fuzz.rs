@@ -118,6 +118,7 @@ fn fuzz_policy(program: &ScenarioProgram) -> DynamicPolicy {
         quick: true,
         switch_cost: 0.05,
         seed: program.seed,
+        candidates: None,
     }
 }
 
@@ -273,6 +274,21 @@ pub fn fuzz_scenarios(cfg: &FuzzConfig) -> std::io::Result<FuzzOutcome> {
         cases: cfg.cases,
         failures,
     })
+}
+
+/// Recover the invariant suite a fuzz dump was minimized against, from the
+/// `# invariant: <name>` comment [`fuzz_scenarios`] writes at the top of every
+/// dump. Returns `None` when the file has no such comment (hand-written
+/// scenario) or the name is unknown; `batopo fuzz replay` uses this to default
+/// `--invariant` so CI can re-check a dump without knowing its provenance.
+pub fn invariant_from_dump(path: &Path) -> Option<Invariant> {
+    let text = std::fs::read_to_string(path).ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# invariant:") {
+            return Invariant::by_name(rest.trim());
+        }
+    }
+    None
 }
 
 /// Replay a `*.scenario` dump: parse it and re-check `invariant`. Returns the

@@ -23,7 +23,10 @@
 //! - `train` — end-to-end DSGD steps/second: always benches the host-native
 //!   backend (`host_train_step`, `dsgd_round_host` — the `BENCH_baseline.json`
 //!   entries the CI gate compares), plus the PJRT round when artifacts are
-//!   available (`dsgd_round`).
+//!   available (`dsgd_round`),
+//! - `serve` — the online service: one full in-process `serve-sim` cycle
+//!   (`serve_reopt_publish` — daemon spawn, 2 subscribers, a streamed quick
+//!   degrade scenario with every re-optimization drained, clean shutdown).
 
 use super::records::{git_rev, BenchRecord};
 use super::{stats_from, time_fn, BenchStats};
@@ -74,10 +77,10 @@ impl PerfOptions {
 /// The bench targets `batopo bench` understands (plus `all`, which runs
 /// every one of them — `train` benches the always-available host backend, so
 /// none of them needs PJRT artifacts any more).
-pub const BENCH_TARGETS: &[&str] = &["mixing", "solver", "admm", "scale", "train"];
+pub const BENCH_TARGETS: &[&str] = &["mixing", "solver", "admm", "scale", "train", "serve"];
 
 /// Targets run by `bench all`.
-pub const ALL_TARGETS: &[&str] = &["mixing", "solver", "admm", "scale", "train"];
+pub const ALL_TARGETS: &[&str] = &["mixing", "solver", "admm", "scale", "train", "serve"];
 
 fn print_stats(s: &BenchStats) {
     println!("  {}", s.report());
@@ -644,6 +647,34 @@ pub fn perf_train(opts: &PerfOptions) -> Vec<BenchRecord> {
     out
 }
 
+/// End-to-end cost of one online-service cycle: spawn the daemon
+/// in-process, attach 2 subscribers, stream the quick degrade corpus
+/// scenario over the wire, drain every incremental re-optimization, and shut
+/// down cleanly. This times the whole pipeline (ingest → warm-started
+/// sparse-candidate solve → publish fan-out), which is what an operator of
+/// `batopo serve` experiences per telemetry burst.
+pub fn perf_serve(opts: &PerfOptions) -> Vec<BenchRecord> {
+    println!("── bench serve: in-process serve-sim cycle (degrade, 2 subscribers) ──");
+    let rev = git_rev();
+    let cfg = crate::serve::SimConfig::default();
+    let iters = if opts.quick { 1 } else { 3 };
+    let mut samples = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        let rep = crate::serve::sim::run(&cfg).expect("serve-sim cycle");
+        samples.push(t0.elapsed().as_secs_f64());
+        last = Some(rep);
+    }
+    let rep = last.expect("at least one iteration");
+    println!(
+        "  {} epoch(s), {} reopt(s), {} update(s) published, update latency mean {:.1} ms",
+        rep.epochs, rep.reopts, rep.published, rep.mean_latency_ms
+    );
+    let stats = stats_from("serve_reopt_publish", samples);
+    vec![record(&stats, "serve_reopt_publish", cfg.n, &rev)]
+}
+
 /// Run one named bench target, returning its records. Unknown targets are a
 /// clean error (the CLI surfaces it with a non-zero exit code).
 pub fn run_target(target: &str, opts: &PerfOptions) -> Result<Vec<BenchRecord>, String> {
@@ -653,6 +684,7 @@ pub fn run_target(target: &str, opts: &PerfOptions) -> Result<Vec<BenchRecord>, 
         "admm" => Ok(perf_admm(opts)),
         "scale" => Ok(perf_scale(opts)),
         "train" => Ok(perf_train(opts)),
+        "serve" => Ok(perf_serve(opts)),
         other => Err(format!(
             "unknown bench target {other:?} (expected one of {}|all)",
             BENCH_TARGETS.join("|")

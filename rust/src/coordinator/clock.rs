@@ -67,4 +67,37 @@ mod tests {
     fn rejects_negative_dt() {
         SimClock::new().advance(-1.0);
     }
+
+    #[test]
+    #[should_panic(expected = "bad clock advance")]
+    fn rejects_non_finite_dt() {
+        SimClock::new().advance(f64::NAN);
+    }
+
+    #[test]
+    fn event_trace_preserves_tick_order_and_timestamps() {
+        let mut c = SimClock::new();
+        c.advance_event(1.0, "a");
+        c.advance(0.5); // unlabeled time still elapses between events
+        c.advance_event(0.0, "b"); // zero-cost event lands at the same instant
+        c.advance_event(2.0, "c");
+        let times: Vec<f64> = c.events().iter().map(|(t, _)| *t).collect();
+        let labels: Vec<&str> = c.events().iter().map(|(_, l)| l.as_str()).collect();
+        assert_eq!(labels, ["a", "b", "c"]);
+        assert!((times[0] - 1.0).abs() < 1e-12);
+        assert!((times[1] - 1.5).abs() < 1e-12);
+        assert!((times[2] - 3.5).abs() < 1e-12);
+        // Timestamps are non-decreasing — ticks can coincide but never reorder.
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+        assert!((c.now() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clearing_events_keeps_the_clock() {
+        let mut c = SimClock::new();
+        c.advance_event(1.25, "round");
+        c.clear_events();
+        assert!(c.events().is_empty());
+        assert!((c.now() - 1.25).abs() < 1e-12);
+    }
 }

@@ -1,0 +1,183 @@
+//! The coordinator's event-loop seam: a single-consumer event queue that
+//! multiplexes many producer threads (workers, timers, network sessions,
+//! background solvers) into one `recv` loop.
+//!
+//! Both the training [`WorkerPool`](super::worker::WorkerPool) and the online
+//! `batopo serve` daemon ([`crate::serve`]) drive their state machines from an
+//! [`EventLoop`]: producers hold cheap cloneable [`EventSender`]s, the owner
+//! thread drains events in arrival order, and "all producers gone" is
+//! observable as a clean end-of-stream instead of a hang.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Producer-side handle of an [`EventLoop`]: cloneable, sendable across
+/// threads, and droppable — the loop observes end-of-stream once every
+/// handle is gone.
+#[derive(Debug)]
+pub struct EventSender<E> {
+    tx: Sender<E>,
+}
+
+// Manual impl: `#[derive(Clone)]` would demand `E: Clone`, which the
+// underlying `Sender` does not need.
+impl<E> Clone for EventSender<E> {
+    fn clone(&self) -> Self {
+        EventSender { tx: self.tx.clone() }
+    }
+}
+
+impl<E> EventSender<E> {
+    /// Enqueue an event. Returns `false` when the loop has shut down (the
+    /// receiver is gone); producers use this to exit their threads.
+    pub fn send(&self, event: E) -> bool {
+        self.tx.send(event).is_ok()
+    }
+
+    /// Spawn a timer thread that enqueues `make()` every `period` until the
+    /// loop is dropped (detected by the failed send). Returns the timer's
+    /// join handle; joining is optional — the thread exits on its own.
+    pub fn spawn_timer(
+        &self,
+        period: Duration,
+        mut make: impl FnMut() -> E + Send + 'static,
+    ) -> JoinHandle<()>
+    where
+        E: Send + 'static,
+    {
+        let tx = self.clone();
+        std::thread::Builder::new()
+            .name("batopo-timer".to_string())
+            .spawn(move || loop {
+                std::thread::sleep(period);
+                if !tx.send(make()) {
+                    return;
+                }
+            })
+            .expect("spawn timer thread")
+    }
+}
+
+/// Single-consumer event queue. [`EventLoop::new`] returns the loop and its
+/// root [`EventSender`]; the loop itself holds no sender, so once the root
+/// handle and all of its clones are dropped, [`EventLoop::next`] reports a
+/// clean end-of-stream.
+#[derive(Debug)]
+pub struct EventLoop<E> {
+    rx: Receiver<E>,
+}
+
+impl<E> EventLoop<E> {
+    /// Create an empty event loop plus its root producer handle.
+    pub fn new() -> (EventLoop<E>, EventSender<E>) {
+        let (tx, rx) = channel();
+        (EventLoop { rx }, EventSender { tx })
+    }
+
+    /// Block for the next event. Returns `None` once every [`EventSender`]
+    /// has been dropped — "all producers exited" terminates a `while let`
+    /// drain instead of hanging it.
+    pub fn next(&self) -> Option<E> {
+        self.rx.recv().ok()
+    }
+
+    /// Block for the next event with a deadline. `Err(Timeout)` means no
+    /// event arrived in time; `Err(Disconnected)` means every sender is gone.
+    pub fn next_timeout(&self, timeout: Duration) -> Result<E, RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_arrive_in_send_order() {
+        let (el, h) = EventLoop::new();
+        for i in 0..5 {
+            assert!(h.send(i));
+        }
+        for i in 0..5 {
+            assert_eq!(el.next(), Some(i));
+        }
+    }
+
+    #[test]
+    fn multiple_producers_multiplex_into_one_queue() {
+        let (el, root) = EventLoop::new();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let h = root.clone();
+                std::thread::spawn(move || {
+                    for j in 0..10 {
+                        assert!(h.send((i, j)));
+                    }
+                })
+            })
+            .collect();
+        let mut seen = Vec::new();
+        for _ in 0..40 {
+            seen.push(el.next().expect("event"));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        // Per-producer order is preserved even though streams interleave.
+        for i in 0..4 {
+            let js: Vec<usize> = seen.iter().filter(|(p, _)| *p == i).map(|&(_, j)| j).collect();
+            assert_eq!(js, (0..10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn drain_ends_cleanly_when_all_producers_drop() {
+        let (el, root) = EventLoop::new();
+        let h = root.clone();
+        std::thread::spawn(move || {
+            h.send(1u8);
+            h.send(2u8);
+            // `h` drops here.
+        });
+        drop(root);
+        let mut seen = Vec::new();
+        while let Some(e) = el.next() {
+            seen.push(e);
+        }
+        assert_eq!(seen, vec![1, 2]);
+    }
+
+    #[test]
+    fn timeout_distinguishes_quiet_from_dead() {
+        let (el, h) = EventLoop::<u8>::new();
+        assert_eq!(
+            el.next_timeout(Duration::from_millis(10)).unwrap_err(),
+            RecvTimeoutError::Timeout
+        );
+        assert!(h.send(7));
+        assert_eq!(el.next_timeout(Duration::from_millis(10)), Ok(7));
+        drop(h);
+        assert_eq!(
+            el.next_timeout(Duration::from_millis(10)).unwrap_err(),
+            RecvTimeoutError::Disconnected
+        );
+    }
+
+    #[test]
+    fn send_fails_after_loop_drops() {
+        let (el, h) = EventLoop::<u8>::new();
+        drop(el);
+        assert!(!h.send(1), "send into a dropped loop must fail");
+    }
+
+    #[test]
+    fn timer_ticks_and_dies_with_the_loop() {
+        let (el, h) = EventLoop::new();
+        let timer = h.spawn_timer(Duration::from_millis(5), || "tick");
+        assert_eq!(el.next_timeout(Duration::from_secs(5)).expect("a tick"), "tick");
+        drop(el);
+        // The timer notices the dead loop on its next fire and exits.
+        timer.join().expect("timer thread exits cleanly");
+    }
+}

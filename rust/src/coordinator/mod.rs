@@ -4,8 +4,10 @@
 //! Process topology: one **leader** (owns the PJRT engine, the gossip
 //! [`crate::runtime::Mixer`], the [`clock::SimClock`] and the round state
 //! machine) plus one **worker thread per node** (owns the node's dataset
-//! shard and produces training/eval batches concurrently, communicating over
-//! `std::sync::mpsc` channels).
+//! shard and produces training/eval batches concurrently). All worker→leader
+//! traffic flows through the shared [`event_loop::EventLoop`] seam — the same
+//! single-consumer multiplexer the online `batopo serve` daemon
+//! ([`crate::serve`]) is built on.
 //!
 //! PJRT-CPU note: the `xla` crate's client is not `Send`, so executable
 //! launches are serialized through the leader; workers parallelize the
@@ -15,9 +17,11 @@
 //! serialized launches.
 
 pub mod clock;
+pub mod event_loop;
 pub mod protocol;
 pub mod worker;
 
 pub use clock::SimClock;
+pub use event_loop::{EventLoop, EventSender};
 pub use protocol::{Command, Reply};
 pub use worker::WorkerPool;

@@ -16,12 +16,18 @@ pub enum Command {
 /// Worker replies.
 #[derive(Debug, Clone)]
 pub enum Reply {
+    /// A produced batch (training or eval, depending on the command).
     Batch {
+        /// Node that produced the batch.
         node: usize,
+        /// Flattened `batch × seq` token ids.
         tokens: Vec<i32>,
+        /// One target class per sequence.
         targets: Vec<i32>,
     },
+    /// Acknowledgement of a bookkeeping command.
     Ack {
+        /// Node that acknowledged.
         node: usize,
     },
 }
@@ -32,5 +38,62 @@ impl Reply {
         match self {
             Reply::Batch { node, .. } | Reply::Ack { node } => *node,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::event_loop::EventLoop;
+
+    #[test]
+    fn reply_node_routes_every_variant() {
+        let batch = Reply::Batch {
+            node: 3,
+            tokens: vec![1, 2],
+            targets: vec![0],
+        };
+        assert_eq!(batch.node(), 3);
+        assert_eq!(Reply::Ack { node: 7 }.node(), 7);
+    }
+
+    #[test]
+    fn commands_round_trip_through_the_event_loop_seam() {
+        // A miniature leader⇄worker exchange over the event-loop abstraction:
+        // commands out over a plain channel, replies back through the loop,
+        // routed by `Reply::node()` exactly as `WorkerPool::broadcast_collect`
+        // does.
+        let (events, reply_tx) = EventLoop::<Reply>::new();
+        let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<Command>();
+        let worker = std::thread::spawn(move || {
+            while let Ok(cmd) = cmd_rx.recv() {
+                match cmd {
+                    Command::NextBatch | Command::EvalBatch => {
+                        reply_tx.send(Reply::Batch {
+                            node: 1,
+                            tokens: vec![4, 5],
+                            targets: vec![2],
+                        });
+                    }
+                    Command::RecordLoss { step, loss } => {
+                        assert_eq!(step, 9);
+                        assert!((loss - 0.25).abs() < 1e-12);
+                        reply_tx.send(Reply::Ack { node: 1 });
+                    }
+                    Command::Shutdown => break,
+                }
+            }
+        });
+        cmd_tx.send(Command::NextBatch).unwrap();
+        cmd_tx.send(Command::RecordLoss { step: 9, loss: 0.25 }).unwrap();
+        cmd_tx.send(Command::Shutdown).unwrap();
+        let first = events.next().expect("batch reply");
+        assert_eq!(first.node(), 1);
+        assert!(matches!(first, Reply::Batch { .. }));
+        let second = events.next().expect("ack reply");
+        assert!(matches!(second, Reply::Ack { node: 1 }));
+        worker.join().unwrap();
+        // Worker exited → its reply sender dropped → clean end-of-stream.
+        assert!(events.next().is_none());
     }
 }

@@ -1,9 +1,10 @@
 //! Node workers: one OS thread per simulated node, owning the node's data
 //! shard and per-node statistics, driven by leader commands over channels.
 
+use super::event_loop::EventLoop;
 use super::protocol::{Command, Reply};
 use crate::training::data::SyntheticDataset;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
 
 /// Handle to one worker thread.
@@ -25,16 +26,20 @@ pub struct WorkerStats {
     pub last_loss: f64,
 }
 
-/// Pool of node workers plus the shared reply channel.
+/// Pool of node workers plus the shared reply event loop. Workers hold
+/// [`EventSender`](super::event_loop::EventSender) clones of the loop's root
+/// handle, so a pool whose workers all exited drains to a clean
+/// end-of-stream; dropping the pool without calling [`WorkerPool::shutdown`]
+/// also shuts the workers down and joins them (see the `Drop` impl).
 pub struct WorkerPool {
     workers: Vec<Worker>,
-    rx: Receiver<Reply>,
+    events: EventLoop<Reply>,
 }
 
 impl WorkerPool {
     /// Spawn `n` workers; node `i` owns an iid shard (seeded per node).
     pub fn spawn(n: usize, dataset: &SyntheticDataset, seed: u64) -> WorkerPool {
-        let (reply_tx, rx) = channel::<Reply>();
+        let (events, reply_tx) = EventLoop::<Reply>::new();
         let workers = (0..n)
             .map(|node| {
                 let (tx, cmd_rx) = channel::<Command>();
@@ -47,12 +52,15 @@ impl WorkerPool {
                             node,
                             ..Default::default()
                         };
+                        // `recv()` erring (leader dropped its command sender)
+                        // ends the loop the same way an explicit `Shutdown`
+                        // does — workers never outlive a dropped pool.
                         while let Ok(cmd) = cmd_rx.recv() {
                             match cmd {
                                 Command::NextBatch => {
                                     let (tokens, targets) = shard.next_train_batch();
                                     stats.batches_produced += 1;
-                                    let _ = out.send(Reply::Batch {
+                                    out.send(Reply::Batch {
                                         node,
                                         tokens,
                                         targets,
@@ -60,7 +68,7 @@ impl WorkerPool {
                                 }
                                 Command::EvalBatch => {
                                     let (tokens, targets) = shard.eval_batch();
-                                    let _ = out.send(Reply::Batch {
+                                    out.send(Reply::Batch {
                                         node,
                                         tokens,
                                         targets,
@@ -69,7 +77,7 @@ impl WorkerPool {
                                 Command::RecordLoss { loss, .. } => {
                                     stats.losses_recorded += 1;
                                     stats.last_loss = loss;
-                                    let _ = out.send(Reply::Ack { node });
+                                    out.send(Reply::Ack { node });
                                 }
                                 Command::Shutdown => break,
                             }
@@ -83,7 +91,7 @@ impl WorkerPool {
                 }
             })
             .collect();
-        WorkerPool { workers, rx }
+        WorkerPool { workers, events }
     }
 
     /// Number of workers.
@@ -109,7 +117,7 @@ impl WorkerPool {
         }
         let mut replies: Vec<Option<Reply>> = (0..self.len()).map(|_| None).collect();
         for _ in 0..self.len() {
-            let r = self.rx.recv().expect("reply");
+            let r = self.events.next().expect("reply");
             let node = r.node();
             replies[node] = Some(r);
         }
@@ -128,6 +136,23 @@ impl WorkerPool {
             .collect();
         stats.sort_by_key(|s| s.node);
         stats
+    }
+}
+
+impl Drop for WorkerPool {
+    /// A pool dropped without [`WorkerPool::shutdown`] still terminates its
+    /// workers: best-effort `Shutdown` sends (a disconnect works too — the
+    /// worker loop exits on either), then join whatever handles remain.
+    /// After `shutdown()` every handle is already taken, so this is a no-op.
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Command::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -184,6 +209,26 @@ mod tests {
         };
         assert_eq!(tok(&r1[0]), tok(&r2[0]), "determinism");
         assert_ne!(tok(&r1[0]), tok(&r1[1]), "shard independence");
+    }
+
+    #[test]
+    fn dropping_the_pool_without_shutdown_does_not_hang() {
+        // Regression: workers must observe shutdown/disconnect and be joined
+        // by `Drop`, so dropping a live pool completes promptly instead of
+        // hanging (or leaking detached threads). Run the drop on a helper
+        // thread and bound it with a timeout.
+        let (done_tx, done_rx) = channel::<()>();
+        std::thread::spawn(move || {
+            let ds = dataset();
+            let pool = WorkerPool::spawn(4, &ds, 3);
+            let replies = pool.broadcast_collect(Command::NextBatch);
+            assert_eq!(replies.len(), 4);
+            drop(pool); // no shutdown() — Drop must join all 4 workers
+            let _ = done_tx.send(());
+        });
+        done_rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("dropping a live WorkerPool hung");
     }
 
     #[test]

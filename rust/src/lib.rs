@@ -7,8 +7,10 @@
 //! - **L3 (this crate)** — the ADMM-based Mixed-Integer-SDP topology optimizer
 //!   ([`optimizer`]), the bandwidth-aware edge-capacity allocator and the four
 //!   bandwidth scenario models ([`bandwidth`]), all baseline topologies
-//!   ([`topo`]), and a decentralized-learning coordinator with a simulated
-//!   cluster clock ([`coordinator`], [`consensus`], [`training`]).
+//!   ([`topo`]), a decentralized-learning coordinator with a simulated
+//!   cluster clock ([`coordinator`], [`consensus`], [`training`]), and an
+//!   online topology-optimization daemon with streaming telemetry ingest and
+//!   pub/sub topology updates ([`serve`]).
 //! - **L2/L1 (build-time Python, `python/compile/`)** — the transformer train
 //!   step and the Pallas mixing / fused-SGD kernels, AOT-lowered to HLO text
 //!   and executed from Rust through [`runtime`] (PJRT CPU via the `xla`
@@ -39,6 +41,7 @@ pub mod graph;
 pub mod linalg;
 pub mod optimizer;
 pub mod runtime;
+pub mod serve;
 pub mod topo;
 pub mod training;
 pub mod util;

@@ -18,13 +18,17 @@
 //! batopo fuzz      scenarios [--cases 64] [--seed S] [--quick]
 //!                  [--invariant core|every-phase-gossips] [--out fuzz-out/]
 //! batopo fuzz      replay <dump.scenario> [--invariant …]
+//! batopo serve     [--listen 127.0.0.1:7344] [--r R] [--candidates …]
+//!                  [--hysteresis 1.15] [--tick-seconds 0] [--full]
+//! batopo serve-sim [--clients 2] [--scenario degrade] [--n 8] [--quick]
+//!                  [--connect HOST:PORT] [--no-shutdown]
 //! batopo info
 //! ```
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use batopo::bandwidth::allocation::allocate_edge_capacity;
-use batopo::bandwidth::fuzz::{fuzz_scenarios, replay, FuzzConfig, Invariant};
+use batopo::bandwidth::fuzz::{fuzz_scenarios, invariant_from_dump, replay, FuzzConfig, Invariant};
 use batopo::bandwidth::timing::TimeModel;
 use batopo::bench::records::{self, BenchRecord};
 use batopo::bench::{experiments, perf};
@@ -34,6 +38,7 @@ use batopo::graph::Topology;
 use batopo::optimizer::{BaTopoOptimizer, XStep};
 use batopo::runtime::mixer::MixVariant;
 use batopo::runtime::{ExecBackend, PjRtEngine};
+use batopo::serve::{self, ServeConfig, SimConfig};
 use batopo::training::{DsgdConfig, DsgdTrainer};
 use batopo::util::cli::Args;
 use batopo::util::json::Json;
@@ -50,10 +55,12 @@ fn main() {
         "reproduce" => cmd_reproduce(&args),
         "bench" => cmd_bench(&args),
         "fuzz" => cmd_fuzz(&args),
+        "serve" => cmd_serve(&args),
+        "serve-sim" => cmd_serve_sim(&args),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: batopo <optimize|consensus|allocate|train|reproduce|bench|fuzz|info> [options]\n\
+                "usage: batopo <optimize|consensus|allocate|train|reproduce|bench|fuzz|serve|serve-sim|info> [options]\n\
                  \n\
                  optimize  --n N --r R [--scenario S] [--seed X] [--quick] [--out file.json]\n\
                  \u{20}          [--xstep cg|bicgstab] [--max-iters N] [--json report.json]\n\
@@ -73,6 +80,11 @@ fn main() {
                  fuzz      scenarios [--cases 64] [--seed X] [--quick]\n\
                  \u{20}          [--invariant core|every-phase-gossips] [--out fuzz-out/]\n\
                  fuzz      replay <dump.scenario> [--invariant ...]\n\
+                 serve     [--listen HOST:PORT] [--r R] [--candidates SPEC] [--seed X]\n\
+                 \u{20}          [--hysteresis 1.15] [--tick-seconds 0] [--full]\n\
+                 serve-sim [--clients 2] [--scenario degrade] [--n 8] [--r R] [--quick]\n\
+                 \u{20}          [--seed X] [--hysteresis 1.02] [--connect HOST:PORT]\n\
+                 \u{20}          [--no-shutdown]\n\
                  info\n\
                  \n\
                  scenarios: homogeneous (any n) | node-level (even n) |\n\
@@ -574,12 +586,14 @@ fn cmd_fuzz(args: &Args) -> Result<(), String> {
         .first()
         .cloned()
         .ok_or("fuzz needs a mode: scenarios | replay <dump.scenario>")?;
-    let invariant_name = args.str_or("invariant", "core");
-    let invariant = Invariant::by_name(&invariant_name).ok_or_else(|| {
-        format!("unknown invariant {invariant_name:?} (expected core|every-phase-gossips)")
-    })?;
+    let named_invariant = |name: &str| {
+        Invariant::by_name(name).ok_or_else(|| {
+            format!("unknown invariant {name:?} (expected core|every-phase-gossips)")
+        })
+    };
     match mode.as_str() {
         "scenarios" => {
+            let invariant = named_invariant(&args.str_or("invariant", "core"))?;
             let cfg = FuzzConfig {
                 cases: args.parse_or("cases", 64usize).map_err(|e| e.to_string())?,
                 seed: args.parse_or("seed", 0xF022u64).map_err(|e| e.to_string())?,
@@ -625,13 +639,26 @@ fn cmd_fuzz(args: &Args) -> Result<(), String> {
             let path = modes.get(1).cloned().ok_or(
                 "fuzz replay needs a dump file: batopo fuzz replay <dump.scenario>",
             )?;
+            // Default the invariant from the dump's `# invariant:` header so
+            // replaying a fuzzer artifact re-checks what actually failed (a
+            // hand-typed `--invariant core` used to mask the violation and
+            // exit 0); explicit --invariant still wins.
+            let (invariant, source) = match args.get("invariant") {
+                Some(name) => (named_invariant(name)?, "--invariant"),
+                None => match invariant_from_dump(Path::new(&path)) {
+                    Some(inv) => (inv, "dump header"),
+                    None => (named_invariant("core")?, "default"),
+                },
+            };
             let (program, violation) = replay(Path::new(&path), invariant)?;
             println!(
-                "replayed {path}: {} node(s), {} phase(s), {} event(s), seed {}",
+                "replayed {path}: {} node(s), {} phase(s), {} event(s), seed {} \
+                 (invariant `{}` from {source})",
                 program.num_nodes(),
                 program.phases,
                 program.events.len(),
-                program.seed
+                program.seed,
+                invariant.name()
             );
             match violation {
                 None => {
@@ -643,6 +670,74 @@ fn cmd_fuzz(args: &Args) -> Result<(), String> {
         }
         other => Err(format!("unknown fuzz mode {other:?} (expected scenarios|replay)")),
     }
+}
+
+/// `batopo serve` — run the online topology-optimization daemon in the
+/// foreground until a client sends `shutdown` (wire protocol: docs/SERVE.md).
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let r = match args.get("r") {
+        Some(v) => Some(v.parse().map_err(|_| "bad --r")?),
+        None => None,
+    };
+    let cfg = ServeConfig {
+        listen: args.str_or("listen", "127.0.0.1:7344"),
+        r,
+        candidates: args.get("candidates").map(String::from),
+        hysteresis: args.parse_or("hysteresis", 1.15).map_err(|e| e.to_string())?,
+        quick: !args.flag("full"),
+        seed: args.parse_or("seed", 42u64).map_err(|e| e.to_string())?,
+        tick_seconds: args.parse_or("tick-seconds", 0.0).map_err(|e| e.to_string())?,
+    };
+    if cfg.hysteresis < 1.0 {
+        return Err(format!("--hysteresis must be ≥ 1.0 (got {})", cfg.hysteresis));
+    }
+    if !cfg.tick_seconds.is_finite() || cfg.tick_seconds < 0.0 {
+        return Err("--tick-seconds must be ≥ 0 (0 = wire-driven ticks only)".into());
+    }
+    let stats = serve::run(cfg).map_err(|e| e.to_string())?;
+    println!(
+        "serve shut down cleanly: {} epoch(s), {} update(s) published (fanout {}), \
+         {} re-optimization(s), {} failure(s), {} session(s) served",
+        stats.epochs,
+        stats.updates_published,
+        stats.update_fanout,
+        stats.reopts,
+        stats.reopt_failures,
+        stats.sessions_served
+    );
+    Ok(())
+}
+
+/// `batopo serve-sim` — drive a daemon with a corpus scenario from N
+/// subscriber clients plus a driver, and report end-to-end re-optimization
+/// latency and update fan-out. Exits nonzero if any subscriber received no
+/// topology update.
+fn cmd_serve_sim(args: &Args) -> Result<(), String> {
+    let n: usize = args.parse_or("n", 8usize).map_err(|e| e.to_string())?;
+    let r = match args.get("r") {
+        Some(v) => Some(v.parse().map_err(|_| "bad --r")?),
+        // A tight default budget (r = n) keeps the degrade scenario actually
+        // switching topologies, so there are switch latencies to measure.
+        None => Some(n),
+    };
+    let cfg = SimConfig {
+        clients: args.parse_or("clients", 2usize).map_err(|e| e.to_string())?,
+        scenario: args.str_or("scenario", "degrade"),
+        n,
+        quick: args.flag("quick"),
+        seed: args.parse_or("seed", 42u64).map_err(|e| e.to_string())?,
+        connect: args.get("connect").map(String::from),
+        shutdown: !args.flag("no-shutdown"),
+        hysteresis: args.parse_or("hysteresis", 1.02).map_err(|e| e.to_string())?,
+        candidates: args.get("candidates").map(String::from),
+        r,
+    };
+    let report = batopo::serve::sim::run(&cfg)?;
+    println!("{}", report.render());
+    if report.min_updates_per_client == 0 {
+        return Err("at least one subscriber received no topology update".into());
+    }
+    Ok(())
 }
 
 fn cmd_info() -> Result<(), String> {

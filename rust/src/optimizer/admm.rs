@@ -240,6 +240,14 @@ fn solve_once(spec: &OptimizeSpec) -> Result<OptimizeReport, OptimizeError> {
 /// spaces (BCube) and for candidate supports (the annealer explores the full
 /// edge space, so its output is almost never on-support).
 fn warm_start_graph(spec: &OptimizeSpec, cs: &ConstraintSet, cand: Option<&CandidateSet>) -> Graph {
+    // Incumbent warm start (online re-optimization): adopt the caller's edge
+    // set when it is well-formed for this problem — right node range, right
+    // budget, feasible for the relaxed constraints, and on-support when a
+    // candidate set restricts the edge space. Anything else falls through to
+    // the cold-start constructions below.
+    if let Some(warm) = incumbent_warm_graph(spec, cs, cand) {
+        return warm;
+    }
     if cand.is_some() {
         return extract::greedy_constrained_graph(cs, spec.seed, cand);
     }
@@ -264,6 +272,34 @@ fn warm_start_graph(spec: &OptimizeSpec, cs: &ConstraintSet, cand: Option<&Candi
     } else {
         extract::greedy_constrained_graph(cs, spec.seed, None)
     }
+}
+
+/// Resolve [`OptimizeSpec::warm_edges`] into a warm-start graph, or `None`
+/// when the incumbent cannot seed this solve (wrong node range, off-budget,
+/// off-support, or infeasible under the relaxed constraint check).
+fn incumbent_warm_graph(
+    spec: &OptimizeSpec,
+    cs: &ConstraintSet,
+    cand: Option<&CandidateSet>,
+) -> Option<Graph> {
+    let edges = spec.warm_edges.as_ref()?;
+    let n = cs.n;
+    if edges.is_empty() || edges.len() != spec.r {
+        return None;
+    }
+    if edges.iter().any(|&(a, b)| a == b || a >= n || b >= n) {
+        return None;
+    }
+    let g = Graph::new(n, edges.iter().copied());
+    if g.num_edges() != spec.r {
+        return None; // duplicates collapsed — not a valid budget-r incumbent
+    }
+    let sel = match cand {
+        Some(c) => c.graph_positions(&g).ok()?,
+        None => g.edge_indices(),
+    };
+    extract::check_relaxed(cs, &sel).ok()?;
+    Some(g)
 }
 
 /// Per-node degree caps implied by single-node equality rows (node-level

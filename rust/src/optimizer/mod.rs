@@ -105,6 +105,15 @@ pub struct OptimizeSpec {
     /// generated support, making the per-iteration cost O(|E_cand|) instead
     /// of O(n²). See [`crate::topo::candidates::CandidateSet::generate`].
     pub candidates: Option<String>,
+    /// Incumbent warm start: when set, the warm-start graph is taken from
+    /// these edges instead of the annealed/greedy construction, provided the
+    /// edge set is feasible for the constraint system (and on-support when a
+    /// candidate set is active). Online re-optimization
+    /// ([`crate::bandwidth::dynamic`], `batopo serve`) passes the incumbent
+    /// topology's edges here so successive solves start from the installed
+    /// topology rather than from scratch. Infeasible/off-support edge sets
+    /// silently fall back to the cold-start path.
+    pub warm_edges: Option<Vec<(usize, usize)>>,
 }
 
 impl OptimizeSpec {
@@ -132,6 +141,7 @@ impl OptimizeSpec {
             xstep: XStep::default(),
             restart_threads: 0,
             candidates: None,
+            warm_edges: None,
         }
     }
 }

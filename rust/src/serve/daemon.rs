@@ -1,0 +1,669 @@
+//! The `batopo serve` daemon: a single-threaded event loop over
+//! [`EventLoop`](crate::coordinator::event_loop::EventLoop) multiplexing
+//! listener accepts, per-session client lines, timer ticks and background
+//! solver completions.
+//!
+//! Threads: **one** loop thread owns all mutable state (sessions, telemetry,
+//! publisher, counters); a listener thread, one reader + one writer thread
+//! per session, an optional tick timer and **one** solver thread are pure
+//! producers/consumers on channels. The solver thread owns the
+//! [`ReoptCore`] — at most one solve is in flight, and ticks arriving while
+//! it is busy coalesce into a single pending request carrying the newest
+//! bandwidths (intermediate epochs are observed by telemetry but never
+//! solved, exactly what an online service wants under load).
+
+use crate::bandwidth::corpus::ScenarioProgram;
+use crate::bandwidth::dynamic::{DynamicPolicy, ReoptCore};
+use crate::bandwidth::scenario_dsl::{ScenarioEvent, ScheduledEvent};
+use crate::bandwidth::timing::TimeModel;
+use crate::coordinator::event_loop::{EventLoop, EventSender};
+use crate::optimizer::OptimizeReport;
+use crate::serve::protocol::{self, ClientMsg};
+use crate::serve::publisher::Publisher;
+use crate::serve::session::Session;
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Daemon configuration (the `batopo serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address (`127.0.0.1:0` picks an ephemeral port).
+    pub listen: String,
+    /// Edge budget `r`; `None` defaults to `min(2n, n(n−1)/2)` at `init`.
+    pub r: Option<usize>,
+    /// Candidate support spec forwarded to the optimizer; `None` defaults to
+    /// `knn:K` with `K = min(n−1, 6)` at `init`, keeping online re-solves on
+    /// the sparse path.
+    pub candidates: Option<String>,
+    /// Re-optimization hysteresis (install a fresh topology only when the
+    /// incumbent's τ exceeds the fresh estimate by this factor).
+    pub hysteresis: f64,
+    /// Quick optimizer budgets (recommended: re-optimization is online).
+    pub quick: bool,
+    /// Solver seed (perturbed per epoch).
+    pub seed: u64,
+    /// Wall-clock seconds between automatic epoch ticks; `0` disables the
+    /// timer so epochs advance only on wire `tick` commands (deterministic —
+    /// what the tests and `serve-sim` use).
+    pub tick_seconds: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            listen: "127.0.0.1:7344".to_string(),
+            r: None,
+            candidates: None,
+            hysteresis: 1.15,
+            quick: true,
+            seed: 42,
+            tick_seconds: 0.0,
+        }
+    }
+}
+
+/// Service counters, returned by [`run`] on clean shutdown and reported by
+/// the wire `stats` command.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Epochs ticked (epoch 0 is the `init` solve).
+    pub epochs: u64,
+    /// Versioned topology updates published.
+    pub updates_published: u64,
+    /// Total update deliveries across subscribed sessions.
+    pub update_fanout: u64,
+    /// Completed incremental re-optimizations (excludes the initial solve).
+    pub reopts: u64,
+    /// Cumulative solver failures (incumbent kept / ring fallback).
+    pub reopt_failures: u64,
+    /// Client connections accepted over the daemon's lifetime.
+    pub sessions_served: u64,
+}
+
+/// Completion record the solver thread posts back to the event loop.
+#[derive(Debug, Clone)]
+pub struct SolveDone {
+    /// Epoch the solve observed (0 for the initial solve).
+    pub epoch: u64,
+    /// True for the `init` solve (always published, as version 1).
+    pub initial: bool,
+    /// A fresh topology was installed as the new incumbent.
+    pub switched: bool,
+    /// The solve failed (incumbent kept / ring fallback installed).
+    pub failed: bool,
+    /// The topology is a ring fallback after a failed initial solve.
+    pub fallback: bool,
+    /// The incumbent after this solve (what subscribers should run).
+    pub topology: crate::graph::Topology,
+    /// Diagnostics of the most recent successful solve, if any.
+    pub report: Option<OptimizeReport>,
+    /// Cumulative solver failures so far.
+    pub failures: u64,
+}
+
+/// Everything the daemon's event loop multiplexes.
+#[derive(Debug)]
+pub enum ServeEvent {
+    /// Listener accepted a connection.
+    Accepted(TcpStream),
+    /// One request line from a session's reader thread.
+    Line {
+        /// Session id.
+        session: u64,
+        /// The raw line (no terminator).
+        line: String,
+    },
+    /// A session's reader saw EOF or a socket error.
+    Disconnected {
+        /// Session id.
+        session: u64,
+    },
+    /// Timer (or test) requests an epoch advance.
+    Tick,
+    /// The solver thread finished a solve.
+    SolveDone(SolveDone),
+}
+
+/// Handle to a daemon running on a background thread (see [`spawn`]).
+pub struct ServeHandle {
+    /// The bound listen address (resolved, so `:0` shows the real port).
+    pub addr: SocketAddr,
+    handle: JoinHandle<ServeStats>,
+}
+
+impl ServeHandle {
+    /// Wait for the daemon to shut down (a client must send `shutdown`) and
+    /// return its final counters.
+    pub fn join(self) -> ServeStats {
+        self.handle.join().expect("serve thread panicked")
+    }
+}
+
+/// Accumulated telemetry as a growing [`ScenarioProgram`]: config directives
+/// fix the scalar knobs, `init` fixes the fleet, and every `event` line
+/// appends to the schedule. The bandwidth at epoch `e` is recovered by
+/// compiling the *truncated* program (horizon `e+1`, events with
+/// `phase ≤ e`) and taking the last trace phase — per-phase RNG draws are
+/// sequential, so the truncated trace is an exact prefix of any longer one
+/// and late-arriving queries are deterministic.
+pub struct TelemetryState {
+    program: ScenarioProgram,
+}
+
+impl TelemetryState {
+    /// Start accumulating from an `init` fleet plus the pre-`init` scalar
+    /// configuration.
+    pub fn new(
+        initial: Vec<f64>,
+        phase_seconds: f64,
+        clamp: (f64, f64),
+        churn_floor: f64,
+        seed: u64,
+    ) -> TelemetryState {
+        TelemetryState {
+            program: ScenarioProgram {
+                initial,
+                phases: 1,
+                phase_seconds,
+                clamp,
+                churn_floor,
+                seed,
+                events: Vec::new(),
+            },
+        }
+    }
+
+    /// Fleet size.
+    pub fn num_nodes(&self) -> usize {
+        self.program.num_nodes()
+    }
+
+    /// Append one scheduled event (must already be validated with
+    /// [`protocol::validate_event`] — the underlying builder asserts).
+    pub fn add_event(&mut self, phase: usize, event: ScenarioEvent) {
+        self.program.events.push(ScheduledEvent { phase, event });
+    }
+
+    /// Per-node bandwidths at epoch `epoch`, from the truncated compile.
+    pub fn bandwidth_at(&self, epoch: u64) -> Vec<f64> {
+        let horizon = epoch as usize + 1;
+        let mut p = self.program.clone();
+        p.phases = horizon;
+        p.events.retain(|e| e.phase < horizon);
+        let compiled = p.compile();
+        compiled.trace.phases.last().cloned().expect("compiled trace has at least one phase")
+    }
+}
+
+/// Resolve the serve defaults that depend on the fleet size: edge budget
+/// `min(2n, n(n−1)/2)` and candidate spec `knn:min(n−1, 6)` — enough support
+/// slack that the budget stays feasible down to `n = 4` while keeping large
+/// fleets on the `O(|E_cand|)` path.
+pub fn default_policy(cfg: &ServeConfig, n: usize) -> DynamicPolicy {
+    let r = cfg.r.unwrap_or_else(|| (2 * n).min(n * (n - 1) / 2));
+    let k = (n - 1).min(6);
+    let candidates = cfg.candidates.clone().unwrap_or_else(|| format!("knn:{k}"));
+    DynamicPolicy {
+        r,
+        hysteresis: cfg.hysteresis,
+        quick: cfg.quick,
+        switch_cost: 0.05,
+        seed: cfg.seed,
+        candidates: Some(candidates),
+    }
+}
+
+/// Bind `cfg.listen`, announce the address on stdout, and run the daemon on
+/// the calling thread until a client sends `shutdown`. This is what
+/// `batopo serve` calls.
+pub fn run(cfg: ServeConfig) -> std::io::Result<ServeStats> {
+    let listener = TcpListener::bind(&cfg.listen)?;
+    println!("serve listening on {}", listener.local_addr()?);
+    Ok(run_with_listener(listener, cfg))
+}
+
+/// Bind `cfg.listen` and run the daemon on a background thread; returns the
+/// resolved address immediately. In-process tests and `serve-sim` use this.
+pub fn spawn(cfg: ServeConfig) -> std::io::Result<ServeHandle> {
+    let listener = TcpListener::bind(&cfg.listen)?;
+    let addr = listener.local_addr()?;
+    let handle = std::thread::Builder::new()
+        .name("batopo-serve".to_string())
+        .spawn(move || run_with_listener(listener, cfg))?;
+    Ok(ServeHandle { addr, handle })
+}
+
+enum SolveRequest {
+    Init { bw: Vec<f64>, policy: DynamicPolicy },
+    Reopt { epoch: u64, bw: Vec<f64> },
+}
+
+fn solver_loop(rx: Receiver<SolveRequest>, events: EventSender<ServeEvent>) {
+    let mut core: Option<ReoptCore> = None;
+    let tm = TimeModel::default();
+    while let Ok(req) = rx.recv() {
+        let done = match req {
+            SolveRequest::Init { bw, policy } => {
+                let c = ReoptCore::new(&bw, policy);
+                let fallback = c.failures > 0;
+                let done = SolveDone {
+                    epoch: 0,
+                    initial: true,
+                    switched: false,
+                    failed: fallback,
+                    fallback,
+                    topology: c.incumbent().clone(),
+                    report: c.last_report.clone(),
+                    failures: c.failures as u64,
+                };
+                core = Some(c);
+                done
+            }
+            SolveRequest::Reopt { epoch, bw } => {
+                // The daemon never sends Reopt before Init, but a dropped
+                // init (shutdown race) shouldn't panic the solver thread.
+                let Some(c) = core.as_mut() else { continue };
+                let out = c.reoptimize(epoch, &bw, &tm);
+                SolveDone {
+                    epoch,
+                    initial: false,
+                    switched: out.switched,
+                    failed: out.failed,
+                    fallback: false,
+                    topology: c.incumbent().clone(),
+                    report: out.report,
+                    failures: c.failures as u64,
+                }
+            }
+        };
+        if !events.send(ServeEvent::SolveDone(done)) {
+            return;
+        }
+    }
+}
+
+struct Daemon {
+    cfg: ServeConfig,
+    sessions: HashMap<u64, Session>,
+    next_session: u64,
+    events: EventSender<ServeEvent>,
+    solve_tx: Sender<SolveRequest>,
+    telemetry: Option<TelemetryState>,
+    epoch: u64,
+    solver_busy: bool,
+    pending: Option<(u64, Vec<f64>)>,
+    publisher: Publisher,
+    stats: ServeStats,
+    // Pre-`init` scalar configuration, defaulted like `.scenario` parsing.
+    phase_seconds: f64,
+    clamp: (f64, f64),
+    churn_floor: f64,
+    seed: u64,
+}
+
+enum LoopAction {
+    Continue,
+    Shutdown,
+}
+
+fn run_with_listener(listener: TcpListener, cfg: ServeConfig) -> ServeStats {
+    let (events, root) = EventLoop::<ServeEvent>::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let local_addr = listener.local_addr().ok();
+
+    let accept_stop = Arc::clone(&stop);
+    let accept_tx = root.clone();
+    let listener_thread = std::thread::Builder::new()
+        .name("batopo-serve-accept".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                if !accept_tx.send(ServeEvent::Accepted(stream)) {
+                    break;
+                }
+            }
+        })
+        .expect("spawn accept thread");
+
+    let (solve_tx, solve_rx) = channel::<SolveRequest>();
+    let solver_events = root.clone();
+    let solver_thread = std::thread::Builder::new()
+        .name("batopo-serve-solver".to_string())
+        .spawn(move || solver_loop(solve_rx, solver_events))
+        .expect("spawn solver thread");
+
+    let _timer = (cfg.tick_seconds > 0.0).then(|| {
+        root.spawn_timer(Duration::from_secs_f64(cfg.tick_seconds), || ServeEvent::Tick)
+    });
+
+    let mut d = Daemon {
+        cfg,
+        sessions: HashMap::new(),
+        next_session: 0,
+        events: root,
+        solve_tx,
+        telemetry: None,
+        epoch: 0,
+        solver_busy: false,
+        pending: None,
+        publisher: Publisher::new(),
+        stats: ServeStats::default(),
+        phase_seconds: 1.0,
+        clamp: (1e-3, f64::INFINITY),
+        churn_floor: 0.05,
+        seed: 0,
+    };
+
+    while let Some(ev) = events.next() {
+        match ev {
+            ServeEvent::Accepted(stream) => d.accept(stream),
+            ServeEvent::Line { session, line } => {
+                if matches!(d.handle_line(session, &line), LoopAction::Shutdown) {
+                    break;
+                }
+            }
+            ServeEvent::Disconnected { session } => {
+                d.sessions.remove(&session);
+            }
+            ServeEvent::Tick => {
+                d.tick();
+            }
+            ServeEvent::SolveDone(done) => d.on_solve_done(done),
+        }
+    }
+
+    // Shutdown: stop the listener (a self-connect unblocks `accept`), retire
+    // the solver, then close every session — writers drain their queues
+    // before the sockets die, so subscribers see all published updates.
+    stop.store(true, Ordering::SeqCst);
+    if let Some(addr) = local_addr {
+        let _ = TcpStream::connect(addr);
+    }
+    let _ = listener_thread.join();
+    let Daemon {
+        sessions,
+        solve_tx,
+        stats,
+        ..
+    } = d;
+    drop(solve_tx);
+    let _ = solver_thread.join();
+    for (_, s) in sessions {
+        s.close();
+    }
+    stats
+}
+
+impl Daemon {
+    fn accept(&mut self, stream: TcpStream) {
+        let id = self.next_session;
+        self.next_session += 1;
+        self.stats.sessions_served += 1;
+        let session = Session::start(id, stream, self.events.clone());
+        self.sessions.insert(id, session);
+    }
+
+    fn reply(&self, sid: u64, text: &str) {
+        if let Some(s) = self.sessions.get(&sid) {
+            s.send_line(text);
+        }
+    }
+
+    /// Advance one epoch and dispatch (or coalesce) the re-optimization.
+    /// Returns the new epoch, or `None` before `init`.
+    fn tick(&mut self) -> Option<u64> {
+        let telemetry = self.telemetry.as_ref()?;
+        self.epoch += 1;
+        self.stats.epochs = self.epoch;
+        let bw = telemetry.bandwidth_at(self.epoch);
+        if self.solver_busy {
+            // Coalesce: only the newest pending epoch survives.
+            self.pending = Some((self.epoch, bw));
+        } else {
+            self.solver_busy = true;
+            let _ = self.solve_tx.send(SolveRequest::Reopt {
+                epoch: self.epoch,
+                bw,
+            });
+        }
+        Some(self.epoch)
+    }
+
+    fn on_solve_done(&mut self, done: SolveDone) {
+        self.solver_busy = false;
+        self.stats.reopt_failures = done.failures;
+        if !done.initial {
+            self.stats.reopts += 1;
+        }
+        // Publish the initial topology (version 1) and every switch; a
+        // kept-incumbent re-solve changes nothing subscribers need.
+        if done.initial || done.switched {
+            let update = self.publisher.stamp(
+                done.epoch,
+                &done.topology,
+                done.report.as_ref(),
+                done.switched,
+                done.fallback,
+            );
+            self.publisher.broadcast(&update, self.sessions.values());
+            self.stats.updates_published = self.publisher.published;
+            self.stats.update_fanout = self.publisher.fanout;
+        }
+        if let Some((epoch, bw)) = self.pending.take() {
+            self.solver_busy = true;
+            let _ = self.solve_tx.send(SolveRequest::Reopt { epoch, bw });
+        }
+    }
+
+    fn stats_line(&self) -> String {
+        let inflight = u64::from(self.solver_busy) + u64::from(self.pending.is_some());
+        format!(
+            "stats epochs {} version {} updates {} fanout {} reopts {} failures {} \
+             sessions {} inflight {}",
+            self.epoch,
+            self.publisher.published,
+            self.stats.updates_published,
+            self.stats.update_fanout,
+            self.stats.reopts,
+            self.stats.reopt_failures,
+            self.sessions.len(),
+            inflight
+        )
+    }
+
+    fn handle_line(&mut self, sid: u64, line: &str) -> LoopAction {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            return LoopAction::Continue; // same comment rules as `.scenario`
+        }
+        let msg = match protocol::parse_client_line(trimmed) {
+            Ok(m) => m,
+            Err(e) => {
+                self.reply(sid, &format!("err {e}"));
+                return LoopAction::Continue;
+            }
+        };
+        match msg {
+            ClientMsg::Hello(name) => {
+                if let Some(s) = self.sessions.get_mut(&sid) {
+                    s.name = name.clone();
+                }
+                self.reply(sid, &format!("ok hello {name}"));
+            }
+            ClientMsg::PhaseSeconds(x) => {
+                self.set_config(sid, "phase_seconds", x.is_finite() && x > 0.0, |d| {
+                    d.phase_seconds = x;
+                });
+            }
+            ClientMsg::Clamp(lo, hi) => {
+                let valid = lo.is_finite() && lo >= 0.0 && hi >= lo;
+                self.set_config(sid, "clamp", valid, |d| d.clamp = (lo, hi));
+            }
+            ClientMsg::ChurnFloor(x) => {
+                self.set_config(sid, "churn_floor", x.is_finite() && x > 0.0, |d| {
+                    d.churn_floor = x;
+                });
+            }
+            ClientMsg::Seed(s) => {
+                self.set_config(sid, "seed", true, |d| d.seed = s);
+            }
+            ClientMsg::Init(bw) => return self.handle_init(sid, bw),
+            ClientMsg::Event { phase, event } => {
+                let Some(telemetry) = self.telemetry.as_mut() else {
+                    self.reply(sid, "err init required before events");
+                    return LoopAction::Continue;
+                };
+                let n = telemetry.num_nodes();
+                match protocol::validate_event(n, &event) {
+                    Ok(()) => {
+                        telemetry.add_event(phase, event);
+                        self.reply(sid, &format!("ok event {phase}"));
+                    }
+                    Err(e) => self.reply(sid, &format!("err {e}")),
+                }
+            }
+            ClientMsg::Subscribe => {
+                if let Some(s) = self.sessions.get_mut(&sid) {
+                    s.subscribed = true;
+                }
+                self.reply(sid, "ok subscribe");
+                if let Some(s) = self.sessions.get(&sid) {
+                    self.publisher.replay_to(s);
+                    self.stats.update_fanout = self.publisher.fanout;
+                }
+            }
+            ClientMsg::Tick => match self.tick() {
+                Some(epoch) => self.reply(sid, &format!("ok tick {epoch}")),
+                None => self.reply(sid, "err init required before tick"),
+            },
+            ClientMsg::Stats => {
+                let line = self.stats_line();
+                self.reply(sid, &line);
+            }
+            ClientMsg::Shutdown => {
+                self.reply(sid, "ok shutdown");
+                return LoopAction::Shutdown;
+            }
+            ClientMsg::Quit => {
+                self.reply(sid, "ok quit");
+                if let Some(s) = self.sessions.remove(&sid) {
+                    s.close();
+                }
+            }
+        }
+        LoopAction::Continue
+    }
+
+    fn set_config(&mut self, sid: u64, key: &str, valid: bool, apply: impl FnOnce(&mut Daemon)) {
+        if self.telemetry.is_some() {
+            self.reply(sid, &format!("err {key} must precede init"));
+            return;
+        }
+        if !valid {
+            self.reply(sid, &format!("err invalid {key}"));
+            return;
+        }
+        apply(self);
+        self.reply(sid, &format!("ok {key}"));
+    }
+
+    fn handle_init(&mut self, sid: u64, bw: Vec<f64>) -> LoopAction {
+        if self.telemetry.is_some() {
+            self.reply(sid, "err already initialized");
+            return LoopAction::Continue;
+        }
+        if let Err(e) = protocol::validate_init(&bw) {
+            self.reply(sid, &format!("err {e}"));
+            return LoopAction::Continue;
+        }
+        let n = bw.len();
+        let policy = default_policy(&self.cfg, n);
+        let r = policy.r;
+        let spec = policy.candidates.clone().unwrap_or_else(|| "full".to_string());
+        self.telemetry = Some(TelemetryState::new(
+            bw.clone(),
+            self.phase_seconds,
+            self.clamp,
+            self.churn_floor,
+            self.seed,
+        ));
+        self.solver_busy = true;
+        let _ = self.solve_tx.send(SolveRequest::Init { bw, policy });
+        self.reply(sid, &format!("ok init n {n} r {r} candidates {spec}"));
+        LoopAction::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn telemetry(n: usize) -> TelemetryState {
+        TelemetryState::new(vec![8.0; n], 1.5, (1e-3, f64::INFINITY), 0.05, 13)
+    }
+
+    #[test]
+    fn bandwidth_at_zero_is_the_init_fleet() {
+        let t = telemetry(6);
+        assert_eq!(t.bandwidth_at(0), vec![8.0; 6]);
+    }
+
+    #[test]
+    fn future_events_do_not_leak_into_earlier_epochs() {
+        let mut t = telemetry(6);
+        t.add_event(
+            3,
+            ScenarioEvent::LinkDegrade {
+                nodes: vec![0, 1],
+                factor: 0.1,
+            },
+        );
+        // Epoch 1 must be oblivious to the phase-3 event even though the
+        // underlying compile would otherwise extend its horizon to cover it.
+        assert_eq!(t.bandwidth_at(1), vec![8.0; 6]);
+        let at3 = t.bandwidth_at(3);
+        assert!((at3[0] - 0.8).abs() < 1e-12, "degrade applied at its phase: {at3:?}");
+        assert_eq!(at3[2], 8.0);
+    }
+
+    #[test]
+    fn truncated_compiles_are_prefixes_of_longer_ones() {
+        let mut t = telemetry(5);
+        t.add_event(1, ScenarioEvent::Drift { sigma: 0.2 });
+        t.add_event(2, ScenarioEvent::SetBandwidth { node: 0, bw: 2.0 });
+        // Querying epoch k then epoch m > k must agree on phase k: the
+        // per-phase RNG draws are sequential, so prefixes are stable.
+        let early = t.bandwidth_at(2);
+        let mut p = t.program.clone();
+        p.phases = 5;
+        let full = p.compile();
+        assert_eq!(early, full.trace.phases[2]);
+    }
+
+    #[test]
+    fn default_policy_scales_with_fleet_size() {
+        let cfg = ServeConfig::default();
+        let p4 = default_policy(&cfg, 4);
+        assert_eq!(p4.r, 6); // min(8, 4·3/2)
+        assert_eq!(p4.candidates.as_deref(), Some("knn:3"));
+        let p8 = default_policy(&cfg, 8);
+        assert_eq!(p8.r, 16);
+        assert_eq!(p8.candidates.as_deref(), Some("knn:6"));
+        let over = ServeConfig {
+            r: Some(10),
+            candidates: Some("union".to_string()),
+            ..ServeConfig::default()
+        };
+        let p = default_policy(&over, 8);
+        assert_eq!(p.r, 10);
+        assert_eq!(p.candidates.as_deref(), Some("union"));
+    }
+}

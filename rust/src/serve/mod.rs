@@ -1,0 +1,27 @@
+//! Online topology-optimization service (`batopo serve` / `batopo
+//! serve-sim`).
+//!
+//! A long-running daemon that ingests streaming bandwidth telemetry over a
+//! line-oriented TCP protocol (the same directive vocabulary as `.scenario`
+//! dumps), maintains an incumbent topology through incremental,
+//! incumbent-warm-started re-optimizations on a background solver thread,
+//! and publishes versioned topology/weight updates to subscribed clients.
+//! The wire protocol is specified in `docs/SERVE.md`.
+//!
+//! Module map:
+//! - [`protocol`] — client-line parsing, non-panicking validation, and the
+//!   versioned [`protocol::TopologyUpdate`] wire frame;
+//! - [`session`] — per-connection reader/writer threads;
+//! - [`publisher`] — version stamping, replay, and fan-out;
+//! - [`daemon`] — the event loop, telemetry state, and solver thread;
+//! - [`sim`] — the multi-client load simulator.
+
+pub mod daemon;
+pub mod protocol;
+pub mod publisher;
+pub mod session;
+pub mod sim;
+
+pub use daemon::{run, spawn, ServeConfig, ServeHandle, ServeStats};
+pub use protocol::TopologyUpdate;
+pub use sim::{SimConfig, SimReport};

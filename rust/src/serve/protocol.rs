@@ -1,0 +1,469 @@
+//! The `batopo serve` wire protocol: line-oriented, UTF-8, human-typable.
+//!
+//! Clients speak the same vocabulary as `.scenario` dumps
+//! ([`crate::bandwidth::corpus::ScenarioProgram`]): configuration directives
+//! (`phase_seconds`, `clamp`, `churn_floor`, `seed`), an `init` line fixing
+//! the fleet, and `event <phase> <kind> <args…>` telemetry lines whose event
+//! words are parsed by the exact same
+//! [`parse_event`](crate::bandwidth::corpus::parse_event) the dump format
+//! uses. On top of that sit the service verbs: `subscribe`, `tick`, `stats`,
+//! `shutdown`, `quit`. Every client line gets exactly one `ok …` / `err …`
+//! reply line; published topology updates are multi-line blocks framed by
+//! `update <version> …` and `end <version>` (see [`TopologyUpdate`]).
+//!
+//! See `docs/SERVE.md` for the full specification with a session transcript.
+
+use crate::bandwidth::corpus::{event_words, parse_event};
+use crate::bandwidth::scenario_dsl::{ScenarioEvent, TailDist};
+
+/// One parsed client request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// `hello <name>` — name this session (diagnostics only).
+    Hello(String),
+    /// `phase_seconds <x>` — simulated seconds per epoch (pre-`init` only).
+    PhaseSeconds(f64),
+    /// `clamp <lo> <hi>` — bandwidth clamp applied to every telemetry update
+    /// (pre-`init` only).
+    Clamp(f64, f64),
+    /// `churn_floor <bw>` — bandwidth of departed/partitioned nodes
+    /// (pre-`init` only).
+    ChurnFloor(f64),
+    /// `seed <n>` — RNG seed for stochastic telemetry events (pre-`init`
+    /// only).
+    Seed(u64),
+    /// `init <b1> <b2> …` — fix the fleet's initial per-node bandwidths and
+    /// trigger the initial optimization (epoch 0).
+    Init(Vec<f64>),
+    /// `event <phase> <kind> <args…>` — one scheduled telemetry event in
+    /// `.scenario` words.
+    Event {
+        /// Epoch at which the event fires.
+        phase: usize,
+        /// The parsed event.
+        event: ScenarioEvent,
+    },
+    /// `subscribe` — receive published topology updates on this connection
+    /// (the latest update is replayed immediately).
+    Subscribe,
+    /// `tick` — advance the service epoch by one and trigger an incremental
+    /// re-optimization under the accumulated telemetry.
+    Tick,
+    /// `stats` — one-line service counters snapshot.
+    Stats,
+    /// `shutdown` — stop the daemon (all sessions are closed).
+    Shutdown,
+    /// `quit` — close this session only.
+    Quit,
+}
+
+fn num<T: std::str::FromStr>(tok: Option<&str>, what: &str) -> Result<T, String> {
+    let t = tok.ok_or_else(|| format!("missing {what}"))?;
+    t.parse::<T>().map_err(|_| format!("bad {what}: {t:?}"))
+}
+
+/// Parse one client request line. Blank lines and `#` comments are the
+/// caller's concern (the daemon skips them before calling this).
+pub fn parse_client_line(line: &str) -> Result<ClientMsg, String> {
+    let line = line.trim();
+    let mut toks = line.split_whitespace();
+    let key = toks.next().ok_or_else(|| "empty command".to_string())?;
+    let msg = match key {
+        "hello" => ClientMsg::Hello(toks.next().unwrap_or("anon").to_string()),
+        "phase_seconds" => ClientMsg::PhaseSeconds(num(toks.next(), "phase_seconds")?),
+        "clamp" => ClientMsg::Clamp(num(toks.next(), "clamp lo")?, num(toks.next(), "clamp hi")?),
+        "churn_floor" => ClientMsg::ChurnFloor(num(toks.next(), "churn_floor")?),
+        "seed" => ClientMsg::Seed(num(toks.next(), "seed")?),
+        "init" => {
+            let bw: Result<Vec<f64>, String> =
+                toks.map(|t| num(Some(t), "init bandwidth")).collect();
+            ClientMsg::Init(bw?)
+        }
+        "event" => {
+            // Keep the raw remainder so report labels retain spaces —
+            // identical to the `.scenario` parser.
+            let mut parts = line.splitn(4, char::is_whitespace);
+            parts.next(); // "event"
+            let phase: usize = num(parts.next(), "event phase")?;
+            let kind = parts.next().ok_or_else(|| "event needs a kind".to_string())?;
+            let rest = parts.next().unwrap_or("");
+            ClientMsg::Event {
+                phase,
+                event: parse_event(kind, rest)?,
+            }
+        }
+        "subscribe" => ClientMsg::Subscribe,
+        "tick" => ClientMsg::Tick,
+        "stats" => ClientMsg::Stats,
+        "shutdown" => ClientMsg::Shutdown,
+        "quit" => ClientMsg::Quit,
+        other => return Err(format!("unknown command {other:?}")),
+    };
+    Ok(msg)
+}
+
+/// Non-panicking mirror of the [`ScenarioBuilder`] event validation rules
+/// (the builder `assert!`s; a daemon must reject, not die). `n` is the fleet
+/// size fixed by `init`.
+///
+/// [`ScenarioBuilder`]: crate::bandwidth::scenario_dsl::ScenarioBuilder
+pub fn validate_event(n: usize, event: &ScenarioEvent) -> Result<(), String> {
+    // Finite-and-positive / finite-and-non-negative predicates; both reject
+    // NaN (which would sail through a plain `<=` comparison and then trip the
+    // builder's asserts).
+    let pos = |x: f64| x.is_finite() && x > 0.0;
+    let non_neg = |x: f64| x.is_finite() && x >= 0.0;
+    let check_node = |i: usize| -> Result<(), String> {
+        if i >= n {
+            return Err(format!("node {i} out of range (fleet has {n} nodes)"));
+        }
+        Ok(())
+    };
+    let check_nodes = |nodes: &[usize], what: &str| -> Result<(), String> {
+        if nodes.is_empty() {
+            return Err(format!("{what} needs at least one node"));
+        }
+        nodes.iter().try_for_each(|&i| check_node(i))
+    };
+    match event {
+        ScenarioEvent::Drift { sigma } => {
+            if !non_neg(*sigma) {
+                return Err(format!("drift sigma must be finite non-negative, got {sigma}"));
+            }
+        }
+        ScenarioEvent::SetBandwidth { node, bw } => {
+            check_node(*node)?;
+            if !pos(*bw) {
+                return Err(format!("bandwidth must be finite positive, got {bw}"));
+            }
+        }
+        ScenarioEvent::LinkDegrade { nodes, factor } => {
+            check_nodes(nodes, "link_degrade")?;
+            if !pos(*factor) {
+                return Err(format!("degradation factor must be finite positive, got {factor}"));
+            }
+        }
+        ScenarioEvent::NodeChurn { node, rejoin_bw } => {
+            check_node(*node)?;
+            if let Some(bw) = rejoin_bw {
+                if !pos(*bw) {
+                    return Err(format!("rejoin bandwidth must be finite positive, got {bw}"));
+                }
+            }
+        }
+        ScenarioEvent::ReportStats { .. } => {}
+        ScenarioEvent::HeavyTailDraw { dist } => match dist {
+            TailDist::Pareto { alpha, xm } => {
+                if !pos(*alpha) || !pos(*xm) {
+                    return Err(format!("pareto needs alpha > 0 and xm > 0, got {alpha} {xm}"));
+                }
+            }
+            TailDist::LogNormal { mu, sigma } => {
+                if !mu.is_finite() || !pos(*sigma) {
+                    return Err(format!(
+                        "lognormal needs finite mu and sigma > 0, got {mu} {sigma}"
+                    ));
+                }
+            }
+        },
+        ScenarioEvent::CorrelatedDrift { sigma, rho } => {
+            if !non_neg(*sigma) {
+                return Err(format!("correlated drift sigma must be non-negative, got {sigma}"));
+            }
+            if !(0.0..=1.0).contains(rho) {
+                return Err(format!("correlation rho must be in [0,1], got {rho}"));
+            }
+        }
+        ScenarioEvent::Partition { nodes } => check_nodes(nodes, "partition")?,
+        ScenarioEvent::Heal { nodes } => check_nodes(nodes, "heal")?,
+        ScenarioEvent::Straggle { nodes, factor } => {
+            check_nodes(nodes, "straggle")?;
+            if !pos(*factor) {
+                return Err(format!("straggle factor must be finite positive, got {factor}"));
+            }
+        }
+        ScenarioEvent::Diurnal { amplitude, period } => {
+            if !(0.0..1.0).contains(amplitude) {
+                return Err(format!("diurnal amplitude must be in [0,1), got {amplitude}"));
+            }
+            if *period < 2 {
+                return Err(format!("diurnal period must be at least 2, got {period}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate an `init` fleet (finite positive bandwidths, at least 4 nodes —
+/// the smallest fleet every corpus scenario and the `knn` candidate
+/// generator support).
+pub fn validate_init(bw: &[f64]) -> Result<(), String> {
+    if bw.len() < 4 {
+        return Err(format!("init needs at least 4 nodes, got {}", bw.len()));
+    }
+    for (i, &b) in bw.iter().enumerate() {
+        if !b.is_finite() || b <= 0.0 {
+            return Err(format!("init bandwidth for node {i} must be finite positive, got {b}"));
+        }
+    }
+    Ok(())
+}
+
+/// One versioned topology update, published to every subscribed session.
+///
+/// Wire form (`to_wire`/`from_wire` round-trip exactly):
+///
+/// ```text
+/// update <version> epoch <e> n <n> edges <m> r_asym <x> lambda2 <x> \
+///   admm_iters <k> converged <0|1> krylov_failures <k> switched <0|1> fallback <0|1>
+/// e <i> <j> <w>        (m lines, canonical edge order)
+/// end <version>
+/// ```
+///
+/// (the header is a single line; it is wrapped here for readability).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyUpdate {
+    /// Monotonically increasing update version (1 = initial topology).
+    pub version: u64,
+    /// Service epoch the optimization observed.
+    pub epoch: u64,
+    /// Fleet size.
+    pub n: usize,
+    /// Edges `(i, j, w)` with their gossip weights `w = W[i][j]`, in
+    /// canonical (sorted) edge order.
+    pub edges: Vec<(usize, usize, f64)>,
+    /// `r_asym` of the published gossip matrix (the paper's objective).
+    pub r_asym: f64,
+    /// Algebraic connectivity λ₂ of the weighted Laplacian.
+    pub lambda2: f64,
+    /// ADMM iterations of the producing solve (0 for a ring fallback).
+    pub admm_iterations: usize,
+    /// Whether that solve's ADMM hit its ε before the iteration cap.
+    pub admm_converged: bool,
+    /// X-step Krylov solves that missed their residual target.
+    pub krylov_failures: usize,
+    /// True when this update switched the incumbent (false for the initial
+    /// topology and for subscribe-time replays of it).
+    pub switched: bool,
+    /// True when the topology is a ring fallback after a failed initial
+    /// solve.
+    pub fallback: bool,
+}
+
+impl TopologyUpdate {
+    /// Serialize to the framed multi-line wire form.
+    pub fn to_wire(&self) -> String {
+        let mut s = format!(
+            "update {} epoch {} n {} edges {} r_asym {} lambda2 {}",
+            self.version,
+            self.epoch,
+            self.n,
+            self.edges.len(),
+            self.r_asym,
+            self.lambda2
+        );
+        s.push_str(&format!(
+            " admm_iters {} converged {} krylov_failures {} switched {} fallback {}\n",
+            self.admm_iterations,
+            u8::from(self.admm_converged),
+            self.krylov_failures,
+            u8::from(self.switched),
+            u8::from(self.fallback)
+        ));
+        for &(i, j, w) in &self.edges {
+            s.push_str(&format!("e {i} {j} {w}\n"));
+        }
+        s.push_str(&format!("end {}\n", self.version));
+        s
+    }
+
+    /// Parse a framed update block (inverse of [`TopologyUpdate::to_wire`]).
+    pub fn from_wire(text: &str) -> Result<TopologyUpdate, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty update block")?;
+        let mut toks = header.split_whitespace();
+        if toks.next() != Some("update") {
+            return Err(format!("not an update header: {header:?}"));
+        }
+        let version: u64 = num(toks.next(), "version")?;
+        let mut fields = std::collections::HashMap::new();
+        while let Some(k) = toks.next() {
+            fields.insert(k.to_string(), toks.next().unwrap_or("").to_string());
+        }
+        let get = |k: &str| -> Result<&str, String> {
+            fields
+                .get(k)
+                .map(|s| s.as_str())
+                .ok_or_else(|| format!("update header missing {k}"))
+        };
+        let m: usize = num(Some(get("edges")?), "edges")?;
+        let mut edges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let line = lines.next().ok_or("truncated update block")?;
+            let mut t = line.split_whitespace();
+            if t.next() != Some("e") {
+                return Err(format!("expected edge line, got {line:?}"));
+            }
+            edges.push((
+                num(t.next(), "edge i")?,
+                num(t.next(), "edge j")?,
+                num(t.next(), "edge weight")?,
+            ));
+        }
+        let endl = lines.next().ok_or("missing end line")?;
+        let end_version: u64 = num(endl.split_whitespace().nth(1), "end version")?;
+        if end_version != version {
+            return Err(format!("frame mismatch: update {version} ended by {end_version}"));
+        }
+        let flag = |k: &str| -> Result<bool, String> { Ok(num::<u8>(Some(get(k)?), k)? != 0) };
+        Ok(TopologyUpdate {
+            version,
+            epoch: num(Some(get("epoch")?), "epoch")?,
+            n: num(Some(get("n")?), "n")?,
+            edges,
+            r_asym: num(Some(get("r_asym")?), "r_asym")?,
+            lambda2: num(Some(get("lambda2")?), "lambda2")?,
+            admm_iterations: num(Some(get("admm_iters")?), "admm_iters")?,
+            admm_converged: flag("converged")?,
+            krylov_failures: num(Some(get("krylov_failures")?), "krylov_failures")?,
+            switched: flag("switched")?,
+            fallback: flag("fallback")?,
+        })
+    }
+}
+
+/// Render an event back into its wire words (`event <phase> <words…>`) —
+/// used by the simulator to stream corpus scenarios at the daemon.
+pub fn event_line(phase: usize, event: &ScenarioEvent) -> String {
+    format!("event {phase} {}", event_words(event))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_lines_parse_like_scenario_dumps() {
+        assert_eq!(
+            parse_client_line("init 9.76 9.76 9.76 9.76"),
+            Ok(ClientMsg::Init(vec![9.76; 4]))
+        );
+        assert_eq!(parse_client_line("  tick "), Ok(ClientMsg::Tick));
+        assert_eq!(parse_client_line("seed 13"), Ok(ClientMsg::Seed(13)));
+        let ev = parse_client_line("event 2 link_degrade 0.1 4 5 6 7").unwrap();
+        match ev {
+            ClientMsg::Event { phase, event } => {
+                assert_eq!(phase, 2);
+                assert_eq!(
+                    event,
+                    ScenarioEvent::LinkDegrade {
+                        factor: 0.1,
+                        nodes: vec![4, 5, 6, 7],
+                    }
+                );
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        assert!(parse_client_line("frobnicate 1").is_err());
+        assert!(parse_client_line("event 1 drift").is_err());
+        assert!(parse_client_line("").is_err());
+    }
+
+    #[test]
+    fn event_line_round_trips_through_the_client_parser() {
+        let event = ScenarioEvent::Straggle {
+            nodes: vec![1, 3],
+            factor: 0.25,
+        };
+        let line = event_line(4, &event);
+        assert_eq!(parse_client_line(&line), Ok(ClientMsg::Event { phase: 4, event }));
+    }
+
+    #[test]
+    fn validate_event_rejects_what_the_builder_asserts() {
+        // Every rejection here would be a panic inside `ScenarioBuilder`.
+        let bad = [
+            ScenarioEvent::Drift { sigma: -1.0 },
+            ScenarioEvent::SetBandwidth { node: 9, bw: 1.0 },
+            ScenarioEvent::SetBandwidth { node: 0, bw: 0.0 },
+            ScenarioEvent::LinkDegrade {
+                nodes: vec![0],
+                factor: 0.0,
+            },
+            ScenarioEvent::Partition { nodes: vec![] },
+            ScenarioEvent::Heal { nodes: vec![12] },
+            ScenarioEvent::Diurnal {
+                amplitude: 1.0,
+                period: 4,
+            },
+            ScenarioEvent::Diurnal {
+                amplitude: 0.5,
+                period: 1,
+            },
+        ];
+        for ev in &bad {
+            assert!(validate_event(6, ev).is_err(), "accepted bad event {ev:?}");
+        }
+        let good = [
+            ScenarioEvent::Drift { sigma: 0.1 },
+            ScenarioEvent::SetBandwidth { node: 5, bw: 2.0 },
+            ScenarioEvent::Partition {
+                nodes: vec![0, 1, 2],
+            },
+        ];
+        for ev in &good {
+            assert_eq!(validate_event(6, ev), Ok(()), "rejected good event {ev:?}");
+        }
+    }
+
+    #[test]
+    fn validate_init_bounds() {
+        assert!(validate_init(&[1.0; 4]).is_ok());
+        assert!(validate_init(&[1.0; 3]).is_err());
+        assert!(validate_init(&[1.0, 2.0, 3.0, 0.0]).is_err());
+        assert!(validate_init(&[1.0, 2.0, 3.0, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn topology_update_wire_round_trip() {
+        let up = TopologyUpdate {
+            version: 3,
+            epoch: 7,
+            n: 6,
+            edges: vec![(0, 1, 0.25), (2, 5, 0.125)],
+            r_asym: 0.61803398875,
+            lambda2: 0.381966,
+            admm_iterations: 42,
+            admm_converged: true,
+            krylov_failures: 0,
+            switched: true,
+            fallback: false,
+        };
+        let wire = up.to_wire();
+        assert!(wire.starts_with("update 3 "));
+        assert!(wire.ends_with("end 3\n"));
+        assert_eq!(TopologyUpdate::from_wire(&wire), Ok(up));
+    }
+
+    #[test]
+    fn topology_update_rejects_torn_frames() {
+        let up = TopologyUpdate {
+            version: 1,
+            epoch: 0,
+            n: 4,
+            edges: vec![(0, 1, 0.5)],
+            r_asym: 0.5,
+            lambda2: 1.0,
+            admm_iterations: 1,
+            admm_converged: true,
+            krylov_failures: 0,
+            switched: false,
+            fallback: false,
+        };
+        let wire = up.to_wire();
+        let torn: String = wire.lines().take(2).collect::<Vec<_>>().join("\n");
+        assert!(TopologyUpdate::from_wire(&torn).is_err());
+        let mismatched = wire.replace("end 1", "end 2");
+        assert!(TopologyUpdate::from_wire(&mismatched).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Versioned topology-update publication: builds [`TopologyUpdate`]s from
+//! solver results, stamps monotonically increasing versions, remembers the
+//! latest update so late subscribers get an immediate replay, and fans the
+//! wire form out to subscribed sessions.
+
+use crate::graph::spectral::algebraic_connectivity_graph;
+use crate::graph::Topology;
+use crate::optimizer::OptimizeReport;
+use crate::serve::protocol::TopologyUpdate;
+use crate::serve::session::Session;
+
+/// Update builder + pub/sub bookkeeping for the serve daemon.
+#[derive(Default)]
+pub struct Publisher {
+    next_version: u64,
+    last: Option<TopologyUpdate>,
+    /// Updates published so far (the latest has `version == published`).
+    pub published: u64,
+    /// Total update deliveries across sessions (Σ subscribers per publish,
+    /// plus subscribe-time replays).
+    pub fanout: u64,
+}
+
+impl Publisher {
+    /// Fresh publisher: no updates yet, versions start at 1.
+    pub fn new() -> Publisher {
+        Publisher::default()
+    }
+
+    /// The most recent update, if any.
+    pub fn last(&self) -> Option<&TopologyUpdate> {
+        self.last.as_ref()
+    }
+
+    /// Build the next versioned update from the incumbent topology plus the
+    /// producing solve's diagnostics (`None` for a ring fallback) and
+    /// remember it as the latest.
+    pub fn stamp(
+        &mut self,
+        epoch: u64,
+        topology: &Topology,
+        report: Option<&OptimizeReport>,
+        switched: bool,
+        fallback: bool,
+    ) -> TopologyUpdate {
+        self.next_version += 1;
+        self.published = self.next_version;
+        let weights = topology.edge_weights();
+        let edges = topology
+            .graph
+            .edges()
+            .iter()
+            .zip(&weights)
+            .map(|(&(i, j), &w)| (i, j, w))
+            .collect();
+        let update = TopologyUpdate {
+            version: self.next_version,
+            epoch,
+            n: topology.num_nodes(),
+            edges,
+            r_asym: topology.asymptotic_convergence_factor(),
+            lambda2: algebraic_connectivity_graph(&topology.graph, &weights),
+            admm_iterations: report.map_or(0, |r| r.admm_iterations),
+            admm_converged: report.is_some_and(|r| r.admm_converged),
+            krylov_failures: report.map_or(0, |r| r.krylov_failures),
+            switched,
+            fallback,
+        };
+        self.last = Some(update.clone());
+        update
+    }
+
+    /// Deliver `update` to every subscribed session; returns the number of
+    /// deliveries (counted into [`Publisher::fanout`]).
+    pub fn broadcast<'a>(
+        &mut self,
+        update: &TopologyUpdate,
+        sessions: impl Iterator<Item = &'a Session>,
+    ) -> u64 {
+        let wire = update.to_wire();
+        let mut delivered = 0;
+        for s in sessions.filter(|s| s.subscribed) {
+            s.send_block(&wire);
+            delivered += 1;
+        }
+        self.fanout += delivered;
+        delivered
+    }
+
+    /// Replay the latest update (if any) to one just-subscribed session, so
+    /// "subscribe" always yields the current topology without waiting for
+    /// the next re-optimization. Returns true when a replay was sent.
+    pub fn replay_to(&mut self, session: &Session) -> bool {
+        match &self.last {
+            Some(update) => {
+                session.send_block(&update.to_wire());
+                self.fanout += 1;
+                true
+            }
+            None => false,
+        }
+    }
+}

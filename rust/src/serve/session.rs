@@ -1,0 +1,87 @@
+//! Per-connection session state: a reader thread feeding the daemon's event
+//! loop and a writer thread draining an outbound line queue, so a slow or
+//! stalled client can never block the single-threaded daemon loop.
+
+use crate::coordinator::event_loop::EventSender;
+use crate::serve::daemon::ServeEvent;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+/// One connected client session (daemon-side bookkeeping).
+pub struct Session {
+    /// Session id (daemon-assigned, monotonically increasing).
+    pub id: u64,
+    /// Client-chosen name from `hello` (diagnostics only).
+    pub name: String,
+    /// Whether the session receives published topology updates.
+    pub subscribed: bool,
+    outbound: Sender<String>,
+    writer: Option<JoinHandle<()>>,
+    stream: TcpStream,
+}
+
+impl Session {
+    /// Adopt an accepted connection: spawn its reader thread (feeding
+    /// `events`) and its writer thread (draining the outbound queue).
+    pub fn start(id: u64, stream: TcpStream, events: EventSender<ServeEvent>) -> Session {
+        let (outbound, outbound_rx) = channel::<String>();
+        let write_stream = stream.try_clone().expect("clone session stream");
+        let writer = std::thread::Builder::new()
+            .name(format!("batopo-serve-write-{id}"))
+            .spawn(move || {
+                let mut w = write_stream;
+                while let Ok(line) = outbound_rx.recv() {
+                    if w.write_all(line.as_bytes()).is_err() || w.flush().is_err() {
+                        return; // client gone; daemon learns via the reader
+                    }
+                }
+            })
+            .expect("spawn session writer");
+        let read_stream = stream.try_clone().expect("clone session stream");
+        std::thread::Builder::new()
+            .name(format!("batopo-serve-read-{id}"))
+            .spawn(move || {
+                let reader = BufReader::new(read_stream);
+                for line in reader.lines() {
+                    let Ok(line) = line else { break };
+                    if !events.send(ServeEvent::Line { session: id, line }) {
+                        return; // daemon loop gone
+                    }
+                }
+                events.send(ServeEvent::Disconnected { session: id });
+            })
+            .expect("spawn session reader");
+        Session {
+            id,
+            name: format!("session-{id}"),
+            subscribed: false,
+            outbound,
+            writer: Some(writer),
+            stream,
+        }
+    }
+
+    /// Queue one line (terminator appended) for the writer thread. Errors
+    /// (client gone) are ignored — the reader surfaces the disconnect.
+    pub fn send_line(&self, line: &str) {
+        let _ = self.outbound.send(format!("{line}\n"));
+    }
+
+    /// Queue a pre-framed multi-line block verbatim.
+    pub fn send_block(&self, block: &str) {
+        let _ = self.outbound.send(block.to_string());
+    }
+
+    /// Close the session: drop the outbound queue, join the writer once it
+    /// has drained (so queued updates are flushed before the socket dies),
+    /// then shut the socket down to unblock the reader thread.
+    pub fn close(mut self) {
+        drop(self.outbound);
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}

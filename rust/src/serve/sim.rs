@@ -1,0 +1,499 @@
+//! `batopo serve-sim`: multi-client load simulation against a serve daemon.
+//!
+//! Spawns (or connects to) a daemon, starts `clients` subscriber
+//! connections, then drives one corpus scenario (`drift`, `degrade`,
+//! `partition_heal`, `zonal_outage`, …) over a driver connection: config
+//! directives, `init`, the full event schedule, and one wire `tick` per
+//! phase. It measures end-to-end re-optimization latency (tick sent →
+//! versioned update received, matched by epoch) and per-client update
+//! fan-out, then shuts the daemon down cleanly.
+
+use crate::bandwidth::corpus::{corpus, ScenarioProgram};
+use crate::serve::daemon::{spawn, ServeConfig, ServeStats};
+use crate::serve::protocol::{event_line, TopologyUpdate};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Simulation configuration (the `batopo serve-sim` flags).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Number of subscriber clients (the driver is a separate connection).
+    pub clients: usize,
+    /// Corpus scenario name to stream (see `bandwidth::corpus`).
+    pub scenario: String,
+    /// Fleet size for the generated scenario.
+    pub n: usize,
+    /// Quick horizons + quick solver budgets.
+    pub quick: bool,
+    /// Scenario / solver seed.
+    pub seed: u64,
+    /// Connect to an already-running daemon instead of spawning one
+    /// in-process (used by the CI smoke test against `batopo serve`).
+    pub connect: Option<String>,
+    /// Send `shutdown` when done (required for in-process runs; optional
+    /// against an external daemon).
+    pub shutdown: bool,
+    /// Hysteresis for the spawned daemon — the sim default is a low 1.02 so
+    /// bandwidth shifts actually install fresh topologies worth timing.
+    pub hysteresis: f64,
+    /// Candidate spec override for the spawned daemon.
+    pub candidates: Option<String>,
+    /// Edge-budget override for the spawned daemon.
+    pub r: Option<usize>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            clients: 2,
+            scenario: "degrade".to_string(),
+            n: 8,
+            quick: true,
+            seed: 42,
+            connect: None,
+            shutdown: true,
+            hysteresis: 1.02,
+            candidates: None,
+            r: Some(8),
+        }
+    }
+}
+
+/// What the simulation measured.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Scenario streamed.
+    pub scenario: String,
+    /// Subscriber count.
+    pub clients: usize,
+    /// Epochs the daemon ticked through.
+    pub epochs: u64,
+    /// Topology updates received per subscriber.
+    pub updates_per_client: Vec<u64>,
+    /// `min(updates_per_client)` — the acceptance gate.
+    pub min_updates_per_client: u64,
+    /// Completed incremental re-optimizations (daemon counter).
+    pub reopts: u64,
+    /// Solver failures (daemon counter).
+    pub reopt_failures: u64,
+    /// Updates published (daemon counter).
+    pub published: u64,
+    /// Total update deliveries (daemon counter).
+    pub fanout: u64,
+    /// End-to-end latencies in milliseconds (tick sent → update received,
+    /// matched by epoch; the `init` send instant stands in for epoch 0).
+    pub latencies_ms: Vec<f64>,
+    /// Mean of [`SimReport::latencies_ms`] (0 when empty).
+    pub mean_latency_ms: f64,
+    /// 95th percentile of [`SimReport::latencies_ms`] (0 when empty).
+    pub p95_latency_ms: f64,
+}
+
+impl SimReport {
+    /// Multi-line human-readable summary for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "serve-sim scenario={} clients={} epochs={}\n\
+             \x20 updates_per_client={:?} min={}\n\
+             \x20 reopts={} failures={} published={} fanout={}\n\
+             \x20 latency_ms mean={:.2} p95={:.2} samples={}",
+            self.scenario,
+            self.clients,
+            self.epochs,
+            self.updates_per_client,
+            self.min_updates_per_client,
+            self.reopts,
+            self.reopt_failures,
+            self.published,
+            self.fanout,
+            self.mean_latency_ms,
+            self.p95_latency_ms,
+            self.latencies_ms.len()
+        )
+    }
+}
+
+/// One read attempt bounded by the socket read timeout.
+enum Read1 {
+    /// A complete line (terminator stripped).
+    Line(String),
+    /// Peer closed the connection.
+    Eof,
+    /// Socket read timeout elapsed without completing a line.
+    Timeout,
+}
+
+/// A line-oriented client connection with timeout-sliced reads.
+struct Wire {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    buf: String,
+}
+
+impl Wire {
+    fn connect(addr: &str) -> Result<Wire, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connect {addr} failed: {e}"))?;
+        stream
+            .set_read_timeout(Some(Duration::from_millis(100)))
+            .map_err(|e| format!("set_read_timeout failed: {e}"))?;
+        let reader = BufReader::new(
+            stream.try_clone().map_err(|e| format!("clone stream failed: {e}"))?,
+        );
+        Ok(Wire {
+            stream,
+            reader,
+            buf: String::new(),
+        })
+    }
+
+    fn send(&mut self, line: &str) -> Result<(), String> {
+        self.stream
+            .write_all(format!("{line}\n").as_bytes())
+            .and_then(|()| self.stream.flush())
+            .map_err(|e| format!("send {line:?} failed: {e}"))
+    }
+
+    /// One read slice. A timeout may leave a partial line in `buf`; it is
+    /// completed by later slices, never dropped.
+    fn read1(&mut self) -> Result<Read1, String> {
+        match self.reader.read_line(&mut self.buf) {
+            Ok(0) => {
+                if self.buf.is_empty() {
+                    Ok(Read1::Eof)
+                } else {
+                    let line = std::mem::take(&mut self.buf);
+                    Ok(Read1::Line(line.trim_end().to_string()))
+                }
+            }
+            Ok(_) => {
+                let line = std::mem::take(&mut self.buf);
+                Ok(Read1::Line(line.trim_end().to_string()))
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                Ok(Read1::Timeout)
+            }
+            Err(e) => Err(format!("read failed: {e}")),
+        }
+    }
+
+    fn read_line_deadline(&mut self, deadline: Instant) -> Result<String, String> {
+        loop {
+            match self.read1()? {
+                Read1::Line(line) => return Ok(line),
+                Read1::Eof => return Err("connection closed by daemon".to_string()),
+                Read1::Timeout => {
+                    if Instant::now() >= deadline {
+                        return Err("timed out waiting for daemon reply".to_string());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Send one command and read its single reply line; `err …` replies
+    /// become `Err`.
+    fn cmd(&mut self, line: &str) -> Result<String, String> {
+        self.send(line)?;
+        let reply = self.read_line_deadline(Instant::now() + Duration::from_secs(30))?;
+        if reply.starts_with("err") {
+            return Err(format!("daemon rejected {line:?}: {reply}"));
+        }
+        Ok(reply)
+    }
+}
+
+/// Parsed wire `stats` reply.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct StatsSnapshot {
+    epochs: u64,
+    version: u64,
+    updates: u64,
+    fanout: u64,
+    reopts: u64,
+    failures: u64,
+    sessions: u64,
+    inflight: u64,
+}
+
+fn parse_stats(line: &str) -> Result<StatsSnapshot, String> {
+    let mut toks = line.split_whitespace();
+    if toks.next() != Some("stats") {
+        return Err(format!("not a stats line: {line:?}"));
+    }
+    let mut s = StatsSnapshot::default();
+    while let Some(key) = toks.next() {
+        let val: u64 = toks
+            .next()
+            .ok_or_else(|| format!("stats key {key:?} missing value"))?
+            .parse()
+            .map_err(|e| format!("stats key {key:?}: {e}"))?;
+        match key {
+            "epochs" => s.epochs = val,
+            "version" => s.version = val,
+            "updates" => s.updates = val,
+            "fanout" => s.fanout = val,
+            "reopts" => s.reopts = val,
+            "failures" => s.failures = val,
+            "sessions" => s.sessions = val,
+            "inflight" => s.inflight = val,
+            other => return Err(format!("unknown stats key {other:?}")),
+        }
+    }
+    Ok(s)
+}
+
+/// A subscriber's view of one received update.
+struct Received {
+    epoch: u64,
+    at: Instant,
+}
+
+fn subscriber(
+    addr: String,
+    idx: usize,
+    stop: Arc<AtomicBool>,
+    ready: std::sync::mpsc::Sender<Result<(), String>>,
+) -> Vec<Received> {
+    let mut wire = match Wire::connect(&addr) {
+        Ok(w) => w,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return Vec::new();
+        }
+    };
+    if let Err(e) = wire.send(&format!("hello sub-{idx}")).and_then(|()| wire.send("subscribe")) {
+        let _ = ready.send(Err(e));
+        return Vec::new();
+    }
+    let mut got = Vec::new();
+    let mut frame = String::new();
+    let mut in_frame = false;
+    let mut announced = false;
+    loop {
+        match wire.read1() {
+            Ok(Read1::Line(line)) => {
+                if !announced && line == "ok subscribe" {
+                    announced = true;
+                    let _ = ready.send(Ok(()));
+                    continue;
+                }
+                if line.starts_with("update ") {
+                    in_frame = true;
+                    frame.clear();
+                }
+                if in_frame {
+                    frame.push_str(&line);
+                    frame.push('\n');
+                    if line.starts_with("end ") {
+                        in_frame = false;
+                        if let Ok(u) = TopologyUpdate::from_wire(&frame) {
+                            got.push(Received {
+                                epoch: u.epoch,
+                                at: Instant::now(),
+                            });
+                        }
+                    }
+                }
+            }
+            Ok(Read1::Eof) | Err(_) => break,
+            Ok(Read1::Timeout) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        }
+    }
+    got
+}
+
+fn scenario_program(cfg: &SimConfig) -> Result<ScenarioProgram, String> {
+    corpus(cfg.n, cfg.quick, cfg.seed)
+        .into_iter()
+        .find(|s| s.name == cfg.scenario)
+        .map(|s| s.program)
+        .ok_or_else(|| {
+            let names: Vec<String> =
+                corpus(cfg.n, cfg.quick, cfg.seed).into_iter().map(|s| s.name).collect();
+            format!("unknown scenario {:?}; corpus has {names:?}", cfg.scenario)
+        })
+}
+
+/// Run the simulation; `Err` means the run could not complete (connection
+/// failure, daemon rejection, timeout). A completed run with zero updates is
+/// reported, not an error — the CLI turns `min_updates_per_client == 0` into
+/// a nonzero exit.
+pub fn run(cfg: &SimConfig) -> Result<SimReport, String> {
+    if cfg.clients == 0 {
+        return Err("serve-sim needs at least 1 client".to_string());
+    }
+    let program = scenario_program(cfg)?;
+
+    // Spawn an in-process daemon unless pointed at an external one.
+    let mut handle = None;
+    let addr = match &cfg.connect {
+        Some(addr) => addr.clone(),
+        None => {
+            let sc = ServeConfig {
+                listen: "127.0.0.1:0".to_string(),
+                r: cfg.r,
+                candidates: cfg.candidates.clone(),
+                hysteresis: cfg.hysteresis,
+                quick: cfg.quick,
+                seed: cfg.seed,
+                tick_seconds: 0.0,
+            };
+            let h = spawn(sc).map_err(|e| format!("spawn daemon failed: {e}"))?;
+            let addr = h.addr.to_string();
+            handle = Some(h);
+            addr
+        }
+    };
+
+    // Subscribers first, so every published update (version 1 included)
+    // reaches all of them.
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = channel();
+    let subs: Vec<_> = (0..cfg.clients)
+        .map(|i| {
+            let addr = addr.clone();
+            let stop = Arc::clone(&stop);
+            let ready = ready_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("batopo-sim-sub-{i}"))
+                .spawn(move || subscriber(addr, i, stop, ready))
+                .expect("spawn subscriber thread")
+        })
+        .collect();
+    drop(ready_tx);
+    for _ in 0..cfg.clients {
+        ready_rx
+            .recv_timeout(Duration::from_secs(30))
+            .map_err(|_| "subscriber never became ready".to_string())??;
+    }
+
+    // Driver: stream the scenario over the wire.
+    let mut driver = Wire::connect(&addr)?;
+    driver.cmd("hello sim-driver")?;
+    driver.cmd(&format!("seed {}", program.seed))?;
+    driver.cmd(&format!("phase_seconds {}", program.phase_seconds))?;
+    driver.cmd(&format!("clamp {} {}", program.clamp.0, program.clamp.1))?;
+    driver.cmd(&format!("churn_floor {}", program.churn_floor))?;
+    let init_words: Vec<String> = program.initial.iter().map(|b| b.to_string()).collect();
+    let mut sent_at: HashMap<u64, Instant> = HashMap::new();
+    sent_at.insert(0, Instant::now());
+    driver.cmd(&format!("init {}", init_words.join(" ")))?;
+    for ev in &program.events {
+        driver.cmd(&event_line(ev.phase, &ev.event))?;
+    }
+    for epoch in 1..program.phases as u64 {
+        sent_at.insert(epoch, Instant::now());
+        driver.cmd("tick")?;
+    }
+
+    // Drain: poll stats until no solve is in flight or pending.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let stats = loop {
+        let snap = parse_stats(&driver.cmd("stats")?)?;
+        if snap.inflight == 0 {
+            break snap;
+        }
+        if Instant::now() >= deadline {
+            return Err("timed out draining in-flight re-optimizations".to_string());
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    };
+
+    // Tear down: a wire shutdown closes every session (subscribers see the
+    // remaining updates, then EOF); otherwise just stop the reader threads.
+    stop.store(true, Ordering::SeqCst);
+    if cfg.shutdown {
+        driver.cmd("shutdown")?;
+    }
+    let received: Vec<Vec<Received>> =
+        subs.into_iter().map(|h| h.join().expect("subscriber thread panicked")).collect();
+    let daemon_stats: Option<ServeStats> = handle.map(|h| h.join());
+
+    // Latency: match each received update's epoch to its send instant.
+    let mut latencies_ms = Vec::new();
+    for r in received.iter().flatten() {
+        if let Some(&t0) = sent_at.get(&r.epoch) {
+            latencies_ms.push(r.at.saturating_duration_since(t0).as_secs_f64() * 1e3);
+        }
+    }
+    latencies_ms.sort_by(|a, b| a.total_cmp(b));
+    let mean = if latencies_ms.is_empty() {
+        0.0
+    } else {
+        latencies_ms.iter().sum::<f64>() / latencies_ms.len() as f64
+    };
+    let p95 = match latencies_ms.len() {
+        0 => 0.0,
+        len => latencies_ms[((len as f64 * 0.95).ceil() as usize).clamp(1, len) - 1],
+    };
+
+    let updates_per_client: Vec<u64> = received.iter().map(|r| r.len() as u64).collect();
+    let min_updates = updates_per_client.iter().copied().min().unwrap_or(0);
+    let (fanout, published) = match &daemon_stats {
+        Some(ds) => (ds.update_fanout, ds.updates_published),
+        None => (stats.fanout, stats.updates),
+    };
+    Ok(SimReport {
+        scenario: cfg.scenario.clone(),
+        clients: cfg.clients,
+        epochs: stats.epochs,
+        updates_per_client,
+        min_updates_per_client: min_updates,
+        reopts: stats.reopts,
+        reopt_failures: stats.failures,
+        published,
+        fanout,
+        latencies_ms,
+        mean_latency_ms: mean,
+        p95_latency_ms: p95,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_lines_parse_by_key() {
+        let s = parse_stats(
+            "stats epochs 3 version 2 updates 2 fanout 4 reopts 3 failures 0 sessions 3 inflight 1",
+        )
+        .unwrap();
+        assert_eq!(
+            s,
+            StatsSnapshot {
+                epochs: 3,
+                version: 2,
+                updates: 2,
+                fanout: 4,
+                reopts: 3,
+                failures: 0,
+                sessions: 3,
+                inflight: 1,
+            }
+        );
+        assert!(parse_stats("ok tick 3").is_err());
+        assert!(parse_stats("stats epochs").is_err());
+        assert!(parse_stats("stats bogus 1").is_err());
+    }
+
+    #[test]
+    fn unknown_scenarios_name_the_corpus() {
+        let cfg = SimConfig {
+            scenario: "no-such-scenario".to_string(),
+            ..SimConfig::default()
+        };
+        let err = scenario_program(&cfg).unwrap_err();
+        assert!(err.contains("degrade"), "error lists corpus names: {err}");
+    }
+}

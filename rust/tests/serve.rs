@@ -1,0 +1,345 @@
+//! End-to-end tests for the `batopo serve` daemon: a streamed corpus
+//! scenario over the real TCP wire protocol, incremental re-optimization,
+//! pub/sub topology updates to multiple subscribers, clean shutdown — plus
+//! the `fuzz replay` CLI exit-code contract.
+
+use batopo::bandwidth::corpus::{corpus, ScenarioProgram};
+use batopo::bandwidth::scenario_dsl::{ScenarioEvent, ScheduledEvent};
+use batopo::serve::protocol::event_line;
+use batopo::serve::sim::{run as sim_run, SimConfig};
+use batopo::serve::{spawn, ServeConfig, TopologyUpdate};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+/// A blocking line-oriented test client with a generous read timeout.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to daemon");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .expect("set read timeout");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.stream
+            .write_all(format!("{line}\n").as_bytes())
+            .and_then(|()| self.stream.flush())
+            .expect("send line");
+    }
+
+    /// Read one line; `None` on EOF.
+    fn read_line(&mut self) -> Option<String> {
+        let mut buf = String::new();
+        match self.reader.read_line(&mut buf).expect("read line") {
+            0 => None,
+            _ => Some(buf.trim_end().to_string()),
+        }
+    }
+
+    /// Send a command and return its single reply line.
+    fn cmd(&mut self, line: &str) -> String {
+        self.send(line);
+        self.read_line().expect("reply before EOF")
+    }
+
+    /// Send a command and assert an `ok …` reply.
+    fn ok(&mut self, line: &str) -> String {
+        let reply = self.cmd(line);
+        assert!(reply.starts_with("ok"), "expected ok for {line:?}, got {reply:?}");
+        reply
+    }
+
+    /// Send a command and assert an `err …` reply.
+    fn err(&mut self, line: &str) -> String {
+        let reply = self.cmd(line);
+        assert!(reply.starts_with("err"), "expected err for {line:?}, got {reply:?}");
+        reply
+    }
+
+    /// Read one framed `update … end` block.
+    fn read_update(&mut self) -> TopologyUpdate {
+        let mut frame = String::new();
+        loop {
+            let line = self.read_line().expect("update frame before EOF");
+            if frame.is_empty() {
+                assert!(line.starts_with("update "), "expected update frame, got {line:?}");
+            }
+            frame.push_str(&line);
+            frame.push('\n');
+            if line.starts_with("end ") {
+                return TopologyUpdate::from_wire(&frame).expect("parse update frame");
+            }
+        }
+    }
+
+    /// Collect update frames until the daemon closes the connection.
+    fn drain_updates_to_eof(mut self) -> Vec<TopologyUpdate> {
+        let mut updates = Vec::new();
+        let mut frame = String::new();
+        let mut in_frame = false;
+        while let Some(line) = self.read_line() {
+            if line.starts_with("update ") {
+                in_frame = true;
+                frame.clear();
+            }
+            if in_frame {
+                frame.push_str(&line);
+                frame.push('\n');
+                if line.starts_with("end ") {
+                    in_frame = false;
+                    updates.push(TopologyUpdate::from_wire(&frame).expect("parse update frame"));
+                }
+            }
+        }
+        updates
+    }
+}
+
+fn parse_stats(line: &str) -> HashMap<String, u64> {
+    let mut toks = line.split_whitespace();
+    assert_eq!(toks.next(), Some("stats"), "not a stats line: {line:?}");
+    let mut m = HashMap::new();
+    while let Some(k) = toks.next() {
+        m.insert(k.to_string(), toks.next().expect("stats value").parse().expect("stats number"));
+    }
+    m
+}
+
+/// Poll `stats` until no solve is in flight; returns the final snapshot.
+fn drain_inflight(driver: &mut Client) -> HashMap<String, u64> {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let m = parse_stats(&driver.cmd("stats"));
+        if m["inflight"] == 0 {
+            return m;
+        }
+        assert!(Instant::now() < deadline, "re-optimizations never drained");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn degrade_program() -> ScenarioProgram {
+    corpus(8, true, 42)
+        .into_iter()
+        .find(|s| s.name == "degrade")
+        .expect("corpus has a degrade scenario")
+        .program
+}
+
+/// The acceptance smoke: a daemon ingests a streamed corpus scenario under a
+/// fixed seed, triggers incumbent-warm-started re-optimizations on the
+/// sparse candidate path, publishes versioned updates to two subscribers,
+/// and shuts down cleanly.
+#[test]
+fn daemon_streams_degrade_and_publishes_to_two_subscribers() {
+    let handle = spawn(ServeConfig {
+        listen: "127.0.0.1:0".to_string(),
+        r: Some(8),
+        hysteresis: 1.02,
+        ..ServeConfig::default()
+    })
+    .expect("spawn daemon");
+    let addr = handle.addr;
+
+    // Subscribers first, so version 1 reaches both.
+    let mut subs: Vec<Client> = (0..2)
+        .map(|i| {
+            let mut c = Client::connect(addr);
+            c.ok(&format!("hello sub-{i}"));
+            c.ok("subscribe");
+            c
+        })
+        .collect();
+
+    // Driver: stream the quick degrade scenario over the wire.
+    let program = degrade_program();
+    let mut driver = Client::connect(addr);
+    driver.ok("hello driver");
+    driver.ok(&format!("seed {}", program.seed));
+    driver.ok(&format!("phase_seconds {}", program.phase_seconds));
+    driver.ok(&format!("clamp {} {}", program.clamp.0, program.clamp.1));
+    driver.ok(&format!("churn_floor {}", program.churn_floor));
+    let init: Vec<String> = program.initial.iter().map(|b| b.to_string()).collect();
+    let reply = driver.ok(&format!("init {}", init.join(" ")));
+    assert!(reply.contains("n 8"), "init reply names the fleet: {reply:?}");
+    assert!(reply.contains("candidates knn:6"), "init reply names the support: {reply:?}");
+    for ev in &program.events {
+        driver.ok(&event_line(ev.phase, &ev.event));
+    }
+    for epoch in 1..program.phases as u64 {
+        let reply = driver.ok("tick");
+        assert_eq!(reply, format!("ok tick {epoch}"));
+    }
+
+    let stats = drain_inflight(&mut driver);
+    assert_eq!(stats["epochs"], program.phases as u64 - 1);
+    assert!(stats["reopts"] >= 1, "no re-optimization completed: {stats:?}");
+    assert!(stats["updates"] >= 1, "nothing published: {stats:?}");
+    assert_eq!(stats["sessions"], 3);
+
+    driver.ok("shutdown");
+    assert!(driver.read_line().is_none(), "driver socket closes after shutdown");
+
+    for (i, sub) in subs.drain(..).enumerate() {
+        let updates = sub.drain_updates_to_eof();
+        assert!(!updates.is_empty(), "subscriber {i} received no update");
+        let first = &updates[0];
+        assert_eq!(first.version, 1, "first update is the initial topology");
+        assert_eq!(first.epoch, 0);
+        assert!(!first.switched);
+        for u in &updates {
+            assert_eq!(u.n, 8);
+            assert_eq!(u.edges.len(), 8, "budget r=8 respected in v{}", u.version);
+            for &(a, b, w) in &u.edges {
+                assert!(a < b && b < 8, "canonical in-range edge ({a},{b})");
+                assert!(w.is_finite() && w > 0.0, "finite positive weight {w}");
+            }
+            assert!(u.r_asym.is_finite() && u.lambda2 > 0.0, "connected spectral stats");
+        }
+        let versions: Vec<u64> = updates.iter().map(|u| u.version).collect();
+        assert!(versions.windows(2).all(|w| w[0] < w[1]), "versions increase: {versions:?}");
+    }
+
+    let final_stats = handle.join();
+    assert!(final_stats.updates_published >= 1);
+    assert!(final_stats.update_fanout >= 2, "both subscribers counted in fanout");
+    assert!(final_stats.reopts >= 1);
+    assert_eq!(final_stats.sessions_served, 3);
+}
+
+#[test]
+fn daemon_enforces_protocol_order_and_rejects_bad_lines() {
+    let handle = spawn(ServeConfig {
+        listen: "127.0.0.1:0".to_string(),
+        ..ServeConfig::default()
+    })
+    .expect("spawn daemon");
+    let mut c = Client::connect(handle.addr);
+
+    // Before init: service verbs that need a fleet are rejected…
+    c.err("tick");
+    c.err("event 1 drift 0.1");
+    // …as are malformed and invalid lines.
+    c.err("frobnicate");
+    c.err("clamp 5 1");
+    c.err("phase_seconds nope");
+    c.err("init 1 2 3"); // too few nodes
+    c.err("init 1 2 3 -4"); // non-positive bandwidth
+
+    c.ok("phase_seconds 2.0");
+    c.ok("init 9.76 9.76 3.25 3.25 9.76 9.76");
+
+    // After init: config is frozen, re-init is rejected, events validate.
+    c.err("phase_seconds 3.0");
+    c.err("seed 7");
+    c.err("init 1 1 1 1");
+    c.err("event 1 set_bandwidth 12 5.0"); // node out of range
+    c.err("event 1 drift -0.5");
+    c.ok("event 1 drift 0.1");
+
+    // Subscribe after the initial solve: version 1 is replayed immediately.
+    let mut sub = Client::connect(handle.addr);
+    drain_inflight(&mut c);
+    sub.ok("subscribe");
+    let replayed = sub.read_update();
+    assert_eq!(replayed.version, 1);
+    assert_eq!(replayed.n, 6);
+    assert!(!replayed.switched);
+
+    c.ok("quit");
+    assert!(c.read_line().is_none(), "quit closes only this session");
+    let mut d = Client::connect(handle.addr);
+    d.ok("shutdown");
+    handle.join();
+}
+
+#[test]
+fn serve_sim_in_process_reports_updates_and_latencies() {
+    let report = sim_run(&SimConfig::default()).expect("sim completes");
+    assert_eq!(report.clients, 2);
+    assert_eq!(report.updates_per_client.len(), 2);
+    assert!(report.min_updates_per_client >= 1, "every subscriber got an update: {report:?}");
+    assert_eq!(report.epochs, 3, "quick corpus horizon is 4 phases");
+    assert!(report.reopts >= 1);
+    assert!(report.published >= 1);
+    assert!(report.fanout >= 2);
+    assert!(!report.latencies_ms.is_empty());
+    assert!(report.latencies_ms.iter().all(|&l| l >= 0.0));
+    assert!(report.p95_latency_ms >= report.latencies_ms[0]);
+    let rendered = report.render();
+    assert!(rendered.contains("scenario=degrade"));
+    assert!(rendered.contains("latency_ms"));
+}
+
+/// The fuzzer's known-bad program (full-fleet partition at the churn floor:
+/// round time exceeds the phase, so `every-phase-gossips` fails while the
+/// core invariants hold).
+fn known_bad_dump() -> String {
+    let n = 6;
+    let mut events = vec![ScheduledEvent {
+        phase: 1,
+        event: ScenarioEvent::Partition {
+            nodes: (0..n).collect(),
+        },
+    }];
+    for phase in 0..3 {
+        events.push(ScheduledEvent {
+            phase,
+            event: ScenarioEvent::ReportStats {
+                label: format!("phase {phase}"),
+            },
+        });
+    }
+    let program = ScenarioProgram {
+        initial: vec![9.76; n],
+        phases: 3,
+        phase_seconds: 1.5,
+        clamp: (1e-3, f64::INFINITY),
+        churn_floor: 0.05,
+        seed: 13,
+        events,
+    };
+    format!("# invariant: every-phase-gossips\n{}", program.dump())
+}
+
+#[test]
+fn fuzz_replay_exits_nonzero_on_a_known_bad_dump() {
+    let dir = std::env::temp_dir().join(format!("batopo-replay-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let dump = dir.join("known_bad.scenario");
+    std::fs::write(&dump, known_bad_dump()).expect("write dump");
+    let bin = env!("CARGO_BIN_EXE_batopo");
+
+    // Without --invariant, replay picks the suite from the dump header and
+    // must exit nonzero on the still-failing violation.
+    let out = std::process::Command::new(bin)
+        .args(["fuzz", "replay", dump.to_str().unwrap()])
+        .output()
+        .expect("run batopo fuzz replay");
+    assert!(!out.status.success(), "replay of a failing dump must exit nonzero");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(text.contains("every-phase-gossips"), "names the suite: {text}");
+    assert!(text.contains("dump header"), "says where the default came from: {text}");
+
+    // The same dump passes the (weaker) core suite when selected explicitly.
+    let out = std::process::Command::new(bin)
+        .args(["fuzz", "replay", dump.to_str().unwrap(), "--invariant", "core"])
+        .output()
+        .expect("run batopo fuzz replay");
+    assert!(out.status.success(), "explicit --invariant core must exit zero");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
