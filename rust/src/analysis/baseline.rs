@@ -1,0 +1,278 @@
+//! Committed-baseline ratchet for `batopo analyze`.
+//!
+//! The baseline (`analysis/baseline.json`) records how many findings each
+//! `(rule, file)` pair is *allowed* to have. CI compares the current scan
+//! against it: any count above baseline fails the build (a new finding), any
+//! count below is an improvement — shrink the committed file via
+//! `batopo analyze --write-baseline` so the ratchet only ever tightens.
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "entries": [
+//!     {"rule": "float-eq", "file": "linalg/csc.rs", "count": 2}
+//!   ]
+//! }
+//! ```
+
+use super::diagnostics::Diagnostic;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Version of the `analysis/baseline.json` schema.
+pub const BASELINE_SCHEMA_VERSION: u64 = 1;
+
+/// Allowed finding counts per `(rule, file)`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Baseline {
+    /// `(rule, file) → allowed count` (key-sorted for stable serialization).
+    pub entries: BTreeMap<(String, String), usize>,
+}
+
+/// One `(rule, file)` count difference between baseline and current scan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RatchetDelta {
+    /// Rule id.
+    pub rule: String,
+    /// File path relative to the scan root.
+    pub file: String,
+    /// Allowed count from the committed baseline (0 when absent).
+    pub baseline: usize,
+    /// Count in the current scan.
+    pub current: usize,
+}
+
+/// Result of diffing a scan against the committed baseline.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RatchetOutcome {
+    /// `(rule, file)` pairs with more findings than the baseline allows —
+    /// each one fails CI.
+    pub breaches: Vec<RatchetDelta>,
+    /// Pairs with fewer findings than baselined — the committed file is
+    /// stale and should be refreshed with `--write-baseline`.
+    pub improvements: Vec<RatchetDelta>,
+}
+
+impl Baseline {
+    /// Build a baseline that exactly matches a set of findings.
+    pub fn from_findings(findings: &[Diagnostic]) -> Baseline {
+        let mut entries: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for d in findings {
+            *entries.entry((d.rule.to_string(), d.file.clone())).or_insert(0) += 1;
+        }
+        Baseline { entries }
+    }
+
+    /// Parse a baseline document, validating the schema version.
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let doc = Json::parse(text).map_err(|e| format!("baseline: {e}"))?;
+        let version = doc
+            .get("schema_version")
+            .and_then(Json::as_usize)
+            .ok_or("baseline: missing schema_version")?;
+        if version as u64 != BASELINE_SCHEMA_VERSION {
+            return Err(format!(
+                "baseline: schema_version {version} unsupported (expected \
+                 {BASELINE_SCHEMA_VERSION})"
+            ));
+        }
+        let raw = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("baseline: missing entries array")?;
+        let mut entries = BTreeMap::new();
+        for (i, e) in raw.iter().enumerate() {
+            let field = |k: &str| {
+                e.get(k).ok_or_else(|| format!("baseline: entry {i} missing field {k:?}"))
+            };
+            let rule = field("rule")?
+                .as_str()
+                .ok_or_else(|| format!("baseline: entry {i} rule not a string"))?
+                .to_string();
+            let file = field("file")?
+                .as_str()
+                .ok_or_else(|| format!("baseline: entry {i} file not a string"))?
+                .to_string();
+            let count = field("count")?
+                .as_usize()
+                .ok_or_else(|| format!("baseline: entry {i} count not a usize"))?;
+            entries.insert((rule, file), count);
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Load and parse a baseline file.
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Baseline::parse(&text)
+    }
+
+    /// Serialize to the committed JSON document.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|((rule, file), count)| {
+                Json::obj(vec![
+                    ("rule", Json::Str(rule.clone())),
+                    ("file", Json::Str(file.clone())),
+                    ("count", Json::Num(*count as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema_version", Json::Num(BASELINE_SCHEMA_VERSION as f64)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Write the baseline to disk (pretty enough for review diffs: one
+    /// entry per line).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let entries: Vec<String> = self
+            .entries
+            .iter()
+            .map(|((rule, file), count)| {
+                let obj = Json::obj(vec![
+                    ("rule", Json::Str(rule.clone())),
+                    ("file", Json::Str(file.clone())),
+                    ("count", Json::Num(*count as f64)),
+                ]);
+                format!("    {obj}")
+            })
+            .collect();
+        let text = format!(
+            "{{\n  \"schema_version\": {BASELINE_SCHEMA_VERSION},\n  \"entries\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n")
+        );
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| format!("create {}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, text).map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+/// Diff the current findings against the committed baseline.
+pub fn ratchet(baseline: &Baseline, findings: &[Diagnostic]) -> RatchetOutcome {
+    let current = Baseline::from_findings(findings);
+    let mut keys: Vec<&(String, String)> = baseline.entries.keys().collect();
+    for k in current.entries.keys() {
+        if !baseline.entries.contains_key(k) {
+            keys.push(k);
+        }
+    }
+    keys.sort();
+    let mut out = RatchetOutcome::default();
+    for key in keys {
+        let b = baseline.entries.get(key).copied().unwrap_or(0);
+        let c = current.entries.get(key).copied().unwrap_or(0);
+        let delta =
+            RatchetDelta { rule: key.0.clone(), file: key.1.clone(), baseline: b, current: c };
+        if c > b {
+            out.breaches.push(delta);
+        } else if c < b {
+            out.improvements.push(delta);
+        }
+    }
+    out
+}
+
+impl RatchetOutcome {
+    /// JSON rendering for the CI artifact.
+    pub fn to_json(&self) -> Json {
+        let delta_json = |d: &RatchetDelta| {
+            Json::obj(vec![
+                ("rule", Json::Str(d.rule.clone())),
+                ("file", Json::Str(d.file.clone())),
+                ("baseline", Json::Num(d.baseline as f64)),
+                ("current", Json::Num(d.current as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("breaches", Json::Arr(self.breaches.iter().map(delta_json).collect())),
+            ("improvements", Json::Arr(self.improvements.iter().map(delta_json).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::diagnostics::Severity;
+
+    fn diag(rule: &'static str, file: &str) -> Diagnostic {
+        Diagnostic {
+            rule,
+            file: file.to_string(),
+            line: 1,
+            col: 1,
+            severity: Severity::Deny,
+            message: "m".to_string(),
+        }
+    }
+
+    #[test]
+    fn new_finding_breaches_removed_finding_improves() {
+        let baseline = Baseline::from_findings(&[
+            diag("panic-in-runtime", "serve/daemon.rs"),
+            diag("float-eq", "linalg/dense.rs"),
+        ]);
+        // One extra panic finding, the float-eq one fixed.
+        let now = [
+            diag("panic-in-runtime", "serve/daemon.rs"),
+            diag("panic-in-runtime", "serve/daemon.rs"),
+        ];
+        let out = ratchet(&baseline, &now);
+        assert_eq!(out.breaches.len(), 1);
+        assert_eq!(out.breaches[0].file, "serve/daemon.rs");
+        assert_eq!((out.breaches[0].baseline, out.breaches[0].current), (1, 2));
+        assert_eq!(out.improvements.len(), 1);
+        assert_eq!(out.improvements[0].rule, "float-eq");
+    }
+
+    #[test]
+    fn matching_counts_are_clean() {
+        let findings = [diag("float-eq", "linalg/dense.rs"), diag("float-eq", "linalg/dense.rs")];
+        let baseline = Baseline::from_findings(&findings);
+        let out = ratchet(&baseline, &findings);
+        assert!(out.breaches.is_empty());
+        assert!(out.improvements.is_empty());
+    }
+
+    #[test]
+    fn finding_in_unbaselined_file_breaches() {
+        let baseline = Baseline::default();
+        let out = ratchet(&baseline, &[diag("lock-order", "serve/publisher.rs")]);
+        assert_eq!(out.breaches.len(), 1);
+        assert_eq!((out.breaches[0].baseline, out.breaches[0].current), (0, 1));
+    }
+
+    #[test]
+    fn parse_round_trips_save_format() {
+        let b = Baseline::from_findings(&[
+            diag("panic-in-runtime", "runtime/engine.rs"),
+            diag("float-eq", "linalg/csc.rs"),
+            diag("float-eq", "linalg/csc.rs"),
+        ]);
+        let parsed = Baseline::parse(&b.to_json().to_string()).expect("parse");
+        assert_eq!(parsed, b);
+        assert_eq!(
+            parsed.entries.get(&("float-eq".to_string(), "linalg/csc.rs".to_string())),
+            Some(&2)
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        assert!(Baseline::parse("{").is_err());
+        assert!(Baseline::parse("{\"entries\": []}").is_err());
+        assert!(Baseline::parse("{\"schema_version\": 99, \"entries\": []}").is_err());
+        let missing_fields = "{\"schema_version\": 1, \"entries\": [{\"rule\": \"x\"}]}";
+        assert!(Baseline::parse(missing_fields).is_err());
+    }
+}

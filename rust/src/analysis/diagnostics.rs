@@ -1,0 +1,112 @@
+//! Diagnostic records and rendering for `batopo analyze`.
+//!
+//! A [`Diagnostic`] is machine-readable (`file:line:col`, rule id, severity,
+//! message) and renders identically in text and JSON so CI artifacts and
+//! terminal output never disagree.
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// How severe a finding is. Both severities participate in the baseline
+/// ratchet (any new finding fails CI); the distinction is informational.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Robustness issue worth fixing opportunistically.
+    Warn,
+    /// Reliability hazard on a runtime path.
+    Deny,
+}
+
+impl Severity {
+    /// Lowercase label used in both text and JSON output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// One machine-readable finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Rule id, e.g. `panic-in-runtime`.
+    pub rule: &'static str,
+    /// File path relative to the scan root, forward slashes.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// 1-based column.
+    pub col: u32,
+    /// Severity class.
+    pub severity: Severity,
+    /// Human-readable explanation with a suggested remedy.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: {} [{}] {}",
+            self.file,
+            self.line,
+            self.col,
+            self.severity.label(),
+            self.rule,
+            self.message
+        )
+    }
+}
+
+impl Diagnostic {
+    /// JSON object mirroring the text rendering field by field.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", Json::Str(self.rule.to_string())),
+            ("file", Json::Str(self.file.clone())),
+            ("line", Json::Num(f64::from(self.line))),
+            ("col", Json::Num(f64::from(self.col))),
+            ("severity", Json::Str(self.severity.label().to_string())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+
+    /// Sort key for stable reporting: file, then position, then rule.
+    pub fn sort_key(&self) -> (String, u32, u32, &'static str) {
+        (self.file.clone(), self.line, self.col, self.rule)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Diagnostic {
+        Diagnostic {
+            rule: "panic-in-runtime",
+            file: "serve/daemon.rs".to_string(),
+            line: 12,
+            col: 9,
+            severity: Severity::Deny,
+            message: "`.unwrap()` can panic".to_string(),
+        }
+    }
+
+    #[test]
+    fn text_rendering_is_file_line_col_severity_rule() {
+        assert_eq!(
+            sample().to_string(),
+            "serve/daemon.rs:12:9: deny [panic-in-runtime] `.unwrap()` can panic"
+        );
+    }
+
+    #[test]
+    fn json_rendering_round_trips_fields() {
+        let j = sample().to_json();
+        assert_eq!(j.get("rule").and_then(Json::as_str), Some("panic-in-runtime"));
+        assert_eq!(j.get("line").and_then(Json::as_usize), Some(12));
+        assert_eq!(j.get("col").and_then(Json::as_usize), Some(9));
+        assert_eq!(j.get("severity").and_then(Json::as_str), Some("deny"));
+    }
+}

@@ -1,0 +1,499 @@
+//! Comment/string/raw-string-aware Rust lexer for `batopo analyze`.
+//!
+//! Produces a flat stream of spanned [`Token`]s plus the `// batopo-allow:`
+//! suppression comments encountered along the way. The lexer is deliberately
+//! small: it understands exactly enough Rust surface syntax — nested block
+//! comments, every string/char literal flavor (including raw strings and byte
+//! literals), raw identifiers, lifetimes-vs-char-literals, numeric literals
+//! in any base, and maximal-munch multi-character operators — for token-level
+//! lint rules to never fire inside comments or string literals.
+
+/// Classification of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword; raw identifiers lex as `Ident` with the `r#`
+    /// prefix stripped (`r#type` → `type`).
+    Ident,
+    /// Lifetime marker such as `'a` or `'static`.
+    Lifetime,
+    /// Character or byte literal: `'x'`, `'\n'`, `b'0'`.
+    Char,
+    /// String literal of any flavor: `"…"`, `r"…"`, `r#"…"#`, `b"…"`.
+    Str,
+    /// Numeric literal, integer or float, any base, suffix included.
+    Num,
+    /// Operator or delimiter; multi-character operators (`::`, `==`, `->`,
+    /// `..=`, …) lex as a single token.
+    Punct,
+}
+
+/// One token with its 1-based source position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    /// What kind of token this is.
+    pub kind: TokenKind,
+    /// The token text. String literals keep their quotes; raw identifiers
+    /// drop the `r#` prefix.
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+    /// 1-based column (in characters) of the token's first character.
+    pub col: u32,
+}
+
+/// A `// batopo-allow: <rule>[, <rule>…]` suppression comment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// Line the comment appears on. The suppression covers findings on this
+    /// line and on the immediately following line.
+    pub line: u32,
+    /// Rule id being suppressed.
+    pub rule: String,
+}
+
+/// Result of lexing one source file.
+#[derive(Debug, Default)]
+pub struct LexOutput {
+    /// Tokens in source order; comments and whitespace are dropped.
+    pub tokens: Vec<Token>,
+    /// Suppression comments in source order.
+    pub allows: Vec<Allow>,
+}
+
+/// Lex one Rust source file. Never fails: malformed trailing constructs are
+/// tolerated (an unterminated literal runs to end of input), which is the
+/// right trade-off for a linter that must not crash on the code it scans.
+pub fn lex(source: &str) -> LexOutput {
+    let mut lx = Lexer { chars: source.chars().collect(), pos: 0, line: 1, col: 1 };
+    let mut out = LexOutput::default();
+    while let Some(c) = lx.peek(0) {
+        let (line, col) = (lx.line, lx.col);
+        if c.is_whitespace() {
+            lx.bump();
+            continue;
+        }
+        if c == '/' && lx.peek(1) == Some('/') {
+            let text = lx.line_comment();
+            collect_allows(&text, line, &mut out.allows);
+            continue;
+        }
+        if c == '/' && lx.peek(1) == Some('*') {
+            lx.block_comment();
+            continue;
+        }
+        let (kind, text) = if c == 'r' || c == 'b' {
+            match lx.raw_or_byte() {
+                Some(t) => t,
+                None => (TokenKind::Ident, lx.ident()),
+            }
+        } else if is_ident_start(c) {
+            (TokenKind::Ident, lx.ident())
+        } else if c == '"' {
+            (TokenKind::Str, lx.string_literal())
+        } else if c == '\'' {
+            lx.quote()
+        } else if c.is_ascii_digit() {
+            (TokenKind::Num, lx.number())
+        } else {
+            (TokenKind::Punct, lx.punct())
+        };
+        out.tokens.push(Token { kind, text, line, col });
+    }
+    out
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Extract rule ids from a `batopo-allow:` line comment. Chunks after the
+/// colon are comma-separated; anything that is not a plain kebab-case id
+/// (e.g. trailing prose) is ignored.
+fn collect_allows(comment: &str, line: u32, allows: &mut Vec<Allow>) {
+    let Some(idx) = comment.find("batopo-allow:") else {
+        return;
+    };
+    let rest = &comment[idx + "batopo-allow:".len()..];
+    for part in rest.split(',') {
+        let id = part.trim();
+        let valid = !id.is_empty()
+            && id.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-');
+        if valid {
+            allows.push(Allow { line, rule: id.to_string() });
+        }
+    }
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn bump_into(&mut self, text: &mut String) {
+        if let Some(c) = self.bump() {
+            text.push(c);
+        }
+    }
+
+    /// Consume `//…` to end of line and return the comment text.
+    fn line_comment(&mut self) -> String {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        text
+    }
+
+    /// Consume a (possibly nested) `/* … */` block comment.
+    fn block_comment(&mut self) {
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some('/'), Some('*')) => {
+                    self.bump();
+                    self.bump();
+                    depth += 1;
+                }
+                (Some('*'), Some('/')) => {
+                    self.bump();
+                    self.bump();
+                    depth -= 1;
+                }
+                (Some(_), _) => {
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+    }
+
+    /// At an `r` or `b`: try raw string / raw identifier / byte literal.
+    /// Returns `None` without consuming anything when the character simply
+    /// starts a plain identifier (`rx`, `bw`, …).
+    fn raw_or_byte(&mut self) -> Option<(TokenKind, String)> {
+        match self.peek(0) {
+            Some('r') => {
+                let mut hashes = 0usize;
+                while self.peek(1 + hashes) == Some('#') {
+                    hashes += 1;
+                }
+                if self.peek(1 + hashes) == Some('"') {
+                    return Some((TokenKind::Str, self.raw_string(2 + hashes, hashes)));
+                }
+                if hashes == 1 && self.peek(2).is_some_and(is_ident_start) {
+                    self.bump(); // r
+                    self.bump(); // #
+                    return Some((TokenKind::Ident, self.ident()));
+                }
+                None
+            }
+            Some('b') => match self.peek(1) {
+                Some('\'') => {
+                    let mut text = String::new();
+                    self.bump_into(&mut text); // b
+                    text.push_str(&self.char_literal());
+                    Some((TokenKind::Char, text))
+                }
+                Some('"') => {
+                    let mut text = String::new();
+                    self.bump_into(&mut text); // b
+                    text.push_str(&self.string_literal());
+                    Some((TokenKind::Str, text))
+                }
+                Some('r') => {
+                    let mut hashes = 0usize;
+                    while self.peek(2 + hashes) == Some('#') {
+                        hashes += 1;
+                    }
+                    if self.peek(2 + hashes) == Some('"') {
+                        Some((TokenKind::Str, self.raw_string(3 + hashes, hashes)))
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    /// Consume a raw string whose prefix (`r`/`br` + hashes + opening quote)
+    /// spans `prefix_len` characters and whose delimiter uses `hashes` `#`s.
+    fn raw_string(&mut self, prefix_len: usize, hashes: usize) -> String {
+        let mut text = String::new();
+        for _ in 0..prefix_len {
+            self.bump_into(&mut text);
+        }
+        loop {
+            match self.peek(0) {
+                None => break,
+                Some('"') => {
+                    let closed = (1..=hashes).all(|k| self.peek(k) == Some('#'));
+                    self.bump_into(&mut text);
+                    if closed {
+                        for _ in 0..hashes {
+                            self.bump_into(&mut text);
+                        }
+                        break;
+                    }
+                }
+                Some(_) => {
+                    self.bump_into(&mut text);
+                }
+            }
+        }
+        text
+    }
+
+    /// Consume a `"…"` string literal (escape-aware); the opening quote is
+    /// at the current position.
+    fn string_literal(&mut self) -> String {
+        let mut text = String::new();
+        self.bump_into(&mut text); // opening quote
+        while let Some(c) = self.peek(0) {
+            if c == '\\' {
+                self.bump_into(&mut text);
+                self.bump_into(&mut text);
+                continue;
+            }
+            self.bump_into(&mut text);
+            if c == '"' {
+                break;
+            }
+        }
+        text
+    }
+
+    /// At a `'`: disambiguate a lifetime (`'a`, `'static`, `'_`) from a char
+    /// literal (`'a'`, `'\n'`, `'('`).
+    fn quote(&mut self) -> (TokenKind, String) {
+        let lifetime = self.peek(1).is_some_and(is_ident_start) && self.peek(2) != Some('\'');
+        if lifetime {
+            let mut text = String::new();
+            self.bump_into(&mut text); // '
+            text.push_str(&self.ident());
+            (TokenKind::Lifetime, text)
+        } else {
+            (TokenKind::Char, self.char_literal())
+        }
+    }
+
+    /// Consume a char literal; the opening quote is at the current position.
+    fn char_literal(&mut self) -> String {
+        let mut text = String::new();
+        self.bump_into(&mut text); // opening quote
+        while let Some(c) = self.peek(0) {
+            if c == '\\' {
+                self.bump_into(&mut text);
+                self.bump_into(&mut text);
+                continue;
+            }
+            self.bump_into(&mut text);
+            if c == '\'' {
+                break;
+            }
+        }
+        text
+    }
+
+    fn ident(&mut self) -> String {
+        let mut text = String::new();
+        while self.peek(0).is_some_and(is_ident_continue) {
+            self.bump_into(&mut text);
+        }
+        text
+    }
+
+    /// Consume a numeric literal: `0x`/`0o`/`0b` prefixed, decimal, float
+    /// with fraction and/or exponent, plus any type suffix — as one token.
+    fn number(&mut self) -> String {
+        let mut text = String::new();
+        if self.peek(0) == Some('0') && matches!(self.peek(1), Some('x' | 'o' | 'b')) {
+            self.bump_into(&mut text);
+            self.bump_into(&mut text);
+            while self.peek(0).is_some_and(is_ident_continue) {
+                self.bump_into(&mut text);
+            }
+            return text;
+        }
+        while self.peek(0).is_some_and(|c| c == '_' || c.is_ascii_digit()) {
+            self.bump_into(&mut text);
+        }
+        if self.peek(0) == Some('.') && self.peek(1).is_some_and(|c| c.is_ascii_digit()) {
+            self.bump_into(&mut text); // .
+            while self.peek(0).is_some_and(|c| c == '_' || c.is_ascii_digit()) {
+                self.bump_into(&mut text);
+            }
+        }
+        if matches!(self.peek(0), Some('e' | 'E')) {
+            let sign = usize::from(matches!(self.peek(1), Some('+' | '-')));
+            if self.peek(1 + sign).is_some_and(|c| c.is_ascii_digit()) {
+                for _ in 0..=sign {
+                    self.bump_into(&mut text);
+                }
+                while self.peek(0).is_some_and(|c| c == '_' || c.is_ascii_digit()) {
+                    self.bump_into(&mut text);
+                }
+            }
+        }
+        // Type suffix (`f64`, `usize`, …) stays part of the token.
+        while self.peek(0).is_some_and(is_ident_continue) {
+            self.bump_into(&mut text);
+        }
+        text
+    }
+
+    /// Consume one operator/delimiter with maximal munch.
+    fn punct(&mut self) -> String {
+        const THREE: [&str; 3] = ["..=", "<<=", ">>="];
+        const TWO: [&str; 20] = [
+            "==", "!=", "<=", ">=", "&&", "||", "::", "->", "=>", "..", "+=", "-=", "*=", "/=",
+            "%=", "^=", "&=", "|=", "<<", ">>",
+        ];
+        let window: String = (0..3).filter_map(|k| self.peek(k)).collect();
+        let len = if THREE.iter().any(|c| window.starts_with(c)) {
+            3
+        } else if TWO.iter().any(|c| window.starts_with(c)) {
+            2
+        } else {
+            1
+        };
+        let mut text = String::new();
+        for _ in 0..len {
+            self.bump_into(&mut text);
+        }
+        text
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src).tokens.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_panicky_text() {
+        let src = r##"
+            // x.unwrap() in a comment
+            /* outer /* nested x.unwrap() */ still comment */
+            let s = "call .unwrap() here";
+            let r = r#"raw ".unwrap()" body"#;
+        "##;
+        let toks = texts(src);
+        assert!(!toks.iter().any(|(k, t)| *k == TokenKind::Ident && t == "unwrap"));
+        let strs: Vec<&String> =
+            toks.iter().filter(|(k, _)| *k == TokenKind::Str).map(|(_, t)| t).collect();
+        assert_eq!(strs.len(), 2);
+        assert!(strs[1].starts_with("r#\"") && strs[1].ends_with("\"#"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes_swallows_embedded_quotes() {
+        let toks = texts(r###"let x = r##"has "# inside"## ;"###);
+        let s = toks.iter().find(|(k, _)| *k == TokenKind::Str).expect("raw string token");
+        assert_eq!(s.1, r###"r##"has "# inside"##"###);
+        assert_eq!(toks.last().expect("semicolon").1, ";");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = texts("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Lifetime && t == "'a"));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Char && t == "'x'"));
+        let toks = texts("let c = '\\''; let l: &'static str = s;");
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Char && t == "'\\''"));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Lifetime && t == "'static"));
+    }
+
+    #[test]
+    fn byte_literals_and_raw_idents() {
+        let toks = texts("let a = b'x'; let s = b\"bytes\"; let r#type = 1; let bw = 2;");
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Char && t == "b'x'"));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Str && t == "b\"bytes\""));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Ident && t == "type"));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Ident && t == "bw"));
+    }
+
+    #[test]
+    fn numbers_with_bases_floats_and_suffixes() {
+        let toks = texts("let v = [0x1E, 1_000, 2.5, 1e-3, 4f64, 7usize, 0b1010];");
+        let nums: Vec<&String> =
+            toks.iter().filter(|(k, _)| *k == TokenKind::Num).map(|(_, t)| t).collect();
+        assert_eq!(nums, ["0x1E", "1_000", "2.5", "1e-3", "4f64", "7usize", "0b1010"]);
+    }
+
+    #[test]
+    fn range_vs_float_and_tuple_index() {
+        let toks = texts("for i in 1..=5 { x.0 += v[1..3]; }");
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Punct && t == "..="));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Punct && t == ".."));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Num && t == "1"));
+    }
+
+    #[test]
+    fn maximal_munch_operators() {
+        let toks = texts("a == b != c :: d -> e => f || g && h");
+        let ops: Vec<&String> =
+            toks.iter().filter(|(k, _)| *k == TokenKind::Punct).map(|(_, t)| t).collect();
+        assert_eq!(ops, ["==", "!=", "::", "->", "=>", "||", "&&"]);
+        // `panic!(` must lex `!` alone, not glue onto anything.
+        let toks = texts("panic!(\"boom\")");
+        assert_eq!(toks[1].1, "!");
+    }
+
+    #[test]
+    fn positions_are_one_based_lines_and_cols() {
+        let out = lex("let a = 1;\n  let b = 2;");
+        let b = out.tokens.iter().find(|t| t.text == "b").expect("token b");
+        assert_eq!((b.line, b.col), (2, 7));
+    }
+
+    #[test]
+    fn allow_comments_are_collected() {
+        let out = lex(
+            "// batopo-allow: spawn-without-join\nlet x = 1;\n\
+             // batopo-allow: float-eq, lock-order\n// unrelated comment\n",
+        );
+        let got: Vec<(u32, &str)> = out.allows.iter().map(|a| (a.line, a.rule.as_str())).collect();
+        assert_eq!(got, [(1, "spawn-without-join"), (3, "float-eq"), (3, "lock-order")]);
+    }
+
+    #[test]
+    fn allow_with_trailing_prose_keeps_only_valid_ids() {
+        let out = lex("// batopo-allow: float-eq, NOT A RULE\n");
+        assert_eq!(out.allows.len(), 1);
+        assert_eq!(out.allows[0].rule, "float-eq");
+    }
+}

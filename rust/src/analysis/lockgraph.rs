@@ -1,0 +1,352 @@
+//! Global lock-order graph for the `lock-order` rule.
+//!
+//! Every function's `Mutex`/`RwLock` acquisition sequence (`.lock()`, and
+//! `.read()`/`.write()` in files that mention `RwLock`) contributes directed
+//! edges "lock A held before lock B" to one merged graph across all scanned
+//! files. Any cycle in that graph means two code paths can acquire the same
+//! locks in opposite orders — a potential deadlock, reported as one
+//! diagnostic per distinct cycle.
+//!
+//! Lock identity is the receiver chain text (`self.inner`, `work`, …), which
+//! is a heuristic: two different objects sharing a field name merge, and the
+//! same lock reached through differently-named bindings splits. Both
+//! directions are safe for a ratcheted lint — the graph only has to be
+//! stable, not perfect.
+
+use super::diagnostics::{Diagnostic, Severity};
+use super::lexer::TokenKind;
+use super::rules::{chain_start, matching, LOCK_ORDER};
+use super::FileContext;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Where a lock-order edge was witnessed (the acquisition of the *second*
+/// lock of the pair).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LockSite {
+    /// File (relative to the scan root).
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// 1-based column.
+    pub col: u32,
+    /// Enclosing function name.
+    pub function: String,
+}
+
+/// Accumulates per-function lock acquisition orders across files and
+/// detects cycles in the merged order graph.
+#[derive(Debug, Default)]
+pub struct LockGraph {
+    /// `a → b → site` where `b` was first observed acquired after `a`.
+    edges: BTreeMap<String, BTreeMap<String, LockSite>>,
+}
+
+impl LockGraph {
+    /// Empty graph.
+    pub fn new() -> LockGraph {
+        LockGraph::default()
+    }
+
+    /// Scan one file's functions for lock acquisitions and merge their
+    /// pairwise orderings into the graph. Test code is skipped.
+    pub fn add_file(&mut self, ctx: &FileContext) {
+        let toks = &ctx.tokens;
+        let has_rwlock = toks.iter().any(|t| t.kind == TokenKind::Ident && t.text == "RwLock");
+        let ranges = fn_ranges(ctx);
+        // (token index, lock name) in source order.
+        let mut sites: Vec<(usize, String)> = Vec::new();
+        for i in 0..toks.len() {
+            if ctx.excluded[i] || toks[i].text != "." {
+                continue;
+            }
+            let Some(callee) = toks.get(i + 1) else {
+                continue;
+            };
+            let is_lock = callee.kind == TokenKind::Ident
+                && (callee.text == "lock"
+                    || (has_rwlock && (callee.text == "read" || callee.text == "write")));
+            // Require a no-argument call: `.lock()` / `.read()` / `.write()`.
+            // IO methods of the same name always take arguments.
+            if !is_lock
+                || toks.get(i + 2).map(|t| t.text.as_str()) != Some("(")
+                || toks.get(i + 3).map(|t| t.text.as_str()) != Some(")")
+            {
+                continue;
+            }
+            let start = chain_start(toks, i + 1);
+            let name = receiver_name(ctx, start, i);
+            if !name.is_empty() {
+                sites.push((i, name));
+            }
+        }
+        // Group sites by innermost enclosing function (keyed by the unique
+        // body-open token index).
+        let mut grouped: BTreeMap<usize, (String, Vec<(usize, String)>)> = BTreeMap::new();
+        for (idx, name) in sites {
+            let mut best: Option<(usize, &str)> = None;
+            for (fname, open, close) in &ranges {
+                if *open < idx && idx < *close {
+                    let better = match best {
+                        Some((bo, _)) => *open > bo,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((*open, fname));
+                    }
+                }
+            }
+            // A lock acquisition outside any named fn (static init) is rare
+            // enough to skip.
+            let Some((open, fname)) = best else {
+                continue;
+            };
+            let entry = grouped.entry(open).or_insert_with(|| (fname.to_string(), Vec::new()));
+            entry.1.push((idx, name));
+        }
+        for (fname, fn_sites) in grouped.values() {
+            // Distinct locks in first-acquisition order.
+            let mut seq: Vec<(String, u32, u32)> = Vec::new();
+            for (idx, name) in fn_sites {
+                if !seq.iter().any(|(n, _, _)| n == name) {
+                    let t = &ctx.tokens[*idx];
+                    seq.push((name.clone(), t.line, t.col));
+                }
+            }
+            for a in 0..seq.len() {
+                for b in (a + 1)..seq.len() {
+                    let site = LockSite {
+                        file: ctx.path.clone(),
+                        line: seq[b].1,
+                        col: seq[b].2,
+                        function: fname.clone(),
+                    };
+                    self.edges
+                        .entry(seq[a].0.clone())
+                        .or_default()
+                        .entry(seq[b].0.clone())
+                        .or_insert(site);
+                }
+            }
+        }
+    }
+
+    /// Append one `lock-order` diagnostic per distinct cycle in the merged
+    /// acquisition-order graph.
+    pub fn report_cycles(&self, out: &mut Vec<Diagnostic>) {
+        let mut seen: BTreeSet<Vec<String>> = BTreeSet::new();
+        for start in self.edges.keys() {
+            let mut path = vec![start.clone()];
+            self.dfs(start, &mut path, &mut seen, out);
+        }
+    }
+
+    fn dfs(
+        &self,
+        node: &str,
+        path: &mut Vec<String>,
+        seen: &mut BTreeSet<Vec<String>>,
+        out: &mut Vec<Diagnostic>,
+    ) {
+        let Some(next) = self.edges.get(node) else {
+            return;
+        };
+        for (succ, site) in next {
+            if let Some(pos) = path.iter().position(|p| p == succ) {
+                let cycle = path[pos..].to_vec();
+                if seen.insert(normalize(&cycle)) {
+                    out.push(cycle_diagnostic(&cycle, site));
+                }
+                continue;
+            }
+            path.push(succ.clone());
+            self.dfs(succ, path, seen, out);
+            path.pop();
+        }
+    }
+}
+
+/// Rotate a cycle so its lexicographically smallest node comes first; two
+/// traversals of the same cycle then dedupe to one key.
+fn normalize(cycle: &[String]) -> Vec<String> {
+    let min_pos = cycle
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or_default();
+    let mut v = Vec::with_capacity(cycle.len());
+    v.extend_from_slice(&cycle[min_pos..]);
+    v.extend_from_slice(&cycle[..min_pos]);
+    v
+}
+
+fn cycle_diagnostic(cycle: &[String], site: &LockSite) -> Diagnostic {
+    let mut order = cycle.join(" -> ");
+    order.push_str(" -> ");
+    order.push_str(&cycle[0]);
+    Diagnostic {
+        rule: LOCK_ORDER,
+        file: site.file.clone(),
+        line: site.line,
+        col: site.col,
+        severity: Severity::Deny,
+        message: format!(
+            "inconsistent lock acquisition order ({order}); threads taking these locks in \
+             different orders can deadlock (cycle closed in fn `{}`)",
+            site.function
+        ),
+    }
+}
+
+/// `(name, body_open_idx, body_close_idx)` for every `fn` with a body.
+fn fn_ranges(ctx: &FileContext) -> Vec<(String, usize, usize)> {
+    let toks = &ctx.tokens;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != TokenKind::Ident || toks[i].text != "fn" {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else {
+            continue;
+        };
+        // `fn(` is a function-pointer type, not a definition.
+        if name_tok.kind != TokenKind::Ident {
+            continue;
+        }
+        // Body: first `{` at paren/bracket depth 0 after the signature
+        // (stopping at `;` — a bodyless trait method declaration).
+        let mut depth = 0i64;
+        let mut j = i + 2;
+        let mut open = None;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                ";" if depth == 0 => break,
+                "{" if depth == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = open else {
+            continue;
+        };
+        if let Some(close) = matching(toks, open) {
+            out.push((name_tok.text.clone(), open, close));
+        }
+    }
+    out
+}
+
+/// Receiver chain text before the `.lock()` dot: identifiers at bracket
+/// depth 0 joined with `.` (`self.inner.lock()` → `self.inner`,
+/// `work[i].lock()` → `work`).
+fn receiver_name(ctx: &FileContext, start: usize, dot_idx: usize) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut depth = 0i64;
+    for t in &ctx.tokens[start..dot_idx] {
+        match t.text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            _ if depth == 0 && t.kind == TokenKind::Ident => parts.push(t.text.as_str()),
+            _ => {}
+        }
+    }
+    parts.join(".")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use crate::analysis::rules::test_code_mask;
+
+    fn ctx(path: &str, src: &str) -> FileContext {
+        let lexed = lex(src);
+        let excluded = test_code_mask(&lexed.tokens);
+        FileContext { path: path.to_string(), tokens: lexed.tokens, excluded }
+    }
+
+    fn cycles_of(sources: &[(&str, &str)]) -> Vec<Diagnostic> {
+        let mut g = LockGraph::new();
+        for (path, src) in sources {
+            g.add_file(&ctx(path, src));
+        }
+        let mut out = Vec::new();
+        g.report_cycles(&mut out);
+        out
+    }
+
+    #[test]
+    fn two_function_opposite_order_is_a_cycle() {
+        let src = "fn a(s: &S) { let _x = s.alpha.lock(); let _y = s.beta.lock(); }\n\
+                   fn b(s: &S) { let _y = s.beta.lock(); let _x = s.alpha.lock(); }\n";
+        let found = cycles_of(&[("m.rs", src)]);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].rule, "lock-order");
+        assert!(found[0].message.contains("s.alpha -> s.beta -> s.alpha"));
+    }
+
+    #[test]
+    fn consistent_order_and_single_lock_are_clean() {
+        let src = "fn a(s: &S) { let _x = s.alpha.lock(); let _y = s.beta.lock(); }\n\
+                   fn b(s: &S) { let _x = s.alpha.lock(); let _y = s.beta.lock(); }\n\
+                   fn c(s: &S) { let _x = s.alpha.lock(); }\n";
+        assert!(cycles_of(&[("m.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn cycle_across_files_is_detected_once() {
+        let f1 = "fn a(s: &S) { s.alpha.lock(); s.beta.lock(); }";
+        let f2 = "fn b(s: &S) { s.beta.lock(); s.alpha.lock(); }";
+        let found = cycles_of(&[("one.rs", f1), ("two.rs", f2)]);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].file, "two.rs");
+    }
+
+    #[test]
+    fn rwlock_read_write_participate_only_with_rwlock_in_file() {
+        let with = "struct S { m: RwLock<u8> }\n\
+                    fn a(s: &S) { s.m.read(); s.n.lock(); }\n\
+                    fn b(s: &S) { s.n.lock(); s.m.write(); }\n";
+        assert_eq!(cycles_of(&[("m.rs", with)]).len(), 1);
+        // Without `RwLock` in the file, `.read()`/`.write()` are IO calls.
+        let without = "fn a(s: &S) { s.m.read(); s.n.lock(); }\n\
+                       fn b(s: &S) { s.n.lock(); s.m.write(); }\n";
+        assert!(cycles_of(&[("m.rs", without)]).is_empty());
+    }
+
+    #[test]
+    fn io_write_with_arguments_is_not_a_lock() {
+        let src = "fn a(s: &mut TcpStream, m: &Mutex<u8>) {\n\
+                       s.write(b\"hi\");\n\
+                       m.lock();\n\
+                   }\n\
+                   fn b(s: &mut TcpStream, m: &Mutex<u8>) { m.lock(); s.write(b\"hi\"); }\n";
+        // `.write(buf)` takes an argument, so no edge and no cycle even
+        // though the file mentions RwLock nowhere — and even if it did.
+        assert!(cycles_of(&[("m.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn indexed_receivers_collapse_to_the_collection_name() {
+        let src = "fn a(w: &[Mutex<u8>], r: &[Mutex<u8>]) { w[0].lock(); r[1].lock(); }\n\
+                   fn b(w: &[Mutex<u8>], r: &[Mutex<u8>]) { r[0].lock(); w[1].lock(); }\n";
+        let found = cycles_of(&[("m.rs", src)]);
+        assert_eq!(found.len(), 1);
+        assert!(found[0].message.contains("r -> w -> r"));
+    }
+
+    #[test]
+    fn test_code_contributes_no_edges() {
+        let src = "fn a(s: &S) { s.alpha.lock(); s.beta.lock(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t(s: &S) { s.beta.lock(); s.alpha.lock(); }\n\
+                   }\n";
+        assert!(cycles_of(&[("m.rs", src)]).is_empty());
+    }
+}

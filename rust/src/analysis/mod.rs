@@ -1,0 +1,248 @@
+//! In-tree static analysis engine behind `batopo analyze`.
+//!
+//! A zero-dependency lint pass tuned to this codebase's invariants: the
+//! long-running `serve/` daemon and `coordinator/` event loop must never
+//! panic, locks must be acquired in one global order, OS thread handles must
+//! be joined or registered for shutdown, and the numeric kernels must not
+//! compare floats exactly. Stock `fmt`/`clippy` cannot see any of these.
+//!
+//! Pipeline: [`lexer`] turns each `.rs` file into spanned tokens (comment/
+//! string aware, so lint patterns never fire inside either), [`rules`] and
+//! [`lockgraph`] emit [`diagnostics::Diagnostic`]s, `// batopo-allow: <rule>`
+//! comments suppress individual findings, and [`baseline`] diffs the result
+//! against the committed `analysis/baseline.json` so CI only ever ratchets
+//! down. See `docs/ANALYSIS.md` for the rule catalog and workflows.
+
+pub mod baseline;
+pub mod diagnostics;
+pub mod lexer;
+pub mod lockgraph;
+pub mod rules;
+
+use diagnostics::Diagnostic;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lexed source file plus derived per-token facts, as consumed by rules.
+#[derive(Debug)]
+pub struct FileContext {
+    /// Path relative to the scan root, forward slashes.
+    pub path: String,
+    /// Token stream from [`lexer::lex`].
+    pub tokens: Vec<lexer::Token>,
+    /// Per-token mask: `true` for tokens inside `#[cfg(test)]`/`#[test]`
+    /// items, which every rule skips.
+    pub excluded: Vec<bool>,
+}
+
+/// Options for an analysis run.
+#[derive(Debug, Clone)]
+pub struct AnalysisOptions {
+    /// Directory scanned recursively for `.rs` files.
+    pub root: PathBuf,
+    /// Restrict to a single rule id (`None` = all rules).
+    pub rule: Option<String>,
+}
+
+/// Outcome of an analysis run.
+#[derive(Debug, Default)]
+pub struct AnalysisReport {
+    /// Findings that survived suppression, sorted by (file, line, col, rule).
+    pub findings: Vec<Diagnostic>,
+    /// Number of findings dropped by `// batopo-allow:` comments.
+    pub suppressed: usize,
+    /// Number of files scanned.
+    pub files: usize,
+}
+
+impl AnalysisReport {
+    /// Finding counts per rule id (only rules with at least one finding).
+    pub fn counts_by_rule(&self) -> BTreeMap<&'static str, usize> {
+        let mut counts = BTreeMap::new();
+        for d in &self.findings {
+            *counts.entry(d.rule).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// JSON document for `--format json` / the CI artifact. The caller may
+    /// add a `ratchet` key when a baseline was supplied.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("schema_version", Json::Num(1.0)),
+            ("files_scanned", Json::Num(self.files as f64)),
+            ("suppressed", Json::Num(self.suppressed as f64)),
+            ("findings", Json::Arr(self.findings.iter().map(Diagnostic::to_json).collect())),
+        ])
+    }
+}
+
+/// Scan a source tree on disk.
+pub fn analyze_root(opts: &AnalysisOptions) -> Result<AnalysisReport, String> {
+    let mut sources = Vec::new();
+    for path in collect_rs_files(&opts.root)? {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        sources.push((rel_path(&opts.root, &path), text));
+    }
+    Ok(analyze_sources(&sources, opts.rule.as_deref()))
+}
+
+/// Run the rules over in-memory `(relative path, source)` pairs. This is the
+/// seam the fixture tests use; [`analyze_root`] is a thin disk-walking
+/// wrapper around it.
+pub fn analyze_sources(sources: &[(String, String)], rule: Option<&str>) -> AnalysisReport {
+    let enabled = |id: &str| match rule {
+        Some(r) => r == id,
+        None => true,
+    };
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    let mut allows: Vec<(String, lexer::Allow)> = Vec::new();
+    let mut graph = lockgraph::LockGraph::new();
+    for (path, source) in sources {
+        let lexed = lexer::lex(source);
+        for a in lexed.allows {
+            allows.push((path.clone(), a));
+        }
+        let excluded = rules::test_code_mask(&lexed.tokens);
+        let ctx = FileContext { path: path.clone(), tokens: lexed.tokens, excluded };
+        if enabled(rules::PANIC_IN_RUNTIME) {
+            rules::panic_in_runtime(&ctx, &mut raw);
+        }
+        if enabled(rules::FLOAT_EQ) {
+            rules::float_eq(&ctx, &mut raw);
+        }
+        if enabled(rules::SPAWN_WITHOUT_JOIN) {
+            rules::spawn_without_join(&ctx, &mut raw);
+        }
+        if enabled(rules::LOCK_ORDER) {
+            graph.add_file(&ctx);
+        }
+    }
+    if enabled(rules::LOCK_ORDER) {
+        graph.report_cycles(&mut raw);
+    }
+    let mut findings = Vec::new();
+    let mut suppressed = 0;
+    for d in raw {
+        let hit = allows.iter().any(|(file, a)| {
+            *file == d.file && a.rule == d.rule && (a.line == d.line || a.line + 1 == d.line)
+        });
+        if hit {
+            suppressed += 1;
+        } else {
+            findings.push(d);
+        }
+    }
+    findings.sort_by_key(Diagnostic::sort_key);
+    AnalysisReport { findings, suppressed, files: sources.len() }
+}
+
+/// All `.rs` files under `root`, sorted for deterministic reports.
+fn collect_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    if !root.is_dir() {
+        return Err(format!("scan root {} is not a directory", root.display()));
+    }
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Forward-slash path of `path` relative to `root`.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn srcs(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect()
+    }
+
+    #[test]
+    fn end_to_end_multi_rule_report_is_sorted() {
+        let sources = srcs(&[
+            (
+                "serve/daemon.rs",
+                "fn tick(m: &Mutex<u8>) { let v = m.lock().unwrap(); drop(v); }\n\
+                 fn go() { std::thread::spawn(|| ()); }\n",
+            ),
+            ("linalg/dense.rs", "fn z(x: f64) -> bool { x == 0.0 }\n"),
+        ]);
+        let report = analyze_sources(&sources, None);
+        let rules_seen: Vec<&str> = report.findings.iter().map(|d| d.rule).collect();
+        assert_eq!(rules_seen, ["float-eq", "panic-in-runtime", "spawn-without-join"]);
+        assert_eq!(report.files, 2);
+        assert_eq!(report.suppressed, 0);
+        assert_eq!(report.counts_by_rule().get("float-eq"), Some(&1));
+    }
+
+    #[test]
+    fn rule_filter_restricts_the_run() {
+        let sources = srcs(&[(
+            "serve/daemon.rs",
+            "fn tick(m: &Mutex<u8>) { m.lock().unwrap(); std::thread::spawn(|| ()); }\n",
+        )]);
+        let report = analyze_sources(&sources, Some("panic-in-runtime"));
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, "panic-in-runtime");
+    }
+
+    #[test]
+    fn allow_comment_suppresses_same_and_next_line_only() {
+        let src = "fn go() {\n\
+                   \x20   // batopo-allow: spawn-without-join\n\
+                   \x20   std::thread::spawn(|| ());\n\
+                   \x20   std::thread::spawn(|| ());\n\
+                   }\n";
+        let report = analyze_sources(&srcs(&[("serve/daemon.rs", src)]), None);
+        // Line 3 suppressed by the comment on line 2; line 4 still fires.
+        assert_eq!(report.suppressed, 1);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].line, 4);
+    }
+
+    #[test]
+    fn allow_for_a_different_rule_does_not_suppress() {
+        let src = "fn go() {\n\
+                   \x20   // batopo-allow: float-eq\n\
+                   \x20   std::thread::spawn(|| ());\n\
+                   }\n";
+        let report = analyze_sources(&srcs(&[("serve/daemon.rs", src)]), None);
+        assert_eq!(report.suppressed, 0);
+        assert_eq!(report.findings.len(), 1);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let report = analyze_sources(
+            &srcs(&[("linalg/dense.rs", "fn z(x: f64) -> bool { x != 1e-9 }\n")]),
+            None,
+        );
+        let doc = report.to_json();
+        assert_eq!(doc.get("files_scanned").and_then(|j| j.as_usize()), Some(1));
+        let findings = doc.get("findings").and_then(|j| j.as_arr()).expect("findings array");
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].get("rule").and_then(|j| j.as_str()), Some("float-eq"));
+    }
+}

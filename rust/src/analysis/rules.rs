@@ -1,0 +1,477 @@
+//! Lint rules for `batopo analyze`, tuned to this codebase.
+//!
+//! Every rule walks the spanned token stream of one file (plus a per-token
+//! "test code" mask) and appends [`Diagnostic`]s. The `lock-order` rule is
+//! cross-file and lives in [`super::lockgraph`]; this module provides its
+//! token-tree helpers ([`matching`], [`chain_start`]).
+
+use super::diagnostics::{Diagnostic, Severity};
+use super::lexer::{Token, TokenKind};
+use super::FileContext;
+
+/// Rule id: panics (`unwrap`/`expect`/`panic!`/…) on runtime module paths.
+pub const PANIC_IN_RUNTIME: &str = "panic-in-runtime";
+/// Rule id: inconsistent cross-function lock acquisition order.
+pub const LOCK_ORDER: &str = "lock-order";
+/// Rule id: OS thread spawned with its `JoinHandle` dropped on the floor.
+pub const SPAWN_WITHOUT_JOIN: &str = "spawn-without-join";
+/// Rule id: exact float `==`/`!=` comparison in numeric kernels.
+pub const FLOAT_EQ: &str = "float-eq";
+
+/// All rule ids known to the analyzer, in alphabetical order.
+pub const ALL_RULES: [&str; 4] = [FLOAT_EQ, LOCK_ORDER, PANIC_IN_RUNTIME, SPAWN_WITHOUT_JOIN];
+
+/// Module prefixes (relative to the scan root) that count as runtime paths
+/// for [`PANIC_IN_RUNTIME`]: code that must keep the daemon/coordinator/
+/// solver alive rather than abort the process.
+const RUNTIME_PREFIXES: [&str; 4] = ["serve/", "coordinator/", "runtime/", "optimizer/"];
+/// Individual files that also count as runtime paths.
+const RUNTIME_FILES: [&str; 1] = ["bandwidth/dynamic.rs"];
+/// Module prefixes where exact float comparison is lint-worthy.
+const FLOAT_PREFIXES: [&str; 2] = ["linalg/", "optimizer/"];
+
+fn in_runtime_scope(path: &str) -> bool {
+    RUNTIME_PREFIXES.iter().any(|p| path.starts_with(p)) || RUNTIME_FILES.contains(&path)
+}
+
+fn in_float_scope(path: &str) -> bool {
+    FLOAT_PREFIXES.iter().any(|p| path.starts_with(p))
+}
+
+/// Index of the close delimiter matching the open delimiter at `open`
+/// (`(`/`[`/`{`). `None` when unmatched or `open` is not a delimiter.
+pub(crate) fn matching(toks: &[Token], open: usize) -> Option<usize> {
+    let (o, c) = match toks.get(open)?.text.as_str() {
+        "(" => ("(", ")"),
+        "[" => ("[", "]"),
+        "{" => ("{", "}"),
+        _ => return None,
+    };
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        let text = t.text.as_str();
+        if text == o {
+            depth += 1;
+        } else if text == c {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Index of the open delimiter matching the close delimiter at `close`.
+pub(crate) fn matching_back(toks: &[Token], close: usize) -> Option<usize> {
+    let (o, c) = match toks.get(close)?.text.as_str() {
+        ")" => ("(", ")"),
+        "]" => ("[", "]"),
+        "}" => ("{", "}"),
+        _ => return None,
+    };
+    let mut depth = 0usize;
+    for k in (0..=close).rev() {
+        let text = toks[k].text.as_str();
+        if text == c {
+            depth += 1;
+        } else if text == o {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Walk backwards from the chain element at `elem_idx` (an identifier such
+/// as the `spawn` in `thread::Builder::new().spawn`) to the first token of
+/// the whole postfix chain, stepping over `.`/`::` connectors, call/index
+/// groups, and their callee identifiers.
+pub(crate) fn chain_start(toks: &[Token], elem_idx: usize) -> usize {
+    let mut i = elem_idx;
+    while i >= 2 && matches!(toks[i - 1].text.as_str(), "." | "::") {
+        let j = i - 2; // last token of the previous chain element
+        let t = &toks[j];
+        i = if t.text == ")" || t.text == "]" {
+            match matching_back(toks, j) {
+                Some(open) if open > 0 && toks[open - 1].kind == TokenKind::Ident => open - 1,
+                Some(open) => open,
+                None => return i,
+            }
+        } else if t.kind == TokenKind::Ident {
+            j
+        } else {
+            return i;
+        };
+    }
+    i
+}
+
+/// Per-token mask of test-only code: any item annotated `#[test]` or
+/// `#[cfg(test)]` (including `#[cfg(all(test, …))]`), masked through the end
+/// of the item — its terminating `;` or the matching close brace of its
+/// body. Every rule skips masked tokens.
+pub fn test_code_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text != "#" || toks.get(i + 1).map(|t| t.text.as_str()) != Some("[") {
+            i += 1;
+            continue;
+        }
+        let Some(attr_close) = matching(toks, i + 1) else {
+            i += 1;
+            continue;
+        };
+        let inner = &toks[i + 2..attr_close];
+        let has = |name: &str| inner.iter().any(|t| t.kind == TokenKind::Ident && t.text == name);
+        // `#[cfg(not(test))]` guards runtime-only code — do not mask it.
+        if !has("test") || has("not") {
+            i = attr_close + 1;
+            continue;
+        }
+        // Skip any further attributes between this one and the item.
+        let mut j = attr_close + 1;
+        while toks.get(j).map(|t| t.text.as_str()) == Some("#")
+            && toks.get(j + 1).map(|t| t.text.as_str()) == Some("[")
+        {
+            match matching(toks, j + 1) {
+                Some(c) => j = c + 1,
+                None => break,
+            }
+        }
+        // Find the end of the annotated item.
+        let mut depth = 0i64;
+        let mut end = None;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                ";" if depth == 0 => {
+                    end = Some(j);
+                    break;
+                }
+                "{" if depth == 0 => {
+                    end = matching(toks, j);
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        match end {
+            Some(e) => {
+                for m in &mut mask[i..=e] {
+                    *m = true;
+                }
+                i = e + 1;
+            }
+            None => {
+                for m in &mut mask[i..] {
+                    *m = true;
+                }
+                break;
+            }
+        }
+    }
+    mask
+}
+
+/// `panic-in-runtime`: `.unwrap()`, `.expect(…)`, `panic!`, `unreachable!`,
+/// `todo!`, and `unimplemented!` on runtime module paths, outside test code.
+/// A panic in the daemon, coordinator, or solver kills re-optimization for
+/// every connected client; these paths must log-and-degrade instead.
+pub fn panic_in_runtime(ctx: &FileContext, out: &mut Vec<Diagnostic>) {
+    if !in_runtime_scope(&ctx.path) {
+        return;
+    }
+    let toks = &ctx.tokens;
+    for i in 0..toks.len() {
+        if ctx.excluded[i] || toks[i].kind != TokenKind::Ident {
+            continue;
+        }
+        let prev = i.checked_sub(1).and_then(|j| toks.get(j)).map(|t| t.text.as_str());
+        let next = toks.get(i + 1).map(|t| t.text.as_str());
+        let what = match toks[i].text.as_str() {
+            m @ ("unwrap" | "expect") if prev == Some(".") && next == Some("(") => {
+                format!(".{m}()")
+            }
+            m @ ("panic" | "unreachable" | "todo" | "unimplemented") if next == Some("!") => {
+                format!("{m}!")
+            }
+            _ => continue,
+        };
+        out.push(Diagnostic {
+            rule: PANIC_IN_RUNTIME,
+            file: ctx.path.clone(),
+            line: toks[i].line,
+            col: toks[i].col,
+            severity: Severity::Deny,
+            message: format!(
+                "`{what}` can panic on a runtime path; propagate an error or log-and-degrade"
+            ),
+        });
+    }
+}
+
+/// Is this numeric literal float-typed? (`2.5`, `1e-3`, `4f64` — but not
+/// `0x1E`, `1_000`, or `7usize`.)
+fn is_float_literal(text: &str) -> bool {
+    if text.starts_with("0x") || text.starts_with("0o") || text.starts_with("0b") {
+        return false;
+    }
+    let b = text.as_bytes();
+    let mut i = 0;
+    while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+        i += 1;
+    }
+    if i < b.len() && b[i] == b'.' {
+        return true;
+    }
+    if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+        let mut j = i + 1;
+        if j < b.len() && (b[j] == b'+' || b[j] == b'-') {
+            j += 1;
+        }
+        if j < b.len() && b[j].is_ascii_digit() {
+            return true;
+        }
+    }
+    text.ends_with("f32") || text.ends_with("f64")
+}
+
+/// `float-eq`: `==`/`!=` directly against a float literal in the numeric
+/// kernels (`linalg/`, `optimizer/`), where rounding makes exact equality a
+/// latent bug; `total_cmp`, an epsilon tolerance, or an integer encoding is
+/// wanted instead.
+pub fn float_eq(ctx: &FileContext, out: &mut Vec<Diagnostic>) {
+    if !in_float_scope(&ctx.path) {
+        return;
+    }
+    let toks = &ctx.tokens;
+    let floatish = |t: Option<&Token>| {
+        t.is_some_and(|t| t.kind == TokenKind::Num && is_float_literal(&t.text))
+    };
+    for i in 0..toks.len() {
+        if ctx.excluded[i] || toks[i].kind != TokenKind::Punct {
+            continue;
+        }
+        let op = toks[i].text.as_str();
+        if op != "==" && op != "!=" {
+            continue;
+        }
+        if floatish(i.checked_sub(1).and_then(|j| toks.get(j))) || floatish(toks.get(i + 1)) {
+            out.push(Diagnostic {
+                rule: FLOAT_EQ,
+                file: ctx.path.clone(),
+                line: toks[i].line,
+                col: toks[i].col,
+                severity: Severity::Warn,
+                message: format!(
+                    "exact float `{op}` comparison; prefer `total_cmp`, an epsilon tolerance, \
+                     or an integer representation"
+                ),
+            });
+        }
+    }
+}
+
+fn is_let_underscore(toks: &[Token], eq_idx: usize) -> bool {
+    eq_idx >= 2 && toks[eq_idx - 1].text == "_" && toks[eq_idx - 2].text == "let"
+}
+
+/// `spawn-without-join`: an OS thread spawn (`thread::spawn` or a
+/// `thread::Builder` chain) whose `JoinHandle` is dropped — the statement
+/// discards the call's value or binds it to `_`. A dropped handle means no
+/// join on shutdown and no panic propagation, the exact bug class the
+/// coordinator's `WorkerPool` exists to prevent. Scoped `thread::scope`
+/// spawns are not flagged (the scope joins them).
+pub fn spawn_without_join(ctx: &FileContext, out: &mut Vec<Diagnostic>) {
+    let toks = &ctx.tokens;
+    for i in 0..toks.len() {
+        if ctx.excluded[i]
+            || toks[i].kind != TokenKind::Ident
+            || toks[i].text != "spawn"
+            || toks.get(i + 1).map(|t| t.text.as_str()) != Some("(")
+        {
+            continue;
+        }
+        let start = chain_start(toks, i);
+        let os_thread = toks[start..i]
+            .iter()
+            .any(|t| t.kind == TokenKind::Ident && (t.text == "thread" || t.text == "Builder"));
+        if !os_thread {
+            continue;
+        }
+        // Walk to the end of the postfix expression the spawn call heads
+        // (`…spawn(||…).expect("…")?` and friends).
+        let Some(args_close) = matching(toks, i + 1) else {
+            continue;
+        };
+        let mut end = args_close;
+        loop {
+            match toks.get(end + 1).map(|t| t.text.as_str()) {
+                Some("?") => end += 1,
+                Some(".") if toks.get(end + 2).map(|t| t.kind) == Some(TokenKind::Ident) => {
+                    if toks.get(end + 3).map(|t| t.text.as_str()) == Some("(") {
+                        match matching(toks, end + 3) {
+                            Some(close) => end = close,
+                            None => break,
+                        }
+                    } else {
+                        end += 2;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let ends_as_statement = toks.get(end + 1).map(|t| t.text.as_str()) == Some(";");
+        let used = if start == 0 {
+            true
+        } else {
+            match toks[start - 1].text.as_str() {
+                ";" | "{" | "}" => false,
+                "=" => !is_let_underscore(toks, start - 1),
+                _ => true, // argument, `let h = …`, tail expression, …
+            }
+        };
+        if used || !ends_as_statement {
+            continue;
+        }
+        // Anchor at the chain start so a `// batopo-allow:` comment directly
+        // above the statement suppresses the finding even for multi-line
+        // builder chains.
+        let anchor = &toks[start];
+        out.push(Diagnostic {
+            rule: SPAWN_WITHOUT_JOIN,
+            file: ctx.path.clone(),
+            line: anchor.line,
+            col: anchor.col,
+            severity: Severity::Deny,
+            message: "spawned thread's JoinHandle is dropped; join it, store it, or register a \
+                      shutdown path"
+                .to_string(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn ctx(path: &str, src: &str) -> FileContext {
+        let lexed = lex(src);
+        let excluded = test_code_mask(&lexed.tokens);
+        FileContext { path: path.to_string(), tokens: lexed.tokens, excluded }
+    }
+
+    fn run(rule: fn(&FileContext, &mut Vec<Diagnostic>), path: &str, src: &str) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        rule(&ctx(path, src), &mut out);
+        out
+    }
+
+    #[test]
+    fn panic_rule_fires_on_runtime_paths_only() {
+        let src = "fn f(m: &Mutex<u8>) { let v = m.lock().unwrap(); panic!(\"{v}\"); }";
+        assert_eq!(run(panic_in_runtime, "serve/daemon.rs", src).len(), 2);
+        assert_eq!(run(panic_in_runtime, "bandwidth/dynamic.rs", src).len(), 2);
+        assert!(run(panic_in_runtime, "linalg/dense.rs", src).is_empty());
+        assert!(run(panic_in_runtime, "util/json.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_rule_skips_test_code_and_strings() {
+        let src = "fn f() -> u8 { 1 }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       #[test]\n\
+                       fn t() { f().checked_add(1).unwrap(); panic!(\"x\"); }\n\
+                   }\n\
+                   fn g(s: &str) { let _ = s.contains(\".unwrap()\"); }\n";
+        assert!(run(panic_in_runtime, "coordinator/worker.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_rule_ignores_paths_through_std_panic_module() {
+        let src = "fn f() { let _ = std::panic::catch_unwind(|| 1); }";
+        assert!(run(panic_in_runtime, "serve/daemon.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_eq_fires_on_float_literals_not_ints() {
+        let src = "fn f(x: f64, n: usize) -> bool { x == 0.0 || 1e-3 != x || n == 7 }";
+        let found = run(float_eq, "linalg/dense.rs", src);
+        assert_eq!(found.len(), 2);
+        assert!(run(float_eq, "serve/daemon.rs", src).is_empty());
+        // Hex literals and suffixed integers are not floats.
+        let src = "fn g(n: u32) -> bool { n == 0x1E || n as usize == 7usize }";
+        assert!(run(float_eq, "optimizer/admm.rs", src).is_empty());
+        // Suffixed floats are.
+        let src = "fn h(x: f32) -> bool { x == 4f32 }";
+        assert_eq!(run(float_eq, "optimizer/admm.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn spawn_rule_flags_dropped_and_let_underscore_handles() {
+        let dropped = "fn f() { std::thread::spawn(|| work()); }";
+        assert_eq!(run(spawn_without_join, "serve/daemon.rs", dropped).len(), 1);
+        let underscore = "fn f() { let _ = std::thread::spawn(|| work()); }";
+        assert_eq!(run(spawn_without_join, "x.rs", underscore).len(), 1);
+        let builder = "fn f() {\n    thread::Builder::new()\n        .name(\"w\".into())\n\
+                       .spawn(|| work())\n        .expect(\"spawn\");\n}";
+        let found = run(spawn_without_join, "x.rs", builder);
+        assert_eq!(found.len(), 1);
+        // Anchored at the chain start (line 2), not the spawn token.
+        assert_eq!(found[0].line, 2);
+    }
+
+    #[test]
+    fn spawn_rule_accepts_bound_returned_and_scoped_spawns() {
+        let bound = "fn f() { let h = std::thread::spawn(|| 1); h.join().ok(); }";
+        assert!(run(spawn_without_join, "x.rs", bound).is_empty());
+        let returned = "fn f() -> JoinHandle<()> { thread::spawn(|| ()) }";
+        assert!(run(spawn_without_join, "x.rs", returned).is_empty());
+        let ret_stmt = "fn f() -> JoinHandle<()> { return thread::spawn(|| ()); }";
+        assert!(run(spawn_without_join, "x.rs", ret_stmt).is_empty());
+        let pushed = "fn f(v: &mut Vec<JoinHandle<()>>) { v.push(thread::spawn(|| ())); }";
+        assert!(run(spawn_without_join, "x.rs", pushed).is_empty());
+        let scoped = "fn f() { std::thread::scope(|s| { s.spawn(|| work()); }); }";
+        assert!(run(spawn_without_join, "x.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod_but_not_cfg_not_test() {
+        let src = "fn live() {}\n\
+                   #[cfg(not(test))]\n\
+                   fn also_live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests { fn masked() {} }\n\
+                   fn live_again() {}\n";
+        let c = ctx("x.rs", src);
+        let masked: Vec<&str> = c
+            .tokens
+            .iter()
+            .zip(&c.excluded)
+            .filter(|(t, &m)| m && t.kind == TokenKind::Ident)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert!(masked.contains(&"masked"));
+        assert!(!masked.contains(&"live"));
+        assert!(!masked.contains(&"also_live"));
+        assert!(!masked.contains(&"live_again"));
+    }
+
+    #[test]
+    fn is_float_literal_classification() {
+        for yes in ["2.5", "1e-3", "1E5", "4f64", "0.5f32", "1_000.25"] {
+            assert!(is_float_literal(yes), "{yes} should be float");
+        }
+        for no in ["7", "1_000", "0x1E", "0b1010", "7usize", "42u64"] {
+            assert!(!is_float_literal(no), "{no} should not be float");
+        }
+    }
+}

@@ -37,12 +37,13 @@ impl<E> EventSender<E> {
 
     /// Spawn a timer thread that enqueues `make()` every `period` until the
     /// loop is dropped (detected by the failed send). Returns the timer's
-    /// join handle; joining is optional — the thread exits on its own.
+    /// join handle; joining is optional — the thread exits on its own. Fails
+    /// only when the OS refuses to spawn a thread.
     pub fn spawn_timer(
         &self,
         period: Duration,
         mut make: impl FnMut() -> E + Send + 'static,
-    ) -> JoinHandle<()>
+    ) -> std::io::Result<JoinHandle<()>>
     where
         E: Send + 'static,
     {
@@ -55,7 +56,6 @@ impl<E> EventSender<E> {
                     return;
                 }
             })
-            .expect("spawn timer thread")
     }
 }
 
@@ -174,7 +174,7 @@ mod tests {
     #[test]
     fn timer_ticks_and_dies_with_the_loop() {
         let (el, h) = EventLoop::new();
-        let timer = h.spawn_timer(Duration::from_millis(5), || "tick");
+        let timer = h.spawn_timer(Duration::from_millis(5), || "tick").expect("spawn timer");
         assert_eq!(el.next_timeout(Duration::from_secs(5)).expect("a tick"), "tick");
         drop(el);
         // The timer notices the dead loop on its next fire and exits.

@@ -38,60 +38,61 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Spawn `n` workers; node `i` owns an iid shard (seeded per node).
-    pub fn spawn(n: usize, dataset: &SyntheticDataset, seed: u64) -> WorkerPool {
+    ///
+    /// Fails when the OS refuses to spawn a worker thread; workers already
+    /// started exit on their own once the partial pool is dropped.
+    pub fn spawn(n: usize, dataset: &SyntheticDataset, seed: u64) -> std::io::Result<WorkerPool> {
         let (events, reply_tx) = EventLoop::<Reply>::new();
-        let workers = (0..n)
-            .map(|node| {
-                let (tx, cmd_rx) = channel::<Command>();
-                let mut shard = dataset.shard(node, seed);
-                let out = reply_tx.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("batopo-node-{node}"))
-                    .spawn(move || {
-                        let mut stats = WorkerStats {
-                            node,
-                            ..Default::default()
-                        };
-                        // `recv()` erring (leader dropped its command sender)
-                        // ends the loop the same way an explicit `Shutdown`
-                        // does — workers never outlive a dropped pool.
-                        while let Ok(cmd) = cmd_rx.recv() {
-                            match cmd {
-                                Command::NextBatch => {
-                                    let (tokens, targets) = shard.next_train_batch();
-                                    stats.batches_produced += 1;
-                                    out.send(Reply::Batch {
-                                        node,
-                                        tokens,
-                                        targets,
-                                    });
-                                }
-                                Command::EvalBatch => {
-                                    let (tokens, targets) = shard.eval_batch();
-                                    out.send(Reply::Batch {
-                                        node,
-                                        tokens,
-                                        targets,
-                                    });
-                                }
-                                Command::RecordLoss { loss, .. } => {
-                                    stats.losses_recorded += 1;
-                                    stats.last_loss = loss;
-                                    out.send(Reply::Ack { node });
-                                }
-                                Command::Shutdown => break,
+        let mut workers = Vec::with_capacity(n);
+        for node in 0..n {
+            let (tx, cmd_rx) = channel::<Command>();
+            let mut shard = dataset.shard(node, seed);
+            let out = reply_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("batopo-node-{node}"))
+                .spawn(move || {
+                    let mut stats = WorkerStats {
+                        node,
+                        ..Default::default()
+                    };
+                    // `recv()` erring (leader dropped its command sender)
+                    // ends the loop the same way an explicit `Shutdown`
+                    // does — workers never outlive a dropped pool.
+                    while let Ok(cmd) = cmd_rx.recv() {
+                        match cmd {
+                            Command::NextBatch => {
+                                let (tokens, targets) = shard.next_train_batch();
+                                stats.batches_produced += 1;
+                                out.send(Reply::Batch {
+                                    node,
+                                    tokens,
+                                    targets,
+                                });
                             }
+                            Command::EvalBatch => {
+                                let (tokens, targets) = shard.eval_batch();
+                                out.send(Reply::Batch {
+                                    node,
+                                    tokens,
+                                    targets,
+                                });
+                            }
+                            Command::RecordLoss { loss, .. } => {
+                                stats.losses_recorded += 1;
+                                stats.last_loss = loss;
+                                out.send(Reply::Ack { node });
+                            }
+                            Command::Shutdown => break,
                         }
-                        stats
-                    })
-                    .expect("spawn worker");
-                Worker {
-                    tx,
-                    handle: Some(handle),
-                }
-            })
-            .collect();
-        WorkerPool { workers, events }
+                    }
+                    stats
+                })?;
+            workers.push(Worker {
+                tx,
+                handle: Some(handle),
+            });
+        }
+        Ok(WorkerPool { workers, events })
     }
 
     /// Number of workers.
@@ -104,36 +105,60 @@ impl WorkerPool {
         self.workers.is_empty()
     }
 
-    /// Send a command to node `i`.
+    /// Send a command to node `i`. A dead worker (exited thread) is logged
+    /// and the command dropped — the caller observes the missing reply
+    /// instead of a coordinator panic.
     pub fn send(&self, node: usize, cmd: Command) {
-        self.workers[node].tx.send(cmd).expect("worker alive");
+        if self.workers[node].tx.send(cmd).is_err() {
+            eprintln!("coordinator: worker {node} is gone; dropping command");
+        }
     }
 
     /// Broadcast a command and collect one reply per node, returned indexed
-    /// by node id.
-    pub fn broadcast_collect(&self, cmd: Command) -> Vec<Reply> {
-        for w in &self.workers {
-            w.tx.send(cmd.clone()).expect("worker alive");
+    /// by node id. Errs when a worker exited early (dead thread or missing
+    /// reply) so the training loop can abort the run cleanly.
+    pub fn broadcast_collect(&self, cmd: Command) -> Result<Vec<Reply>, String> {
+        for (node, w) in self.workers.iter().enumerate() {
+            if w.tx.send(cmd.clone()).is_err() {
+                return Err(format!("worker {node} exited before the broadcast"));
+            }
         }
         let mut replies: Vec<Option<Reply>> = (0..self.len()).map(|_| None).collect();
         for _ in 0..self.len() {
-            let r = self.events.next().expect("reply");
+            let r = self.events.next().ok_or("all workers exited before replying")?;
             let node = r.node();
             replies[node] = Some(r);
         }
-        replies.into_iter().map(|r| r.expect("one per node")).collect()
+        replies
+            .into_iter()
+            .enumerate()
+            .map(|(node, r)| r.ok_or_else(|| format!("no reply from worker {node}")))
+            .collect()
     }
 
-    /// Shut down all workers and return their stats (indexed by node).
+    /// Shut down all workers and return their stats (indexed by node). A
+    /// worker that panicked is logged and reported with default stats.
     pub fn shutdown(mut self) -> Vec<WorkerStats> {
         for w in &self.workers {
             let _ = w.tx.send(Command::Shutdown);
         }
-        let mut stats: Vec<WorkerStats> = self
-            .workers
-            .iter_mut()
-            .map(|w| w.handle.take().expect("handle").join().expect("join"))
-            .collect();
+        let mut stats: Vec<WorkerStats> = Vec::with_capacity(self.workers.len());
+        for (node, w) in self.workers.iter_mut().enumerate() {
+            match w.handle.take().map(JoinHandle::join) {
+                Some(Ok(s)) => stats.push(s),
+                Some(Err(_)) => {
+                    eprintln!("coordinator: worker {node} panicked; reporting default stats");
+                    stats.push(WorkerStats {
+                        node,
+                        ..Default::default()
+                    });
+                }
+                None => stats.push(WorkerStats {
+                    node,
+                    ..Default::default()
+                }),
+            }
+        }
         stats.sort_by_key(|s| s.node);
         stats
     }
@@ -176,8 +201,8 @@ mod tests {
     #[test]
     fn workers_produce_batches_in_parallel() {
         let ds = dataset();
-        let pool = WorkerPool::spawn(6, &ds, 42);
-        let replies = pool.broadcast_collect(Command::NextBatch);
+        let pool = WorkerPool::spawn(6, &ds, 42).expect("spawn pool");
+        let replies = pool.broadcast_collect(Command::NextBatch).expect("replies");
         assert_eq!(replies.len(), 6);
         for (i, r) in replies.iter().enumerate() {
             match r {
@@ -197,11 +222,11 @@ mod tests {
     #[test]
     fn node_shards_differ_but_are_seed_deterministic() {
         let ds = dataset();
-        let pool1 = WorkerPool::spawn(2, &ds, 7);
-        let r1 = pool1.broadcast_collect(Command::NextBatch);
+        let pool1 = WorkerPool::spawn(2, &ds, 7).expect("spawn pool");
+        let r1 = pool1.broadcast_collect(Command::NextBatch).expect("replies");
         pool1.shutdown();
-        let pool2 = WorkerPool::spawn(2, &ds, 7);
-        let r2 = pool2.broadcast_collect(Command::NextBatch);
+        let pool2 = WorkerPool::spawn(2, &ds, 7).expect("spawn pool");
+        let r2 = pool2.broadcast_collect(Command::NextBatch).expect("replies");
         pool2.shutdown();
         let tok = |r: &Reply| match r {
             Reply::Batch { tokens, .. } => tokens.clone(),
@@ -220,8 +245,8 @@ mod tests {
         let (done_tx, done_rx) = channel::<()>();
         std::thread::spawn(move || {
             let ds = dataset();
-            let pool = WorkerPool::spawn(4, &ds, 3);
-            let replies = pool.broadcast_collect(Command::NextBatch);
+            let pool = WorkerPool::spawn(4, &ds, 3).expect("spawn pool");
+            let replies = pool.broadcast_collect(Command::NextBatch).expect("replies");
             assert_eq!(replies.len(), 4);
             drop(pool); // no shutdown() — Drop must join all 4 workers
             let _ = done_tx.send(());
@@ -234,8 +259,9 @@ mod tests {
     #[test]
     fn record_loss_roundtrip() {
         let ds = dataset();
-        let pool = WorkerPool::spawn(3, &ds, 1);
-        let acks = pool.broadcast_collect(Command::RecordLoss { step: 0, loss: 1.5 });
+        let pool = WorkerPool::spawn(3, &ds, 1).expect("spawn pool");
+        let acks =
+            pool.broadcast_collect(Command::RecordLoss { step: 0, loss: 1.5 }).expect("acks");
         assert_eq!(acks.len(), 3);
         let stats = pool.shutdown();
         assert!(stats.iter().all(|s| s.losses_recorded == 1 && s.last_loss == 1.5));

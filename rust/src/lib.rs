@@ -21,6 +21,12 @@
 //!
 //! Python never runs at request time: after `make artifacts` the binary is
 //! self-contained (and without artifacts it is self-contained from the start).
+//!
+//! The crate also carries its own reliability tooling: [`analysis`] is a
+//! zero-dependency static-analysis pass (`batopo analyze`) that lints the
+//! source tree for codebase-specific hazards — panics on runtime paths,
+//! inconsistent lock orders, dropped thread handles, exact float compares —
+//! behind a committed ratchet baseline in CI.
 
 #![warn(missing_docs)]
 // Numerical kernels here are written index-first on purpose (they mirror the
@@ -32,6 +38,7 @@
     clippy::type_complexity
 )]
 
+pub mod analysis;
 pub mod bandwidth;
 pub mod bench;
 pub mod config;

@@ -22,11 +22,15 @@
 //!                  [--hysteresis 1.15] [--tick-seconds 0] [--full]
 //! batopo serve-sim [--clients 2] [--scenario degrade] [--n 8] [--quick]
 //!                  [--connect HOST:PORT] [--no-shutdown]
+//! batopo analyze   [--format text|json] [--baseline analysis/baseline.json]
+//!                  [--rule float-eq|lock-order|panic-in-runtime|spawn-without-join]
+//!                  [--root rust/src] [--out out/analysis.json] [--write-baseline]
 //! batopo info
 //! ```
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+use batopo::analysis::{self, baseline::Baseline, rules, AnalysisOptions};
 use batopo::bandwidth::allocation::allocate_edge_capacity;
 use batopo::bandwidth::fuzz::{fuzz_scenarios, invariant_from_dump, replay, FuzzConfig, Invariant};
 use batopo::bandwidth::timing::TimeModel;
@@ -57,10 +61,11 @@ fn main() {
         "fuzz" => cmd_fuzz(&args),
         "serve" => cmd_serve(&args),
         "serve-sim" => cmd_serve_sim(&args),
+        "analyze" => cmd_analyze(&args),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: batopo <optimize|consensus|allocate|train|reproduce|bench|fuzz|serve|serve-sim|info> [options]\n\
+                "usage: batopo <optimize|consensus|allocate|train|reproduce|bench|fuzz|serve|serve-sim|analyze|info> [options]\n\
                  \n\
                  optimize  --n N --r R [--scenario S] [--seed X] [--quick] [--out file.json]\n\
                  \u{20}          [--xstep cg|bicgstab] [--max-iters N] [--json report.json]\n\
@@ -85,6 +90,8 @@ fn main() {
                  serve-sim [--clients 2] [--scenario degrade] [--n 8] [--r R] [--quick]\n\
                  \u{20}          [--seed X] [--hysteresis 1.02] [--connect HOST:PORT]\n\
                  \u{20}          [--no-shutdown]\n\
+                 analyze   [--format text|json] [--baseline analysis/baseline.json]\n\
+                 \u{20}          [--rule ID] [--root rust/src] [--out FILE] [--write-baseline]\n\
                  info\n\
                  \n\
                  scenarios: homogeneous (any n) | node-level (even n) |\n\
@@ -736,6 +743,115 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     println!("{}", report.render());
     if report.min_updates_per_client == 0 {
         return Err("at least one subscriber received no topology update".into());
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<(), String> {
+    let format = args.str_or("format", "text");
+    if format != "text" && format != "json" {
+        return Err(format!("unknown --format {format:?} (expected text|json)"));
+    }
+    if let Some(r) = args.get("rule") {
+        if !rules::ALL_RULES.contains(&r) {
+            return Err(format!(
+                "unknown rule {r:?} (expected one of: {})",
+                rules::ALL_RULES.join(", ")
+            ));
+        }
+    }
+    let root = Path::new(args.get("root").unwrap_or("rust/src"));
+    if !root.is_dir() {
+        return Err(format!(
+            "scan root {} not found (run from the repo root or pass --root DIR)",
+            root.display()
+        ));
+    }
+    let opts =
+        AnalysisOptions { root: root.to_path_buf(), rule: args.get("rule").map(String::from) };
+    let report = analysis::analyze_root(&opts)?;
+
+    // `--write-baseline` refreshes the committed ratchet file instead of
+    // gating against it.
+    if args.flag("write-baseline") {
+        let path = args.str_or("baseline", "analysis/baseline.json");
+        let baseline = Baseline::from_findings(&report.findings);
+        baseline.save(Path::new(&path))?;
+        println!(
+            "analyze: wrote {} entries ({} findings) to {path}",
+            baseline.entries.len(),
+            report.findings.len()
+        );
+        return Ok(());
+    }
+
+    let (gate_path, outcome) = match args.get("baseline") {
+        Some(p) => {
+            let baseline = Baseline::load(Path::new(p))?;
+            let outcome = analysis::baseline::ratchet(&baseline, &report.findings);
+            (Some(p.to_string()), Some(outcome))
+        }
+        None => (None, None),
+    };
+
+    let mut doc = report.to_json();
+    if let (Some(o), Json::Obj(map)) = (&outcome, &mut doc) {
+        map.insert("ratchet".to_string(), o.to_json());
+    }
+    // Write the artifact before gating so CI uploads diagnostics even when
+    // the ratchet fails the job.
+    if let Some(out) = args.get("out") {
+        let out = Path::new(out);
+        if let Some(dir) = out.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            }
+        }
+        std::fs::write(out, format!("{doc}\n")).map_err(|e| e.to_string())?;
+    }
+
+    if format == "json" {
+        println!("{doc}");
+    } else {
+        for d in &report.findings {
+            println!("{d}");
+        }
+        let counts: Vec<String> =
+            report.counts_by_rule().iter().map(|(r, c)| format!("{r}={c}")).collect();
+        let suffix = if counts.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", counts.join(" "))
+        };
+        println!(
+            "analyze: {} finding(s) in {} file(s), {} suppressed{suffix}",
+            report.findings.len(),
+            report.files,
+            report.suppressed
+        );
+    }
+
+    if let (Some(path), Some(o)) = (&gate_path, &outcome) {
+        for d in &o.improvements {
+            println!(
+                "note: {} in {} is below baseline ({} < {}); refresh {path} with --write-baseline",
+                d.rule, d.file, d.current, d.baseline
+            );
+        }
+        if !o.breaches.is_empty() {
+            for d in &o.breaches {
+                eprintln!(
+                    "ratchet: {} findings of {} in {} (baseline allows {})",
+                    d.current, d.rule, d.file, d.baseline
+                );
+            }
+            return Err(format!(
+                "{} rule/file pair(s) exceed the analysis baseline in {path}; fix the new \
+                 findings or, if intentional, refresh with `batopo analyze --write-baseline`",
+                o.breaches.len()
+            ));
+        }
+        println!("analyze: clean against baseline {path}");
     }
     Ok(())
 }

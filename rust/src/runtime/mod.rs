@@ -78,6 +78,8 @@ pub enum RuntimeError {
     Shape(String),
     /// Simulated-time model failure (e.g. a zero-bandwidth edge).
     Timing(String),
+    /// Coordinator/worker-pool failure (dead worker thread, lost reply).
+    Coordinator(String),
 }
 
 impl std::fmt::Display for RuntimeError {
@@ -91,6 +93,7 @@ impl std::fmt::Display for RuntimeError {
             RuntimeError::Xla(m) => write!(f, "xla: {m}"),
             RuntimeError::Shape(m) => write!(f, "shape mismatch: {m}"),
             RuntimeError::Timing(m) => write!(f, "time model: {m}"),
+            RuntimeError::Coordinator(m) => write!(f, "coordinator: {m}"),
         }
     }
 }

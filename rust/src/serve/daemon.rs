@@ -138,9 +138,13 @@ pub struct ServeHandle {
 
 impl ServeHandle {
     /// Wait for the daemon to shut down (a client must send `shutdown`) and
-    /// return its final counters.
+    /// return its final counters. If the daemon thread panicked, the panic is
+    /// logged and empty counters are returned instead of propagating it.
     pub fn join(self) -> ServeStats {
-        self.handle.join().expect("serve thread panicked")
+        self.handle.join().unwrap_or_else(|_| {
+            eprintln!("serve: daemon thread panicked; reporting empty stats");
+            ServeStats::default()
+        })
     }
 }
 
@@ -196,7 +200,12 @@ impl TelemetryState {
         p.phases = horizon;
         p.events.retain(|e| e.phase < horizon);
         let compiled = p.compile();
-        compiled.trace.phases.last().cloned().expect("compiled trace has at least one phase")
+        match compiled.trace.phases.last() {
+            Some(bw) => bw.clone(),
+            // A compiled trace always has ≥ 1 phase; if that invariant ever
+            // breaks, degrade to the init fleet rather than panic the daemon.
+            None => self.program.initial.clone(),
+        }
     }
 }
 
@@ -224,7 +233,7 @@ pub fn default_policy(cfg: &ServeConfig, n: usize) -> DynamicPolicy {
 pub fn run(cfg: ServeConfig) -> std::io::Result<ServeStats> {
     let listener = TcpListener::bind(&cfg.listen)?;
     println!("serve listening on {}", listener.local_addr()?);
-    Ok(run_with_listener(listener, cfg))
+    run_with_listener(listener, cfg)
 }
 
 /// Bind `cfg.listen` and run the daemon on a background thread; returns the
@@ -234,7 +243,12 @@ pub fn spawn(cfg: ServeConfig) -> std::io::Result<ServeHandle> {
     let addr = listener.local_addr()?;
     let handle = std::thread::Builder::new()
         .name("batopo-serve".to_string())
-        .spawn(move || run_with_listener(listener, cfg))?;
+        .spawn(move || {
+            run_with_listener(listener, cfg).unwrap_or_else(|e| {
+                eprintln!("serve: daemon failed: {e}");
+                ServeStats::default()
+            })
+        })?;
     Ok(ServeHandle { addr, handle })
 }
 
@@ -311,7 +325,7 @@ enum LoopAction {
     Shutdown,
 }
 
-fn run_with_listener(listener: TcpListener, cfg: ServeConfig) -> ServeStats {
+fn run_with_listener(listener: TcpListener, cfg: ServeConfig) -> std::io::Result<ServeStats> {
     let (events, root) = EventLoop::<ServeEvent>::new();
     let stop = Arc::new(AtomicBool::new(false));
     let local_addr = listener.local_addr().ok();
@@ -330,19 +344,19 @@ fn run_with_listener(listener: TcpListener, cfg: ServeConfig) -> ServeStats {
                     break;
                 }
             }
-        })
-        .expect("spawn accept thread");
+        })?;
 
     let (solve_tx, solve_rx) = channel::<SolveRequest>();
     let solver_events = root.clone();
     let solver_thread = std::thread::Builder::new()
         .name("batopo-serve-solver".to_string())
-        .spawn(move || solver_loop(solve_rx, solver_events))
-        .expect("spawn solver thread");
+        .spawn(move || solver_loop(solve_rx, solver_events))?;
 
-    let _timer = (cfg.tick_seconds > 0.0).then(|| {
-        root.spawn_timer(Duration::from_secs_f64(cfg.tick_seconds), || ServeEvent::Tick)
-    });
+    let _timer = if cfg.tick_seconds > 0.0 {
+        Some(root.spawn_timer(Duration::from_secs_f64(cfg.tick_seconds), || ServeEvent::Tick)?)
+    } else {
+        None
+    };
 
     let mut d = Daemon {
         cfg,
@@ -399,7 +413,7 @@ fn run_with_listener(listener: TcpListener, cfg: ServeConfig) -> ServeStats {
     for (_, s) in sessions {
         s.close();
     }
-    stats
+    Ok(stats)
 }
 
 impl Daemon {
@@ -407,8 +421,13 @@ impl Daemon {
         let id = self.next_session;
         self.next_session += 1;
         self.stats.sessions_served += 1;
-        let session = Session::start(id, stream, self.events.clone());
-        self.sessions.insert(id, session);
+        match Session::start(id, stream, self.events.clone()) {
+            Ok(session) => {
+                self.sessions.insert(id, session);
+            }
+            // fd/thread exhaustion: drop this one connection, keep serving.
+            Err(e) => eprintln!("serve: session {id} setup failed, dropping connection: {e}"),
+        }
     }
 
     fn reply(&self, sid: u64, text: &str) {

@@ -4,7 +4,7 @@
 
 use crate::coordinator::event_loop::EventSender;
 use crate::serve::daemon::ServeEvent;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
@@ -25,9 +25,17 @@ pub struct Session {
 impl Session {
     /// Adopt an accepted connection: spawn its reader thread (feeding
     /// `events`) and its writer thread (draining the outbound queue).
-    pub fn start(id: u64, stream: TcpStream, events: EventSender<ServeEvent>) -> Session {
+    ///
+    /// Fails when the stream cannot be cloned or a thread cannot be spawned
+    /// (fd or thread exhaustion); the caller drops this one connection and
+    /// keeps serving the rest.
+    pub fn start(
+        id: u64,
+        stream: TcpStream,
+        events: EventSender<ServeEvent>,
+    ) -> io::Result<Session> {
         let (outbound, outbound_rx) = channel::<String>();
-        let write_stream = stream.try_clone().expect("clone session stream");
+        let write_stream = stream.try_clone()?;
         let writer = std::thread::Builder::new()
             .name(format!("batopo-serve-write-{id}"))
             .spawn(move || {
@@ -37,9 +45,13 @@ impl Session {
                         return; // client gone; daemon learns via the reader
                     }
                 }
-            })
-            .expect("spawn session writer");
-        let read_stream = stream.try_clone().expect("clone session stream");
+            })?;
+        let read_stream = stream.try_clone()?;
+        // The reader is deliberately detached: it exits on EOF/error and
+        // reports the disconnect itself, and `close()` unblocks it by
+        // shutting the socket down — there is no point at which joining it
+        // would be safe without risking a block on a stalled client.
+        // batopo-allow: spawn-without-join
         std::thread::Builder::new()
             .name(format!("batopo-serve-read-{id}"))
             .spawn(move || {
@@ -51,16 +63,15 @@ impl Session {
                     }
                 }
                 events.send(ServeEvent::Disconnected { session: id });
-            })
-            .expect("spawn session reader");
-        Session {
+            })?;
+        Ok(Session {
             id,
             name: format!("session-{id}"),
             subscribed: false,
             outbound,
             writer: Some(writer),
             stream,
-        }
+        })
     }
 
     /// Queue one line (terminator appended) for the writer thread. Errors

@@ -359,17 +359,17 @@ pub fn run(cfg: &SimConfig) -> Result<SimReport, String> {
     // reaches all of them.
     let stop = Arc::new(AtomicBool::new(false));
     let (ready_tx, ready_rx) = channel();
-    let subs: Vec<_> = (0..cfg.clients)
-        .map(|i| {
-            let addr = addr.clone();
-            let stop = Arc::clone(&stop);
-            let ready = ready_tx.clone();
-            std::thread::Builder::new()
-                .name(format!("batopo-sim-sub-{i}"))
-                .spawn(move || subscriber(addr, i, stop, ready))
-                .expect("spawn subscriber thread")
-        })
-        .collect();
+    let mut subs = Vec::with_capacity(cfg.clients);
+    for i in 0..cfg.clients {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let ready = ready_tx.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("batopo-sim-sub-{i}"))
+            .spawn(move || subscriber(addr, i, stop, ready))
+            .map_err(|e| format!("spawn subscriber {i} failed: {e}"))?;
+        subs.push(h);
+    }
     drop(ready_tx);
     for _ in 0..cfg.clients {
         ready_rx
@@ -415,8 +415,18 @@ pub fn run(cfg: &SimConfig) -> Result<SimReport, String> {
     if cfg.shutdown {
         driver.cmd("shutdown")?;
     }
-    let received: Vec<Vec<Received>> =
-        subs.into_iter().map(|h| h.join().expect("subscriber thread panicked")).collect();
+    let mut received: Vec<Vec<Received>> = Vec::with_capacity(subs.len());
+    for (i, h) in subs.into_iter().enumerate() {
+        match h.join() {
+            Ok(r) => received.push(r),
+            // Count zero updates for a panicked subscriber: the report stays
+            // shaped (one row per client) and the CLI exits nonzero on min=0.
+            Err(_) => {
+                eprintln!("serve-sim: subscriber {i} panicked; counting zero updates for it");
+                received.push(Vec::new());
+            }
+        }
+    }
     let daemon_stats: Option<ServeStats> = handle.map(|h| h.join());
 
     // Latency: match each received update's epoch to its send instant.

@@ -144,7 +144,8 @@ impl<'e> DsgdTrainer<'e> {
             .clone()
             .unwrap_or_else(|| DatasetSpec::for_config(runner.config()));
         let dataset = SyntheticDataset::new(spec.clone());
-        let pool = WorkerPool::spawn(n, &dataset, self.config.seed);
+        let pool = WorkerPool::spawn(n, &dataset, self.config.seed)
+            .map_err(|e| RuntimeError::Coordinator(e.to_string()))?;
         let mixer = Mixer::for_backend(self.backend, topo, self.config.mix_variant)?;
         let threads = self.config.threads.max(1);
 
@@ -170,7 +171,7 @@ impl<'e> DsgdTrainer<'e> {
             let mut loss_sum = 0.0;
             for _step in 0..iters_per_epoch {
                 // Workers produce local batches concurrently.
-                let batches = collect_batches(&pool, Command::NextBatch);
+                let batches = collect_batches(&pool, Command::NextBatch)?;
                 // Local steps. On the host backend the independent node steps
                 // fan out across the thread pool; PJRT launches stay
                 // serialized on the CPU client. Either way the simulated
@@ -223,7 +224,7 @@ impl<'e> DsgdTrainer<'e> {
             let mut eval_acc = 0.0;
             let mut eval_count = 0usize;
             for _ in 0..self.config.eval_batches {
-                let batches = collect_batches(&pool, Command::EvalBatch);
+                let batches = collect_batches(&pool, Command::EvalBatch)?;
                 if let Some(host) = runner.host_model() {
                     let items: Vec<(&Vec<Vec<f32>>, Vec<i32>, Vec<i32>)> = batches
                         .into_iter()
@@ -290,16 +291,22 @@ impl<'e> DsgdTrainer<'e> {
     }
 }
 
-/// Broadcast a batch command and unwrap the replies into (tokens, targets)
-/// pairs indexed by node.
-fn collect_batches(pool: &WorkerPool, cmd: Command) -> Vec<(Vec<i32>, Vec<i32>)> {
+/// Broadcast a batch command and collect the replies into (tokens, targets)
+/// pairs indexed by node. Errs when a worker died mid-run or replied out of
+/// protocol, so the training loop aborts cleanly instead of panicking.
+fn collect_batches(
+    pool: &WorkerPool,
+    cmd: Command,
+) -> Result<Vec<(Vec<i32>, Vec<i32>)>, RuntimeError> {
     pool.broadcast_collect(cmd)
+        .map_err(RuntimeError::Coordinator)?
         .into_iter()
-        .map(|reply| {
-            let Reply::Batch { tokens, targets, .. } = reply else {
-                unreachable!("workers reply to batch commands with batches")
-            };
-            (tokens, targets)
+        .map(|reply| match reply {
+            Reply::Batch { tokens, targets, .. } => Ok((tokens, targets)),
+            other => Err(RuntimeError::Coordinator(format!(
+                "worker {} sent a non-batch reply to a batch command",
+                other.node()
+            ))),
         })
         .collect()
 }

@@ -1,0 +1,184 @@
+//! Integration tests for `batopo analyze`: per-rule fixtures through the
+//! `analyze_sources` seam, suppression comments, the baseline ratchet, a scan
+//! of the real tree pinned to the committed zero-findings guarantee for
+//! `serve/` and `coordinator/`, and the CLI end to end.
+
+use batopo::analysis::{analyze_root, analyze_sources, baseline, AnalysisOptions};
+use std::path::Path;
+
+fn srcs(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+    pairs.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect()
+}
+
+#[test]
+fn panic_rule_fires_on_runtime_paths_and_nowhere_else() {
+    let src = "fn tick(v: Option<u8>) -> u8 { v.unwrap() }\n\
+               fn boom() { panic!(\"down\"); }\n";
+    let report = analyze_sources(&srcs(&[("serve/daemon.rs", src)]), None);
+    assert_eq!(report.findings.len(), 2);
+    assert!(report.findings.iter().all(|d| d.rule == "panic-in-runtime"));
+    assert_eq!((report.findings[0].line, report.findings[1].line), (1, 2));
+    // The same source outside the runtime prefixes is not lint-worthy.
+    let report = analyze_sources(&srcs(&[("util/json.rs", src)]), None);
+    assert!(report.findings.is_empty());
+}
+
+#[test]
+fn float_eq_rule_fires_in_numeric_kernels_only() {
+    let src = "fn z(x: f64, n: usize) -> bool { x == 0.0 || n == 7 }\n";
+    let report = analyze_sources(&srcs(&[("linalg/dense.rs", src)]), None);
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "float-eq");
+    assert!(analyze_sources(&srcs(&[("serve/daemon.rs", src)]), None).findings.is_empty());
+}
+
+#[test]
+fn spawn_rule_flags_dropped_handles_but_not_bound_ones() {
+    let dropped = "fn go() { std::thread::spawn(|| ()); }\n";
+    let report = analyze_sources(&srcs(&[("telemetry/ingest.rs", dropped)]), None);
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "spawn-without-join");
+    let bound = "fn go() { let h = std::thread::spawn(|| ()); h.join().ok(); }\n";
+    assert!(analyze_sources(&srcs(&[("telemetry/ingest.rs", bound)]), None).findings.is_empty());
+}
+
+#[test]
+fn two_functions_taking_locks_in_opposite_orders_are_a_cycle() {
+    let src = "fn a(s: &S) { let _x = s.alpha.lock(); let _y = s.beta.lock(); }\n\
+               fn b(s: &S) { let _y = s.beta.lock(); let _x = s.alpha.lock(); }\n";
+    let report = analyze_sources(&srcs(&[("serve/state.rs", src)]), None);
+    assert_eq!(report.findings.len(), 1);
+    let d = &report.findings[0];
+    assert_eq!(d.rule, "lock-order");
+    assert!(d.message.contains("s.alpha") && d.message.contains("s.beta"), "{}", d.message);
+    // Consistent order across the same two functions is clean.
+    let src = "fn a(s: &S) { let _x = s.alpha.lock(); let _y = s.beta.lock(); }\n\
+               fn b(s: &S) { let _x = s.alpha.lock(); let _y = s.beta.lock(); }\n";
+    assert!(analyze_sources(&srcs(&[("serve/state.rs", src)]), None).findings.is_empty());
+}
+
+#[test]
+fn allow_comment_suppresses_the_next_line_finding() {
+    let src = "fn go() {\n\
+               \x20   // batopo-allow: spawn-without-join\n\
+               \x20   std::thread::spawn(|| ());\n\
+               }\n";
+    let report = analyze_sources(&srcs(&[("serve/daemon.rs", src)]), None);
+    assert!(report.findings.is_empty());
+    assert_eq!(report.suppressed, 1);
+}
+
+#[test]
+fn rule_filter_restricts_the_run_to_one_rule() {
+    let src = "fn f(v: Option<f64>) -> bool { v.unwrap() == 0.5 }\n";
+    let report = analyze_sources(&srcs(&[("optimizer/admm.rs", src)]), Some("float-eq"));
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "float-eq");
+}
+
+#[test]
+fn ratchet_fails_new_findings_and_reports_improvements() {
+    let one = analyze_sources(
+        &srcs(&[("serve/a.rs", "fn f(v: Option<u8>) -> u8 { v.unwrap() }\n")]),
+        None,
+    );
+    let base = baseline::Baseline::from_findings(&one.findings);
+    // A second panic site in the same file breaches the baseline.
+    let two = analyze_sources(
+        &srcs(&[("serve/a.rs", "fn f(v: Option<u8>) -> u8 { v.unwrap() + v.unwrap() }\n")]),
+        None,
+    );
+    let out = baseline::ratchet(&base, &two.findings);
+    assert_eq!(out.breaches.len(), 1);
+    assert_eq!((out.breaches[0].baseline, out.breaches[0].current), (1, 2));
+    // Fixing the finding is an improvement, never a failure.
+    let fixed = analyze_sources(&srcs(&[("serve/a.rs", "fn f(v: u8) -> u8 { v }\n")]), None);
+    let out = baseline::ratchet(&base, &fixed.findings);
+    assert!(out.breaches.is_empty());
+    assert_eq!(out.improvements.len(), 1);
+    assert_eq!((out.improvements[0].baseline, out.improvements[0].current), (1, 0));
+}
+
+#[test]
+fn real_tree_is_panic_free_on_serve_and_coordinator_and_matches_the_baseline() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let opts = AnalysisOptions { root: manifest.join("rust/src"), rule: None };
+    let report = analyze_root(&opts).expect("scan rust/src");
+    // The daemon and coordinator must stay free of panic paths, dropped
+    // thread handles, and lock-order cycles — the whole point of the lint.
+    let runtime_hits: Vec<String> = report
+        .findings
+        .iter()
+        .filter(|d| {
+            d.file.starts_with("serve/")
+                || d.file.starts_with("coordinator/")
+                || d.rule == "lock-order"
+        })
+        .map(ToString::to_string)
+        .collect();
+    assert!(runtime_hits.is_empty(), "runtime findings: {runtime_hits:#?}");
+    let base =
+        baseline::Baseline::load(&manifest.join("analysis/baseline.json")).expect("baseline");
+    let out = baseline::ratchet(&base, &report.findings);
+    assert!(out.breaches.is_empty(), "tree exceeds committed baseline: {:#?}", out.breaches);
+}
+
+#[test]
+fn cli_analyze_is_clean_against_the_committed_baseline() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_batopo"))
+        .current_dir(manifest)
+        .args(["analyze", "--format", "json", "--baseline", "analysis/baseline.json"])
+        .output()
+        .expect("run batopo analyze");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(out.status.success(), "analyze must pass on the committed tree: {text}");
+    assert!(text.contains("\"findings\""), "json findings array: {text}");
+    assert!(text.contains("\"ratchet\""), "ratchet summary merged into the doc: {text}");
+}
+
+#[test]
+fn cli_ratchet_breaches_fail_and_write_baseline_resets_the_gate() {
+    let dir = std::env::temp_dir().join(format!("batopo-analyze-test-{}", std::process::id()));
+    let root = dir.join("src");
+    std::fs::create_dir_all(root.join("serve")).expect("create fixture tree");
+    std::fs::write(root.join("serve/daemon.rs"), "fn f(v: Option<u8>) -> u8 { v.unwrap() }\n")
+        .expect("write fixture");
+    let empty = dir.join("empty.json");
+    std::fs::write(&empty, "{\"schema_version\": 1, \"entries\": []}\n").expect("write baseline");
+    let bin = env!("CARGO_BIN_EXE_batopo");
+    let run = |args: &[&str]| {
+        let out = std::process::Command::new(bin).args(args).output().expect("run batopo");
+        let text = format!(
+            "{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        (out.status.success(), text)
+    };
+    let root_s = root.to_str().expect("utf-8 path");
+    let empty_s = empty.to_str().expect("utf-8 path");
+
+    // A finding over an empty baseline fails the gate.
+    let (ok, text) = run(&["analyze", "--root", root_s, "--baseline", empty_s]);
+    assert!(!ok, "new finding must fail the ratchet: {text}");
+    assert!(text.contains("exceed the analysis baseline"), "{text}");
+
+    // `--write-baseline` records the current findings...
+    let written = dir.join("baseline.json");
+    let written_s = written.to_str().expect("utf-8 path");
+    let (ok, text) =
+        run(&["analyze", "--root", root_s, "--baseline", written_s, "--write-baseline"]);
+    assert!(ok, "write-baseline must succeed: {text}");
+
+    // ...after which the same tree gates clean.
+    let (ok, text) = run(&["analyze", "--root", root_s, "--baseline", written_s]);
+    assert!(ok, "refreshed baseline must gate clean: {text}");
+    assert!(text.contains("clean against baseline"), "{text}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
