@@ -3,8 +3,9 @@
 //! A zero-dependency lint pass tuned to this codebase's invariants: the
 //! long-running `serve/` daemon and `coordinator/` event loop must never
 //! panic, locks must be acquired in one global order, OS thread handles must
-//! be joined or registered for shutdown, and the numeric kernels must not
-//! compare floats exactly. Stock `fmt`/`clippy` cannot see any of these.
+//! be joined or registered for shutdown, the numeric kernels must not
+//! compare floats exactly, and the host training hot loops must not allocate.
+//! Stock `fmt`/`clippy` cannot see any of these.
 //!
 //! Pipeline: [`lexer`] turns each `.rs` file into spanned tokens (comment/
 //! string aware, so lint patterns never fire inside either), [`rules`] and
@@ -112,6 +113,9 @@ pub fn analyze_sources(sources: &[(String, String)], rule: Option<&str>) -> Anal
         }
         if enabled(rules::FLOAT_EQ) {
             rules::float_eq(&ctx, &mut raw);
+        }
+        if enabled(rules::HOT_LOOP_ALLOC) {
+            rules::hot_loop_alloc(&ctx, &mut raw);
         }
         if enabled(rules::SPAWN_WITHOUT_JOIN) {
             rules::spawn_without_join(&ctx, &mut raw);

@@ -17,9 +17,13 @@ pub const LOCK_ORDER: &str = "lock-order";
 pub const SPAWN_WITHOUT_JOIN: &str = "spawn-without-join";
 /// Rule id: exact float `==`/`!=` comparison in numeric kernels.
 pub const FLOAT_EQ: &str = "float-eq";
+/// Rule id: heap allocation (`vec!`/`Vec::new`/`.to_vec`) in the
+/// allocation-free training hot loops.
+pub const HOT_LOOP_ALLOC: &str = "hot-loop-alloc";
 
 /// All rule ids known to the analyzer, in alphabetical order.
-pub const ALL_RULES: [&str; 4] = [FLOAT_EQ, LOCK_ORDER, PANIC_IN_RUNTIME, SPAWN_WITHOUT_JOIN];
+pub const ALL_RULES: [&str; 5] =
+    [FLOAT_EQ, HOT_LOOP_ALLOC, LOCK_ORDER, PANIC_IN_RUNTIME, SPAWN_WITHOUT_JOIN];
 
 /// Module prefixes (relative to the scan root) that count as runtime paths
 /// for [`PANIC_IN_RUNTIME`]: code that must keep the daemon/coordinator/
@@ -29,6 +33,10 @@ const RUNTIME_PREFIXES: [&str; 4] = ["serve/", "coordinator/", "runtime/", "opti
 const RUNTIME_FILES: [&str; 1] = ["bandwidth/dynamic.rs"];
 /// Module prefixes where exact float comparison is lint-worthy.
 const FLOAT_PREFIXES: [&str; 2] = ["linalg/", "optimizer/"];
+/// Files whose non-test code is the allocation-free training hot path: the
+/// host model step and the gossip mixer. Setup-time allocations there carry
+/// a `// batopo-allow: hot-loop-alloc` comment with a why-sentence.
+const HOT_LOOP_FILES: [&str; 2] = ["runtime/hostmodel.rs", "runtime/mixer.rs"];
 
 fn in_runtime_scope(path: &str) -> bool {
     RUNTIME_PREFIXES.iter().any(|p| path.starts_with(p)) || RUNTIME_FILES.contains(&path)
@@ -278,6 +286,43 @@ pub fn float_eq(ctx: &FileContext, out: &mut Vec<Diagnostic>) {
     }
 }
 
+/// `hot-loop-alloc`: `vec![…]`, `Vec::new()`, and `.to_vec()` in the files
+/// that promise a steady-state allocation-free training loop (the host model
+/// step and the gossip mixer). Per-step heap traffic there is the exact cost
+/// the [`TrainWorkspace`](crate::runtime::TrainWorkspace) arena removes;
+/// legitimate setup-path allocations carry a `// batopo-allow:` comment.
+pub fn hot_loop_alloc(ctx: &FileContext, out: &mut Vec<Diagnostic>) {
+    if !HOT_LOOP_FILES.contains(&ctx.path.as_str()) {
+        return;
+    }
+    let toks = &ctx.tokens;
+    for i in 0..toks.len() {
+        if ctx.excluded[i] || toks[i].kind != TokenKind::Ident {
+            continue;
+        }
+        let prev = i.checked_sub(1).and_then(|j| toks.get(j)).map(|t| t.text.as_str());
+        let prev2 = i.checked_sub(2).and_then(|j| toks.get(j)).map(|t| t.text.as_str());
+        let next = toks.get(i + 1).map(|t| t.text.as_str());
+        let what = match toks[i].text.as_str() {
+            "vec" if next == Some("!") => "vec![…]",
+            "new" if prev == Some("::") && prev2 == Some("Vec") => "Vec::new()",
+            "to_vec" if prev == Some(".") => ".to_vec()",
+            _ => continue,
+        };
+        out.push(Diagnostic {
+            rule: HOT_LOOP_ALLOC,
+            file: ctx.path.clone(),
+            line: toks[i].line,
+            col: toks[i].col,
+            severity: Severity::Warn,
+            message: format!(
+                "`{what}` allocates in an allocation-free training hot loop; use the \
+                 workspace arena (or mark a setup path with `// batopo-allow:`)"
+            ),
+        });
+    }
+}
+
 fn is_let_underscore(toks: &[Token], eq_idx: usize) -> bool {
     eq_idx >= 2 && toks[eq_idx - 1].text == "_" && toks[eq_idx - 2].text == "let"
 }
@@ -441,6 +486,34 @@ mod tests {
         assert!(run(spawn_without_join, "x.rs", pushed).is_empty());
         let scoped = "fn f() { std::thread::scope(|s| { s.spawn(|| work()); }); }";
         assert!(run(spawn_without_join, "x.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn hot_loop_alloc_fires_on_hot_files_only() {
+        let src = "fn f(d: usize, xs: &[f32]) -> Vec<f32> {\n\
+                       let a = vec![0.0f32; d];\n\
+                       let mut b: Vec<f32> = Vec::new();\n\
+                       b.extend_from_slice(&a);\n\
+                       let c = xs.to_vec();\n\
+                       c\n\
+                   }";
+        let found = run(hot_loop_alloc, "runtime/hostmodel.rs", src);
+        assert_eq!(found.len(), 3);
+        assert!(found.iter().all(|d| d.rule == HOT_LOOP_ALLOC));
+        assert_eq!(run(hot_loop_alloc, "runtime/mixer.rs", src).len(), 3);
+        // Other runtime files (and everything else) are out of scope.
+        assert!(run(hot_loop_alloc, "runtime/trainer.rs", src).is_empty());
+        assert!(run(hot_loop_alloc, "linalg/dense.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_loop_alloc_skips_test_code_and_non_vec_news() {
+        let src = "fn f() -> String { String::new() }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() -> Vec<u8> { vec![1, 2, 3] }\n\
+                   }\n";
+        assert!(run(hot_loop_alloc, "runtime/hostmodel.rs", src).is_empty());
     }
 
     #[test]

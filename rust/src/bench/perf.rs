@@ -21,9 +21,11 @@
 //!   dense eigendecomposition path cannot run and the assembled-KKT ILU
 //!   path would hit the memory wall,
 //! - `train` — end-to-end DSGD steps/second: always benches the host-native
-//!   backend (`host_train_step`, `dsgd_round_host` — the `BENCH_baseline.json`
-//!   entries the CI gate compares), plus the PJRT round when artifacts are
-//!   available (`dsgd_round`),
+//!   backend (`host_train_step` with a fresh workspace arena per call — the
+//!   pre-arena allocate-everything semantics, `host_train_step_ws` with one
+//!   reused arena — the steady-state DSGD loop, and `dsgd_round_host`; all
+//!   three are `BENCH_baseline.json` entries the CI gate compares), plus the
+//!   PJRT round when artifacts are available (`dsgd_round`),
 //! - `serve` — the online service: one full in-process `serve-sim` cycle
 //!   (`serve_reopt_publish` — daemon spawn, 2 subscribers, a streamed quick
 //!   degrade scenario with every re-optimization drained, clean shutdown).
@@ -559,16 +561,22 @@ fn bench_dsgd_round(
     let tokens: Vec<i32> = (0..b * s).map(|_| rng.index(runner.vocab()) as i32).collect();
     let targets: Vec<i32> = (0..b).map(|_| rng.index(runner.classes()) as i32).collect();
 
+    let mut ws = runner.make_workspace();
+    let num_flat = runner.config().num_params;
+    let mut flats: Vec<Vec<f32>> = (0..n).map(|_| Vec::with_capacity(num_flat)).collect();
+    let mut mixed: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; num_flat]).collect();
     let mut samples = Vec::with_capacity(rounds);
     for _ in 0..rounds {
         let t0 = std::time::Instant::now();
         for node in 0..n {
             runner
-                .train_step(&mut params[node], &mut momenta[node], &tokens, &targets)
+                .train_step(&mut params[node], &mut momenta[node], &tokens, &targets, &mut ws)
                 .unwrap();
         }
-        let flats: Vec<Vec<f32>> = params.iter().map(|p| runner.flatten(p)).collect();
-        let mixed = mixer.mix(&flats).unwrap();
+        for (node, p) in params.iter().enumerate() {
+            runner.flatten_into(p, &mut flats[node]);
+        }
+        mixer.mix_into(&flats, &mut mixed).unwrap();
         for (node, flat) in mixed.iter().enumerate() {
             runner.unflatten_into(flat, &mut params[node]);
         }
@@ -608,12 +616,24 @@ pub fn perf_train(opts: &PerfOptions) -> Vec<BenchRecord> {
         (0..b * runner.seq()).map(|_| rng.index(runner.vocab()) as i32).collect();
     let targets: Vec<i32> = (0..b).map(|_| rng.index(runner.classes()) as i32).collect();
     let step_iters = if opts.quick { 3 } else { 8 };
+    // Fresh arena per call = the pre-workspace allocate-everything semantics
+    // (the historical `host_train_step` cell, kept comparable across the
+    // refactor)...
     let s = super::time_fn("host train step (tiny, B=16)", 1, step_iters, || {
+        let mut ws = crate::runtime::TrainWorkspace::new();
         std::hint::black_box(
-            hm.train_step(&mut params, &mut momenta, &tokens, &targets).unwrap(),
+            hm.train_step(&mut params, &mut momenta, &tokens, &targets, &mut ws).unwrap(),
         );
     });
     out.push(record(&s, "host_train_step", n, &rev));
+    // ...vs one warm arena reused across calls = the steady-state DSGD loop.
+    let mut ws = runner.make_workspace();
+    let s = super::time_fn("host train step, warm workspace", 1, step_iters, || {
+        std::hint::black_box(
+            hm.train_step(&mut params, &mut momenta, &tokens, &targets, &mut ws).unwrap(),
+        );
+    });
+    out.push(record(&s, "host_train_step_ws", n, &rev));
     let mixer = Mixer::for_backend(&host, &topo, MixVariant::HostFallback).unwrap();
     out.push(bench_dsgd_round(
         &runner,

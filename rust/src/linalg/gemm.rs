@@ -1,0 +1,328 @@
+//! Cache-blocked `f32` GEMM kernels for the host-native training backend.
+//!
+//! Three transpose variants cover every matmul the transformer forward and
+//! backward passes need (`runtime/hostmodel.rs`):
+//!
+//! - [`gemm`] — `out[m×n] += a[m×k] @ b[k×n]` (activations forward),
+//! - [`gemm_bt`] — `out[m×k] += a[m×n] @ bᵀ` for `b[k×n]` (input gradients),
+//! - [`gemm_at`] — `dw[k×n] += aᵀ @ dy` (weight gradients).
+//!
+//! The kernels block over K panels with a stack-packed B tile ([`gemm`]) and
+//! process rows in blocks of [`MR`] so one pass over the streamed operand
+//! feeds several independent accumulator chains — shapes the compiler
+//! auto-vectorizes, with no unsafe and no allocation.
+//!
+//! **Bit-compatibility contract.** Every variant performs, per output
+//! element, the *exact* floating-point additions of the naive triple loop in
+//! the same order: [`gemm`]/[`gemm_at`] add each `a·b` term directly into the
+//! output in increasing reduction-index order, and [`gemm_bt`] runs one
+//! sequential dot-product accumulator before a single `+=`. Blocking only
+//! reorders *independent* output elements, so results are bitwise identical
+//! to the reference loops — locked by this module's `assert_eq!` parity
+//! tests, which is what lets the host training backend swap kernels without
+//! perturbing the fixed-seed golden values or the gradcheck.
+
+/// K-panel depth: `KC` rows of B are packed per tile.
+const KC: usize = 64;
+/// N-panel width of the packed B tile.
+const NC: usize = 128;
+/// Row-block height: output rows processed per micro-kernel pass.
+const MR: usize = 4;
+
+/// Split off `MR` consecutive rows of `buf` (row-major, `stride` wide)
+/// starting at `row`, as disjoint mutable slices.
+fn four_rows_mut(
+    buf: &mut [f32],
+    row: usize,
+    stride: usize,
+) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+    let (r0, rest) = buf[row * stride..].split_at_mut(stride);
+    let (r1, rest) = rest.split_at_mut(stride);
+    let (r2, rest) = rest.split_at_mut(stride);
+    let (r3, _) = rest.split_at_mut(stride);
+    (r0, r1, r2, r3)
+}
+
+/// `out[m×n] += a[m×k] @ b[k×n]`, row-major.
+///
+/// Blocked over `KC×NC` panels of `b`, each packed into a stack tile so the
+/// micro-kernel streams contiguous memory; `MR` output rows share every
+/// packed panel pass. Bitwise identical to the naive saxpy loop (each output
+/// element accumulates its `k` terms in increasing order, directly in place).
+pub fn gemm(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let mut pack = [0.0f32; KC * NC];
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        let mut n0 = 0;
+        while n0 < n {
+            let nc = NC.min(n - n0);
+            for kk in 0..kc {
+                let src = &b[(k0 + kk) * n + n0..(k0 + kk) * n + n0 + nc];
+                pack[kk * nc..kk * nc + nc].copy_from_slice(src);
+            }
+            let mut i0 = 0;
+            while i0 + MR <= m {
+                let (r0, r1, r2, r3) = four_rows_mut(out, i0, n);
+                let (o0, o1, o2, o3) = (
+                    &mut r0[n0..n0 + nc],
+                    &mut r1[n0..n0 + nc],
+                    &mut r2[n0..n0 + nc],
+                    &mut r3[n0..n0 + nc],
+                );
+                for kk in 0..kc {
+                    let a0 = a[i0 * k + k0 + kk];
+                    let a1 = a[(i0 + 1) * k + k0 + kk];
+                    let a2 = a[(i0 + 2) * k + k0 + kk];
+                    let a3 = a[(i0 + 3) * k + k0 + kk];
+                    let brow = &pack[kk * nc..kk * nc + nc];
+                    for (j, &bv) in brow.iter().enumerate() {
+                        o0[j] += a0 * bv;
+                        o1[j] += a1 * bv;
+                        o2[j] += a2 * bv;
+                        o3[j] += a3 * bv;
+                    }
+                }
+                i0 += MR;
+            }
+            for i in i0..m {
+                let orow = &mut out[i * n + n0..i * n + n0 + nc];
+                for kk in 0..kc {
+                    let aik = a[i * k + k0 + kk];
+                    let brow = &pack[kk * nc..kk * nc + nc];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+            n0 += nc;
+        }
+        k0 += kc;
+    }
+}
+
+/// `out[m×k] += a[m×n] @ bᵀ` for `b[k×n]`, row-major.
+///
+/// Each output element is one dot product of two contiguous rows; `MR` rows
+/// of `a` are processed together so every streamed row of `b` feeds four
+/// independent accumulator chains. Each chain runs over `j` sequentially —
+/// the exact addition order of the naive row-dot loop.
+pub fn gemm_bt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    let mut i0 = 0;
+    while i0 + MR <= m {
+        let (a0, a1, a2, a3) = (
+            &a[i0 * n..(i0 + 1) * n],
+            &a[(i0 + 1) * n..(i0 + 2) * n],
+            &a[(i0 + 2) * n..(i0 + 3) * n],
+            &a[(i0 + 3) * n..(i0 + 4) * n],
+        );
+        let (r0, r1, r2, r3) = four_rows_mut(out, i0, k);
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut c0 = 0.0f32;
+            let mut c1 = 0.0f32;
+            let mut c2 = 0.0f32;
+            let mut c3 = 0.0f32;
+            for (j, &bv) in brow.iter().enumerate() {
+                c0 += a0[j] * bv;
+                c1 += a1[j] * bv;
+                c2 += a2[j] * bv;
+                c3 += a3[j] * bv;
+            }
+            r0[kk] += c0;
+            r1[kk] += c1;
+            r2[kk] += c2;
+            r3[kk] += c3;
+        }
+        i0 += MR;
+    }
+    for i in i0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (kk, o) in orow.iter_mut().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o += acc;
+        }
+    }
+}
+
+/// `dw[k×n] += aᵀ @ dy` for `a[m×k]`, `dy[m×n]` (weight-gradient shape),
+/// row-major.
+///
+/// `MR` rows of `a`/`dy` are reduced per pass so each `dw` row is loaded and
+/// stored once per block instead of once per sample; the four per-element
+/// additions stay sequential in increasing `i` order, matching the naive
+/// scatter loop bitwise.
+pub fn gemm_at(dw: &mut [f32], a: &[f32], dy: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(dw.len(), k * n);
+    let mut i0 = 0;
+    while i0 + MR <= m {
+        let (d0, d1, d2, d3) = (
+            &dy[i0 * n..(i0 + 1) * n],
+            &dy[(i0 + 1) * n..(i0 + 2) * n],
+            &dy[(i0 + 2) * n..(i0 + 3) * n],
+            &dy[(i0 + 3) * n..(i0 + 4) * n],
+        );
+        for kk in 0..k {
+            let x0 = a[i0 * k + kk];
+            let x1 = a[(i0 + 1) * k + kk];
+            let x2 = a[(i0 + 2) * k + kk];
+            let x3 = a[(i0 + 3) * k + kk];
+            let wrow = &mut dw[kk * n..(kk + 1) * n];
+            for (j, w) in wrow.iter_mut().enumerate() {
+                let mut acc = *w;
+                acc += x0 * d0[j];
+                acc += x1 * d1[j];
+                acc += x2 * d2[j];
+                acc += x3 * d3[j];
+                *w = acc;
+            }
+        }
+        i0 += MR;
+    }
+    for i in i0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &aik) in arow.iter().enumerate() {
+            let wrow = &mut dw[kk * n..(kk + 1) * n];
+            for (w, &dv) in wrow.iter_mut().zip(dyrow) {
+                *w += aik * dv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn fill(rng: &mut Xoshiro256pp, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (rng.next_gaussian() * 0.7) as f32).collect()
+    }
+
+    /// The naive loops the blocked kernels must reproduce bitwise — copied
+    /// from the pre-refactor `hostmodel.rs` matmul_*_acc functions.
+    fn naive_gemm(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                for j in 0..n {
+                    out[i * n + j] += aik * b[kk * n + j];
+                }
+            }
+        }
+    }
+
+    fn naive_gemm_bt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+        for i in 0..m {
+            for kk in 0..k {
+                let mut acc = 0.0f32;
+                for j in 0..n {
+                    acc += a[i * n + j] * b[kk * n + j];
+                }
+                out[i * k + kk] += acc;
+            }
+        }
+    }
+
+    fn naive_gemm_at(dw: &mut [f32], a: &[f32], dy: &[f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                for j in 0..n {
+                    dw[kk * n + j] += aik * dy[i * n + j];
+                }
+            }
+        }
+    }
+
+    /// Shapes straddling every block boundary: below MR, below/at/above KC
+    /// and NC, plus ragged remainders in each dimension.
+    const SHAPES: [(usize, usize, usize); 10] = [
+        (1, 1, 1),
+        (2, 5, 3),
+        (3, 8, 12),
+        (4, 4, 4),
+        (5, 7, 9),
+        (6, 64, 128),
+        (7, 65, 129),
+        (9, 63, 130),
+        (10, 130, 5),
+        (13, 12, 260),
+    ];
+
+    #[test]
+    fn gemm_is_bitwise_identical_to_the_naive_loop() {
+        let mut rng = Xoshiro256pp::seed_from_u64(101);
+        for &(m, k, n) in &SHAPES {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            // Accumulate into a nonzero output: the kernels are `+=` kernels.
+            let seed = fill(&mut rng, m * n);
+            let mut want = seed.clone();
+            let mut got = seed;
+            naive_gemm(&mut want, &a, &b, m, k, n);
+            gemm(&mut got, &a, &b, m, k, n);
+            assert_eq!(want, got, "gemm mismatch at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_bt_is_bitwise_identical_to_the_naive_loop() {
+        let mut rng = Xoshiro256pp::seed_from_u64(102);
+        for &(m, n, k) in &SHAPES {
+            let a = fill(&mut rng, m * n);
+            let b = fill(&mut rng, k * n);
+            let seed = fill(&mut rng, m * k);
+            let mut want = seed.clone();
+            let mut got = seed;
+            naive_gemm_bt(&mut want, &a, &b, m, n, k);
+            gemm_bt(&mut got, &a, &b, m, n, k);
+            assert_eq!(want, got, "gemm_bt mismatch at ({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn gemm_at_is_bitwise_identical_to_the_naive_loop() {
+        let mut rng = Xoshiro256pp::seed_from_u64(103);
+        for &(m, k, n) in &SHAPES {
+            let a = fill(&mut rng, m * k);
+            let dy = fill(&mut rng, m * n);
+            let seed = fill(&mut rng, k * n);
+            let mut want = seed.clone();
+            let mut got = seed;
+            naive_gemm_at(&mut want, &a, &dy, m, k, n);
+            gemm_at(&mut got, &a, &dy, m, k, n);
+            assert_eq!(want, got, "gemm_at mismatch at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn repeated_accumulation_composes() {
+        // out += A@B twice equals the naive loop run twice — reuse safety.
+        let mut rng = Xoshiro256pp::seed_from_u64(104);
+        let (m, k, n) = (5, 66, 131);
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let mut want = vec![0.0f32; m * n];
+        let mut got = vec![0.0f32; m * n];
+        for _ in 0..2 {
+            naive_gemm(&mut want, &a, &b, m, k, n);
+            gemm(&mut got, &a, &b, m, k, n);
+        }
+        assert_eq!(want, got);
+    }
+}

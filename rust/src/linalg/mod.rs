@@ -3,7 +3,8 @@
 //! Krylov solvers and a deflated Lanczos eigensolver — the toolbox the
 //! paper's §V-C prescribes for solving the ADMM systems at scale,
 //! generalized over the [`LinearOperator`] trait so dense, sparse and
-//! matrix-free operators share one solver stack.
+//! matrix-free operators share one solver stack — plus the cache-blocked
+//! `f32` [`gemm`] kernels behind the host-native training backend.
 
 pub mod bicgstab;
 pub mod cg;
@@ -11,6 +12,7 @@ pub mod csc;
 pub mod csr;
 pub mod dense;
 pub mod eigen;
+pub mod gemm;
 pub mod ilu;
 pub mod lanczos;
 pub mod operator;
@@ -21,6 +23,7 @@ pub use csc::CscMatrix;
 pub use csr::CsrMatrix;
 pub use dense::DenseMatrix;
 pub use eigen::SymEigen;
+pub use gemm::{gemm, gemm_at, gemm_bt};
 pub use ilu::Ilu0;
 pub use lanczos::{lanczos_extremal, LanczosOptions, LanczosResult};
 pub use operator::{

@@ -7,7 +7,7 @@
 //! batopo consensus --topology ring|...|<topo.json> --n 16 [--scenario …]
 //! batopo allocate  --bw 9.76,9.76,3.25,3.25 --r 4
 //! batopo train     --topology torus --n 16 --model tiny --epochs 10
-//!                  [--backend auto|host|pjrt]
+//!                  [--backend auto|host|pjrt] [--profile] [--json report.json]
 //! batopo reproduce fig1 table1 [--quick] [--out results/] [--threads 8]
 //! batopo bench     mixing|solver|admm|scale|train|all [--quick] [--threads 8]
 //!                  [--json out/BENCH_pr.json] [--out out/]
@@ -23,7 +23,7 @@
 //! batopo serve-sim [--clients 2] [--scenario degrade] [--n 8] [--quick]
 //!                  [--connect HOST:PORT] [--no-shutdown]
 //! batopo analyze   [--format text|json] [--baseline analysis/baseline.json]
-//!                  [--rule float-eq|lock-order|panic-in-runtime|spawn-without-join]
+//!                  [--rule float-eq|hot-loop-alloc|lock-order|panic-in-runtime|spawn-without-join]
 //!                  [--root rust/src] [--out out/analysis.json] [--write-baseline]
 //! batopo info
 //! ```
@@ -74,7 +74,7 @@ fn main() {
                  allocate  --bw b1,b2,... --r R [--caps c1,c2,...]\n\
                  train     --topology NAME|file.json --n N [--scenario S] [--model tiny]\n\
                  \u{20}          [--epochs E] [--target 0.75] [--backend auto|host|pjrt]\n\
-                 \u{20}          [--threads T]\n\
+                 \u{20}          [--threads T] [--profile] [--json FILE]\n\
                  reproduce <fig1|fig2|fig4|fig6|fig7..fig10|table1|table2|dynamic|all>...\n\
                  \u{20}          [--quick] [--out results/] [--seed X] [--threads T]\n\
                  bench     <mixing|solver|admm|scale|train|all>...\n\
@@ -284,6 +284,70 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     }
     if let Some(t) = out.time_to_target {
         println!("  target reached at simulated {t:.2} s");
+    }
+    if args.flag("profile") {
+        // Forward/backward/optimizer/eval are CPU-seconds summed across the
+        // per-thread workspace arenas; mix is driver wall time, so the phases
+        // do not sum to the run's wall time when --threads > 1.
+        let p = &out.profile;
+        println!("  phase breakdown (worker CPU-seconds; mix is driver wall time):");
+        println!("  {:>10} {:>10.3} s", "forward", p.forward_s);
+        println!("  {:>10} {:>10.3} s", "backward", p.backward_s);
+        println!("  {:>10} {:>10.3} s", "optimizer", p.optimizer_s);
+        println!("  {:>10} {:>10.3} s", "mix", p.mix_s);
+        println!("  {:>10} {:>10.3} s", "eval", p.eval_s);
+        println!("  {:>10} {:>10.3} s", "total", p.total_s());
+    }
+    if let Some(json_path) = args.get("json") {
+        // Machine-readable train report, mirroring the optimize --json flow:
+        // the per-epoch curve plus the phase profile for offline comparison.
+        let p = &out.profile;
+        let epochs: Vec<Json> = out
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("epoch", Json::Num(r.epoch as f64)),
+                    ("sim_time_s", Json::Num(r.sim_time)),
+                    ("train_loss", Json::Num(r.train_loss)),
+                    ("eval_loss", Json::Num(r.eval_loss)),
+                    ("eval_acc", Json::Num(r.eval_acc)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("topology", Json::Str(out.topology.clone())),
+            ("backend", Json::Str(backend.name().to_string())),
+            ("iters_per_epoch", Json::Num(out.iters_per_epoch as f64)),
+            ("iter_time_s", Json::Num(out.iter_time)),
+            (
+                "time_to_target_s",
+                match out.time_to_target {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
+            ("final_accuracy", Json::Num(out.final_accuracy)),
+            ("epochs", Json::Arr(epochs)),
+            (
+                "profile",
+                Json::obj(vec![
+                    ("forward_s", Json::Num(p.forward_s)),
+                    ("backward_s", Json::Num(p.backward_s)),
+                    ("optimizer_s", Json::Num(p.optimizer_s)),
+                    ("mix_s", Json::Num(p.mix_s)),
+                    ("eval_s", Json::Num(p.eval_s)),
+                    ("total_s", Json::Num(p.total_s())),
+                ]),
+            ),
+        ]);
+        if let Some(dir) = Path::new(json_path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            }
+        }
+        std::fs::write(json_path, format!("{doc}\n")).map_err(|e| e.to_string())?;
+        println!("  report json → {json_path}");
     }
     Ok(())
 }

@@ -77,6 +77,8 @@ impl<'e> Mixer<'e> {
                 (np, dc, format!("mix_{}_n{np}_d{dc}", v.tag()))
             }
         };
+        // Setup path: the padded W is staged exactly once per mixer.
+        // batopo-allow: hot-loop-alloc
         let mut w_pad = vec![0.0f32; n_pad * n_pad];
         for i in 0..n {
             for j in 0..n {
@@ -137,22 +139,42 @@ impl<'e> Mixer<'e> {
     }
 
     /// Mix the stacked state: `x` has one row per node (`n` rows), row width
-    /// `d` arbitrary. Returns the mixed rows.
+    /// `d` arbitrary. Returns freshly allocated mixed rows — the gossip loop
+    /// should prefer [`Self::mix_into`], which reuses the caller's buffers.
     pub fn mix(&self, x: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, RuntimeError> {
         assert_eq!(x.len(), self.n, "row count != node count");
         let d = x[0].len();
+        // Convenience wrapper: allocates one output state, then delegates.
+        // batopo-allow: hot-loop-alloc
+        let mut out = vec![vec![0.0f32; d]; self.n];
+        self.mix_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::mix`] into caller-owned output rows (each overwritten in
+    /// full), so a reused `(flats, mixed)` buffer pair makes the per-round
+    /// gossip step allocation-free on the host path. `out` must have the
+    /// same shape as `x`; any prior contents are ignored.
+    pub fn mix_into(&self, x: &[Vec<f32>], out: &mut [Vec<f32>]) -> Result<(), RuntimeError> {
+        assert_eq!(x.len(), self.n, "row count != node count");
+        let d = x[0].len();
         assert!(x.iter().all(|r| r.len() == d), "ragged rows");
+        assert_eq!(out.len(), self.n, "output row count != node count");
+        assert!(out.iter().all(|r| r.len() == d), "output shape != input shape");
         match self.variant {
-            MixVariant::HostFallback => Ok(self.mix_host(x, d)),
-            _ => self.mix_pjrt(x, d),
+            MixVariant::HostFallback => {
+                self.mix_host_into(x, out);
+                Ok(())
+            }
+            _ => self.mix_pjrt_into(x, d, out),
         }
     }
 
-    fn mix_host(&self, x: &[Vec<f32>], d: usize) -> Vec<Vec<f32>> {
+    fn mix_host_into(&self, x: &[Vec<f32>], out: &mut [Vec<f32>]) {
         let n = self.n;
-        let mut out = vec![vec![0.0f32; d]; n];
         for i in 0..n {
             let oi = &mut out[i];
+            oi.fill(0.0);
             for k in 0..n {
                 let w = self.w_dense[(i, k)] as f32;
                 if w == 0.0 {
@@ -164,20 +186,24 @@ impl<'e> Mixer<'e> {
                 }
             }
         }
-        out
     }
 
-    fn mix_pjrt(&self, x: &[Vec<f32>], d: usize) -> Result<Vec<Vec<f32>>, RuntimeError> {
+    fn mix_pjrt_into(
+        &self,
+        x: &[Vec<f32>],
+        d: usize,
+        out: &mut [Vec<f32>],
+    ) -> Result<(), RuntimeError> {
         let eng = self.engine.ok_or(RuntimeError::ArtifactsMissing)?;
         let exe = eng.executable(&self.artifact)?;
         let w_lit = self.w_literal.as_ref().expect("pjrt mixer has W literal");
-        let n = self.n;
         let np = self.n_pad;
         let dc = self.d_chunk;
         let chunks = d.div_ceil(dc);
-        let mut out = vec![vec![0.0f32; d]; n];
         // Stage one padded (np × dc) tile per chunk; zero-fill tails. The W
         // literal is pre-built once; only the X tile is uploaded per chunk.
+        // (The tile staging + literal download below are the baselined
+        // hot-loop-alloc debt: the PJRT boundary forces owned buffers.)
         let mut tile = vec![0.0f32; np * dc];
         for c in 0..chunks {
             let lo = c * dc;
@@ -198,7 +224,7 @@ impl<'e> Mixer<'e> {
                 row[lo..hi].copy_from_slice(&mixed[i * dc..i * dc + w_c]);
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -282,6 +308,23 @@ mod tests {
         let x = state(8, 5, 3);
         let host = Mixer::new(None, &topo, MixVariant::HostFallback).unwrap();
         assert_eq!(mixer.mix(&x).unwrap(), host.mix(&x).unwrap());
+    }
+
+    #[test]
+    fn mix_into_matches_mix_and_reuses_dirty_buffers() {
+        // The allocation-free gossip path must be output-equal to the
+        // allocating wrapper, including when its output buffers carry stale
+        // values from a previous round.
+        let topo = baselines::torus2d(16);
+        let mixer = Mixer::new(None, &topo, MixVariant::HostFallback).unwrap();
+        let x = state(16, 21, 19);
+        let want = mixer.mix(&x).unwrap();
+        let mut out = vec![vec![7.5f32; 21]; 16];
+        mixer.mix_into(&x, &mut out).unwrap();
+        assert_eq!(out, want);
+        // Second pass into the now-dirty buffers: bitwise identical again.
+        mixer.mix_into(&x, &mut out).unwrap();
+        assert_eq!(out, want);
     }
 
     #[test]

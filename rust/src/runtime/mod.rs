@@ -19,7 +19,10 @@
 //! - [`mixer`] — the gossip-mixing executor (padded `W @ X` chunks over the
 //!   L1 Pallas kernel or the XLA-native variant) with a pure-Rust fallback,
 //! - [`trainer`] — the backend-agnostic DSGD local train/eval step executor
-//!   and the manifest-driven parameter initializer.
+//!   and the manifest-driven parameter initializer,
+//! - [`workspace`] — the per-worker [`workspace::TrainWorkspace`] arena that
+//!   makes the steady-state host training loop allocation-free (plus the
+//!   [`workspace::PhaseProfile`] phase timings behind `train --profile`).
 
 pub mod backend;
 pub mod engine;
@@ -27,6 +30,7 @@ pub mod hostmodel;
 pub mod manifest;
 pub mod mixer;
 pub mod trainer;
+pub mod workspace;
 pub mod xla_stub;
 
 // The offline crate set has no `xla` dependency; the in-tree stub mirrors its
@@ -39,6 +43,7 @@ pub use hostmodel::HostModel;
 pub use manifest::Manifest;
 pub use mixer::{MixVariant, Mixer};
 pub use trainer::ModelRunner;
+pub use workspace::{PhaseProfile, TrainWorkspace};
 
 use std::path::PathBuf;
 

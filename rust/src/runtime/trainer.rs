@@ -9,6 +9,7 @@ use super::backend::ExecBackend;
 use super::engine::HostTensor;
 use super::hostmodel::HostModel;
 use super::manifest::ModelConfig;
+use super::workspace::TrainWorkspace;
 use super::RuntimeError;
 use crate::util::rng::Xoshiro256pp;
 
@@ -138,6 +139,14 @@ impl<'e> ModelRunner<'e> {
             .collect()
     }
 
+    /// A scratch arena for [`Self::train_step`]/[`Self::eval`]. One per
+    /// calling thread; the host backend reuses it across steps so the
+    /// steady-state loop is allocation-free. The PJRT backend executes a
+    /// fused artifact and leaves the arena untouched.
+    pub fn make_workspace(&self) -> TrainWorkspace {
+        TrainWorkspace::new()
+    }
+
     /// One DSGD local step: fwd + bwd + fused momentum-SGD. Updates `params`
     /// and `momenta` in place, returns the batch loss.
     pub fn train_step(
@@ -146,9 +155,10 @@ impl<'e> ModelRunner<'e> {
         momenta: &mut [Vec<f32>],
         tokens: &[i32],
         targets: &[i32],
+        ws: &mut TrainWorkspace,
     ) -> Result<f64, RuntimeError> {
         if let Some(host) = &self.host {
-            return host.train_step(params, momenta, tokens, targets);
+            return host.train_step(params, momenta, tokens, targets, ws);
         }
         let engine = self.backend.engine().ok_or(RuntimeError::ArtifactsMissing)?;
         let n_p = self.cfg.params.len();
@@ -176,9 +186,10 @@ impl<'e> ModelRunner<'e> {
         params: &[Vec<f32>],
         tokens: &[i32],
         targets: &[i32],
+        ws: &mut TrainWorkspace,
     ) -> Result<(f64, f64), RuntimeError> {
         if let Some(host) = &self.host {
-            return host.eval(params, tokens, targets);
+            return host.eval(params, tokens, targets, ws);
         }
         let engine = self.backend.engine().ok_or(RuntimeError::ArtifactsMissing)?;
         let mut inputs: Vec<HostTensor> = Vec::with_capacity(params.len() + 2);
@@ -194,10 +205,17 @@ impl<'e> ModelRunner<'e> {
     pub fn flatten(&self, params: &[Vec<f32>]) -> Vec<f32> {
         let total: usize = params.iter().map(|p| p.len()).sum();
         let mut flat = Vec::with_capacity(total);
+        self.flatten_into(params, &mut flat);
+        flat
+    }
+
+    /// [`Self::flatten`] into a reused buffer (cleared first) — after the
+    /// first round its capacity is warm and the copy allocates nothing.
+    pub fn flatten_into(&self, params: &[Vec<f32>], flat: &mut Vec<f32>) {
+        flat.clear();
         for p in params {
             flat.extend_from_slice(p);
         }
-        flat
     }
 
     /// Scatter a flat vector back into parameter tensors.
@@ -274,11 +292,12 @@ mod tests {
         let mut params = runner.init_params(3);
         let mut momenta = runner.zero_momenta();
         let (tokens, targets) = batch(&runner, 5);
+        let mut ws = runner.make_workspace();
         let mut first = None;
         let mut last = f64::INFINITY;
         for _ in 0..30 {
             last = runner
-                .train_step(&mut params, &mut momenta, &tokens, &targets)
+                .train_step(&mut params, &mut momenta, &tokens, &targets, &mut ws)
                 .unwrap();
             first.get_or_insert(last);
         }
@@ -287,6 +306,8 @@ mod tests {
             last < first * 0.6,
             "loss did not drop enough: {first} -> {last}"
         );
+        // The whole loop ran through the arena's phase timers.
+        assert!(ws.profile().forward_s > 0.0 && ws.profile().backward_s > 0.0);
     }
 
     #[test]
@@ -295,7 +316,8 @@ mod tests {
         let runner = ModelRunner::new(&backend, "tiny", "native").unwrap();
         let params = runner.init_params(11);
         let (tokens, targets) = batch(&runner, 13);
-        let (loss, acc) = runner.eval(&params, &tokens, &targets).unwrap();
+        let mut ws = runner.make_workspace();
+        let (loss, acc) = runner.eval(&params, &tokens, &targets, &mut ws).unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert!((0.0..=1.0).contains(&acc));
         // flatten/unflatten roundtrip
@@ -304,6 +326,10 @@ mod tests {
         let mut back = runner.zero_momenta();
         runner.unflatten_into(&flat, &mut back);
         assert_eq!(back, params);
+        // flatten_into reuses a dirty buffer and matches flatten exactly.
+        let mut reused = vec![9.0f32; 7];
+        runner.flatten_into(&params, &mut reused);
+        assert_eq!(reused, flat);
     }
 
     #[test]
@@ -321,11 +347,12 @@ mod tests {
         let mut params = runner.init_params(3);
         let mut momenta = runner.zero_momenta();
         let (tokens, targets) = batch(&runner, 5);
+        let mut ws = runner.make_workspace();
         let mut first = None;
         let mut last = f64::INFINITY;
         for _ in 0..30 {
             last = runner
-                .train_step(&mut params, &mut momenta, &tokens, &targets)
+                .train_step(&mut params, &mut momenta, &tokens, &targets, &mut ws)
                 .unwrap();
             first.get_or_insert(last);
         }

@@ -1,0 +1,338 @@
+//! Per-worker training workspace: one arena owning every intermediate buffer
+//! the host-native backend touches, so the steady-state train/eval loop
+//! performs **zero heap allocations** after warm-up.
+//!
+//! [`TrainWorkspace`] is keyed by `(model dims, batch size)`: the first call
+//! with a given key sizes every buffer (forward activation cache, backward
+//! scratch, gradient tensors), and every later call with the same key reuses
+//! them untouched — [`TrainWorkspace::ensure`] is a comparison and an early
+//! return. Ownership rules:
+//!
+//! - the **caller** owns the workspace and lends it mutably per step
+//!   (`HostModel::{train_step, eval, loss_and_grads}` all take
+//!   `&mut TrainWorkspace`); nothing inside retains state a later step reads,
+//!   so results are bitwise independent of workspace history,
+//! - the DSGD fan-out keeps **one workspace per worker thread**
+//!   (`parallel_map_with`), which preserves the bit-identical-for-any-
+//!   thread-count guarantee: each node step only sees its own arena,
+//! - a workspace is rebuilt only when the model dims or the batch size
+//!   change; switching a workspace between configs is allowed and costs one
+//!   re-allocation sweep.
+//!
+//! The arena also carries the per-phase [`PhaseProfile`] accumulated by the
+//! timed sections of the host backend (`batopo train --profile`).
+
+/// Wall-clock seconds spent per training phase, accumulated across every
+/// step run through one workspace (summed across workers by the DSGD
+/// driver). `mix_s` is filled by the round loop, not the model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseProfile {
+    /// Forward passes of `train_step`/`loss_and_grads`.
+    pub forward_s: f64,
+    /// Backward passes.
+    pub backward_s: f64,
+    /// Fused momentum-SGD parameter updates.
+    pub optimizer_s: f64,
+    /// Gossip mixing (`Mixer::mix_into`), timed by the round loop.
+    pub mix_s: f64,
+    /// Eval passes (forward + metrics).
+    pub eval_s: f64,
+}
+
+impl PhaseProfile {
+    /// Accumulate another profile into this one (summing workers).
+    pub fn merge(&mut self, other: &PhaseProfile) {
+        self.forward_s += other.forward_s;
+        self.backward_s += other.backward_s;
+        self.optimizer_s += other.optimizer_s;
+        self.mix_s += other.mix_s;
+        self.eval_s += other.eval_s;
+    }
+
+    /// Total profiled seconds across all phases.
+    pub fn total_s(&self) -> f64 {
+        self.forward_s + self.backward_s + self.optimizer_s + self.mix_s + self.eval_s
+    }
+}
+
+/// The host model's shape key: every buffer size is a function of these
+/// (plus the batch size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Dims {
+    /// Vocabulary size.
+    pub(crate) v: usize,
+    /// Model width `d_model`.
+    pub(crate) d: usize,
+    /// Attention heads.
+    pub(crate) h: usize,
+    /// Transformer blocks.
+    pub(crate) l: usize,
+    /// MLP hidden width `d_ff`.
+    pub(crate) f: usize,
+    /// Sequence length.
+    pub(crate) s: usize,
+    /// Label classes.
+    pub(crate) c: usize,
+}
+
+impl Dims {
+    /// Number of parameter tensors in the canonical flat order.
+    pub(crate) fn num_tensors(&self) -> usize {
+        2 + 12 * self.l + 4
+    }
+
+    /// Element count of parameter tensor `i` in canonical order (no
+    /// allocation — indexing out of range panics like a slice would).
+    pub(crate) fn param_numel(&self, i: usize) -> usize {
+        let Dims { v, d, f, s, c, .. } = *self;
+        let nf = 2 + 12 * self.l;
+        if i == 0 {
+            v * d
+        } else if i == 1 {
+            s * d
+        } else if i < nf {
+            [d, d, d * 3 * d, 3 * d, d * d, d, d, d, d * f, f, f * d, d][(i - 2) % 12]
+        } else {
+            [d, d, d * c, c][i - nf]
+        }
+    }
+}
+
+/// Per-layer forward activations kept for the backward pass (the former
+/// `LayerCache`, now arena-owned and reused across steps).
+pub(crate) struct LayerWs {
+    /// Block input (before the attention residual), `B*S*D`.
+    pub(crate) x_in: Vec<f32>,
+    /// LN1 normalized input `x̂`, `B*S*D`.
+    pub(crate) xhat1: Vec<f32>,
+    /// LN1 `1/σ` per position, `B*S`.
+    pub(crate) inv1: Vec<f32>,
+    /// LN1 output, `B*S*D`.
+    pub(crate) y1: Vec<f32>,
+    /// Queries, `B*S*D`.
+    pub(crate) q: Vec<f32>,
+    /// Keys, `B*S*D`.
+    pub(crate) k: Vec<f32>,
+    /// Values, `B*S*D`.
+    pub(crate) vv: Vec<f32>,
+    /// Attention probabilities, `B*H*S*S`.
+    pub(crate) att: Vec<f32>,
+    /// Concatenated head outputs (before the output projection), `B*S*D`.
+    pub(crate) o: Vec<f32>,
+    /// After the attention residual, `B*S*D`.
+    pub(crate) x_mid: Vec<f32>,
+    /// LN2 normalized input, `B*S*D`.
+    pub(crate) xhat2: Vec<f32>,
+    /// LN2 `1/σ`, `B*S`.
+    pub(crate) inv2: Vec<f32>,
+    /// LN2 output, `B*S*D`.
+    pub(crate) y2: Vec<f32>,
+    /// MLP pre-activation, `B*S*F`.
+    pub(crate) hbar: Vec<f32>,
+    /// MLP post-GELU, `B*S*F`.
+    pub(crate) g: Vec<f32>,
+}
+
+/// The arena: every buffer `HostModel` needs for one train or eval step.
+/// Created empty ([`TrainWorkspace::new`]), sized lazily on first use,
+/// reused verbatim while the `(dims, batch)` key is unchanged.
+#[derive(Default)]
+pub struct TrainWorkspace {
+    /// Current `(dims, batch)` the buffers are sized for.
+    key: Option<(Dims, usize)>,
+    /// Per-layer activation caches.
+    pub(crate) layers: Vec<LayerWs>,
+    /// QKV projection scratch, `B*S*3D` (overwritten per layer).
+    pub(crate) qkv: Vec<f32>,
+    /// Final-block output / final-LN input, `B*S*D`.
+    pub(crate) xfinal: Vec<f32>,
+    /// Final-LN normalized input, `B*S*D`.
+    pub(crate) xhatf: Vec<f32>,
+    /// Final-LN `1/σ`, `B*S`.
+    pub(crate) invf: Vec<f32>,
+    /// Final-LN output, `B*S*D`.
+    pub(crate) yf: Vec<f32>,
+    /// Mean-pooled features, `B*D`.
+    pub(crate) pooled: Vec<f32>,
+    /// Softmax probabilities (logits in place first), `B*C`.
+    pub(crate) probs: Vec<f32>,
+    /// Gradient tensors, canonical order — read via [`Self::grads`] after
+    /// `loss_and_grads`.
+    pub(crate) grads: Vec<Vec<f32>>,
+    /// d loss / d logits, `B*C`.
+    pub(crate) dlogits: Vec<f32>,
+    /// d loss / d pooled, `B*D`.
+    pub(crate) dpooled: Vec<f32>,
+    /// d loss / d (final-LN output), `B*S*D`.
+    pub(crate) dyf: Vec<f32>,
+    /// The flowing input gradient (one buffer for the whole backward walk),
+    /// `B*S*D`.
+    pub(crate) dx: Vec<f32>,
+    /// MLP gradient scratch (`dg`, reused in place as `dhbar`), `B*S*F`.
+    pub(crate) dg: Vec<f32>,
+    /// d loss / d y2, `B*S*D`.
+    pub(crate) dy2: Vec<f32>,
+    /// d loss / d (attention output), `B*S*D`.
+    pub(crate) do_: Vec<f32>,
+    /// d loss / d q, `B*S*D`.
+    pub(crate) dq: Vec<f32>,
+    /// d loss / d k, `B*S*D`.
+    pub(crate) dk: Vec<f32>,
+    /// d loss / d v, `B*S*D`.
+    pub(crate) dv: Vec<f32>,
+    /// Re-concatenated QKV gradient, `B*S*3D`.
+    pub(crate) dqkv: Vec<f32>,
+    /// d loss / d y1, `B*S*D`.
+    pub(crate) dy1: Vec<f32>,
+    /// Attention-probability gradient, one row of `S`.
+    pub(crate) datt: Vec<f32>,
+    /// LayerNorm-backward row scratch, `D`.
+    pub(crate) dxhat: Vec<f32>,
+    /// Accumulated per-phase timings.
+    pub(crate) profile: PhaseProfile,
+}
+
+impl TrainWorkspace {
+    /// An empty workspace; buffers are sized on first use.
+    pub fn new() -> Self {
+        TrainWorkspace::default()
+    }
+
+    /// The phase timings accumulated so far.
+    pub fn profile(&self) -> &PhaseProfile {
+        &self.profile
+    }
+
+    /// Zero the accumulated phase timings.
+    pub fn reset_profile(&mut self) {
+        self.profile = PhaseProfile::default();
+    }
+
+    /// The gradient tensors (canonical order) left by the most recent
+    /// `HostModel::loss_and_grads` through this workspace.
+    pub fn grads(&self) -> &[Vec<f32>] {
+        &self.grads
+    }
+
+    /// Size every buffer for `(dims, b)`. A no-op when the key is unchanged
+    /// — the hot path. Rebuilding drops and reallocates everything;
+    /// accumulated profile timings are kept.
+    pub(crate) fn ensure(&mut self, dims: Dims, b: usize) {
+        if self.key == Some((dims, b)) {
+            return;
+        }
+        let Dims { d, h, l, f, s, c, .. } = dims;
+        let rows = b * s;
+        self.layers.clear();
+        for _ in 0..l {
+            self.layers.push(LayerWs {
+                x_in: vec![0.0; rows * d],
+                xhat1: vec![0.0; rows * d],
+                inv1: vec![0.0; rows],
+                y1: vec![0.0; rows * d],
+                q: vec![0.0; rows * d],
+                k: vec![0.0; rows * d],
+                vv: vec![0.0; rows * d],
+                att: vec![0.0; b * h * s * s],
+                o: vec![0.0; rows * d],
+                x_mid: vec![0.0; rows * d],
+                xhat2: vec![0.0; rows * d],
+                inv2: vec![0.0; rows],
+                y2: vec![0.0; rows * d],
+                hbar: vec![0.0; rows * f],
+                g: vec![0.0; rows * f],
+            });
+        }
+        self.qkv = vec![0.0; rows * 3 * d];
+        self.xfinal = vec![0.0; rows * d];
+        self.xhatf = vec![0.0; rows * d];
+        self.invf = vec![0.0; rows];
+        self.yf = vec![0.0; rows * d];
+        self.pooled = vec![0.0; b * d];
+        self.probs = vec![0.0; b * c];
+        self.grads =
+            (0..dims.num_tensors()).map(|i| vec![0.0f32; dims.param_numel(i)]).collect();
+        self.dlogits = vec![0.0; b * c];
+        self.dpooled = vec![0.0; b * d];
+        self.dyf = vec![0.0; rows * d];
+        self.dx = vec![0.0; rows * d];
+        self.dg = vec![0.0; rows * f];
+        self.dy2 = vec![0.0; rows * d];
+        self.do_ = vec![0.0; rows * d];
+        self.dq = vec![0.0; rows * d];
+        self.dk = vec![0.0; rows * d];
+        self.dv = vec![0.0; rows * d];
+        self.dqkv = vec![0.0; rows * 3 * d];
+        self.dy1 = vec![0.0; rows * d];
+        self.datt = vec![0.0; s];
+        self.dxhat = vec![0.0; d];
+        self.key = Some((dims, b));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> Dims {
+        Dims { v: 11, d: 8, h: 2, l: 1, f: 12, s: 5, c: 3 }
+    }
+
+    #[test]
+    fn param_numels_match_the_canonical_layout() {
+        let dm = dims();
+        let Dims { v, d, f, s, c, .. } = dm;
+        let mut want = vec![v * d, s * d];
+        for _ in 0..dm.l {
+            want.extend_from_slice(&[
+                d,
+                d,
+                d * 3 * d,
+                3 * d,
+                d * d,
+                d,
+                d,
+                d,
+                d * f,
+                f,
+                f * d,
+                d,
+            ]);
+        }
+        want.extend_from_slice(&[d, d, d * c, c]);
+        assert_eq!(want.len(), dm.num_tensors());
+        let got: Vec<usize> = (0..dm.num_tensors()).map(|i| dm.param_numel(i)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn ensure_rebuilds_only_on_key_change() {
+        let mut ws = TrainWorkspace::new();
+        ws.ensure(dims(), 2);
+        let probs_ptr = ws.probs.as_ptr();
+        let grads_len = ws.grads.len();
+        // Same key: every buffer is kept in place.
+        ws.ensure(dims(), 2);
+        assert!(std::ptr::eq(probs_ptr, ws.probs.as_ptr()));
+        assert_eq!(ws.grads.len(), grads_len);
+        // New batch size: buffers are resized.
+        ws.ensure(dims(), 4);
+        assert_eq!(ws.probs.len(), 4 * dims().c);
+        assert_eq!(ws.layers.len(), dims().l);
+    }
+
+    #[test]
+    fn profile_merges_and_survives_rebuilds() {
+        let mut ws = TrainWorkspace::new();
+        ws.ensure(dims(), 2);
+        ws.profile.forward_s = 1.5;
+        ws.ensure(dims(), 4);
+        assert_eq!(ws.profile().forward_s, 1.5);
+        let mut total = PhaseProfile::default();
+        total.merge(ws.profile());
+        total.merge(&PhaseProfile { mix_s: 0.5, ..PhaseProfile::default() });
+        assert_eq!(total.forward_s, 1.5);
+        assert_eq!(total.mix_s, 0.5);
+        assert!((total.total_s() - 2.0).abs() < 1e-12);
+    }
+}

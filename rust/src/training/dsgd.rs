@@ -22,9 +22,11 @@ use crate::coordinator::worker::WorkerPool;
 use crate::graph::Topology;
 use crate::runtime::mixer::{MixVariant, Mixer};
 use crate::runtime::trainer::ModelRunner;
+use crate::runtime::workspace::{PhaseProfile, TrainWorkspace};
 use crate::runtime::{ExecBackend, RuntimeError};
 use crate::training::data::{DatasetSpec, SyntheticDataset};
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::parallel_map_with;
+use std::time::Instant;
 
 /// DSGD run configuration.
 #[derive(Debug, Clone)]
@@ -98,6 +100,10 @@ pub struct DsgdRunSummary {
     pub iter_time: f64,
     /// Training iterations per epoch.
     pub iters_per_epoch: usize,
+    /// Measured wall-clock phase breakdown (forward/backward/optimizer/eval
+    /// are CPU-seconds summed across worker threads; mix is the driver's
+    /// wall time) — the `batopo train --profile` payload.
+    pub profile: PhaseProfile,
 }
 
 /// The DSGD driver bound to a backend + scenario + time model.
@@ -148,11 +154,23 @@ impl<'e> DsgdTrainer<'e> {
             .map_err(|e| RuntimeError::Coordinator(e.to_string()))?;
         let mixer = Mixer::for_backend(self.backend, topo, self.config.mix_variant)?;
         let threads = self.config.threads.max(1);
+        // One workspace arena per worker thread (the PJRT path serializes on
+        // arena 0). They persist across rounds and epochs, so after the first
+        // step the host training loop allocates nothing.
+        let mut wss: Vec<TrainWorkspace> = (0..threads.min(n))
+            .map(|_| runner.make_workspace())
+            .collect();
 
         // Common initial model across nodes (paper setup), zero momenta.
         let init = runner.init_params(self.config.seed);
         let mut params: Vec<Vec<Vec<f32>>> = (0..n).map(|_| init.clone()).collect();
         let mut momenta: Vec<Vec<Vec<f32>>> = (0..n).map(|_| runner.zero_momenta()).collect();
+        // Reused gossip buffers: flatten_into + mix_into keep the per-round
+        // mixing step free of full-parameter clones.
+        let num_flat = runner.config().num_params;
+        let mut flats: Vec<Vec<f32>> = (0..n).map(|_| Vec::with_capacity(num_flat)).collect();
+        let mut mixed: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; num_flat]).collect();
+        let mut mix_s = 0.0f64;
 
         let iter_time = self
             .time_model
@@ -189,10 +207,11 @@ impl<'e> DsgdTrainer<'e> {
                             )
                         })
                         .collect();
-                    let stepped = parallel_map(items, threads, |(mut p, mut m, tok, tgt)| {
-                        let loss = host.train_step(&mut p, &mut m, &tok, &tgt);
-                        (p, m, loss)
-                    });
+                    let stepped =
+                        parallel_map_with(items, &mut wss, |ws, (mut p, mut m, tok, tgt)| {
+                            let loss = host.train_step(&mut p, &mut m, &tok, &tgt, ws);
+                            (p, m, loss)
+                        });
                     for (node, (p, m, loss)) in stepped.into_iter().enumerate() {
                         params[node] = p;
                         momenta[node] = m;
@@ -205,16 +224,21 @@ impl<'e> DsgdTrainer<'e> {
                             &mut momenta[node],
                             tokens,
                             targets,
+                            &mut wss[0],
                         )?;
                     }
                 }
-                // Gossip mixing of the flat parameter matrix.
-                let flats: Vec<Vec<f32>> =
-                    params.iter().map(|p| runner.flatten(p)).collect();
-                let mixed = mixer.mix(&flats)?;
+                // Gossip mixing of the flat parameter matrix (into the
+                // reused round buffers).
+                let t_mix = Instant::now();
+                for (node, p) in params.iter().enumerate() {
+                    runner.flatten_into(p, &mut flats[node]);
+                }
+                mixer.mix_into(&flats, &mut mixed)?;
                 for (node, flat) in mixed.iter().enumerate() {
                     runner.unflatten_into(flat, &mut params[node]);
                 }
+                mix_s += t_mix.elapsed().as_secs_f64();
                 clock.advance(iter_time);
             }
             let train_loss = loss_sum / (iters_per_epoch * n) as f64;
@@ -231,8 +255,8 @@ impl<'e> DsgdTrainer<'e> {
                         .enumerate()
                         .map(|(node, (tokens, targets))| (&params[node], tokens, targets))
                         .collect();
-                    for r in parallel_map(items, threads, |(p, tok, tgt)| {
-                        host.eval(p, &tok, &tgt)
+                    for r in parallel_map_with(items, &mut wss, |ws, (p, tok, tgt)| {
+                        host.eval(p, &tok, &tgt, ws)
                     }) {
                         let (l, a) = r?;
                         eval_loss += l;
@@ -241,7 +265,7 @@ impl<'e> DsgdTrainer<'e> {
                     }
                 } else {
                     for (node, (tokens, targets)) in batches.iter().enumerate() {
-                        let (l, a) = runner.eval(&params[node], tokens, targets)?;
+                        let (l, a) = runner.eval(&params[node], tokens, targets, &mut wss[0])?;
                         eval_loss += l;
                         eval_acc += a;
                         eval_count += 1;
@@ -280,6 +304,12 @@ impl<'e> DsgdTrainer<'e> {
         }
         pool.shutdown();
 
+        let mut profile = PhaseProfile::default();
+        for ws in &wss {
+            profile.merge(ws.profile());
+        }
+        profile.mix_s += mix_s;
+
         Ok(DsgdRunSummary {
             topology: topo.name.clone(),
             records,
@@ -287,6 +317,7 @@ impl<'e> DsgdTrainer<'e> {
             final_accuracy,
             iter_time,
             iters_per_epoch,
+            profile,
         })
     }
 }
@@ -351,6 +382,11 @@ mod tests {
         assert!((out.records.last().unwrap().sim_time - want).abs() < 1e-9);
         // Ring degree 2 at 9.76 GB/s: iter_time = 2*t_comm + t_comp.
         assert!((out.iter_time - (2.0 * 5.01e-3 + 15.21e-3)).abs() < 1e-9);
+        // The phase profile is populated on the host backend.
+        let p = &out.profile;
+        assert!(p.forward_s > 0.0 && p.backward_s > 0.0);
+        assert!(p.eval_s > 0.0 && p.mix_s > 0.0);
+        assert!(p.total_s() > 0.0);
     }
 
     #[test]
@@ -367,12 +403,20 @@ mod tests {
                 .run(&topo)
                 .expect("run")
         };
+        // One persistent workspace arena per worker thread: the learning
+        // curve must stay bitwise identical for every thread count.
         let serial = run_with(1);
-        let parallel = run_with(4);
-        assert_eq!(serial.records.len(), parallel.records.len());
-        for (a, b) in serial.records.iter().zip(&parallel.records) {
-            assert_eq!(a.train_loss, b.train_loss, "train loss must be bitwise equal");
-            assert_eq!(a.eval_acc, b.eval_acc);
+        for threads in [2usize, 4] {
+            let parallel = run_with(threads);
+            assert_eq!(serial.records.len(), parallel.records.len());
+            for (a, b) in serial.records.iter().zip(&parallel.records) {
+                assert_eq!(
+                    a.train_loss, b.train_loss,
+                    "train loss must be bitwise equal at {threads} threads"
+                );
+                assert_eq!(a.eval_loss, b.eval_loss);
+                assert_eq!(a.eval_acc, b.eval_acc);
+            }
         }
     }
 

@@ -127,6 +127,55 @@ where
         .collect()
 }
 
+/// Like [`parallel_map`], but each worker thread owns one `&mut S` from
+/// `states` for its whole lifetime — the pattern behind per-thread
+/// [`TrainWorkspace`](crate::runtime::TrainWorkspace) arenas in the DSGD
+/// trainer. The worker count is `states.len()` (capped by the item count);
+/// with a single state the map runs serially on the caller's thread.
+///
+/// Item→result order is preserved and, because `f` must produce results
+/// that do not depend on *which* state it was handed (workspaces guarantee
+/// this: outputs are bitwise independent of arena history), the output is
+/// identical for any `states.len()`.
+pub fn parallel_map_with<T, R, S, F>(items: Vec<T>, states: &mut [S], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    S: Send,
+    F: Fn(&mut S, T) -> R + Sync,
+{
+    assert!(!states.is_empty(), "parallel_map_with needs >= 1 state");
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if states.len() == 1 || n == 1 {
+        let state = &mut states[0];
+        return items.into_iter().map(|t| f(&mut *state, t)).collect();
+    }
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let (work, results, next, f) = (&work, &results, &next, &f);
+    thread::scope(|s| {
+        for state in states.iter_mut().take(n) {
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("work item taken twice");
+                let r = f(&mut *state, item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,5 +216,44 @@ mod tests {
         assert_eq!(parallel_map(Vec::<usize>::new(), 4, |x| x), Vec::<usize>::new());
         assert_eq!(parallel_map(vec![5], 4, |x| x + 1), vec![6]);
         assert_eq!(parallel_map(vec![1, 2, 3], 1, |x| x * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn parallel_map_with_matches_parallel_map_for_any_state_count() {
+        let items: Vec<usize> = (0..200).collect();
+        let want = parallel_map(items.clone(), 4, |x| x * 3 + 1);
+        for workers in [1usize, 2, 4, 7] {
+            let mut states = vec![(); workers];
+            let got = parallel_map_with(items.clone(), &mut states, |_s, x| x * 3 + 1);
+            assert_eq!(got, want, "diverged with {workers} states");
+        }
+    }
+
+    #[test]
+    fn parallel_map_with_reuses_states_across_items() {
+        // Each worker's scratch counter tallies how many items it handled;
+        // the totals must cover all items exactly once.
+        let mut states = vec![0usize; 3];
+        let out = parallel_map_with((0..50usize).collect(), &mut states, |s, x| {
+            *s += 1;
+            x
+        });
+        assert_eq!(out, (0..50).collect::<Vec<_>>());
+        assert_eq!(states.iter().sum::<usize>(), 50);
+    }
+
+    #[test]
+    fn parallel_map_with_single_state_and_empty() {
+        let mut one = vec![0u64];
+        assert_eq!(
+            parallel_map_with(Vec::<usize>::new(), &mut one, |_s, x| x),
+            Vec::<usize>::new()
+        );
+        let got = parallel_map_with(vec![4usize], &mut one, |s, x| {
+            *s += 1;
+            x + 1
+        });
+        assert_eq!(got, vec![5]);
+        assert_eq!(one[0], 1);
     }
 }
